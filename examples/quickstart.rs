@@ -1,0 +1,75 @@
+//! Quickstart: optimize a single kernel with KernelBand and inspect the
+//! full decision trace.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the public API end-to-end: build the benchmark suite, pick a
+//! task, wire a simulated GPU engine + surrogate LLM, run Algorithm 1
+//! for T = 20 iterations, and print every (cluster, strategy) decision
+//! with its verification verdict and reward.
+
+use kernelband::prelude::*;
+
+fn main() {
+    // 1. The workload: a TritonBench-G-like suite (183 kernels).
+    let suite = Suite::full(kernelband::eval::EXPERIMENT_SEED);
+    // pick an easy normalization kernel (L1-L2) for a readable trace
+    let task = suite
+        .tasks
+        .iter()
+        .find(|t| {
+            t.category == Category::Normalization
+                && t.difficulty <= Difficulty::L2
+        })
+        .expect("suite has easy normalization kernels");
+    println!(
+        "optimizing {} [{} / {:?}] — {} benchmark shapes",
+        task.name,
+        task.category.name(),
+        task.difficulty,
+        task.shapes.len()
+    );
+
+    // 2. The substrates: an H20 roofline simulator and a DeepSeek-V3.2
+    //    surrogate. Swap `SimEngine` for `engine::pjrt::PjrtBench` to
+    //    measure real Pallas artifacts (see the pjrt_end_to_end example),
+    //    or implement `llm::LlmBackend` to call a real API.
+    let engine = SimEngine::new(Device::H20);
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+
+    // 3. The policy: paper defaults (K=3, tau=10, theta=75%, c=2.0).
+    let band = KernelBand::new(PolicyConfig::default());
+    let trace = band.optimize(task, &engine, &llm, &Rng::new(0));
+
+    // 4. The trace.
+    println!("\n t  cluster strategy          verdict reward  best-so-far");
+    for r in &trace.records {
+        println!(
+            "{:>2}  {:^7} {:<17} {}{}      {:.3}   {:.3}x",
+            r.t,
+            r.cluster,
+            r.strategy.map(|s| s.name()).unwrap_or("-"),
+            if r.verdict.call_ok { "C" } else { "-" },
+            if r.verdict.exec_ok { "E" } else { "-" },
+            r.reward,
+            r.best_speedup_so_far.max(1.0),
+        );
+    }
+
+    let outcome = trace.outcome();
+    println!(
+        "\ncorrect={} best_speedup={:.3}x api_cost=${:.3} ncu_runs={} ({}s)",
+        outcome.correct,
+        trace.best_speedup(),
+        outcome.cost_usd,
+        trace.profile_runs,
+        trace.profile_cost_s
+    );
+    println!(
+        "best schedule: {:?} (naive was {:?})",
+        trace.candidates[trace.best_id].config,
+        task.naive_config()
+    );
+}

@@ -1,0 +1,106 @@
+//! Domain example: full benchmark campaign across devices and methods —
+//! the workload the paper's intro motivates (optimizing an LLM-serving
+//! kernel zoo for heterogeneous fleet hardware).
+//!
+//! ```bash
+//! cargo run --release --example suite_sweep
+//! ```
+//!
+//! Runs KernelBand, GEAK and Best-of-N over the 50-kernel detailed-
+//! analysis subset on all three device profiles, printing per-stratum
+//! metrics, per-category winners, and the cross-device strategy-mix
+//! shift (the hardware-adaptation evidence of Appendix I).
+
+use std::collections::BTreeMap;
+
+use kernelband::eval::{self, Method};
+use kernelband::gpu_model::ALL_DEVICES;
+use kernelband::llm::LlmProfile;
+use kernelband::metrics::{aggregate, stratified};
+use kernelband::policy::PolicyMode;
+use kernelband::workload::Suite;
+
+fn main() {
+    let suite = Suite::full(eval::EXPERIMENT_SEED).subset50();
+    println!(
+        "suite: {} kernels, categories: {:?}",
+        suite.len(),
+        suite.category_counts()
+    );
+    let methods = [
+        Method::BoN,
+        Method::Geak,
+        Method::KernelBand(PolicyMode::Full, 3),
+    ];
+
+    for device in ALL_DEVICES {
+        println!("\n=== {} ===", device.name());
+        for method in methods {
+            let traces = method.run(
+                &suite,
+                device,
+                LlmProfile::DeepSeekV32,
+                20,
+                eval::EXPERIMENT_SEED,
+            );
+            let outs = eval::outcomes(&traces);
+            let all = aggregate(&outs);
+            print!(
+                "{:<12} C {:>5.1}%  F {:>5.1}%  G {:>4.2}x  (${:.2} total)  strata:",
+                method.name(),
+                all.correct_pct,
+                all.fast1_pct,
+                all.geomean_standard,
+                all.total_cost_usd
+            );
+            for (s, a) in stratified(&outs) {
+                if s != kernelband::metrics::Stratum::All {
+                    print!(
+                        " {}={:.2}x",
+                        s.name(),
+                        if a.geomean_standard.is_nan() { 1.0 } else { a.geomean_standard }
+                    );
+                }
+            }
+            println!();
+
+            // per-category best speedups for KernelBand
+            if matches!(method, Method::KernelBand(PolicyMode::Full, _)) {
+                let mut by_cat: BTreeMap<&str, (f64, usize)> = BTreeMap::new();
+                for (task, o) in suite.tasks.iter().zip(&outs) {
+                    let e = by_cat.entry(task.category.name()).or_insert((0.0, 0));
+                    e.0 += o.fallback_speedup().ln();
+                    e.1 += 1;
+                }
+                print!("             per-category G: ");
+                for (cat, (ls, n)) in &by_cat {
+                    print!("{}={:.2} ", cat, (ls / *n as f64).exp());
+                }
+                println!();
+            }
+        }
+    }
+
+    // hardware adaptation: strategy-mix shift between devices
+    println!("\n=== strategy mix by device (KernelBand) ===");
+    println!("{:<17} {:>9} {:>9} {:>9}", "Strategy", "RTX 4090", "H20", "A100");
+    let mixes: Vec<Vec<(String, f64, f64, f64)>> = ALL_DEVICES
+        .iter()
+        .map(|&d| {
+            let traces = Method::KernelBand(PolicyMode::Full, 3).run(
+                &suite,
+                d,
+                LlmProfile::DeepSeekV32,
+                20,
+                eval::EXPERIMENT_SEED,
+            );
+            eval::strategy_stats(&traces)
+        })
+        .collect();
+    for i in 0..mixes[0].len() {
+        println!(
+            "{:<17} {:>8.1}% {:>8.1}% {:>8.1}%",
+            mixes[0][i].0, mixes[0][i].1, mixes[1][i].1, mixes[2][i].1
+        );
+    }
+}

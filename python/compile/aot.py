@@ -1,0 +1,86 @@
+"""AOT pipeline: lower every registered L2 graph to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every graph is lowered with ``return_tuple=True`` so the Rust runtime
+always unwraps a tuple, regardless of arity.
+
+Outputs:
+  artifacts/<name>.hlo.txt      one module per registry entry
+  artifacts/manifest.json       shapes + op/role/params + perf metadata
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, args) -> str:
+    """jitted fn + example args -> HLO text via stablehlo."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts",
+                   help="output directory for *.hlo.txt + manifest.json")
+    p.add_argument("--only", default=None,
+                   help="comma-separated artifact-name filter (substring)")
+    ns = p.parse_args(argv)
+
+    out = pathlib.Path(ns.out)
+    out.mkdir(parents=True, exist_ok=True)
+    filters = ns.only.split(",") if ns.only else None
+
+    manifest = {"version": 1, "artifacts": []}
+    arts = model.all_artifacts()
+    for i, art in enumerate(arts):
+        if filters and not any(f in art.name for f in filters):
+            continue
+        text = to_hlo_text(art.fn, model.example_args(art))
+        path = out / f"{art.name}.hlo.txt"
+        path.write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append({
+            "name": art.name,
+            "file": path.name,
+            "op": art.op,
+            "role": art.role,
+            "params": art.params,
+            "inputs": [{"dims": list(s[:-1]), "dtype": s[-1]}
+                       for s in art.in_shapes],
+            "outputs": [{"dims": list(s[:-1]), "dtype": s[-1]}
+                        for s in art.out_shapes],
+            "flops": art.flops,
+            "hbm_bytes": art.hbm_bytes,
+            "vmem_bytes": art.vmem_bytes,
+            "mxu_util": art.mxu_util,
+            "sha256_16": digest,
+        })
+        print(f"[{i + 1}/{len(arts)}] {art.name}: {len(text)} chars")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

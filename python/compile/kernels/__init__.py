@@ -1,0 +1,13 @@
+# L1: Pallas kernels for KernelBand's compute hot-spots.
+#
+# Coordinator-side hot-spots (execute on the decision path via PJRT):
+#   kmeans    — trace-driven clustering step (paper §3.3)
+#   ucb       — masked UCB index matrix (paper Eq. 6)
+# Kernels-under-optimization (the real-execution variant space):
+#   matmul    — tiled matmul + fused/unfused bias-relu epilogue
+#   softmax   — row-blocked stable softmax
+#   layernorm — fused layernorm
+#   attention — blocked flash-style attention
+# ref       — pure-jnp oracles for all of the above.
+
+from . import attention, kmeans, layernorm, matmul, ref, softmax, ucb  # noqa: F401

@@ -1,0 +1,83 @@
+"""Pallas kernel: blocked (flash-style) single-head attention.
+
+The (bq, bkv) block pair is the TILING + PIPELINE knob for attention: the
+KV sequence is streamed in bkv-sized chunks with the online-softmax
+running max/denominator kept in VMEM-resident accumulator outputs (the
+classic Flash recurrence), so the (Sq, Sk) score matrix never
+materializes in HBM.
+
+Interpret-mode note: accumulators live in extra *outputs* rather than
+scratch refs — outputs persist across grid steps under revisiting, which
+is the portable pattern for interpret=True; the wrapper discards them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _attn_kernel(scale, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref):
+    kidx = pl.program_id(1)
+
+    @pl.when(kidx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]  # (bq, d)
+    k = k_ref[...]  # (bkv, d)
+    v = v_ref[...]  # (bkv, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m_prev = m_ref[...]  # (bq, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(kidx == pl.num_programs(1) - 1)
+    def _final():
+        o_ref[...] = o_ref[...] / l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, bq: int = 64,
+              bkv: int = 64):
+    """Flash attention over (Sq,d), (Sk,d), (Sk,d); grid (Sq/bq, Sk/bkv)."""
+    sq, d = q.shape
+    sk, d2 = k.shape
+    assert d == d2 and v.shape == (sk, d)
+    if sq % bq or sk % bkv:
+        raise ValueError(f"blocks ({bq},{bkv}) must divide ({sq},{sk})")
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_attn_kernel, scale)
+    o, _m, _l = pl.pallas_call(
+        kern,
+        grid=(sq // bq, sk // bkv),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bkv, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bkv, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((sq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((sq, 1), jnp.float32),
+        ),
+        interpret=True,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    return o

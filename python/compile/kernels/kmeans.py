@@ -1,0 +1,77 @@
+"""Pallas kernel: one masked K-means (Lloyd) step.
+
+This is the trace-driven-clustering hot-spot of KernelBand (§3.3): the
+frontier's behavioral feature vectors phi(k) are re-clustered every tau
+iterations. The whole step — pairwise distances, argmin assignment,
+masked centroid update with empty-cluster fallback — runs as a single
+Pallas block (the frontier is small: N <= 64, D = 5, K <= 8), so the
+HBM<->VMEM traffic is one load of points/centroids and one store of the
+results.
+
+Run with ``interpret=True`` everywhere: CPU PJRT cannot execute Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kmeans_kernel(points_ref, cents_ref, mask_ref, newc_ref, assign_ref):
+    pts = points_ref[...]  # (N, D)
+    cts = cents_ref[...]  # (K, D)
+    msk = mask_ref[...]  # (N, 1)
+
+    # Pairwise squared distances via |p|^2 - 2 p.c + |c|^2 (one MXU matmul
+    # instead of an (N,K,D) broadcast — this is the vectorization-friendly
+    # form; the |p|^2 term is constant per row and dropped from the argmin).
+    cross = pts @ cts.T  # (N, K)
+    c2 = jnp.sum(cts * cts, axis=-1)  # (K,)
+    d2 = c2[None, :] - 2.0 * cross  # argmin-equivalent distances
+    assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)  # (N,)
+
+    k = cts.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(pts.dtype)
+    onehot = onehot * msk  # zero out padded rows
+    counts = jnp.sum(onehot, axis=0)  # (K,)
+    sums = onehot.T @ pts  # (K, D)
+    newc = sums / jnp.maximum(counts, 1.0)[:, None]
+    newc_ref[...] = jnp.where(counts[:, None] > 0, newc, cts)
+    assign_ref[...] = jnp.where(msk[:, 0] > 0, assign, 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def kmeans_step(points: jax.Array, centroids: jax.Array, mask: jax.Array):
+    """One Lloyd step. Shapes: points (N,D), centroids (K,D), mask (N,).
+
+    Returns (new_centroids (K,D) f32, assignment (N,) i32). Matches
+    ``ref.kmeans_step`` exactly up to float error.
+    """
+    n, _d = points.shape
+    k, d = centroids.shape
+    newc, assign = pl.pallas_call(
+        _kmeans_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ),
+        interpret=True,
+    )(points.astype(jnp.float32), centroids.astype(jnp.float32),
+      mask.astype(jnp.float32).reshape(n, 1))
+    return newc, assign
+
+
+def kmeans_run(points, centroids, mask, iters: int = 8):
+    """Fixed-iteration Lloyd loop over the Pallas step (L2 composition)."""
+
+    def body(c, _):
+        new_c, _a = kmeans_step(points, c, mask)
+        return new_c, None
+
+    final_c, _ = jax.lax.scan(body, centroids, None, length=iters)
+    _, assign = kmeans_step(points, final_c, mask)
+    return final_c, assign

@@ -1,0 +1,131 @@
+"""Pallas kernels: tiled matmul and the fused matmul+bias+relu epilogue.
+
+These are the "kernels under optimization" for the real-execution engine:
+each (bm, bn, bk) tile choice — the paper's TILING strategy — and the
+fused-vs-unfused epilogue — the FUSION strategy — lowers to a distinct
+HLO artifact that the Rust coordinator loads, times and verifies via PJRT.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the tile triple is the
+``BlockSpec`` that schedules HBM->VMEM transfers; MXU-friendly variants
+keep bm/bn multiples of 128 and bk multiples of 8. VMEM footprint per
+grid step is (bm*bk + bk*bn + bm*bn) * 4 bytes and is reported in the
+AOT manifest for the §Perf roofline estimate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _matmul_bias_relu_kernel(x_ref, y_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _epilogue():
+        o_ref[...] = jnp.maximum(o_ref[...] + b_ref[...][None, :], 0.0)
+
+
+def _check_tiles(m, n, k, bm, bn, bk):
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"tile ({bm},{bn},{bk}) must divide problem ({m},{n},{k})")
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 64, bn: int = 64,
+           bk: int = 64):
+    """Tiled (M,K)@(K,N) matmul. Grid (M/bm, N/bn, K/bk), K innermost."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (k, k2)
+    _check_tiles(m, n, k, bm, bn, bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_bias_relu_fused(x: jax.Array, y: jax.Array, b: jax.Array, *,
+                           bm: int = 64, bn: int = 64, bk: int = 64):
+    """FUSION variant: relu(x@y + b) in one kernel — the bias/relu epilogue
+    runs on the last K step while the (bm,bn) tile is still resident in
+    VMEM, eliminating one full (M,N) HBM round-trip."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2 and b.shape == (n,)
+    _check_tiles(m, n, k, bm, bn, bk)
+    return pl.pallas_call(
+        _matmul_bias_relu_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def _bias_relu_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] + b_ref[...][None, :], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_bias_relu_unfused(x, y, b, *, bm: int = 64, bn: int = 64,
+                             bk: int = 64):
+    """Unfused baseline for the FUSION strategy: two pallas_calls with the
+    (M,N) intermediate bounced through HBM."""
+    m, _ = x.shape
+    _, n = y.shape
+    z = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    return pl.pallas_call(
+        _bias_relu_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(z, b.astype(jnp.float32))
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, with_bias: bool = False) -> int:
+    """Per-grid-step VMEM footprint of the tiled matmul (f32)."""
+    elems = bm * bk + bk * bn + bm * bn + (bn if with_bias else 0)
+    return 4 * elems
+
+
+def mxu_utilization(bm: int, bn: int, bk: int) -> float:
+    """Fraction of the 128x128 MXU systolic array a (bm,bn,bk) tile keeps
+    busy — the §Perf structural estimate (min(dim,128)/128 per axis)."""
+    return (min(bm, 128) / 128.0) * (min(bn, 128) / 128.0) * min(bk / 8.0, 1.0)

@@ -1,0 +1,108 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth for build-time correctness: pytest checks each
+Pallas kernel (interpret=True) against the function here with
+``assert_allclose``, and ``aot.py`` additionally emits each reference as
+its own HLO artifact so the Rust coordinator can verify variant outputs
+numerically at runtime (two-stage verification, paper §4.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# K-means (clustering substrate, paper §3.3)
+# ---------------------------------------------------------------------------
+
+def kmeans_step(points: jax.Array, centroids: jax.Array, mask: jax.Array):
+    """One Lloyd iteration.
+
+    Args:
+      points:    (N, D) float32 feature vectors phi(k).
+      centroids: (K, D) float32 current centroids.
+      mask:      (N,)   float32, 1.0 for valid rows, 0.0 for padding.
+
+    Returns:
+      (new_centroids (K, D), assignment (N,) int32). Padded rows are
+      assigned cluster 0 but contribute nothing to the update; empty
+      clusters keep their previous centroid.
+    """
+    d2 = jnp.sum((points[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+    assign = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=points.dtype)
+    onehot = onehot * mask[:, None]
+    counts = jnp.sum(onehot, axis=0)  # (K,)
+    sums = onehot.T @ points  # (K, D)
+    new_c = sums / jnp.maximum(counts, 1.0)[:, None]
+    new_c = jnp.where(counts[:, None] > 0, new_c, centroids)
+    assign = jnp.where(mask > 0, assign, 0).astype(jnp.int32)
+    return new_c, assign
+
+
+def kmeans_run(points, centroids, mask, iters: int = 8):
+    """Full (fixed-iteration) Lloyd loop via lax.scan — L2 composition."""
+
+    def body(c, _):
+        new_c, _a = kmeans_step(points, c, mask)
+        return new_c, None
+
+    final_c, _ = jax.lax.scan(body, centroids, None, length=iters)
+    _, assign = kmeans_step(points, final_c, mask)
+    return final_c, assign
+
+
+# ---------------------------------------------------------------------------
+# Masked UCB scores (paper Eq. 6)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def ucb_scores(mu: jax.Array, n: jax.Array, t: jax.Array, mask: jax.Array,
+               c: float = 2.0):
+    """Masked UCB index matrix.
+
+    score[i,s] = mu[i,s] + c*sqrt(ln(t)/n[i,s]) where mask==1, else -inf.
+    ``t`` is a (1,1) float32 array (iteration counter, >= 1).
+    """
+    bonus = c * jnp.sqrt(jnp.log(jnp.maximum(t, 1.0)) / jnp.maximum(n, 1.0))
+    return jnp.where(mask > 0, mu + bonus, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Kernels-under-optimization (the TritonBench-G stand-ins)
+# ---------------------------------------------------------------------------
+
+def matmul(x: jax.Array, y: jax.Array):
+    """(M,K) @ (K,N) in f32."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def matmul_bias_relu(x: jax.Array, y: jax.Array, b: jax.Array):
+    """Fused epilogue target: relu(x @ y + b)."""
+    return jnp.maximum(matmul(x, y) + b[None, :], 0.0)
+
+
+def softmax_rows(x: jax.Array):
+    """Numerically-stable row softmax."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5):
+    """Row layernorm with affine params."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma[None, :] + beta[None, :]
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Single-head scaled dot-product attention, (S,d) inputs."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = (q @ k.T) * scale
+    return softmax_rows(s) @ v

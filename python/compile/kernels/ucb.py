@@ -1,0 +1,41 @@
+"""Pallas kernel: masked UCB index matrix (paper Eq. 6).
+
+score[i,s] = mu_hat[i,s] + c * sqrt(ln t / N[i,s])   if  M[i,s] == 1
+           = -inf                                     otherwise
+
+The (K, S) arm matrix is tiny (K<=8, S=6) so the kernel is a single
+block; it exists so the bandit's scoring — like the K-means step — is an
+AOT artifact the Rust coordinator can execute through PJRT, keeping the
+entire decision arithmetic in compiled XLA.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ucb_kernel(c, mu_ref, n_ref, t_ref, mask_ref, out_ref):
+    t = jnp.maximum(t_ref[0, 0], 1.0)
+    n = jnp.maximum(n_ref[...], 1.0)
+    bonus = c * jnp.sqrt(jnp.log(t) / n)
+    out_ref[...] = jnp.where(mask_ref[...] > 0, mu_ref[...] + bonus, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def ucb_scores(mu: jax.Array, n: jax.Array, t: jax.Array, mask: jax.Array,
+               *, c: float = 2.0):
+    """Masked UCB scores. mu/n/mask: (K,S) f32; t: (1,1) f32."""
+    k, s = mu.shape
+    kern = functools.partial(_ucb_kernel, c)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((k, s), jnp.float32),
+        interpret=True,
+    )(mu.astype(jnp.float32), n.astype(jnp.float32),
+      t.astype(jnp.float32), mask.astype(jnp.float32))

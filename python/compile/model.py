@@ -1,0 +1,295 @@
+"""L2: the JAX compute graphs that AOT-lower into ``artifacts/*.hlo.txt``.
+
+Two families:
+
+1. **Coordinator graphs** — the KernelBand decision arithmetic that the
+   Rust L3 executes on its hot path via PJRT: the K-means clustering step
+   (Pallas), a full fixed-iteration Lloyd loop (lax.scan over the Pallas
+   step), and the masked-UCB score matrix (Pallas).
+
+2. **Kernel-variant graphs** — the real-execution search space: for each
+   op (matmul, fused epilogue, softmax, layernorm, attention) one graph
+   per optimization-strategy configuration (tile sizes, fused/unfused,
+   row-block width, flash block pair), plus a pure-jnp reference graph
+   used by the Rust verifier as the numerical oracle.
+
+Every entry is a pure function of arrays with static config baked in, so
+each lowers to a self-contained HLO module with fixed shapes. The
+``ARTIFACTS`` registry is consumed by ``aot.py``; its metadata
+(shapes, flops, bytes, VMEM footprint, MXU estimate) lands in
+``artifacts/manifest.json`` for the Rust side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import kmeans as kmeans_k
+from .kernels import layernorm as ln_k
+from .kernels import matmul as mm_k
+from .kernels import ref
+from .kernels import softmax as sm_k
+from .kernels import ucb as ucb_k
+
+# Frontier capacity for clustering artifacts: the paper's budget is
+# T<=40 iterations, so |P_t| <= 41 < 64; rows beyond the live frontier
+# are masked out.
+N_POINTS = 64
+N_FEATURES = 5  # phi(k) is 5-dimensional (paper Eq. 4)
+N_STRATEGIES = 6  # |S| = 6 (paper §3.6)
+LLOYD_ITERS = 8
+
+# Kernel-under-optimization problem sizes (kept small enough that
+# interpret-mode execution is fast but large enough that tile choices
+# change measured latency).
+MM_M, MM_K, MM_N = 256, 256, 256
+SM_R, SM_C = 256, 512
+LN_R, LN_C = 256, 512
+AT_S, AT_D = 128, 64
+
+
+@dataclasses.dataclass(frozen=True)
+class Artifact:
+    """One AOT-lowered HLO module and its manifest metadata."""
+
+    name: str
+    fn: Callable  # positional array args; returns a tuple of arrays
+    in_shapes: Sequence[tuple]  # [(dims..., dtype_str), ...]
+    out_shapes: Sequence[tuple]
+    op: str  # op family: kmeans | ucb | matmul | fused | softmax | ...
+    role: str  # "coordinator" | "variant" | "reference"
+    params: dict  # strategy configuration baked into the graph
+    flops: int = 0
+    hbm_bytes: int = 0  # minimal HBM traffic of the algorithm
+    vmem_bytes: int = 0  # per-grid-step VMEM footprint (f32)
+    mxu_util: float = 0.0  # structural MXU utilization estimate
+
+
+def _shapes(*specs):
+    return [tuple(list(s) + ["f32"]) for s in specs]
+
+
+# ---------------------------------------------------------------------------
+# Coordinator graphs
+# ---------------------------------------------------------------------------
+
+def _kmeans_step_fn(points, cents, mask):
+    return kmeans_k.kmeans_step(points, cents, mask)
+
+
+def _kmeans_run_fn(points, cents, mask):
+    return kmeans_k.kmeans_run(points, cents, mask, iters=LLOYD_ITERS)
+
+
+def _ucb_fn(mu, n, t, mask):
+    return (ucb_k.ucb_scores(mu, n, t, mask, c=2.0),)
+
+
+def coordinator_artifacts() -> list[Artifact]:
+    arts = []
+    for k in (1, 2, 3, 5, 8):
+        arts.append(Artifact(
+            name=f"kmeans_step_k{k}",
+            fn=_kmeans_step_fn,
+            in_shapes=_shapes((N_POINTS, N_FEATURES), (k, N_FEATURES),
+                              (N_POINTS,)),
+            out_shapes=[(k, N_FEATURES, "f32"), (N_POINTS, "i32")],
+            op="kmeans", role="coordinator",
+            params={"k": k, "n": N_POINTS, "d": N_FEATURES},
+            flops=3 * N_POINTS * k * N_FEATURES,
+            hbm_bytes=4 * (N_POINTS * N_FEATURES + 2 * k * N_FEATURES
+                           + 2 * N_POINTS),
+        ))
+        arts.append(Artifact(
+            name=f"kmeans_run_k{k}",
+            fn=_kmeans_run_fn,
+            in_shapes=_shapes((N_POINTS, N_FEATURES), (k, N_FEATURES),
+                              (N_POINTS,)),
+            out_shapes=[(k, N_FEATURES, "f32"), (N_POINTS, "i32")],
+            op="kmeans_run", role="coordinator",
+            params={"k": k, "iters": LLOYD_ITERS},
+            flops=3 * N_POINTS * k * N_FEATURES * (LLOYD_ITERS + 1),
+        ))
+        arts.append(Artifact(
+            name=f"ucb_k{k}",
+            fn=_ucb_fn,
+            in_shapes=_shapes((k, N_STRATEGIES), (k, N_STRATEGIES), (1, 1),
+                              (k, N_STRATEGIES)),
+            out_shapes=[(k, N_STRATEGIES, "f32")],
+            op="ucb", role="coordinator",
+            params={"k": k, "s": N_STRATEGIES, "c": 2.0},
+        ))
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Kernel-variant graphs
+# ---------------------------------------------------------------------------
+
+MATMUL_TILES = [
+    (32, 32, 32), (32, 64, 32), (64, 64, 32), (64, 64, 64),
+    (64, 128, 64), (128, 64, 64), (128, 128, 64), (128, 128, 128),
+    (256, 256, 256),  # single-block / "no tiling" baseline
+]
+FUSED_TILES = [(32, 32, 32), (64, 64, 64), (128, 128, 64)]
+SOFTMAX_BLOCKS = [8, 16, 32, 64, 128]
+LAYERNORM_BLOCKS = [8, 16, 32, 64]
+ATTENTION_BLOCKS = [(32, 32), (32, 64), (64, 64), (64, 128), (128, 128)]
+
+_MM_FLOPS = 2 * MM_M * MM_K * MM_N
+_MM_BYTES = 4 * (MM_M * MM_K + MM_K * MM_N + MM_M * MM_N)
+
+
+def variant_artifacts() -> list[Artifact]:
+    arts = []
+
+    # --- matmul: TILING strategy ---
+    for (bm, bn, bk) in MATMUL_TILES:
+        fn = functools.partial(
+            lambda x, y, bm, bn, bk: (mm_k.matmul(x, y, bm=bm, bn=bn, bk=bk),),
+            bm=bm, bn=bn, bk=bk)
+        arts.append(Artifact(
+            name=f"matmul_t{bm}x{bn}x{bk}", fn=fn,
+            in_shapes=_shapes((MM_M, MM_K), (MM_K, MM_N)),
+            out_shapes=[(MM_M, MM_N, "f32")],
+            op="matmul", role="variant",
+            params={"bm": bm, "bn": bn, "bk": bk, "strategy": "tiling"},
+            flops=_MM_FLOPS, hbm_bytes=_MM_BYTES,
+            vmem_bytes=mm_k.vmem_bytes(bm, bn, bk),
+            mxu_util=mm_k.mxu_utilization(bm, bn, bk),
+        ))
+    arts.append(Artifact(
+        name="matmul_ref", fn=lambda x, y: (ref.matmul(x, y),),
+        in_shapes=_shapes((MM_M, MM_K), (MM_K, MM_N)),
+        out_shapes=[(MM_M, MM_N, "f32")],
+        op="matmul", role="reference", params={},
+        flops=_MM_FLOPS, hbm_bytes=_MM_BYTES,
+    ))
+
+    # --- fused epilogue: FUSION strategy ---
+    fused_bytes = _MM_BYTES + 4 * MM_N
+    unfused_bytes = fused_bytes + 2 * 4 * MM_M * MM_N  # extra HBM round-trip
+    for (bm, bn, bk) in FUSED_TILES:
+        fn_f = functools.partial(
+            lambda x, y, b, bm, bn, bk:
+            (mm_k.matmul_bias_relu_fused(x, y, b, bm=bm, bn=bn, bk=bk),),
+            bm=bm, bn=bn, bk=bk)
+        fn_u = functools.partial(
+            lambda x, y, b, bm, bn, bk:
+            (mm_k.matmul_bias_relu_unfused(x, y, b, bm=bm, bn=bn, bk=bk),),
+            bm=bm, bn=bn, bk=bk)
+        common = dict(
+            in_shapes=_shapes((MM_M, MM_K), (MM_K, MM_N), (MM_N,)),
+            out_shapes=[(MM_M, MM_N, "f32")], op="fused",
+            flops=_MM_FLOPS + 2 * MM_M * MM_N,
+            vmem_bytes=mm_k.vmem_bytes(bm, bn, bk, with_bias=True),
+            mxu_util=mm_k.mxu_utilization(bm, bn, bk),
+        )
+        arts.append(Artifact(
+            name=f"fused_bias_relu_t{bm}x{bn}x{bk}", fn=fn_f, role="variant",
+            params={"bm": bm, "bn": bn, "bk": bk, "fused": True,
+                    "strategy": "fusion"},
+            hbm_bytes=fused_bytes, **common))
+        arts.append(Artifact(
+            name=f"unfused_bias_relu_t{bm}x{bn}x{bk}", fn=fn_u,
+            role="variant",
+            params={"bm": bm, "bn": bn, "bk": bk, "fused": False,
+                    "strategy": "fusion"},
+            hbm_bytes=unfused_bytes, **common))
+    arts.append(Artifact(
+        name="fused_bias_relu_ref",
+        fn=lambda x, y, b: (ref.matmul_bias_relu(x, y, b),),
+        in_shapes=_shapes((MM_M, MM_K), (MM_K, MM_N), (MM_N,)),
+        out_shapes=[(MM_M, MM_N, "f32")],
+        op="fused", role="reference", params={},
+        flops=_MM_FLOPS + 2 * MM_M * MM_N, hbm_bytes=fused_bytes,
+    ))
+
+    # --- softmax: VECTORIZATION / row-panel width ---
+    sm_bytes = 2 * 4 * SM_R * SM_C
+    for br in SOFTMAX_BLOCKS:
+        fn = functools.partial(lambda x, br: (sm_k.softmax_rows(x, br=br),),
+                               br=br)
+        arts.append(Artifact(
+            name=f"softmax_b{br}", fn=fn,
+            in_shapes=_shapes((SM_R, SM_C)),
+            out_shapes=[(SM_R, SM_C, "f32")],
+            op="softmax", role="variant",
+            params={"br": br, "strategy": "vectorization"},
+            flops=5 * SM_R * SM_C, hbm_bytes=sm_bytes,
+            vmem_bytes=2 * 4 * br * SM_C,
+        ))
+    arts.append(Artifact(
+        name="softmax_ref", fn=lambda x: (ref.softmax_rows(x),),
+        in_shapes=_shapes((SM_R, SM_C)), out_shapes=[(SM_R, SM_C, "f32")],
+        op="softmax", role="reference", params={},
+        flops=5 * SM_R * SM_C, hbm_bytes=sm_bytes,
+    ))
+
+    # --- layernorm: FUSION (single-pass) ---
+    ln_bytes = 2 * 4 * LN_R * LN_C + 2 * 4 * LN_C
+    for br in LAYERNORM_BLOCKS:
+        fn = functools.partial(
+            lambda x, g, b, br: (ln_k.layernorm(x, g, b, br=br),), br=br)
+        arts.append(Artifact(
+            name=f"layernorm_b{br}", fn=fn,
+            in_shapes=_shapes((LN_R, LN_C), (LN_C,), (LN_C,)),
+            out_shapes=[(LN_R, LN_C, "f32")],
+            op="layernorm", role="variant",
+            params={"br": br, "fused": True, "strategy": "fusion"},
+            flops=8 * LN_R * LN_C, hbm_bytes=ln_bytes,
+            vmem_bytes=2 * 4 * br * LN_C + 2 * 4 * LN_C,
+        ))
+    arts.append(Artifact(
+        name="layernorm_ref", fn=lambda x, g, b: (ref.layernorm(x, g, b),),
+        in_shapes=_shapes((LN_R, LN_C), (LN_C,), (LN_C,)),
+        out_shapes=[(LN_R, LN_C, "f32")],
+        op="layernorm", role="reference", params={},
+        flops=8 * LN_R * LN_C, hbm_bytes=ln_bytes,
+    ))
+
+    # --- attention: TILING + PIPELINE (flash blocking) ---
+    at_bytes = 4 * 4 * AT_S * AT_D
+    at_flops = 4 * AT_S * AT_S * AT_D
+    for (bq, bkv) in ATTENTION_BLOCKS:
+        fn = functools.partial(
+            lambda q, k, v, bq, bkv:
+            (attn_k.attention(q, k, v, bq=bq, bkv=bkv),), bq=bq, bkv=bkv)
+        arts.append(Artifact(
+            name=f"attention_q{bq}k{bkv}", fn=fn,
+            in_shapes=_shapes((AT_S, AT_D), (AT_S, AT_D), (AT_S, AT_D)),
+            out_shapes=[(AT_S, AT_D, "f32")],
+            op="attention", role="variant",
+            params={"bq": bq, "bkv": bkv, "strategy": "tiling"},
+            flops=at_flops, hbm_bytes=at_bytes,
+            vmem_bytes=4 * (bq * AT_D * 2 + bkv * AT_D * 2 + bq * bkv
+                            + 2 * bq),
+            mxu_util=(min(bq, 128) / 128.0) * (min(bkv, 128) / 128.0),
+        ))
+    arts.append(Artifact(
+        name="attention_ref", fn=lambda q, k, v: (ref.attention(q, k, v),),
+        in_shapes=_shapes((AT_S, AT_D), (AT_S, AT_D), (AT_S, AT_D)),
+        out_shapes=[(AT_S, AT_D, "f32")],
+        op="attention", role="reference", params={},
+        flops=at_flops, hbm_bytes=at_bytes,
+    ))
+    return arts
+
+
+def all_artifacts() -> list[Artifact]:
+    return coordinator_artifacts() + variant_artifacts()
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def example_args(art: Artifact):
+    """ShapeDtypeStructs used by jax.jit(...).lower for an artifact."""
+    return [jax.ShapeDtypeStruct(tuple(s[:-1]), _DTYPES[s[-1]])
+            for s in art.in_shapes]

@@ -1,0 +1,286 @@
+"""Core correctness signal: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/block configurations; data is seeded
+random normals (drawn through numpy from a hypothesis-provided seed) so
+failures shrink on structure, not on pathological float bit-patterns.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (attention, kmeans, layernorm, matmul, ref,
+                             softmax, ucb)
+
+F_DTYPES = [np.float32, np.float16]
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.integers(1, 4), ni=st.integers(1, 4), ki=st.integers(1, 4),
+    bm=st.sampled_from([16, 32, 64]), bn=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    dtype=st.sampled_from(F_DTYPES), seed=st.integers(0, 2**32 - 1),
+)
+def test_matmul_matches_ref(mi, ni, ki, bm, bn, bk, dtype, seed):
+    m, n, k = mi * bm, ni * bn, ki * bk
+    r = _rng(seed)
+    x = r.normal(size=(m, k)).astype(dtype)
+    y = r.normal(size=(k, n)).astype(dtype)
+    got = matmul.matmul(x, y, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tile=st.sampled_from([(16, 16, 16), (32, 32, 32), (32, 64, 32),
+                          (64, 64, 64)]),
+    mult=st.integers(1, 3), seed=st.integers(0, 2**32 - 1),
+)
+def test_fused_and_unfused_bias_relu_match_ref(tile, mult, seed):
+    bm, bn, bk = tile
+    m, n, k = mult * bm, mult * bn, mult * bk
+    r = _rng(seed)
+    x = r.normal(size=(m, k)).astype(np.float32)
+    y = r.normal(size=(k, n)).astype(np.float32)
+    b = r.normal(size=(n,)).astype(np.float32)
+    want = ref.matmul_bias_relu(jnp.asarray(x), jnp.asarray(y), jnp.asarray(b))
+    for fn in (matmul.matmul_bias_relu_fused, matmul.matmul_bias_relu_unfused):
+        got = fn(x, y, b, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_rejects_nondividing_tile():
+    x = np.zeros((100, 64), np.float32)
+    y = np.zeros((64, 64), np.float32)
+    with pytest.raises(ValueError):
+        matmul.matmul(x, y, bm=64, bn=64, bk=64)
+
+
+def test_mxu_and_vmem_estimates():
+    assert matmul.mxu_utilization(128, 128, 128) == 1.0
+    assert matmul.mxu_utilization(32, 128, 8) == pytest.approx(0.25)
+    assert matmul.vmem_bytes(64, 64, 64) == 4 * 3 * 64 * 64
+    assert matmul.vmem_bytes(64, 64, 64, with_bias=True) \
+        == 4 * (3 * 64 * 64 + 64)
+
+
+# ---------------------------------------------------------------------------
+# softmax
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ri=st.integers(1, 8), c=st.sampled_from([8, 33, 128, 512]),
+    br=st.sampled_from([1, 2, 8, 32]), dtype=st.sampled_from(F_DTYPES),
+    seed=st.integers(0, 2**32 - 1), scale=st.floats(0.1, 50.0),
+)
+def test_softmax_matches_ref(ri, c, br, dtype, seed, scale):
+    rows = ri * br
+    x = (_rng(seed).normal(size=(rows, c)) * scale).astype(dtype)
+    got = softmax.softmax_rows(x, br=br)
+    want = ref.softmax_rows(jnp.asarray(x, jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    # rows sum to 1
+    np.testing.assert_allclose(np.asarray(got).sum(-1), 1.0, rtol=1e-4)
+
+
+def test_softmax_extreme_values_stable():
+    x = np.array([[1e4, -1e4, 0.0, 1e4]], np.float32)
+    got = np.asarray(softmax.softmax_rows(x, br=1))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got.sum(), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ri=st.integers(1, 8), c=st.sampled_from([16, 64, 512]),
+    br=st.sampled_from([1, 4, 16]), dtype=st.sampled_from(F_DTYPES),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_layernorm_matches_ref(ri, c, br, dtype, seed):
+    rows = ri * br
+    r = _rng(seed)
+    x = r.normal(size=(rows, c)).astype(dtype)
+    g = r.normal(size=(c,)).astype(np.float32)
+    b = r.normal(size=(c,)).astype(np.float32)
+    got = layernorm.layernorm(x, g, b, br=br)
+    want = ref.layernorm(jnp.asarray(x, jnp.float32), jnp.asarray(g),
+                         jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_layernorm_constant_rows():
+    # zero-variance rows must not produce NaN (eps guards rsqrt)
+    x = np.full((4, 32), 3.5, np.float32)
+    g = np.ones(32, np.float32)
+    b = np.zeros(32, np.float32)
+    got = np.asarray(layernorm.layernorm(x, g, b, br=2))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    qi=st.integers(1, 4), ki=st.integers(1, 4),
+    bq=st.sampled_from([16, 32, 64]), bkv=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([16, 64]), seed=st.integers(0, 2**32 - 1),
+)
+def test_attention_matches_ref(qi, ki, bq, bkv, d, seed):
+    sq, sk = qi * bq, ki * bkv
+    r = _rng(seed)
+    q = r.normal(size=(sq, d)).astype(np.float32)
+    k = r.normal(size=(sk, d)).astype(np.float32)
+    v = r.normal(size=(sk, d)).astype(np.float32)
+    got = attention.attention(q, k, v, bq=bq, bkv=bkv)
+    want = ref.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_blocking_invariance():
+    # online-softmax recurrence: result independent of KV block size
+    r = _rng(7)
+    q = r.normal(size=(64, 32)).astype(np.float32)
+    k = r.normal(size=(128, 32)).astype(np.float32)
+    v = r.normal(size=(128, 32)).astype(np.float32)
+    outs = [np.asarray(attention.attention(q, k, v, bq=32, bkv=bkv))
+            for bkv in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kmeans
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 64), k=st.integers(1, 8), d=st.integers(1, 8),
+    nvalid=st.integers(1, 64), seed=st.integers(0, 2**32 - 1),
+)
+def test_kmeans_step_matches_ref(n, k, d, nvalid, seed):
+    r = _rng(seed)
+    pts = r.normal(size=(n, d)).astype(np.float32)
+    cts = pts[r.integers(0, n, size=k)] + 1e-3 * r.normal(size=(k, d)) \
+        .astype(np.float32)
+    cts = cts.astype(np.float32)
+    mask = np.zeros(n, np.float32)
+    mask[:min(nvalid, n)] = 1.0
+    # The Pallas kernel computes argmin over |c|^2 - 2 p.c (dropping the
+    # per-row |p|^2 constant); float rounding can flip the winner when two
+    # centroids are near-equidistant from a point. Skip those knife-edge
+    # draws — they are measure-zero for real phi(k) frontiers.
+    d2 = ((pts[:, None, :].astype(np.float64)
+           - cts[None, :, :].astype(np.float64)) ** 2).sum(-1)
+    part = np.sort(d2, axis=1)
+    if k > 1:
+        margin = part[:, 1] - part[:, 0]
+        assume((margin > 1e-3 * (1.0 + part[:, 0])).all())
+    got_c, got_a = kmeans.kmeans_step(pts, cts, mask)
+    want_c, want_a = ref.kmeans_step(jnp.asarray(pts), jnp.asarray(cts),
+                                     jnp.asarray(mask))
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-4, atol=1e-4)
+    assert (np.asarray(got_a) == np.asarray(want_a)).all()
+
+
+def test_kmeans_empty_cluster_keeps_centroid():
+    pts = np.zeros((4, 2), np.float32)
+    cts = np.array([[0.0, 0.0], [100.0, 100.0]], np.float32)
+    mask = np.ones(4, np.float32)
+    new_c, assign = kmeans.kmeans_step(pts, cts, mask)
+    assert (np.asarray(assign) == 0).all()
+    np.testing.assert_allclose(np.asarray(new_c)[1], [100.0, 100.0])
+
+
+def test_kmeans_masked_rows_do_not_contribute():
+    pts = np.array([[0.0], [0.0], [1000.0]], np.float32)
+    cts = np.array([[0.5]], np.float32)
+    mask = np.array([1.0, 1.0, 0.0], np.float32)
+    new_c, _ = kmeans.kmeans_step(pts, cts, mask)
+    np.testing.assert_allclose(np.asarray(new_c), [[0.0]], atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), iters=st.integers(1, 8))
+def test_kmeans_run_matches_ref_loop(seed, iters):
+    r = _rng(seed)
+    pts = r.normal(size=(32, 5)).astype(np.float32)
+    cts = pts[:3].copy()
+    mask = np.ones(32, np.float32)
+    got_c, got_a = kmeans.kmeans_run(pts, cts, mask, iters=iters)
+    want_c, want_a = ref.kmeans_run(jnp.asarray(pts), jnp.asarray(cts),
+                                    jnp.asarray(mask), iters=iters)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-3, atol=1e-3)
+
+
+def test_kmeans_run_reduces_inertia():
+    r = _rng(11)
+    pts = np.concatenate([r.normal(0, 0.3, size=(16, 5)),
+                          r.normal(5, 0.3, size=(16, 5))]).astype(np.float32)
+    cts = pts[:2].copy()
+    mask = np.ones(32, np.float32)
+
+    def inertia(c):
+        d2 = ((pts[:, None, :] - np.asarray(c)[None]) ** 2).sum(-1)
+        return d2.min(-1).sum()
+
+    final_c, _ = kmeans.kmeans_run(pts, cts, mask, iters=8)
+    assert inertia(final_c) <= inertia(cts) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# masked UCB
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(1, 8), s=st.integers(1, 8),
+       t=st.integers(1, 10_000), seed=st.integers(0, 2**32 - 1))
+def test_ucb_matches_ref(k, s, t, seed):
+    r = _rng(seed)
+    mu = r.uniform(size=(k, s)).astype(np.float32)
+    n = r.integers(1, 50, size=(k, s)).astype(np.float32)
+    mask = (r.uniform(size=(k, s)) > 0.4).astype(np.float32)
+    tt = np.array([[float(t)]], np.float32)
+    got = ucb.ucb_scores(mu, n, tt, mask)
+    want = ref.ucb_scores(jnp.asarray(mu), jnp.asarray(n), jnp.asarray(tt),
+                          jnp.asarray(mask))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ucb_masked_arms_are_neg_inf():
+    mu = np.full((2, 3), 0.5, np.float32)
+    n = np.ones((2, 3), np.float32)
+    mask = np.zeros((2, 3), np.float32)
+    mask[0, 1] = 1.0
+    got = np.asarray(ucb.ucb_scores(mu, n, np.array([[5.0]], np.float32),
+                                    mask))
+    assert got[0, 1] > 0.0
+    assert (got[mask == 0] <= ref.NEG_INF / 2).all()
+
+
+def test_ucb_bonus_decreases_with_visits():
+    mu = np.zeros((1, 2), np.float32)
+    n = np.array([[1.0, 100.0]], np.float32)
+    mask = np.ones((1, 2), np.float32)
+    got = np.asarray(ucb.ucb_scores(mu, n, np.array([[50.0]], np.float32),
+                                    mask))
+    assert got[0, 0] > got[0, 1]

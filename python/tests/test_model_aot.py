@@ -1,0 +1,109 @@
+"""L2/AOT tests: registry sanity, lowering round-trips, manifest schema."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+
+
+def test_registry_names_unique():
+    arts = model.all_artifacts()
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names))
+    assert len(arts) >= 40
+
+
+def test_registry_has_all_roles_and_ops():
+    arts = model.all_artifacts()
+    roles = {a.role for a in arts}
+    ops = {a.op for a in arts}
+    assert roles == {"coordinator", "variant", "reference"}
+    for op in ("kmeans", "ucb", "matmul", "fused", "softmax", "layernorm",
+               "attention"):
+        assert op in ops, op
+
+
+def test_every_variant_op_has_reference():
+    arts = model.all_artifacts()
+    variant_ops = {a.op for a in arts if a.role == "variant"}
+    ref_ops = {a.op for a in arts if a.role == "reference"}
+    assert variant_ops <= ref_ops
+
+
+def test_example_args_match_declared_shapes():
+    for art in model.all_artifacts():
+        args = model.example_args(art)
+        assert len(args) == len(art.in_shapes)
+        for a, s in zip(args, art.in_shapes):
+            assert a.shape == tuple(s[:-1])
+
+
+@pytest.mark.parametrize("name", ["kmeans_step_k3", "ucb_k3",
+                                  "matmul_t64x64x64", "softmax_b32"])
+def test_artifact_executes_and_matches_eager(name):
+    art = next(a for a in model.all_artifacts() if a.name == name)
+    rng = np.random.default_rng(0)
+    args = []
+    for s in art.in_shapes:
+        dims = tuple(s[:-1])
+        if s[-1] == "i32":
+            args.append(rng.integers(0, 4, dims).astype(np.int32))
+        else:
+            # keep counts/t positive for ucb
+            args.append(np.abs(rng.normal(size=dims)).astype(np.float32) + 0.5)
+    eager = art.fn(*[jnp.asarray(a) for a in args])
+    jitted = jax.jit(art.fn)(*[jnp.asarray(a) for a in args])
+    for e, j in zip(jax.tree.leaves(eager), jax.tree.leaves(jitted)):
+        np.testing.assert_allclose(np.asarray(e), np.asarray(j),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_to_hlo_text_produces_parseable_module():
+    art = next(a for a in model.all_artifacts() if a.name == "ucb_k3")
+    text = aot.to_hlo_text(art.fn, model.example_args(art))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_variant_vmem_fits_tpu_budget():
+    # structural §Perf check: every variant's per-step VMEM footprint must
+    # fit a TPU core's ~16 MiB VMEM with double-buffering headroom.
+    for art in model.all_artifacts():
+        if art.role == "variant" and art.vmem_bytes:
+            assert 2 * art.vmem_bytes < 16 * 2**20, art.name
+
+
+def test_manifest_on_disk_is_consistent():
+    man_path = REPO / "artifacts" / "manifest.json"
+    if not man_path.exists():
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    man = json.loads(man_path.read_text())
+    by_name = {a.name: a for a in model.all_artifacts()}
+    assert {e["name"] for e in man["artifacts"]} == set(by_name)
+    for e in man["artifacts"]:
+        art = by_name[e["name"]]
+        assert (REPO / "artifacts" / e["file"]).exists()
+        assert [tuple(d["dims"]) for d in e["inputs"]] == \
+            [tuple(s[:-1]) for s in art.in_shapes]
+        assert e["role"] == art.role
+
+
+def test_flash_attention_variants_agree():
+    # all attention block choices compute the same function
+    arts = [a for a in model.all_artifacts()
+            if a.op == "attention" and a.role == "variant"]
+    rng = np.random.default_rng(3)
+    q, k, v = (rng.normal(size=(model.AT_S, model.AT_D)).astype(np.float32)
+               for _ in range(3))
+    outs = [np.asarray(a.fn(jnp.asarray(q), jnp.asarray(k),
+                            jnp.asarray(v))[0]) for a in arts]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,18 @@
+//! Regenerates Figure 2 (scaling & clustering sensitivity, K sweep).
+
+use kernelband::eval;
+use kernelband::util::bench::BenchSuite;
+
+fn main() {
+    let suite = BenchSuite::heavy("fig2");
+    let mut out = String::new();
+    suite.bench("fig2_t16_k_sweep_plus_baselines", || {
+        out = eval::fig2(16);
+    });
+    // print only every 4th iteration row at bench scale
+    for (i, line) in out.lines().enumerate() {
+        if i < 3 || (i - 3) % 4 == 0 {
+            println!("{line}");
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Regenerates Figure 3 (time breakdown) and benchmarks the live
+//! batching gateway at several fleet sizes.
+
+use kernelband::eval;
+use kernelband::service::OptimizationService;
+use kernelband::util::bench::BenchSuite;
+
+fn main() {
+    println!("{}", eval::fig3());
+    let suite = BenchSuite::heavy("fig3");
+    for jobs in [1usize, 8, 32] {
+        suite.bench(&format!("service_{jobs}_jobs_x2_iters"), || {
+            let report = OptimizationService::default().run(jobs, 2);
+            assert_eq!(report.gateway_requests, jobs as u64 * 2);
+        });
+    }
+}

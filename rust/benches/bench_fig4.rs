@@ -1,0 +1,13 @@
+//! Regenerates Figure 4 (speedup vs API cost per kernel).
+
+use kernelband::eval;
+use kernelband::util::bench::BenchSuite;
+
+fn main() {
+    let suite = BenchSuite::heavy("fig4");
+    let mut out = String::new();
+    suite.bench("fig4_t20_budget_sweep", || {
+        out = eval::fig4(20);
+    });
+    println!("{out}");
+}

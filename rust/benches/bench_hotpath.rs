@@ -1,0 +1,95 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf working set):
+//! masked-UCB selection, K-means re-clustering, φ featurization, the
+//! roofline simulator, surrogate-LLM proposal, and one full policy
+//! iteration amortized. Before/after numbers live in EXPERIMENTS.md §Perf.
+
+use kernelband::bandit::{ArmStats, MaskedUcb};
+use kernelband::cluster::{ClusterBackend, RustKmeans};
+use kernelband::engine::SimEngine;
+use kernelband::eval;
+use kernelband::features::{phi, Phi};
+use kernelband::gpu_model::{Device, GpuSim};
+use kernelband::llm::{LlmBackend, LlmProfile, PromptMode, ProposalRequest,
+                      SurrogateLlm};
+use kernelband::policy::{KernelBand, PolicyConfig};
+use kernelband::rng::Rng;
+use kernelband::strategy::{Strategy, NUM_STRATEGIES};
+use kernelband::util::bench::BenchSuite;
+use kernelband::workload::Suite;
+
+fn main() {
+    let bs = BenchSuite::new("hotpath");
+    let suite = Suite::full(eval::EXPERIMENT_SEED);
+    let task = &suite.tasks[0];
+    let sim = GpuSim::new(Device::H20);
+    let mut rng = Rng::new(0);
+
+    // roofline evaluation (dominates the inner loop of every experiment)
+    bs.bench_throughput("gpu_sim_evaluate_12shapes", 1.0, || {
+        let m = sim.evaluate(task, &task.naive_config(), &mut rng);
+        std::hint::black_box(m.total_latency_s);
+    });
+
+    // masked UCB over K=3 x 6 arms
+    let stats = ArmStats::new(3);
+    let mask = vec![true; 3 * NUM_STRATEGIES];
+    let ucb = MaskedUcb::default();
+    bs.bench_throughput("masked_ucb_select_18_arms", 1.0, || {
+        std::hint::black_box(ucb.select(&stats, 17, &mask));
+    });
+
+    // K-means over a 40-kernel frontier
+    let points: Vec<Phi> = (0..40)
+        .map(|i| {
+            let mut p = [0.0; 5];
+            let mut r = Rng::new(i);
+            for v in p.iter_mut() {
+                *v = r.uniform();
+            }
+            p
+        })
+        .collect();
+    bs.bench_throughput("kmeans_40pts_k3_8iters", 1.0, || {
+        let c = RustKmeans::default().cluster(&points, 3, &mut rng);
+        std::hint::black_box(c.assign.len());
+    });
+
+    // featurization
+    let meas = sim.evaluate(task, &task.naive_config(), &mut Rng::new(0));
+    bs.bench_throughput("phi_featurize", 1.0, || {
+        std::hint::black_box(phi(&meas, 1.0));
+    });
+
+    // surrogate-LLM proposal
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    let parent = task.naive_config();
+    let req = ProposalRequest {
+        task,
+        parent: &parent,
+        mode: PromptMode::Strategy(Strategy::Fusion),
+        sim: &sim,
+        iterative: true,
+    };
+    bs.bench_throughput("llm_propose", 1.0, || {
+        std::hint::black_box(llm.propose(&req, &mut rng).cost_usd);
+    });
+
+    // full policy run, amortized per iteration
+    let engine = SimEngine::new(Device::H20);
+    bs.bench_throughput("policy_iteration_amortized_t20", 20.0, || {
+        let tr = KernelBand::new(PolicyConfig::default()).optimize(
+            task, &engine, &llm, &Rng::new(3),
+        );
+        std::hint::black_box(tr.best_id);
+    });
+
+    // suite-scale throughput: tasks/second for the table-1 inner loop
+    let sub = Suite::full(eval::EXPERIMENT_SEED).subset50();
+    bs.bench_throughput("subset50_kernelband_t20", 50.0, || {
+        let traces = eval::Method::KernelBand(
+            kernelband::policy::PolicyMode::Full, 3)
+            .run(&sub, Device::H20, LlmProfile::DeepSeekV32, 20,
+                 eval::EXPERIMENT_SEED);
+        std::hint::black_box(traces.len());
+    });
+}

@@ -1,0 +1,28 @@
+//! Regenerates Table 1 (main results) and times the end-to-end campaign.
+//! Full scale: `kernelband repro table1`. Bench scale: reduced budget so
+//! `cargo bench` completes quickly while printing the same rows.
+
+use kernelband::eval;
+use kernelband::util::bench::BenchSuite;
+
+fn main() {
+    let suite = BenchSuite::heavy("table1");
+    let mut out = String::new();
+    suite.bench("table1_t8_full_suite_3dev_3methods", || {
+        out = eval::table1(8);
+    });
+    println!("{out}");
+    suite.bench("table1_single_cell_kb_h20_t20", || {
+        use eval::Method;
+        use kernelband::policy::PolicyMode;
+        let s = kernelband::workload::Suite::full(eval::EXPERIMENT_SEED).subset50();
+        let traces = Method::KernelBand(PolicyMode::Full, 3).run(
+            &s,
+            kernelband::gpu_model::Device::H20,
+            kernelband::llm::LlmProfile::DeepSeekV32,
+            20,
+            eval::EXPERIMENT_SEED,
+        );
+        assert_eq!(traces.len(), 50);
+    });
+}

@@ -1,0 +1,13 @@
+//! Regenerates Table 2 (LLM generalization) at bench scale.
+
+use kernelband::eval;
+use kernelband::util::bench::BenchSuite;
+
+fn main() {
+    let suite = BenchSuite::heavy("table2");
+    let mut out = String::new();
+    suite.bench("table2_t10_4llms_3methods", || {
+        out = eval::table2(10);
+    });
+    println!("{out}");
+}

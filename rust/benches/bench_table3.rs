@@ -1,0 +1,13 @@
+//! Regenerates Table 3 (strategy risk/reward statistics, H20).
+
+use kernelband::eval;
+use kernelband::util::bench::BenchSuite;
+
+fn main() {
+    let suite = BenchSuite::heavy("table3");
+    let mut out = String::new();
+    suite.bench("table3_t20_h20_subset", || {
+        out = eval::table3(20);
+    });
+    println!("{out}");
+}

@@ -1,0 +1,57 @@
+//! Regenerates Table 4 (component + framework ablations) and includes
+//! the DESIGN.md-called-out extra ablation: arm-statistics carry-over vs
+//! full reset at re-clustering.
+
+use kernelband::engine::SimEngine;
+use kernelband::eval;
+use kernelband::gpu_model::Device;
+use kernelband::llm::{LlmProfile, SurrogateLlm};
+use kernelband::policy::{KernelBand, PolicyConfig};
+use kernelband::rng::Rng;
+use kernelband::util::bench::BenchSuite;
+use kernelband::workload::Suite;
+
+fn main() {
+    let bs = BenchSuite::heavy("table4");
+    let mut out = String::new();
+    bs.bench("table4_t12_all_ablations", || {
+        out = eval::table4(12);
+    });
+    println!("{out}");
+
+    // extra ablation promised in DESIGN.md: arm-statistics carry-over
+    // (reseed from reward history, the default) vs full reset at each
+    // re-clustering — run over the subset and report both geomeans.
+    let suite = Suite::full(eval::EXPERIMENT_SEED).subset50();
+    let engine = SimEngine::new(Device::H20);
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    for (label, reset) in [("reseed_from_history", false), ("reset_arms", true)] {
+        let mut log_sum = 0.0;
+        bs.bench(&format!("ablation_recluster_{label}_t30"), || {
+            log_sum = 0.0;
+            for task in &suite.tasks {
+                let mut cfg = PolicyConfig::default();
+                cfg.iterations = 30;
+                cfg.reset_arms_on_recluster = reset;
+                let tr = KernelBand::new(cfg).optimize(
+                    task, &engine, &llm, &Rng::new(task.id as u64),
+                );
+                log_sum += tr.outcome().fallback_speedup().ln();
+            }
+        });
+        println!(
+            "  recluster ablation [{label}]: fallback geomean {:.3}x",
+            (log_sum / suite.len() as f64).exp()
+        );
+    }
+
+    bs.bench("kernelband_t20_one_task_full_policy", || {
+        let tr = KernelBand::new(PolicyConfig::default()).optimize(
+            &suite.tasks[0],
+            &engine,
+            &llm,
+            &Rng::new(1),
+        );
+        assert_eq!(tr.records.len(), 20);
+    });
+}

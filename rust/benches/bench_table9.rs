@@ -1,0 +1,13 @@
+//! Regenerates Table 9 (PyTorch eager/inductor/max-autotune comparison).
+
+use kernelband::eval;
+use kernelband::util::bench::BenchSuite;
+
+fn main() {
+    let suite = BenchSuite::heavy("table9");
+    let mut out = String::new();
+    suite.bench("table9_t12_torch_subset", || {
+        out = eval::table9(12);
+    });
+    println!("{out}");
+}

@@ -1,0 +1,277 @@
+//! Masked-UCB bandit over (cluster, strategy) arms (paper §3.4, Eq. 6).
+//!
+//! Arms are the cross product of the current K clusters with the 6
+//! optimization strategies. Selection maximizes the UCB index
+//! `μ̂ + c·sqrt(ln t / N)` over arms whose hardware mask is 1; the mask
+//! prunes strategies whose target resource the cluster representative
+//! has already saturated (Eq. 5). Ties break on the lowest arm index so
+//! selection is deterministic.
+
+use crate::rng::Rng;
+use crate::strategy::{Strategy, NUM_STRATEGIES};
+
+/// Per-arm visit counts and empirical means, row-major `[cluster][strategy]`.
+#[derive(Debug, Clone)]
+pub struct ArmStats {
+    k: usize,
+    /// Visit counts (Algorithm 1 initializes N = 1).
+    pub n: Vec<f64>,
+    /// Empirical mean rewards (initialized to the optimistic prior 0.5).
+    pub mu: Vec<f64>,
+}
+
+/// Algorithm 1's optimistic initialization.
+pub const PRIOR_N: f64 = 1.0;
+pub const PRIOR_MU: f64 = 0.5;
+
+impl ArmStats {
+    pub fn new(k: usize) -> ArmStats {
+        ArmStats {
+            k,
+            n: vec![PRIOR_N; k * NUM_STRATEGIES],
+            mu: vec![PRIOR_MU; k * NUM_STRATEGIES],
+        }
+    }
+
+    pub fn clusters(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    fn idx(&self, cluster: usize, strategy: Strategy) -> usize {
+        cluster * NUM_STRATEGIES + strategy.index()
+    }
+
+    pub fn mean(&self, cluster: usize, strategy: Strategy) -> f64 {
+        self.mu[self.idx(cluster, strategy)]
+    }
+
+    pub fn visits(&self, cluster: usize, strategy: Strategy) -> f64 {
+        self.n[self.idx(cluster, strategy)]
+    }
+
+    /// Incremental-mean update (Algorithm 1 lines 22–23):
+    /// `N += 1; μ̂ += (r − μ̂)/N`.
+    pub fn update(&mut self, cluster: usize, strategy: Strategy, reward: f64) {
+        let i = self.idx(cluster, strategy);
+        self.n[i] += 1.0;
+        self.mu[i] += (reward - self.mu[i]) / self.n[i];
+    }
+
+    /// Rebuild arm statistics after re-clustering.
+    ///
+    /// The paper is silent on what happens to (cluster, strategy)
+    /// statistics when clusters move; we re-seed each new arm from the
+    /// reward history of the kernels now assigned to it (records carry
+    /// the per-kernel rewards each strategy produced), on top of the
+    /// optimistic prior. DESIGN.md documents this choice and
+    /// `benches/bench_hotpath.rs` has an ablation comparing it with a
+    /// full reset.
+    pub fn reseed(k: usize, history: &[RewardRecord], assign: &[usize])
+                  -> ArmStats {
+        let mut stats = ArmStats::new(k);
+        for rec in history {
+            // the record's kernel may have left the frontier window
+            if let Some(&cluster) = assign.get(rec.kernel) {
+                if cluster < k {
+                    stats.update(cluster, rec.strategy, rec.reward);
+                }
+            }
+        }
+        stats
+    }
+}
+
+/// One historical pull: strategy applied to frontier kernel `kernel`
+/// yielding `reward`. Kept by the policy to survive re-clustering.
+#[derive(Debug, Clone, Copy)]
+pub struct RewardRecord {
+    pub kernel: usize,
+    pub strategy: Strategy,
+    pub reward: f64,
+}
+
+/// The masked-UCB selector.
+#[derive(Debug, Clone)]
+pub struct MaskedUcb {
+    /// Exploration constant (paper §3.6: c = 2.0).
+    pub c: f64,
+}
+
+impl Default for MaskedUcb {
+    fn default() -> Self {
+        MaskedUcb { c: 2.0 }
+    }
+}
+
+impl MaskedUcb {
+    /// UCB index of a single arm at time `t`.
+    #[inline]
+    pub fn index(&self, mu: f64, n: f64, t: f64) -> f64 {
+        mu + self.c * (t.max(1.0).ln() / n.max(1.0)).sqrt()
+    }
+
+    /// Select the argmax over valid arms (Eq. 6). `mask[cluster][strategy]`
+    /// flattened row-major; returns `None` when every arm is masked
+    /// (callers then unmask, per the all-saturated fallback).
+    pub fn select(&self, stats: &ArmStats, t: usize, mask: &[bool])
+                  -> Option<(usize, Strategy)> {
+        debug_assert_eq!(mask.len(), stats.n.len());
+        let tf = t as f64;
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &valid) in mask.iter().enumerate() {
+            if !valid {
+                continue;
+            }
+            let score = self.index(stats.mu[i], stats.n[i], tf);
+            match best {
+                Some((_, b)) if score <= b => {}
+                _ => best = Some((i, score)),
+            }
+        }
+        best.map(|(i, _)| (i / NUM_STRATEGIES, Strategy::from_index(i % NUM_STRATEGIES)))
+    }
+
+    /// Select with an all-true mask.
+    pub fn select_unmasked(&self, stats: &ArmStats, t: usize)
+                           -> (usize, Strategy) {
+        let mask = vec![true; stats.n.len()];
+        self.select(stats, t, &mask).expect("non-empty arms")
+    }
+}
+
+/// Within-cluster kernel pick (paper §3.4): softmax over the remaining
+/// hardware headroom `V_hw(k, s) = θ_sat − h(k)[Target(s)]`.
+///
+/// `headrooms` are the V_hw scores of the cluster members; returns the
+/// position of the sampled member.
+pub fn softmax_kernel_pick(headrooms: &[f64], rng: &mut Rng) -> usize {
+    debug_assert!(!headrooms.is_empty());
+    // scores are in percent; scale to a temperature where 20 points of
+    // headroom difference is decisive but not degenerate
+    let scaled: Vec<f64> = headrooms.iter().map(|h| h / 15.0).collect();
+    rng.softmax(&scaled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy::ALL_STRATEGIES;
+
+    #[test]
+    fn prior_initialization() {
+        let s = ArmStats::new(3);
+        for c in 0..3 {
+            for &st in &ALL_STRATEGIES {
+                assert_eq!(s.visits(c, st), PRIOR_N);
+                assert_eq!(s.mean(c, st), PRIOR_MU);
+            }
+        }
+    }
+
+    #[test]
+    fn update_is_incremental_mean() {
+        let mut s = ArmStats::new(1);
+        let st = Strategy::Fusion;
+        s.update(0, st, 1.0);
+        // prior (n=1, mu=0.5) + one observation of 1.0 → mean 0.75, n=2
+        assert_eq!(s.visits(0, st), 2.0);
+        assert!((s.mean(0, st) - 0.75).abs() < 1e-12);
+        s.update(0, st, 0.0);
+        assert!((s.mean(0, st) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ucb_explores_unvisited_then_exploits() {
+        let mut s = ArmStats::new(1);
+        let ucb = MaskedUcb::default();
+        // hammer Tiling with rewards; others stay at the prior
+        for _ in 0..50 {
+            s.update(0, Strategy::Tiling, 1.0);
+        }
+        // at large t the exploration bonus of unvisited arms dominates…
+        let (_, pick) = ucb.select_unmasked(&s, 1000);
+        assert_ne!(pick, Strategy::Tiling, "bonus should force exploration");
+        // …but if all arms are equally visited, the best mean wins
+        let mut s2 = ArmStats::new(1);
+        for &st in &ALL_STRATEGIES {
+            for _ in 0..20 {
+                s2.update(0, st, if st == Strategy::Fusion { 0.9 } else { 0.1 });
+            }
+        }
+        let (_, pick2) = ucb.select_unmasked(&s2, 200);
+        assert_eq!(pick2, Strategy::Fusion);
+    }
+
+    #[test]
+    fn masked_arms_are_never_selected() {
+        let s = ArmStats::new(2);
+        let ucb = MaskedUcb::default();
+        let mut mask = vec![false; 2 * NUM_STRATEGIES];
+        mask[NUM_STRATEGIES + Strategy::Pipeline.index()] = true;
+        let got = ucb.select(&s, 5, &mask);
+        assert_eq!(got, Some((1, Strategy::Pipeline)));
+    }
+
+    #[test]
+    fn all_masked_returns_none() {
+        let s = ArmStats::new(2);
+        let ucb = MaskedUcb::default();
+        let mask = vec![false; 2 * NUM_STRATEGIES];
+        assert_eq!(ucb.select(&s, 5, &mask), None);
+    }
+
+    #[test]
+    fn tie_breaks_on_lowest_index() {
+        let s = ArmStats::new(2); // all arms identical
+        let ucb = MaskedUcb::default();
+        let (c, st) = ucb.select_unmasked(&s, 3);
+        assert_eq!((c, st), (0, Strategy::Tiling));
+    }
+
+    #[test]
+    fn reseed_aggregates_history_by_new_assignment() {
+        let history = vec![
+            RewardRecord { kernel: 0, strategy: Strategy::Fusion, reward: 1.0 },
+            RewardRecord { kernel: 1, strategy: Strategy::Fusion, reward: 0.0 },
+            RewardRecord { kernel: 2, strategy: Strategy::Tiling, reward: 1.0 },
+        ];
+        // kernels 0,1 now in cluster 0; kernel 2 in cluster 1
+        let assign = vec![0, 0, 1];
+        let s = ArmStats::reseed(2, &history, &assign);
+        // cluster 0 fusion: prior 0.5 + {1.0, 0.0} → n=3, mean=0.5
+        assert_eq!(s.visits(0, Strategy::Fusion), 3.0);
+        assert!((s.mean(0, Strategy::Fusion) - 0.5).abs() < 1e-12);
+        // cluster 1 tiling: prior + {1.0} → n=2, mean=0.75
+        assert!((s.mean(1, Strategy::Tiling) - 0.75).abs() < 1e-12);
+        // untouched arm keeps prior
+        assert_eq!(s.visits(1, Strategy::Fusion), PRIOR_N);
+    }
+
+    #[test]
+    fn reseed_ignores_stale_kernels() {
+        let history =
+            vec![RewardRecord { kernel: 9, strategy: Strategy::Fusion, reward: 1.0 }];
+        let s = ArmStats::reseed(2, &history, &[0, 1]);
+        assert_eq!(s.visits(0, Strategy::Fusion), PRIOR_N);
+    }
+
+    #[test]
+    fn softmax_pick_prefers_headroom() {
+        let mut rng = Rng::new(12);
+        let mut hits = 0;
+        for _ in 0..1000 {
+            if softmax_kernel_pick(&[5.0, 65.0], &mut rng) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 900, "hits={hits}");
+    }
+
+    #[test]
+    fn ucb_index_monotonicity() {
+        let ucb = MaskedUcb::default();
+        assert!(ucb.index(0.5, 1.0, 10.0) > ucb.index(0.5, 10.0, 10.0));
+        assert!(ucb.index(0.9, 5.0, 10.0) > ucb.index(0.1, 5.0, 10.0));
+    }
+}

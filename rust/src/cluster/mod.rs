@@ -1,0 +1,305 @@
+//! Trace-driven clustering of the kernel frontier (paper §3.3).
+//!
+//! Every τ iterations the frontier `P_t` is partitioned into K clusters
+//! by K-means on the behavioral features φ(k); the bandit then maintains
+//! arms per (cluster, strategy) instead of per (kernel, strategy),
+//! collapsing the expanding action space to a compact covering
+//! (Theorem 1's regret bound depends on the covering number of the
+//! clusters, not |P_t|).
+//!
+//! Two interchangeable backends implement one Lloyd iteration scheme:
+//!
+//! * [`RustKmeans`] — pure-Rust Lloyd, allocation-free inner loop; the
+//!   default on the hot path.
+//! * `runtime::PjrtKmeans` — executes the AOT-lowered Pallas
+//!   `kmeans_run_k{K}` artifact through PJRT; parity-tested against the
+//!   Rust path (see `rust/tests/pjrt_runtime.rs`).
+//!
+//! Both use the same semantics as the L1 kernel: masked points, argmin
+//! assignment with lowest-index tie-break, and empty clusters keeping
+//! their previous centroid.
+
+use crate::features::{phi_distance, Phi, PHI_DIM};
+use crate::rng::Rng;
+
+/// Result of clustering the frontier.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Cluster id per input point.
+    pub assign: Vec<usize>,
+    pub centroids: Vec<Phi>,
+    /// Index of the member closest to each centroid (the representative
+    /// kernel that gets profiled), `usize::MAX` for empty clusters.
+    pub representatives: Vec<usize>,
+}
+
+impl Clustering {
+    /// Members of cluster `i`.
+    pub fn members(&self, i: usize) -> Vec<usize> {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c == i)
+            .map(|(j, _)| j)
+            .collect()
+    }
+
+    /// Maximum intra-cluster diameter (the Theorem-1 approximation term
+    /// `L · max_i diam(C_i)`).
+    pub fn max_diameter(&self, points: &[Phi]) -> f64 {
+        let k = self.centroids.len();
+        let mut max_d = 0.0f64;
+        for i in 0..k {
+            let members = self.members(i);
+            for (ai, &a) in members.iter().enumerate() {
+                for &b in &members[ai + 1..] {
+                    max_d = max_d.max(phi_distance(&points[a], &points[b]));
+                }
+            }
+        }
+        max_d
+    }
+
+    /// Sum of squared distances to assigned centroids.
+    pub fn inertia(&self, points: &[Phi]) -> f64 {
+        points
+            .iter()
+            .zip(&self.assign)
+            .map(|(p, &c)| {
+                let d = phi_distance(p, &self.centroids[c]);
+                d * d
+            })
+            .sum()
+    }
+}
+
+/// Abstract clustering backend (Rust vs PJRT-artifact execution).
+pub trait ClusterBackend {
+    /// Cluster `points` into (at most) `k` groups. `rng` seeds the
+    /// initialization; implementations must be deterministic given it.
+    fn cluster(&self, points: &[Phi], k: usize, rng: &mut Rng) -> Clustering;
+}
+
+/// Pure-Rust Lloyd K-means with k-means++-style seeding.
+#[derive(Debug, Clone)]
+pub struct RustKmeans {
+    pub iters: usize,
+}
+
+impl Default for RustKmeans {
+    fn default() -> Self {
+        // matches the L1 artifact's fixed iteration count
+        RustKmeans { iters: 8 }
+    }
+}
+
+/// One Lloyd step with the exact semantics of the Pallas kernel:
+/// lowest-index argmin tie-break; empty clusters keep their centroid.
+pub fn lloyd_step(points: &[Phi], centroids: &mut [Phi]) -> Vec<usize> {
+    let k = centroids.len();
+    let mut assign = vec![0usize; points.len()];
+    let mut sums = vec![[0.0f64; PHI_DIM]; k];
+    let mut counts = vec![0usize; k];
+    for (pi, p) in points.iter().enumerate() {
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (ci, c) in centroids.iter().enumerate() {
+            let mut d = 0.0;
+            for j in 0..PHI_DIM {
+                let diff = p[j] - c[j];
+                d += diff * diff;
+            }
+            if d < best_d {
+                best_d = d;
+                best = ci;
+            }
+        }
+        assign[pi] = best;
+        counts[best] += 1;
+        for j in 0..PHI_DIM {
+            sums[best][j] += p[j];
+        }
+    }
+    for ci in 0..k {
+        if counts[ci] > 0 {
+            for j in 0..PHI_DIM {
+                centroids[ci][j] = sums[ci][j] / counts[ci] as f64;
+            }
+        }
+    }
+    assign
+}
+
+/// k-means++ seeding (deterministic given `rng`).
+pub fn kmeanspp_init(points: &[Phi], k: usize, rng: &mut Rng) -> Vec<Phi> {
+    assert!(!points.is_empty());
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(points[rng.below(points.len() as u64) as usize]);
+    while centroids.len() < k {
+        let weights: Vec<f64> = points
+            .iter()
+            .map(|p| {
+                centroids
+                    .iter()
+                    .map(|c| {
+                        let d = phi_distance(p, c);
+                        d * d
+                    })
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let idx = rng.weighted(&weights);
+        centroids.push(points[idx]);
+    }
+    centroids
+}
+
+/// Find the member closest to each centroid.
+pub fn representatives(points: &[Phi], assign: &[usize], centroids: &[Phi])
+                       -> Vec<usize> {
+    let mut reps = vec![usize::MAX; centroids.len()];
+    let mut best_d = vec![f64::INFINITY; centroids.len()];
+    for (pi, p) in points.iter().enumerate() {
+        let c = assign[pi];
+        let d = phi_distance(p, &centroids[c]);
+        if d < best_d[c] {
+            best_d[c] = d;
+            reps[c] = pi;
+        }
+    }
+    reps
+}
+
+impl ClusterBackend for RustKmeans {
+    fn cluster(&self, points: &[Phi], k: usize, rng: &mut Rng) -> Clustering {
+        let k = k.max(1).min(points.len().max(1));
+        let mut centroids = kmeanspp_init(points, k, rng);
+        for _ in 0..self.iters {
+            lloyd_step(points, &mut centroids);
+        }
+        // final assignment against the converged centroids
+        let assign = {
+            let mut snapshot = centroids.clone();
+            lloyd_step(points, &mut snapshot)
+        };
+        let reps = representatives(points, &assign, &centroids);
+        Clustering { assign, centroids, representatives: reps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blobs() -> Vec<Phi> {
+        let mut rng = Rng::new(3);
+        let mut pts = Vec::new();
+        for _ in 0..20 {
+            pts.push([
+                0.1 + 0.02 * rng.normal(),
+                0.1 + 0.02 * rng.normal(),
+                0.1,
+                0.1,
+                0.1,
+            ]);
+        }
+        for _ in 0..20 {
+            pts.push([
+                0.9 + 0.02 * rng.normal(),
+                0.9 + 0.02 * rng.normal(),
+                0.9,
+                0.9,
+                0.9,
+            ]);
+        }
+        pts
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let pts = two_blobs();
+        let c = RustKmeans::default().cluster(&pts, 2, &mut Rng::new(1));
+        assert_eq!(c.centroids.len(), 2);
+        // all of blob A in one cluster, blob B in the other
+        let a = c.assign[0];
+        assert!(c.assign[..20].iter().all(|&x| x == a));
+        assert!(c.assign[20..].iter().all(|&x| x != a));
+    }
+
+    #[test]
+    fn representative_is_member_of_its_cluster() {
+        let pts = two_blobs();
+        let c = RustKmeans::default().cluster(&pts, 2, &mut Rng::new(1));
+        for (ci, &r) in c.representatives.iter().enumerate() {
+            assert_ne!(r, usize::MAX);
+            assert_eq!(c.assign[r], ci);
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_point_count() {
+        let pts = vec![[0.0; PHI_DIM], [1.0; PHI_DIM]];
+        let c = RustKmeans::default().cluster(&pts, 5, &mut Rng::new(1));
+        assert!(c.centroids.len() <= 2);
+        assert!(c.assign.iter().all(|&a| a < c.centroids.len()));
+    }
+
+    #[test]
+    fn k1_groups_everything() {
+        let pts = two_blobs();
+        let c = RustKmeans::default().cluster(&pts, 1, &mut Rng::new(1));
+        assert!(c.assign.iter().all(|&a| a == 0));
+        // centroid is the mean
+        let mean0: f64 = pts.iter().map(|p| p[0]).sum::<f64>() / pts.len() as f64;
+        assert!((c.centroids[0][0] - mean0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let pts = two_blobs();
+        let a = RustKmeans::default().cluster(&pts, 3, &mut Rng::new(9));
+        let b = RustKmeans::default().cluster(&pts, 3, &mut Rng::new(9));
+        assert_eq!(a.assign, b.assign);
+    }
+
+    #[test]
+    fn lloyd_reduces_inertia() {
+        let pts = two_blobs();
+        let mut rng = Rng::new(4);
+        let mut centroids = kmeanspp_init(&pts, 2, &mut rng);
+        let assign0 = lloyd_step(&pts, &mut centroids.clone());
+        let c0 = Clustering {
+            assign: assign0,
+            centroids: centroids.clone(),
+            representatives: vec![],
+        };
+        let i0 = c0.inertia(&pts);
+        for _ in 0..5 {
+            lloyd_step(&pts, &mut centroids);
+        }
+        let assign1 = lloyd_step(&pts, &mut centroids.clone());
+        let c1 = Clustering {
+            assign: assign1,
+            centroids,
+            representatives: vec![],
+        };
+        assert!(c1.inertia(&pts) <= i0 + 1e-12);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_centroid() {
+        let pts = vec![[0.0; PHI_DIM]; 4];
+        let mut centroids = vec![[0.0; PHI_DIM], [5.0; PHI_DIM]];
+        let assign = lloyd_step(&pts, &mut centroids);
+        assert!(assign.iter().all(|&a| a == 0));
+        assert_eq!(centroids[1], [5.0; PHI_DIM]);
+    }
+
+    #[test]
+    fn max_diameter_and_inertia_zero_for_singletons() {
+        let pts = vec![[0.2; PHI_DIM]];
+        let c = RustKmeans::default().cluster(&pts, 1, &mut Rng::new(1));
+        assert_eq!(c.max_diameter(&pts), 0.0);
+        assert!(c.inertia(&pts) < 1e-18);
+    }
+}

@@ -1,0 +1,71 @@
+//! Evaluation engines: how a candidate schedule is measured.
+//!
+//! The search policies are generic over [`EvalEngine`] so the same
+//! Algorithm-1 driver runs against the roofline simulator (the full
+//! TritonBench-G-scale experiments) or against real AOT-compiled Pallas
+//! artifacts through PJRT ([`pjrt::PjrtBench`], used by the end-to-end
+//! example and integration tests).
+
+pub mod pjrt;
+
+use crate::gpu_model::{Device, GpuSim};
+use crate::kernel::{KernelConfig, Measurement};
+use crate::rng::Rng;
+use crate::workload::TaskSpec;
+
+/// Measurement backend for the schedule space.
+pub trait EvalEngine {
+    /// The simulated device profile (the surrogate LLM reads hardware
+    /// specs from here, like a prompt embedding the GPU datasheet).
+    fn gpu(&self) -> &GpuSim;
+
+    /// Benchmark a schedule on a task (all shapes, noise keyed by `rng`).
+    fn measure(&self, task: &TaskSpec, cfg: &KernelConfig, rng: &mut Rng)
+               -> Measurement;
+}
+
+/// The simulator-backed engine.
+#[derive(Debug, Clone)]
+pub struct SimEngine {
+    pub sim: GpuSim,
+}
+
+impl SimEngine {
+    pub fn new(device: Device) -> SimEngine {
+        SimEngine { sim: GpuSim::new(device) }
+    }
+
+    pub fn noiseless(device: Device) -> SimEngine {
+        SimEngine { sim: GpuSim::noiseless(device) }
+    }
+}
+
+impl EvalEngine for SimEngine {
+    fn gpu(&self) -> &GpuSim {
+        &self.sim
+    }
+
+    fn measure(&self, task: &TaskSpec, cfg: &KernelConfig, rng: &mut Rng)
+               -> Measurement {
+        self.sim.evaluate(task, cfg, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Suite;
+
+    #[test]
+    fn sim_engine_measures() {
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::A100);
+        let m = engine.measure(
+            &suite.tasks[0],
+            &KernelConfig::naive(),
+            &mut Rng::new(0),
+        );
+        assert!(m.total_latency_s > 0.0);
+        assert_eq!(engine.gpu().profile.device, Device::A100);
+    }
+}

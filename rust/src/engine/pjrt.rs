@@ -1,0 +1,222 @@
+//! Real-execution engine: the kernel-variant search over AOT Pallas
+//! artifacts, measured through PJRT.
+//!
+//! This is the honest end of the reproduction: instead of the roofline
+//! simulator, candidates here are *actual compiled kernels* — each
+//! (tile / fusion / row-block / flash-block) choice from
+//! `python/compile/model.py` is its own HLO module — and "measure" means
+//! executing through the PJRT CPU client and timing, while "verify"
+//! means an allclose comparison against the op's pure-jnp reference
+//! artifact (two-stage: execution errors = call-accuracy failure,
+//! mismatches = execution-accuracy failure).
+//!
+//! The same masked-UCB machinery drives the search: arms are the
+//! strategy families present in the manifest (`tiling`, `fusion`,
+//! `vectorization`, …); pulling an arm tries the next untried variant of
+//! that family, and the reward is the clipped relative improvement over
+//! the best latency so far — exactly the paper's reward signal with a
+//! real measurement substrate.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow as eyre, Result};
+
+use crate::bandit::{ArmStats, MaskedUcb};
+use crate::rng::Rng;
+use crate::runtime::{ArtifactMeta, Runtime};
+use crate::strategy::{Strategy, NUM_STRATEGIES};
+use crate::verify::{verify_buffers, Verdict};
+
+/// One measured + verified variant.
+#[derive(Debug, Clone)]
+pub struct VariantResult {
+    pub name: String,
+    pub op: String,
+    pub strategy: Option<Strategy>,
+    pub verdict: Verdict,
+    /// Median seconds per execution (PJRT CPU, interpret-lowered HLO).
+    pub latency_s: f64,
+    /// Speedup over the op's reference artifact.
+    pub speedup: f64,
+    /// Structural §Perf metadata from the manifest.
+    pub vmem_bytes: f64,
+    pub mxu_util: f64,
+}
+
+/// The real-kernel benchmark harness.
+pub struct PjrtBench<'rt> {
+    pub runtime: &'rt Runtime,
+    /// Timed repetitions per measurement (median reported).
+    pub reps: usize,
+    /// Baseline (reference-artifact) latency per op, populated lazily.
+    ref_latency: HashMap<String, f64>,
+    ref_outputs: HashMap<String, Vec<f32>>,
+}
+
+impl<'rt> PjrtBench<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> Self {
+        PjrtBench {
+            runtime,
+            reps: 5,
+            ref_latency: HashMap::new(),
+            ref_outputs: HashMap::new(),
+        }
+    }
+
+    /// Deterministic shared inputs for every artifact of an op family
+    /// (variants and reference see identical data, keyed by op).
+    pub fn op_inputs(&self, op: &str) -> Result<Vec<Vec<f32>>> {
+        let reference = self
+            .runtime
+            .manifest()
+            .reference(op)
+            .ok_or_else(|| eyre!("no reference artifact for op {op}"))?;
+        // generate from the *reference* meta so all variants of the op
+        // (identical signatures) share buffers
+        self.runtime.example_inputs(&reference.name, 0xC0FFEE)
+    }
+
+    /// Measure + memoize the reference implementation of an op.
+    pub fn reference(&mut self, op: &str) -> Result<(f64, Vec<f32>)> {
+        if let (Some(&lat), Some(out)) =
+            (self.ref_latency.get(op), self.ref_outputs.get(op))
+        {
+            return Ok((lat, out.clone()));
+        }
+        let name = self
+            .runtime
+            .manifest()
+            .reference(op)
+            .ok_or_else(|| eyre!("no reference for {op}"))?
+            .name
+            .clone();
+        let inputs = self.op_inputs(op)?;
+        let (outs, lat) = self.runtime.time_execution(&name, &inputs, self.reps)?;
+        self.ref_latency.insert(op.to_string(), lat);
+        self.ref_outputs.insert(op.to_string(), outs[0].clone());
+        Ok((lat, self.ref_outputs[op].clone()))
+    }
+
+    /// Measure and verify a single variant.
+    pub fn run_variant(&mut self, meta: &ArtifactMeta) -> Result<VariantResult> {
+        let (ref_lat, ref_out) = self.reference(&meta.op)?;
+        let inputs = self.op_inputs(&meta.op)?;
+        let (verdict, latency_s) =
+            match self.runtime.time_execution(&meta.name, &inputs, self.reps) {
+                Ok((outs, lat)) => {
+                    (verify_buffers(Some(&outs[0]), &ref_out), lat)
+                }
+                // execution failure = call-accuracy failure
+                Err(_) => (verify_buffers(None, &ref_out), f64::INFINITY),
+            };
+        Ok(VariantResult {
+            name: meta.name.clone(),
+            op: meta.op.clone(),
+            strategy: meta.strategy().and_then(Strategy::parse),
+            verdict,
+            latency_s,
+            speedup: ref_lat / latency_s,
+            vmem_bytes: meta.vmem_bytes,
+            mxu_util: meta.mxu_util,
+        })
+    }
+
+    /// Exhaustively measure every variant of an op (the per-op "table").
+    pub fn sweep(&mut self, op: &str) -> Result<Vec<VariantResult>> {
+        let metas: Vec<ArtifactMeta> = self
+            .runtime
+            .manifest()
+            .variants(op)
+            .into_iter()
+            .cloned()
+            .collect();
+        metas.iter().map(|m| self.run_variant(m)).collect()
+    }
+
+    /// Masked-UCB search over an op's variant space (the end-to-end
+    /// driver's inner loop): arms = strategy families; pulling an arm
+    /// measures that family's next untried variant; reward = clipped
+    /// improvement over the incumbent best latency.
+    pub fn bandit_search(&mut self, op: &str, budget: usize, rng: &mut Rng)
+                         -> Result<SearchOutcome> {
+        let metas: Vec<ArtifactMeta> = self
+            .runtime
+            .manifest()
+            .variants(op)
+            .into_iter()
+            .cloned()
+            .collect();
+        let (ref_lat, _) = self.reference(op)?;
+
+        // group variant indices by strategy family
+        let mut by_family: Vec<Vec<usize>> = vec![Vec::new(); NUM_STRATEGIES];
+        for (i, m) in metas.iter().enumerate() {
+            if let Some(s) = m.strategy().and_then(Strategy::parse) {
+                by_family[s.index()].push(i);
+            }
+        }
+        // shuffle within family so the pull order is seed-dependent
+        for fam in by_family.iter_mut() {
+            rng.shuffle(fam);
+        }
+
+        let ucb = MaskedUcb::default();
+        let mut stats = ArmStats::new(1);
+        let mut next_in_family = vec![0usize; NUM_STRATEGIES];
+        let mut best_latency = ref_lat;
+        let mut tried = Vec::new();
+        for t in 1..=budget {
+            // mask exhausted families
+            let mask: Vec<bool> = (0..NUM_STRATEGIES)
+                .map(|s| next_in_family[s] < by_family[s].len())
+                .collect();
+            let Some((_, s)) = ucb.select(&stats, t, &mask) else {
+                break; // every variant tried
+            };
+            let vi = by_family[s.index()][next_in_family[s.index()]];
+            next_in_family[s.index()] += 1;
+            let result = self.run_variant(&metas[vi])?;
+            let reward = if result.verdict.passed() {
+                ((best_latency - result.latency_s) / best_latency).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            if result.verdict.passed() && result.latency_s < best_latency {
+                best_latency = result.latency_s;
+            }
+            stats.update(0, s, reward);
+            tried.push(result);
+        }
+        let best = tried
+            .iter()
+            .filter(|r| r.verdict.passed())
+            .min_by(|a, b| a.latency_s.total_cmp(&b.latency_s))
+            .cloned();
+        Ok(SearchOutcome {
+            op: op.to_string(),
+            reference_latency_s: ref_lat,
+            tried,
+            best,
+        })
+    }
+}
+
+/// Result of a bandit search over one op's variant space.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub op: String,
+    pub reference_latency_s: f64,
+    pub tried: Vec<VariantResult>,
+    pub best: Option<VariantResult>,
+}
+
+impl SearchOutcome {
+    pub fn best_speedup(&self) -> f64 {
+        self.best.as_ref().map(|b| b.speedup).unwrap_or(1.0)
+    }
+
+    /// Measurements issued (the search's cost).
+    pub fn evaluations(&self) -> usize {
+        self.tried.len()
+    }
+}

@@ -1,0 +1,606 @@
+//! Experiment harnesses: regenerate every table and figure of the
+//! paper's evaluation (§4) from this reproduction's substrates.
+//!
+//! Each `table*`/`fig*` function runs the full experiment and renders
+//! the same rows/series the paper reports; `kernelband repro <exp>`
+//! exposes them on the CLI and `rust/benches/` wraps scaled-down
+//! versions in criterion. Absolute numbers differ from the paper (the
+//! substrate is a simulator, not the authors' testbed) — the *shape*
+//! (who wins, by roughly what factor, orderings) is the reproduction
+//! target; EXPERIMENTS.md records paper-vs-measured side by side.
+
+use crate::baselines::{BestOfN, Geak, TorchMode};
+use crate::engine::SimEngine;
+use crate::gpu_model::{Device, ALL_DEVICES};
+use crate::llm::{LlmProfile, SurrogateLlm, ALL_LLMS};
+use crate::metrics::{aggregate, stratified, Aggregate, TaskOutcome};
+use crate::policy::{KernelBand, PolicyConfig, PolicyMode, Trace};
+use crate::rng::Rng;
+use crate::service::TimeModel;
+use crate::strategy::{ALL_STRATEGIES, NUM_STRATEGIES};
+use crate::workload::Suite;
+
+/// Root seed for all experiments (subset sampling uses the paper's 42
+/// independently; this keys simulator noise and LLM sampling).
+pub const EXPERIMENT_SEED: u64 = 20_260_212;
+
+/// An optimization method under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// KernelBand with a policy mode and cluster count K.
+    KernelBand(PolicyMode, usize),
+    BoN,
+    Geak,
+}
+
+impl Method {
+    pub fn name(self) -> String {
+        match self {
+            Method::KernelBand(PolicyMode::Full, 3) => "KernelBand".into(),
+            Method::KernelBand(PolicyMode::Full, k) => {
+                format!("KernelBand (K={k})")
+            }
+            Method::KernelBand(mode, _) => format!("KernelBand [{mode:?}]"),
+            Method::BoN => "BoN".into(),
+            Method::Geak => "GEAK".into(),
+        }
+    }
+
+    /// Run the method on every task of a suite (rayon-parallel; the
+    /// split RNG keys make results order-invariant).
+    pub fn run(self, suite: &Suite, device: Device, llm_profile: LlmProfile,
+               iterations: usize, seed: u64) -> Vec<Trace> {
+        let engine = SimEngine::new(device);
+        let llm = SurrogateLlm::new(llm_profile);
+        let root = Rng::new(seed).split("method", self.tag());
+        crate::util::par::parallel_map(&suite.tasks, 0, |_, task| match self {
+                Method::KernelBand(mode, k) => {
+                    let mut cfg = PolicyConfig::with_mode(mode);
+                    cfg.iterations = iterations;
+                    if mode != PolicyMode::NoClustering {
+                        cfg.clusters = k;
+                    }
+                    KernelBand::new(cfg).optimize(task, &engine, &llm, &root)
+                }
+                Method::BoN => {
+                    BestOfN::new(iterations).optimize(task, &engine, &llm, &root)
+                }
+                Method::Geak => {
+                    Geak::new(iterations).optimize(task, &engine, &llm, &root)
+                }
+            })
+    }
+
+    fn tag(self) -> u64 {
+        match self {
+            Method::KernelBand(mode, k) => 100 + k as u64 * 10 + mode as u64,
+            Method::BoN => 1,
+            Method::Geak => 2,
+        }
+    }
+}
+
+pub fn outcomes(traces: &[Trace]) -> Vec<TaskOutcome> {
+    traces.iter().map(|t| t.outcome()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// text-table rendering
+// ---------------------------------------------------------------------------
+
+/// Render an aligned text table.
+pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>])
+                    -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    let hdr: Vec<String> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| format!("{:<w$}", h, w = widths[i]))
+        .collect();
+    out.push_str(&hdr.join("  "));
+    out.push('\n');
+    out.push_str(&"-".repeat(hdr.join("  ").len()));
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&cells.join("  "));
+        out.push('\n');
+    }
+    out
+}
+
+fn fmt_cfg(a: &Aggregate) -> [String; 3] {
+    [
+        format!("{:.1}", a.correct_pct),
+        format!("{:.1}", a.fast1_pct),
+        if a.geomean_standard.is_nan() {
+            "-".into()
+        } else {
+            format!("{:.2}", a.geomean_standard)
+        },
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — main results
+// ---------------------------------------------------------------------------
+
+/// Table 1: {RTX 4090, H20, A100} × {BoN, GEAK, KernelBand}, stratified
+/// by difficulty, on the full 183-kernel suite, T = 20.
+pub fn table1(iterations: usize) -> String {
+    let suite = Suite::full(EXPERIMENT_SEED);
+    let methods = [
+        Method::BoN,
+        Method::Geak,
+        Method::KernelBand(PolicyMode::Full, 3),
+    ];
+    let mut rows = Vec::new();
+    for device in ALL_DEVICES {
+        for method in methods {
+            let traces = method.run(
+                &suite,
+                device,
+                LlmProfile::DeepSeekV32,
+                iterations,
+                EXPERIMENT_SEED,
+            );
+            let outs = outcomes(&traces);
+            let strata = stratified(&outs);
+            let mut row = vec![device.name().to_string(), method.name()];
+            for (_, agg) in &strata {
+                row.extend(fmt_cfg(agg));
+            }
+            rows.push(row);
+        }
+    }
+    render_table(
+        "Table 1 — TritonBench-G main results (C %, F %, G geomean; standard mode)",
+        &[
+            "Platform", "Method", "L1-2 C", "F", "G", "L3 C", "F", "G",
+            "L4-5 C", "F", "G", "All C", "F", "G",
+        ],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — LLM generalization
+// ---------------------------------------------------------------------------
+
+/// Table 2: 4 LLM backends × 3 methods on the 50-kernel subset, H20.
+pub fn table2(iterations: usize) -> String {
+    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let methods = [
+        Method::BoN,
+        Method::Geak,
+        Method::KernelBand(PolicyMode::Full, 3),
+    ];
+    let mut rows = Vec::new();
+    for llm in ALL_LLMS {
+        for method in methods {
+            let traces =
+                method.run(&suite, Device::H20, llm, iterations, EXPERIMENT_SEED);
+            let agg = aggregate(&outcomes(&traces));
+            let [c, f, g] = fmt_cfg(&agg);
+            rows.push(vec![llm.spec().name.to_string(), method.name(), c, f, g]);
+        }
+    }
+    render_table(
+        "Table 2 — LLM generalization (50-kernel subset, H20, T=20)",
+        &["Model", "Method", "C (%)", "F (%)", "G"],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Tables 3 / 10 — strategy selection statistics
+// ---------------------------------------------------------------------------
+
+/// Aggregated per-strategy Freq/Succ/Best over a set of traces.
+pub fn strategy_stats(traces: &[Trace]) -> Vec<(String, f64, f64, f64)> {
+    let mut selected = [0usize; NUM_STRATEGIES];
+    let mut success = [0usize; NUM_STRATEGIES];
+    let mut on_best = [0usize; NUM_STRATEGIES];
+    for tr in traces {
+        for (i, c) in tr.strategy_counts().iter().enumerate() {
+            selected[i] += c.selected;
+            success[i] += c.success;
+            on_best[i] += c.on_best_chain;
+        }
+    }
+    let total: usize = selected.iter().sum();
+    ALL_STRATEGIES
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            (
+                s.name().to_string(),
+                100.0 * selected[i] as f64 / total.max(1) as f64,
+                100.0 * success[i] as f64 / selected[i].max(1) as f64,
+                100.0 * on_best[i] as f64 / success[i].max(1) as f64,
+            )
+        })
+        .collect()
+}
+
+fn strategy_table(device: Device, iterations: usize) -> Vec<Vec<String>> {
+    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let traces = Method::KernelBand(PolicyMode::Full, 3).run(
+        &suite,
+        device,
+        LlmProfile::DeepSeekV32,
+        iterations,
+        EXPERIMENT_SEED,
+    );
+    strategy_stats(&traces)
+        .into_iter()
+        .map(|(name, f, s, b)| {
+            vec![
+                name,
+                format!("{f:.1}"),
+                format!("{s:.1}"),
+                format!("{b:.1}"),
+            ]
+        })
+        .collect()
+}
+
+/// Table 3: strategy risk/reward profiles on H20.
+pub fn table3(iterations: usize) -> String {
+    render_table(
+        "Table 3 — strategy selection statistics (H20, 50-kernel subset)",
+        &["Strategy", "Freq (%)", "Succ (%)", "Best (%)"],
+        &strategy_table(Device::H20, iterations),
+    )
+}
+
+/// Table 10: strategy statistics on H20 vs RTX 4090 (hardware
+/// adaptation, Appendix I).
+pub fn table10(iterations: usize) -> String {
+    let h20 = strategy_table(Device::H20, iterations);
+    let rtx = strategy_table(Device::Rtx4090, iterations);
+    let rows: Vec<Vec<String>> = h20
+        .into_iter()
+        .zip(rtx)
+        .map(|(a, b)| {
+            vec![
+                a[0].clone(),
+                a[1].clone(),
+                a[2].clone(),
+                a[3].clone(),
+                b[1].clone(),
+                b[2].clone(),
+                b[3].clone(),
+            ]
+        })
+        .collect();
+    render_table(
+        "Table 10 — strategy utilization, H20 vs RTX 4090",
+        &[
+            "Strategy", "H20 Freq", "Succ", "Best", "4090 Freq", "Succ", "Best",
+        ],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — ablations
+// ---------------------------------------------------------------------------
+
+/// Table 4: single-component and framework-level ablations (H20,
+/// 50-kernel subset).
+pub fn table4(iterations: usize) -> String {
+    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let configs: Vec<(&str, Method)> = vec![
+        ("KernelBand (Full)", Method::KernelBand(PolicyMode::Full, 3)),
+        (
+            "w/o Clustering (K=1)",
+            Method::KernelBand(PolicyMode::NoClustering, 1),
+        ),
+        (
+            "w/o Profiling",
+            Method::KernelBand(PolicyMode::NoProfiling, 3),
+        ),
+        (
+            "LLM Strategy Selection",
+            Method::KernelBand(PolicyMode::LlmStrategySelection, 3),
+        ),
+        (
+            "w/o Strategy + Raw Prof.",
+            Method::KernelBand(PolicyMode::NoStrategyRawProfiling, 3),
+        ),
+        (
+            "w/o Strategy Set",
+            Method::KernelBand(PolicyMode::NoStrategySet, 3),
+        ),
+        ("BoN (baseline)", Method::BoN),
+    ];
+    let mut rows = Vec::new();
+    for (label, method) in configs {
+        let traces = method.run(
+            &suite,
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            iterations,
+            EXPERIMENT_SEED,
+        );
+        let agg = aggregate(&outcomes(&traces));
+        let [c, f, g] = fmt_cfg(&agg);
+        rows.push(vec![label.to_string(), c, f, g]);
+    }
+    render_table(
+        "Table 4 — ablations (H20, 50-kernel subset, T=20)",
+        &["Configuration", "C (%)", "F (%)", "G"],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Table 9 — PyTorch baselines (Appendix G)
+// ---------------------------------------------------------------------------
+
+/// Table 9: KernelBand-optimized kernels vs PyTorch eager / inductor /
+/// max-autotune on the 30-kernel torch-comparable subset (H20).
+pub fn table9(iterations: usize) -> String {
+    let suite = Suite::full(EXPERIMENT_SEED).subset50().torch_subset();
+    let engine = SimEngine::new(Device::H20);
+    let traces = Method::KernelBand(PolicyMode::Full, 3).run(
+        &suite,
+        Device::H20,
+        LlmProfile::DeepSeekV32,
+        iterations,
+        EXPERIMENT_SEED,
+    );
+    let root = Rng::new(EXPERIMENT_SEED).split("torch", 0);
+    let mut rows = Vec::new();
+    for mode in [TorchMode::Eager, TorchMode::Inductor, TorchMode::MaxAutotune] {
+        let mut log_sum = 0.0;
+        for (task, trace) in suite.tasks.iter().zip(&traces) {
+            let torch_latency = mode.latency(task, &engine, &root);
+            // fallback semantics: if optimization failed, the deployed
+            // kernel is the Triton reference
+            let best = if trace.correct() {
+                trace.candidates[trace.best_id].measurement.total_latency_s
+                    .min(trace.naive_latency_s)
+            } else {
+                trace.naive_latency_s
+            };
+            log_sum += (torch_latency / best).ln();
+        }
+        let geomean = (log_sum / suite.len() as f64).exp();
+        rows.push(vec![
+            format!("vs. {}", mode.name()),
+            format!("{geomean:.2}x"),
+        ]);
+    }
+    render_table(
+        "Table 9 — speedup over PyTorch baselines (30 kernels, H20, T=20)",
+        &["PyTorch Baseline", "Speedup"],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 — scaling & clustering sensitivity
+// ---------------------------------------------------------------------------
+
+/// Fallback-mode geomean best-speedup curve across iterations for a set
+/// of traces (all with the same T).
+pub fn scaling_curve(traces: &[Trace]) -> Vec<f64> {
+    let t = traces.iter().map(|tr| tr.records.len()).min().unwrap_or(0);
+    (0..t)
+        .map(|i| {
+            let log_sum: f64 = traces
+                .iter()
+                .map(|tr| tr.speedup_curve()[i].ln())
+                .sum();
+            (log_sum / traces.len() as f64).exp()
+        })
+        .collect()
+}
+
+/// Figure 2: T = 40 scaling for KernelBand K ∈ {1, 2, 3, 5} vs BoN and
+/// GEAK (fallback-mode geomean, 50-kernel subset, H20).
+pub fn fig2(iterations: usize) -> String {
+    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let series: Vec<(String, Vec<f64>)> = [
+        Method::KernelBand(PolicyMode::Full, 1),
+        Method::KernelBand(PolicyMode::Full, 2),
+        Method::KernelBand(PolicyMode::Full, 3),
+        Method::KernelBand(PolicyMode::Full, 5),
+        Method::Geak,
+        Method::BoN,
+    ]
+    .into_iter()
+    .map(|m| {
+        let traces = m.run(
+            &suite,
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            iterations,
+            EXPERIMENT_SEED,
+        );
+        (m.name(), scaling_curve(&traces))
+    })
+    .collect();
+
+    let mut headers = vec!["iter".to_string()];
+    headers.extend(series.iter().map(|(n, _)| n.clone()));
+    let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut rows = Vec::new();
+    for t in (0..iterations).step_by(1) {
+        let mut row = vec![format!("{}", t + 1)];
+        for (_, curve) in &series {
+            row.push(format!("{:.3}", curve[t]));
+        }
+        rows.push(row);
+    }
+    render_table(
+        "Figure 2 — scaling & clustering sensitivity (fallback geomean, H20)",
+        &headers_ref,
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3 — time breakdown
+// ---------------------------------------------------------------------------
+
+/// Figure 3: per-kernel/iteration time breakdown, serial vs batched.
+pub fn fig3() -> String {
+    let tm = TimeModel::default();
+    let mut rows = Vec::new();
+    for r in tm.serial_breakdown() {
+        rows.push(vec![
+            "serial".into(),
+            r.component.into(),
+            format!("{:.1}", r.seconds),
+            format!("{:.1}", r.percent),
+        ]);
+    }
+    rows.push(vec![
+        "serial".into(),
+        "TOTAL".into(),
+        format!("{:.1} ({:.1} min)", tm.serial_iteration_s(),
+                tm.serial_iteration_s() / 60.0),
+        "100.0".into(),
+    ]);
+    for r in tm.batched_breakdown() {
+        rows.push(vec![
+            "batched".into(),
+            r.component.into(),
+            format!("{:.1}", r.seconds),
+            format!("{:.1}", r.percent),
+        ]);
+    }
+    rows.push(vec![
+        "batched".into(),
+        "TOTAL".into(),
+        format!("{:.1} s", tm.batched_iteration_s()),
+        "100.0".into(),
+    ]);
+    render_table(
+        "Figure 3 — time breakdown per kernel/iteration",
+        &["Pipeline", "Component", "Seconds", "% of total"],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4 — speedup vs API cost
+// ---------------------------------------------------------------------------
+
+/// Best fallback speedup achievable within a per-kernel budget, read off
+/// a trace's cumulative cost curve.
+pub fn speedup_within_budget(trace: &Trace, budget_usd: f64) -> f64 {
+    let mut spent = 0.0;
+    let mut best = 1.0f64;
+    for r in &trace.records {
+        spent += r.cost_usd;
+        if spent > budget_usd {
+            break;
+        }
+        best = best.max(r.best_speedup_so_far);
+    }
+    best
+}
+
+/// Figure 4: geomean speedup as a function of API budget per kernel.
+pub fn fig4(iterations: usize) -> String {
+    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let budgets = [0.05, 0.10, 0.15, 0.20, 0.30, 0.40, 0.50];
+    let methods = [
+        Method::KernelBand(PolicyMode::Full, 3),
+        Method::Geak,
+        Method::BoN,
+    ];
+    let all: Vec<(String, Vec<Trace>)> = methods
+        .into_iter()
+        .map(|m| {
+            (
+                m.name(),
+                m.run(&suite, Device::H20, LlmProfile::DeepSeekV32,
+                      iterations, EXPERIMENT_SEED),
+            )
+        })
+        .collect();
+    let mut rows = Vec::new();
+    for &b in &budgets {
+        let mut row = vec![format!("${b:.2}")];
+        for (_, traces) in &all {
+            let log_sum: f64 = traces
+                .iter()
+                .map(|tr| speedup_within_budget(tr, b).ln())
+                .sum();
+            row.push(format!("{:.3}", (log_sum / traces.len() as f64).exp()));
+        }
+        rows.push(row);
+    }
+    render_table(
+        "Figure 4 — geomean speedup vs API cost per kernel (H20, T=40)",
+        &["Budget", "KernelBand", "GEAK", "BoN"],
+        &rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Theorem 1 — empirical regret check
+// ---------------------------------------------------------------------------
+
+/// Empirical average regret of masked UCB on a synthetic (K × S)-arm
+/// instance vs the Theorem-1 rate `C·sqrt(K|S| ln T / T)`.
+pub fn regret(max_t: usize) -> String {
+    use crate::bandit::{ArmStats, MaskedUcb};
+    let k = 3usize;
+    let s = NUM_STRATEGIES;
+    let mut rng = Rng::new(7).split("regret", 0);
+    // true means in [0, 0.9]
+    let means: Vec<f64> = (0..k * s).map(|_| rng.uniform_in(0.0, 0.9)).collect();
+    let mu_star = means.iter().cloned().fold(0.0, f64::max);
+
+    let ucb = MaskedUcb::default();
+    let mut stats = ArmStats::new(k);
+    let mask = vec![true; k * s];
+    let mut cum_regret = 0.0;
+    let mut rows = Vec::new();
+    let checkpoints: Vec<usize> =
+        [10, 25, 50, 100, 200, 400, 800, 1600, 3200]
+            .into_iter()
+            .filter(|&t| t <= max_t)
+            .collect();
+    for t in 1..=max_t {
+        let (ci, st) = ucb.select(&stats, t, &mask).unwrap();
+        let idx = ci * s + st.index();
+        // Bernoulli reward with the arm's true mean
+        let r = if rng.chance(means[idx]) { 1.0 } else { 0.0 };
+        stats.update(ci, st, r);
+        cum_regret += mu_star - means[idx];
+        if checkpoints.contains(&t) {
+            let avg = cum_regret / t as f64;
+            let bound =
+                ((k * s) as f64 * (t as f64).ln() / t as f64).sqrt();
+            rows.push(vec![
+                format!("{t}"),
+                format!("{avg:.4}"),
+                format!("{bound:.4}"),
+                format!("{}", avg <= bound * 1.5),
+            ]);
+        }
+    }
+    render_table(
+        "Theorem 1 — empirical avg regret vs O(sqrt(K|S| ln T / T)) rate",
+        &["T", "avg regret", "rate (C=1)", "within 1.5x rate"],
+        &rows,
+    )
+}

@@ -1,0 +1,130 @@
+//! The behavioral feature vector φ(k) (paper Eq. 4 / Appendix A).
+//!
+//! φ(k) = [ T̃(k), n_reg, n_smem, d_block, η_occ ] — normalized execution
+//! time (log-transformed) plus four cheap launch-attribute counters.
+//! Kernels close in φ-space share bottlenecks (Assumption 2), which is
+//! what lets the bandit share strategy statistics within clusters.
+//!
+//! Normalization puts every dimension in roughly [0, 1] so K-means
+//! distances are not dominated by raw register counts.
+
+use crate::kernel::{Counters, Measurement};
+
+/// Dimension of φ(k).
+pub const PHI_DIM: usize = 5;
+
+/// A normalized behavioral feature vector.
+pub type Phi = [f64; PHI_DIM];
+
+/// Upper bounds used for min-max normalization of the raw counters.
+const MAX_REGS: f64 = 255.0; // CUDA register cap per thread
+const MAX_SMEM: f64 = 228.0 * 1024.0; // largest smem/block across devices
+const MAX_BLOCK: f64 = 1024.0; // CUDA thread cap per block
+/// Log-time clip range: latencies within e^±3 of the reference.
+const LOG_T_CLIP: f64 = 3.0;
+
+/// Compute φ(k) for a measured candidate.
+///
+/// `reference_latency_s` is the task's naive-kernel latency: the time
+/// feature is `ln(t / t_ref)` clipped to ±3 and mapped to [0, 1], so a
+/// kernel 20× faster than the reference sits near 0 and a 20× slower one
+/// near 1.
+pub fn phi(m: &Measurement, reference_latency_s: f64) -> Phi {
+    let c = &m.counters;
+    let log_t = (m.total_latency_s / reference_latency_s.max(1e-12)).ln();
+    let t_norm = ((log_t.clamp(-LOG_T_CLIP, LOG_T_CLIP)) + LOG_T_CLIP)
+        / (2.0 * LOG_T_CLIP);
+    [
+        t_norm,
+        (c.regs_per_thread / MAX_REGS).clamp(0.0, 1.0),
+        (c.smem_per_block / MAX_SMEM).clamp(0.0, 1.0),
+        (c.block_dim / MAX_BLOCK).clamp(0.0, 1.0),
+        c.occupancy.clamp(0.0, 1.0),
+    ]
+}
+
+/// Euclidean distance in φ-space (the metric of Assumption 2).
+pub fn phi_distance(a: &Phi, b: &Phi) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Convenience: φ from raw counters + latency (used by the PJRT engine,
+/// where counters come from artifact metadata rather than simulation).
+pub fn phi_from_parts(latency_s: f64, reference_latency_s: f64,
+                      counters: &Counters) -> Phi {
+    let m = Measurement {
+        total_latency_s: latency_s,
+        per_shape_s: vec![latency_s],
+        counters: *counters,
+    };
+    phi(&m, reference_latency_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meas(t: f64, regs: f64, occ: f64) -> Measurement {
+        Measurement {
+            total_latency_s: t,
+            per_shape_s: vec![t],
+            counters: Counters {
+                regs_per_thread: regs,
+                smem_per_block: 16384.0,
+                block_dim: 256.0,
+                occupancy: occ,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn phi_in_unit_box() {
+        let p = phi(&meas(2.0, 128.0, 0.5), 1.0);
+        for (i, v) in p.iter().enumerate() {
+            assert!((0.0..=1.0).contains(v), "dim {i} = {v}");
+        }
+    }
+
+    #[test]
+    fn equal_latency_maps_to_half() {
+        let p = phi(&meas(1.0, 0.0, 0.0), 1.0);
+        assert!((p[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faster_kernel_has_smaller_time_feature() {
+        let fast = phi(&meas(0.5, 64.0, 0.5), 1.0);
+        let slow = phi(&meas(2.0, 64.0, 0.5), 1.0);
+        assert!(fast[0] < slow[0]);
+    }
+
+    #[test]
+    fn log_time_is_clipped() {
+        let very_fast = phi(&meas(1e-9, 0.0, 0.0), 1.0);
+        let very_slow = phi(&meas(1e9, 0.0, 0.0), 1.0);
+        assert!((very_fast[0] - 0.0).abs() < 1e-12);
+        assert!((very_slow[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distance_is_symmetric_and_zero_on_self() {
+        let a = phi(&meas(1.0, 32.0, 0.9), 1.0);
+        let b = phi(&meas(3.0, 200.0, 0.2), 1.0);
+        assert_eq!(phi_distance(&a, &a), 0.0);
+        assert!((phi_distance(&a, &b) - phi_distance(&b, &a)).abs() < 1e-15);
+        assert!(phi_distance(&a, &b) > 0.0);
+    }
+
+    #[test]
+    fn similar_kernels_are_close() {
+        let a = phi(&meas(1.0, 64.0, 0.5), 1.0);
+        let b = phi(&meas(1.05, 66.0, 0.52), 1.0);
+        let c = phi(&meas(10.0, 250.0, 0.05), 1.0);
+        assert!(phi_distance(&a, &b) < phi_distance(&a, &c));
+    }
+}

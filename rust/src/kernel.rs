@@ -1,0 +1,248 @@
+//! Candidate-kernel state.
+//!
+//! The optimization graph's nodes (paper §2.1): each candidate is a point
+//! in the kernel *configuration space* — the latent schedule the surrogate
+//! LLM mutates and the GPU simulator (or the PJRT engine, for real Pallas
+//! variants) evaluates. The config dimensions mirror the 6-strategy set:
+//! tiles ↔ Tiling, `vector_width` ↔ Vectorization, `fusion_depth` ↔
+//! Fusion, `pipeline_depth` ↔ Pipeline, `loop_order` ↔ Reordering,
+//! `layout` ↔ Access & Layout.
+
+
+use crate::strategy::Strategy;
+
+/// Allowed tile edge sizes (powers of two, CUDA-threadblock / Pallas
+/// BlockSpec flavoured).
+pub const TILE_LEVELS: [u32; 6] = [8, 16, 32, 64, 128, 256];
+/// Allowed vector widths (float1/2/4/8 loads).
+pub const VECTOR_LEVELS: [u32; 4] = [1, 2, 4, 8];
+/// Max ops fused into the kernel epilogue/prologue.
+pub const MAX_FUSION: u32 = 3;
+/// Software-pipeline stages.
+pub const MAX_PIPELINE: u32 = 4;
+/// Distinct loop orders (3 nested loops → 6 permutations).
+pub const NUM_LOOP_ORDERS: u32 = 6;
+/// Distinct data layouts (row/col-major × swizzled/padded).
+pub const NUM_LAYOUTS: u32 = 4;
+
+/// A point in the schedule space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelConfig {
+    /// Tile sizes as indices into [`TILE_LEVELS`].
+    pub tile_m: u8,
+    pub tile_n: u8,
+    pub tile_k: u8,
+    /// Index into [`VECTOR_LEVELS`].
+    pub vector: u8,
+    /// Ops fused (0 = none).
+    pub fusion: u8,
+    /// Pipeline stages − 1 (0 = no pipelining).
+    pub pipeline: u8,
+    /// Loop-order permutation id.
+    pub loop_order: u8,
+    /// Layout id.
+    pub layout: u8,
+}
+
+impl KernelConfig {
+    /// The "naive kernel" the paper starts every task from: smallest
+    /// tiles, scalar loads, nothing fused, no pipelining.
+    pub fn naive() -> Self {
+        KernelConfig {
+            tile_m: 1,
+            tile_n: 1,
+            tile_k: 0,
+            vector: 0,
+            fusion: 0,
+            pipeline: 0,
+            loop_order: 0,
+            layout: 0,
+        }
+    }
+
+    /// Actual tile edge sizes.
+    pub fn tiles(&self) -> (u32, u32, u32) {
+        (
+            TILE_LEVELS[self.tile_m as usize],
+            TILE_LEVELS[self.tile_n as usize],
+            TILE_LEVELS[self.tile_k as usize],
+        )
+    }
+
+    /// Actual vector width.
+    pub fn vector_width(&self) -> u32 {
+        VECTOR_LEVELS[self.vector as usize]
+    }
+
+    /// Clamp every field into its legal range (defensive for mutations).
+    pub fn clamped(mut self) -> Self {
+        self.tile_m = self.tile_m.min(TILE_LEVELS.len() as u8 - 1);
+        self.tile_n = self.tile_n.min(TILE_LEVELS.len() as u8 - 1);
+        self.tile_k = self.tile_k.min(TILE_LEVELS.len() as u8 - 1);
+        self.vector = self.vector.min(VECTOR_LEVELS.len() as u8 - 1);
+        self.fusion = self.fusion.min(MAX_FUSION as u8);
+        self.pipeline = self.pipeline.min(MAX_PIPELINE as u8 - 1);
+        self.loop_order = self.loop_order.min(NUM_LOOP_ORDERS as u8 - 1);
+        self.layout = self.layout.min(NUM_LAYOUTS as u8 - 1);
+        self
+    }
+
+    /// A stable 64-bit hash of the schedule — used as the NCU-result
+    /// cache key (the paper caches profiling by code hash, §3.6).
+    pub fn code_hash(&self) -> u64 {
+        let fields = [
+            self.tile_m, self.tile_n, self.tile_k, self.vector, self.fusion,
+            self.pipeline, self.loop_order, self.layout,
+        ];
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for f in fields {
+            h ^= f as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+
+    /// L1-style distance in schedule space (used by tests and the
+    /// Lipschitz diagnostics, not by the algorithm itself).
+    pub fn distance(&self, other: &KernelConfig) -> u32 {
+        let d = |a: u8, b: u8| (a as i32 - b as i32).unsigned_abs();
+        d(self.tile_m, other.tile_m)
+            + d(self.tile_n, other.tile_n)
+            + d(self.tile_k, other.tile_k)
+            + d(self.vector, other.vector)
+            + d(self.fusion, other.fusion)
+            + d(self.pipeline, other.pipeline)
+            + u32::from(self.loop_order != other.loop_order)
+            + u32::from(self.layout != other.layout)
+    }
+}
+
+/// Outcome of measuring one candidate on the evaluation engine.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Total latency across the task's benchmark shapes (seconds).
+    pub total_latency_s: f64,
+    /// Per-shape latencies (seconds), aligned with the task's shape list.
+    pub per_shape_s: Vec<f64>,
+    /// Execution counters feeding φ(k) (paper Eq. 4).
+    pub counters: Counters,
+}
+
+/// The raw execution counters behind φ(k) and h(k).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Counters {
+    /// Registers per thread (`cuFuncGetAttribute`).
+    pub regs_per_thread: f64,
+    /// Shared memory per block, bytes.
+    pub smem_per_block: f64,
+    /// Threads per block (flattened block dimension).
+    pub block_dim: f64,
+    /// Theoretical occupancy in `[0,1]`.
+    pub occupancy: f64,
+    /// Achieved SM throughput, % of peak (NCU `sm__throughput...`).
+    pub sm_pct: f64,
+    /// Achieved DRAM throughput, % of peak.
+    pub dram_pct: f64,
+    /// Achieved L2 throughput, % of peak.
+    pub l2_pct: f64,
+}
+
+/// How a candidate came to exist (provenance edge in the search graph).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Origin {
+    /// The task's reference/naive implementation.
+    Naive,
+    /// Produced by applying `strategy` to frontier kernel `parent`.
+    Llm { parent: usize, strategy: Strategy },
+}
+
+/// A frontier member: schedule + verification status + measurements.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Index in the frontier (stable; frontier is append-only).
+    pub id: usize,
+    pub config: KernelConfig,
+    pub origin: Origin,
+    /// Passed two-stage verification and was benchmarked.
+    pub measurement: Measurement,
+    /// Iteration at which the candidate was added (0 = initial).
+    pub born_at: usize,
+}
+
+impl Candidate {
+    /// Speedup over a baseline latency (ratio of total runtimes,
+    /// paper Appendix H).
+    pub fn speedup_vs(&self, baseline_total_s: f64) -> f64 {
+        baseline_total_s / self.measurement.total_latency_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_is_legal() {
+        let c = KernelConfig::naive();
+        assert_eq!(c, c.clamped());
+        assert_eq!(c.tiles(), (16, 16, 8));
+        assert_eq!(c.vector_width(), 1);
+    }
+
+    #[test]
+    fn clamp_saturates() {
+        let c = KernelConfig {
+            tile_m: 200,
+            tile_n: 200,
+            tile_k: 200,
+            vector: 9,
+            fusion: 9,
+            pipeline: 9,
+            loop_order: 9,
+            layout: 9,
+        }
+        .clamped();
+        assert_eq!(c.tiles(), (256, 256, 256));
+        assert_eq!(c.vector_width(), 8);
+        assert_eq!(c.fusion, MAX_FUSION as u8);
+        assert_eq!(c.pipeline, MAX_PIPELINE as u8 - 1);
+        assert!((c.loop_order as u32) < NUM_LOOP_ORDERS);
+        assert!((c.layout as u32) < NUM_LAYOUTS);
+    }
+
+    #[test]
+    fn code_hash_distinguishes_configs() {
+        let a = KernelConfig::naive();
+        let mut b = a;
+        b.fusion = 1;
+        assert_ne!(a.code_hash(), b.code_hash());
+        assert_eq!(a.code_hash(), KernelConfig::naive().code_hash());
+    }
+
+    #[test]
+    fn distance_is_metric_like() {
+        let a = KernelConfig::naive();
+        let mut b = a;
+        b.tile_m = 3;
+        b.layout = 1;
+        assert_eq!(a.distance(&a), 0);
+        assert_eq!(a.distance(&b), b.distance(&a));
+        assert_eq!(a.distance(&b), 2 + 1);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let c = Candidate {
+            id: 0,
+            config: KernelConfig::naive(),
+            origin: Origin::Naive,
+            measurement: Measurement {
+                total_latency_s: 0.5,
+                per_shape_s: vec![0.5],
+                counters: Counters::default(),
+            },
+            born_at: 0,
+        };
+        assert!((c.speedup_vs(1.0) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,342 @@
+//! `kernelband` CLI — leader entrypoint.
+//!
+//! ```text
+//! kernelband repro <table1|table2|table3|table4|table9|table10|fig2|fig3|fig4|regret|all>
+//!            [--iterations N]
+//! kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
+//!            [--llm deepseek|gpt5|claude|gemini] [--mode full|no-clustering|
+//!            no-profiling|llm-select|raw-profiling|no-strategy]
+//!            [--iterations N] [--seed S]
+//! kernelband pjrt [--artifacts DIR] [--budget N]
+//! kernelband serve [--jobs N] [--iterations N]
+//! kernelband list [--subset]
+//! ```
+//!
+//! Argument parsing is hand-rolled (the build environment vendors no CLI
+//! crate); each flag takes a value except `--subset`.
+
+use anyhow::{anyhow, bail, Result};
+
+use kernelband::engine::pjrt::PjrtBench;
+use kernelband::engine::SimEngine;
+use kernelband::eval;
+use kernelband::gpu_model::Device;
+use kernelband::llm::{LlmProfile, SurrogateLlm};
+use kernelband::policy::{KernelBand, PolicyConfig, PolicyMode};
+use kernelband::rng::Rng;
+use kernelband::runtime::Runtime;
+use kernelband::service::OptimizationService;
+use kernelband::workload::Suite;
+
+const USAGE: &str = "\
+kernelband — hardware-aware MAB for LLM kernel optimization (reproduction)
+
+USAGE:
+  kernelband repro <EXPERIMENT> [--iterations N]
+      EXPERIMENT: table1 table2 table3 table4 table9 table10
+                  fig2 fig3 fig4 regret all
+  kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
+      [--llm deepseek|gpt5|claude|gemini]
+      [--mode full|no-clustering|no-profiling|llm-select|raw-profiling|no-strategy]
+      [--iterations N] [--seed S]
+  kernelband pjrt [--artifacts DIR] [--budget N]
+  kernelband serve [--jobs N] [--iterations N]
+  kernelband list [--subset]
+";
+
+/// Tiny flag parser: `--key value` pairs plus boolean switches.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String], switches: &[&str]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if switches.contains(&name) {
+                    flags.push((name.to_string(), None));
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("--{name} needs a value"))?;
+                    flags.push((name.to_string(), Some(v.clone())));
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad number {v:?}")),
+        }
+    }
+
+    fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad number {v:?}")),
+        }
+    }
+}
+
+fn parse_device(s: &str) -> Result<Device> {
+    match s.to_ascii_lowercase().as_str() {
+        "rtx4090" | "4090" => Ok(Device::Rtx4090),
+        "h20" => Ok(Device::H20),
+        "a100" => Ok(Device::A100),
+        _ => bail!("unknown device {s:?}"),
+    }
+}
+
+fn parse_llm(s: &str) -> Result<LlmProfile> {
+    match s.to_ascii_lowercase().as_str() {
+        "deepseek" => Ok(LlmProfile::DeepSeekV32),
+        "gpt5" => Ok(LlmProfile::Gpt5),
+        "claude" => Ok(LlmProfile::ClaudeOpus45),
+        "gemini" => Ok(LlmProfile::Gemini3Flash),
+        _ => bail!("unknown llm {s:?}"),
+    }
+}
+
+fn parse_mode(s: &str) -> Result<PolicyMode> {
+    match s.to_ascii_lowercase().as_str() {
+        "full" => Ok(PolicyMode::Full),
+        "no-clustering" => Ok(PolicyMode::NoClustering),
+        "no-profiling" => Ok(PolicyMode::NoProfiling),
+        "llm-select" => Ok(PolicyMode::LlmStrategySelection),
+        "raw-profiling" => Ok(PolicyMode::NoStrategyRawProfiling),
+        "no-strategy" => Ok(PolicyMode::NoStrategySet),
+        _ => bail!("unknown mode {s:?}"),
+    }
+}
+
+fn repro(exp: &str, iterations: Option<usize>) -> Result<()> {
+    let t20 = iterations.unwrap_or(20);
+    let t40 = iterations.unwrap_or(40);
+    let run = |name: &str| -> Option<String> {
+        match name {
+            "table1" => Some(eval::table1(t20)),
+            "table2" => Some(eval::table2(t20)),
+            "table3" => Some(eval::table3(t20)),
+            "table4" => Some(eval::table4(t20)),
+            "table9" => Some(eval::table9(t20)),
+            "table10" => Some(eval::table10(t20)),
+            "fig2" => Some(eval::fig2(t40)),
+            "fig3" => Some(eval::fig3()),
+            "fig4" => Some(eval::fig4(t40)),
+            "regret" => Some(eval::regret(3200)),
+            _ => None,
+        }
+    };
+    if exp == "all" {
+        for name in [
+            "table1", "table2", "table3", "table4", "table9", "table10",
+            "fig2", "fig3", "fig4", "regret",
+        ] {
+            println!("{}\n", run(name).unwrap());
+        }
+        return Ok(());
+    }
+    match run(exp) {
+        Some(text) => {
+            println!("{text}");
+            Ok(())
+        }
+        None => bail!("unknown experiment {exp:?}\n{USAGE}"),
+    }
+}
+
+fn optimize(task_sub: &str, device: Device, llm_profile: LlmProfile,
+            mode: PolicyMode, iterations: usize, seed: u64) -> Result<()> {
+    let suite = Suite::full(eval::EXPERIMENT_SEED);
+    let task = suite
+        .tasks
+        .iter()
+        .find(|t| t.name.contains(task_sub))
+        .ok_or_else(|| anyhow!("no task matching {task_sub:?}"))?;
+    println!(
+        "task {} [{} / {:?}] on {} with {}",
+        task.name,
+        task.category.name(),
+        task.difficulty,
+        device.name(),
+        llm_profile.spec().name
+    );
+    let engine = SimEngine::new(device);
+    let llm = SurrogateLlm::new(llm_profile);
+    let mut cfg = PolicyConfig::with_mode(mode);
+    cfg.iterations = iterations;
+    let trace =
+        KernelBand::new(cfg).optimize(task, &engine, &llm, &Rng::new(seed));
+    for r in &trace.records {
+        println!(
+            "  t={:>2} cluster={} strategy={:<16} verdict={}{} reward={:.3} best={:.3}x",
+            r.t,
+            r.cluster,
+            r.strategy.map(|s| s.name()).unwrap_or("-"),
+            if r.verdict.call_ok { "C" } else { "-" },
+            if r.verdict.exec_ok { "E" } else { "-" },
+            r.reward,
+            r.best_speedup_so_far.max(1.0),
+        );
+    }
+    println!(
+        "result: correct={} best_speedup={:.3}x cost=${:.3} ncu_runs={}",
+        trace.correct(),
+        trace.best_speedup(),
+        trace.total_cost_usd(),
+        trace.profile_runs
+    );
+    Ok(())
+}
+
+fn pjrt(artifacts: &str, budget: usize) -> Result<()> {
+    let rt = Runtime::load(artifacts)?;
+    println!(
+        "PJRT platform: {} | {} artifacts",
+        rt.platform(),
+        rt.manifest().artifacts.len()
+    );
+    let mut bench = PjrtBench::new(&rt);
+    let ops = rt.manifest().variant_ops();
+    let mut rng = Rng::new(0).split("pjrt-cli", 0);
+    for op in ops {
+        let out = bench.bandit_search(&op, budget, &mut rng)?;
+        println!(
+            "\nop {op}: reference {:.3} ms, {} evaluations",
+            out.reference_latency_s * 1e3,
+            out.evaluations()
+        );
+        for v in &out.tried {
+            println!(
+                "  {:<28} {}{} {:>9.3} ms  speedup {:.2}x",
+                v.name,
+                if v.verdict.call_ok { "C" } else { "-" },
+                if v.verdict.exec_ok { "E" } else { "-" },
+                v.latency_s * 1e3,
+                v.speedup
+            );
+        }
+        if let Some(best) = &out.best {
+            println!("  BEST: {} at {:.2}x", best.name, best.speedup);
+        }
+    }
+    Ok(())
+}
+
+fn serve(jobs: usize, iterations: usize) -> Result<()> {
+    let report = OptimizationService::default().run(jobs, iterations);
+    println!(
+        "service: {} jobs x {} iterations  wall {:.1}s (modeled)  \
+         serial-equivalent {:.1}s  batching speedup {:.1}x",
+        jobs,
+        iterations,
+        report.wall_model_s,
+        report.serial_equivalent_s,
+        report.batching_speedup()
+    );
+    println!(
+        "gateway: {} requests in {} batches (max batch {})",
+        report.gateway_requests, report.gateway_batches,
+        report.gateway_max_batch
+    );
+    Ok(())
+}
+
+fn list(subset: bool) -> Result<()> {
+    let full = Suite::full(eval::EXPERIMENT_SEED);
+    let suite = if subset { full.subset50() } else { full };
+    println!("{} tasks", suite.len());
+    for t in &suite.tasks {
+        println!(
+            "  [{:>3}] {:<36} {:<22} {:?} shapes={} torch={}",
+            t.id,
+            t.name,
+            t.category.name(),
+            t.difficulty,
+            t.shapes.len(),
+            t.torch_comparable
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    // behave like a unix CLI under `| head`: die silently on SIGPIPE
+    // instead of panicking on a broken stdout
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "repro" => {
+            let args = Args::parse(rest, &[])?;
+            let exp = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("repro needs an experiment\n{USAGE}"))?;
+            let iters = args.get("iterations").map(|v| v.parse()).transpose()
+                .map_err(|_| anyhow!("--iterations: bad number"))?;
+            repro(exp, iters)
+        }
+        "optimize" => {
+            let args = Args::parse(rest, &[])?;
+            optimize(
+                args.get("task").unwrap_or("matmul"),
+                parse_device(args.get("device").unwrap_or("h20"))?,
+                parse_llm(args.get("llm").unwrap_or("deepseek"))?,
+                parse_mode(args.get("mode").unwrap_or("full"))?,
+                args.get_usize("iterations", 20)?,
+                args.get_u64("seed", 0)?,
+            )
+        }
+        "pjrt" => {
+            let args = Args::parse(rest, &[])?;
+            pjrt(
+                args.get("artifacts").unwrap_or("artifacts"),
+                args.get_usize("budget", 12)?,
+            )
+        }
+        "serve" => {
+            let args = Args::parse(rest, &[])?;
+            serve(args.get_usize("jobs", 16)?, args.get_usize("iterations", 3)?)
+        }
+        "list" => {
+            let args = Args::parse(rest, &["subset"])?;
+            list(args.has("subset"))
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}

@@ -1,0 +1,247 @@
+//! Evaluation metrics (paper §4.1).
+//!
+//! * **Correct (%)** — tasks yielding ≥1 verified kernel.
+//! * **Fast@1 (%)** — tasks whose best kernel achieves speedup > 1.0×
+//!   (failed tasks count as 0).
+//! * **Geometric-mean speedup** in two modes: *standard* averages only
+//!   correct tasks (including regressions) to isolate optimization
+//!   quality; *fallback* assigns failures/regressions a baseline 1.0× —
+//!   the deployed-system view used in the scaling figures.
+//!
+//! Per-task speedup is the ratio of *total* runtimes across all
+//! benchmark shapes (Appendix H), so long-running shapes dominate.
+
+
+use crate::workload::{Difficulty, TaskSpec};
+
+/// Result of optimizing one task with one method.
+#[derive(Debug, Clone)]
+pub struct TaskOutcome {
+    pub task_id: usize,
+    pub task_name: String,
+    pub difficulty: Difficulty,
+    /// ≥1 candidate passed two-stage verification.
+    pub correct: bool,
+    /// Best verified speedup over the reference (ratio of total
+    /// runtimes); meaningful only when `correct`.
+    pub best_speedup: f64,
+    /// Cumulative API cost spent on the task (USD).
+    pub cost_usd: f64,
+    /// Iterations actually executed.
+    pub iterations: usize,
+}
+
+impl TaskOutcome {
+    pub fn failed(task: &TaskSpec, iterations: usize, cost_usd: f64) -> Self {
+        TaskOutcome {
+            task_id: task.id,
+            task_name: task.name.clone(),
+            difficulty: task.difficulty,
+            correct: false,
+            best_speedup: 0.0,
+            cost_usd,
+            iterations,
+        }
+    }
+
+    /// Fallback-mode speedup: failures and regressions fall back to the
+    /// reference kernel (1.0×).
+    pub fn fallback_speedup(&self) -> f64 {
+        if self.correct {
+            self.best_speedup.max(1.0)
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Aggregated metrics over a set of task outcomes.
+#[derive(Debug, Clone, Copy)]
+pub struct Aggregate {
+    pub tasks: usize,
+    pub correct_pct: f64,
+    pub fast1_pct: f64,
+    /// Standard-mode geomean (correct tasks only, regressions included).
+    pub geomean_standard: f64,
+    /// Fallback-mode geomean (all tasks; failures → 1.0×).
+    pub geomean_fallback: f64,
+    pub total_cost_usd: f64,
+}
+
+fn geomean(xs: impl Iterator<Item = f64>) -> f64 {
+    let mut log_sum = 0.0;
+    let mut n = 0usize;
+    for x in xs {
+        log_sum += x.max(1e-12).ln();
+        n += 1;
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        (log_sum / n as f64).exp()
+    }
+}
+
+/// Aggregate a slice of outcomes.
+pub fn aggregate(outcomes: &[TaskOutcome]) -> Aggregate {
+    let tasks = outcomes.len();
+    let correct = outcomes.iter().filter(|o| o.correct).count();
+    let fast1 = outcomes
+        .iter()
+        .filter(|o| o.correct && o.best_speedup > 1.0)
+        .count();
+    Aggregate {
+        tasks,
+        correct_pct: 100.0 * correct as f64 / tasks.max(1) as f64,
+        fast1_pct: 100.0 * fast1 as f64 / tasks.max(1) as f64,
+        geomean_standard: geomean(
+            outcomes.iter().filter(|o| o.correct).map(|o| o.best_speedup),
+        ),
+        geomean_fallback: geomean(outcomes.iter().map(|o| o.fallback_speedup())),
+        total_cost_usd: outcomes.iter().map(|o| o.cost_usd).sum(),
+    }
+}
+
+/// Table-1 difficulty strata: L1-2, L3, L4-5, All.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stratum {
+    L12,
+    L3,
+    L45,
+    All,
+}
+
+pub const ALL_STRATA: [Stratum; 4] = [Stratum::L12, Stratum::L3, Stratum::L45, Stratum::All];
+
+impl Stratum {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stratum::L12 => "L1-2",
+            Stratum::L3 => "L3",
+            Stratum::L45 => "L4-5",
+            Stratum::All => "All",
+        }
+    }
+
+    pub fn contains(self, d: Difficulty) -> bool {
+        match self {
+            Stratum::L12 => d.level() <= 2,
+            Stratum::L3 => d.level() == 3,
+            Stratum::L45 => d.level() >= 4,
+            Stratum::All => true,
+        }
+    }
+}
+
+/// Aggregate per Table-1 stratum.
+pub fn stratified(outcomes: &[TaskOutcome]) -> Vec<(Stratum, Aggregate)> {
+    ALL_STRATA
+        .iter()
+        .map(|&s| {
+            let subset: Vec<TaskOutcome> = outcomes
+                .iter()
+                .filter(|o| s.contains(o.difficulty))
+                .cloned()
+                .collect();
+            (s, aggregate(&subset))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(correct: bool, speedup: f64, d: Difficulty) -> TaskOutcome {
+        TaskOutcome {
+            task_id: 0,
+            task_name: "t".into(),
+            difficulty: d,
+            correct,
+            best_speedup: speedup,
+            cost_usd: 0.1,
+            iterations: 20,
+        }
+    }
+
+    #[test]
+    fn correct_and_fast1_percentages() {
+        let outs = vec![
+            outcome(true, 2.0, Difficulty::L1),
+            outcome(true, 0.8, Difficulty::L2), // correct but regressed
+            outcome(false, 0.0, Difficulty::L3),
+            outcome(true, 1.5, Difficulty::L4),
+        ];
+        let a = aggregate(&outs);
+        assert!((a.correct_pct - 75.0).abs() < 1e-9);
+        assert!((a.fast1_pct - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn standard_geomean_includes_regressions_excludes_failures() {
+        let outs = vec![
+            outcome(true, 2.0, Difficulty::L1),
+            outcome(true, 0.5, Difficulty::L2),
+            outcome(false, 0.0, Difficulty::L3),
+        ];
+        let a = aggregate(&outs);
+        // geomean(2.0, 0.5) = 1.0
+        assert!((a.geomean_standard - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fallback_geomean_floors_at_one() {
+        let outs = vec![
+            outcome(true, 2.0, Difficulty::L1),
+            outcome(true, 0.5, Difficulty::L2), // regression → 1.0
+            outcome(false, 0.0, Difficulty::L3), // failure → 1.0
+        ];
+        let a = aggregate(&outs);
+        // geomean(2.0, 1.0, 1.0) = 2^(1/3)
+        assert!((a.geomean_fallback - 2.0f64.powf(1.0 / 3.0)).abs() < 1e-9);
+        assert!(a.geomean_fallback >= 1.0);
+    }
+
+    #[test]
+    fn strata_partition_difficulties() {
+        for d in crate::workload::ALL_DIFFICULTIES {
+            let n = [Stratum::L12, Stratum::L3, Stratum::L45]
+                .iter()
+                .filter(|s| s.contains(d))
+                .count();
+            assert_eq!(n, 1, "{d:?} must be in exactly one stratum");
+            assert!(Stratum::All.contains(d));
+        }
+    }
+
+    #[test]
+    fn stratified_totals_match() {
+        let outs = vec![
+            outcome(true, 2.0, Difficulty::L1),
+            outcome(true, 1.2, Difficulty::L3),
+            outcome(false, 0.0, Difficulty::L5),
+        ];
+        let rows = stratified(&outs);
+        let all = rows.iter().find(|(s, _)| *s == Stratum::All).unwrap().1;
+        assert_eq!(all.tasks, 3);
+        let l12 = rows.iter().find(|(s, _)| *s == Stratum::L12).unwrap().1;
+        assert_eq!(l12.tasks, 1);
+    }
+
+    #[test]
+    fn empty_aggregate_is_sane() {
+        let a = aggregate(&[]);
+        assert_eq!(a.tasks, 0);
+        assert_eq!(a.correct_pct, 0.0);
+        assert!(a.geomean_standard.is_nan());
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let outs = vec![
+            outcome(true, 2.0, Difficulty::L1),
+            outcome(false, 0.0, Difficulty::L2),
+        ];
+        assert!((aggregate(&outs).total_cost_usd - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,661 @@
+//! The KernelBand policy — Algorithm 1 — and its ablation variants.
+//!
+//! Per iteration: (1) recompute behavioral features φ(k) for the
+//! frontier; (2) every τ iterations (once the frontier holds ≥ 2K
+//! kernels) re-cluster with K-means and NCU-profile each cluster's
+//! representative; (3) build the hardware mask M[i,s] from the
+//! representative signatures; (4) select a (cluster, strategy) arm by
+//! masked UCB (Eq. 6); (5) sample a concrete kernel inside the cluster
+//! softmax-proportionally to its remaining headroom V_hw; (6) ask the
+//! LLM to apply the strategy; (7) verify two-stage, measure, convert the
+//! latency delta into the clipped reward, and update the arm.
+//!
+//! One documented deviation from the paper's Algorithm-1 *listing*: the
+//! listing updates (N, μ̂) only inside `if Verify(k')`, but §2.2 defines
+//! the reward signal as "zero reward … assigned to performance
+//! regressions or *compilation failures*", which requires failed pulls
+//! to update the arm too — otherwise the bandit can never learn that
+//! tiling fails 85% of the time. We follow §2.2.
+
+use crate::bandit::{softmax_kernel_pick, ArmStats, MaskedUcb, RewardRecord};
+use crate::cluster::{ClusterBackend, Clustering, RustKmeans};
+use crate::engine::EvalEngine;
+use crate::features::{phi, phi_distance, Phi};
+use crate::kernel::{Candidate, Origin};
+use crate::llm::{LlmBackend, PromptMode, ProposalRequest};
+use crate::metrics::TaskOutcome;
+use crate::profiler::{HardwareSignature, Profiler, THETA_SAT};
+use crate::rng::Rng;
+use crate::strategy::{Strategy, ALL_STRATEGIES, NUM_STRATEGIES};
+use crate::verify::{verify_outcome, Verdict};
+use crate::workload::TaskSpec;
+
+/// Which variant of the system runs (Table 4 ablations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyMode {
+    /// Complete system.
+    Full,
+    /// "w/o Clustering (K = 1)": single cluster.
+    NoClustering,
+    /// "w/o Profiling": masks disabled; within-cluster pick falls back
+    /// to recency.
+    NoProfiling,
+    /// "LLM Strategy Selection": the LLM, not UCB, picks the strategy.
+    LlmStrategySelection,
+    /// "w/o Strategy + Raw Profiling": free-form generation with raw NCU
+    /// metrics pasted into the prompt.
+    NoStrategyRawProfiling,
+    /// "w/o Strategy Set": free-form Reflexion-style iteration.
+    NoStrategySet,
+}
+
+/// Hyper-parameters (§3.6 defaults).
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// Optimization budget T.
+    pub iterations: usize,
+    /// Cluster count K.
+    pub clusters: usize,
+    /// Re-clustering period τ.
+    pub recluster_every: usize,
+    /// Saturation threshold θ_sat (percent).
+    pub theta_sat: f64,
+    /// UCB exploration constant c.
+    pub ucb_c: f64,
+    /// Frontier pruning: kernels slower than `prune_factor` × the current
+    /// best are kept for provenance but not selectable for expansion —
+    /// the paper's "filtering low-value candidates early" (§4.4.1),
+    /// which is what keeps the frontier P_t a set of *promising* kernels
+    /// (§2.2).
+    pub prune_factor: f64,
+    /// Ablation knob (DESIGN.md): discard arm statistics at re-clustering
+    /// instead of re-seeding them from the per-kernel reward history.
+    pub reset_arms_on_recluster: bool,
+    pub mode: PolicyMode,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            iterations: 20,
+            clusters: 3,
+            recluster_every: 10,
+            theta_sat: THETA_SAT,
+            ucb_c: 2.0,
+            prune_factor: 1.5,
+            reset_arms_on_recluster: false,
+            mode: PolicyMode::Full,
+        }
+    }
+}
+
+impl PolicyConfig {
+    pub fn with_mode(mode: PolicyMode) -> Self {
+        let mut cfg = PolicyConfig::default();
+        if mode == PolicyMode::NoClustering {
+            cfg.clusters = 1;
+        }
+        cfg.mode = mode;
+        cfg
+    }
+}
+
+/// What happened at one iteration (the trace the eval harnesses mine).
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    pub t: usize,
+    pub cluster: usize,
+    /// Strategy actually applied (None for free-form modes).
+    pub strategy: Option<Strategy>,
+    /// Frontier index of the expanded kernel.
+    pub parent: usize,
+    pub verdict: Verdict,
+    /// Clipped reward r_t (§2.2).
+    pub reward: f64,
+    /// Frontier index of the accepted candidate, if verification passed.
+    pub accepted: Option<usize>,
+    pub cost_usd: f64,
+    /// Serial LLM latency of this iteration (Fig. 3a component).
+    pub llm_serial_s: f64,
+    /// Best verified speedup over the reference after this iteration.
+    pub best_speedup_so_far: f64,
+}
+
+/// Full optimization trace for one task.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub task_id: usize,
+    pub task_name: String,
+    pub difficulty: crate::workload::Difficulty,
+    pub candidates: Vec<Candidate>,
+    pub records: Vec<IterationRecord>,
+    /// Index of the fastest verified candidate.
+    pub best_id: usize,
+    /// Reference (naive) total latency.
+    pub naive_latency_s: f64,
+    /// Simulated NCU time spent (Fig. 3 component).
+    pub profile_cost_s: f64,
+    pub profile_runs: u64,
+}
+
+impl Trace {
+    /// Best verified speedup over the reference.
+    pub fn best_speedup(&self) -> f64 {
+        self.naive_latency_s / self.candidates[self.best_id].measurement.total_latency_s
+    }
+
+    /// ≥1 *generated* kernel passed verification (the reference itself
+    /// does not count).
+    pub fn correct(&self) -> bool {
+        self.candidates.len() > 1
+    }
+
+    pub fn total_cost_usd(&self) -> f64 {
+        self.records.iter().map(|r| r.cost_usd).sum()
+    }
+
+    pub fn outcome(&self) -> TaskOutcome {
+        TaskOutcome {
+            task_id: self.task_id,
+            task_name: self.task_name.clone(),
+            difficulty: self.difficulty,
+            correct: self.correct(),
+            best_speedup: if self.correct() { self.best_speedup() } else { 0.0 },
+            cost_usd: self.total_cost_usd(),
+            iterations: self.records.len(),
+        }
+    }
+
+    /// Fallback-mode best-speedup curve over iterations (Fig. 2/4).
+    pub fn speedup_curve(&self) -> Vec<f64> {
+        self.records
+            .iter()
+            .map(|r| r.best_speedup_so_far.max(1.0))
+            .collect()
+    }
+
+    /// Candidate ids on the provenance chain of the final best kernel.
+    pub fn best_chain(&self) -> Vec<usize> {
+        let mut chain = Vec::new();
+        let mut cur = self.best_id;
+        loop {
+            chain.push(cur);
+            match self.candidates[cur].origin {
+                Origin::Naive => break,
+                Origin::Llm { parent, .. } => cur = parent,
+            }
+        }
+        chain
+    }
+
+    /// Per-strategy (selections, successes, best-chain contributions) —
+    /// the raw counts behind Tables 3/10.
+    pub fn strategy_counts(&self) -> [StrategyCount; NUM_STRATEGIES] {
+        let chain = self.best_chain();
+        let mut counts = [StrategyCount::default(); NUM_STRATEGIES];
+        for r in &self.records {
+            let Some(s) = r.strategy else { continue };
+            let c = &mut counts[s.index()];
+            c.selected += 1;
+            // "Succ": correct AND faster than the reference kernel.
+            if let Some(id) = r.accepted {
+                let sp = self.naive_latency_s
+                    / self.candidates[id].measurement.total_latency_s;
+                if sp > 1.0 {
+                    c.success += 1;
+                    if chain.contains(&id) {
+                        c.on_best_chain += 1;
+                    }
+                }
+            }
+        }
+        counts
+    }
+}
+
+/// Raw per-strategy tallies.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StrategyCount {
+    pub selected: usize,
+    pub success: usize,
+    pub on_best_chain: usize,
+}
+
+/// The KernelBand optimizer.
+pub struct KernelBand {
+    pub config: PolicyConfig,
+    pub ucb: MaskedUcb,
+    pub kmeans: RustKmeans,
+}
+
+impl KernelBand {
+    pub fn new(config: PolicyConfig) -> Self {
+        let ucb = MaskedUcb { c: config.ucb_c };
+        KernelBand { config, ucb, kmeans: RustKmeans::default() }
+    }
+
+    /// Optimize one task for T iterations (Algorithm 1).
+    pub fn optimize<E: EvalEngine, L: LlmBackend>(
+        &self,
+        task: &TaskSpec,
+        engine: &E,
+        llm: &L,
+        root: &Rng,
+    ) -> Trace {
+        let cfg = &self.config;
+        let rng = root.split("kernelband", task.id as u64);
+        let freeform = matches!(
+            cfg.mode,
+            PolicyMode::NoStrategySet | PolicyMode::NoStrategyRawProfiling
+        );
+
+        // line 1: P ← {k0}
+        let naive_cfg = task.naive_config();
+        let naive_meas = engine.measure(task, &naive_cfg, &mut rng.split("m", 0));
+        let naive_latency_s = naive_meas.total_latency_s;
+        let mut candidates = vec![Candidate {
+            id: 0,
+            config: naive_cfg,
+            origin: Origin::Naive,
+            measurement: naive_meas,
+            born_at: 0,
+        }];
+        let mut phis: Vec<Phi> =
+            vec![phi(&candidates[0].measurement, naive_latency_s)];
+
+        // lines 1–3: single initial cluster, optimistic arms, open masks
+        let mut clustering = Clustering {
+            assign: vec![0],
+            centroids: vec![phis[0]],
+            representatives: vec![0],
+        };
+        let mut stats = ArmStats::new(1);
+        let mut cluster_sigs: Vec<Option<HardwareSignature>> = vec![None];
+        let mut history: Vec<RewardRecord> = Vec::new();
+        let mut profiler = Profiler::new();
+        let mut records: Vec<IterationRecord> = Vec::new();
+        let mut best_id = 0usize;
+
+        for t in 1..=cfg.iterations {
+            // --- lines 6–10: periodic clustering & representative profiling
+            let may_cluster = !freeform
+                && t % cfg.recluster_every == 0
+                && candidates.len() >= 2 * cfg.clusters;
+            if may_cluster {
+                let mut crng = rng.split("cluster", t as u64);
+                clustering =
+                    self.kmeans.cluster(&phis, cfg.clusters, &mut crng);
+                let k = clustering.centroids.len();
+                stats = if cfg.reset_arms_on_recluster {
+                    ArmStats::new(k)
+                } else {
+                    ArmStats::reseed(k, &history, &clustering.assign)
+                };
+                cluster_sigs = vec![None; k];
+                if cfg.mode != PolicyMode::NoProfiling {
+                    for (ci, &rep) in
+                        clustering.representatives.iter().enumerate()
+                    {
+                        if rep != usize::MAX {
+                            let cand = &candidates[rep];
+                            cluster_sigs[ci] = Some(profiler.profile(
+                                cand.config.code_hash(),
+                                &cand.measurement.counters,
+                            ));
+                        }
+                    }
+                }
+            }
+
+            // --- lines 12–14: hardware masks
+            let k = clustering.centroids.len();
+            // K-means can leave clusters empty (they keep their stale
+            // centroid); their arms are never selectable.
+            let mut cluster_size = vec![0usize; k];
+            for &a in &clustering.assign {
+                cluster_size[a] += 1;
+            }
+            let nonempty: Vec<bool> = (0..k * NUM_STRATEGIES)
+                .map(|i| cluster_size[i / NUM_STRATEGIES] > 0)
+                .collect();
+            let mut mask = nonempty.clone();
+            if cfg.mode != PolicyMode::NoProfiling {
+                for ci in 0..k {
+                    if let Some(sig) = cluster_sigs[ci] {
+                        for &s in &ALL_STRATEGIES {
+                            mask[ci * NUM_STRATEGIES + s.index()] &=
+                                sig.strategy_valid(s, cfg.theta_sat);
+                        }
+                    }
+                }
+            }
+
+            // --- line 15: arm selection
+            let (cluster_id, strategy, prompt_mode) = match cfg.mode {
+                PolicyMode::Full
+                | PolicyMode::NoClustering
+                | PolicyMode::NoProfiling => {
+                    let (ci, s) = self
+                        .ucb
+                        .select(&stats, t, &mask)
+                        // all-saturated fallback: drop the hardware masks
+                        // but never select an empty cluster's arm
+                        .or_else(|| self.ucb.select(&stats, t, &nonempty))
+                        .expect("frontier is non-empty");
+                    (ci, Some(s), PromptMode::Strategy(s))
+                }
+                PolicyMode::LlmStrategySelection => {
+                    let s = llm
+                        .select_strategy(task, &mut rng.split("sel", t as u64));
+                    let occupied: Vec<usize> = (0..k)
+                        .filter(|&ci| cluster_size[ci] > 0)
+                        .collect();
+                    let pick = rng.split("cl", t as u64)
+                        .below(occupied.len() as u64) as usize;
+                    (occupied[pick], Some(s), PromptMode::Strategy(s))
+                }
+                PolicyMode::NoStrategySet => (0, None, PromptMode::FreeForm),
+                PolicyMode::NoStrategyRawProfiling => {
+                    let sig = HardwareSignature::from_counters(
+                        &candidates[best_id].measurement.counters,
+                    );
+                    (0, None, PromptMode::RawProfiling(sig))
+                }
+            };
+
+            // --- line 16: within-cluster kernel pick via V_hw softmax
+            let parent_idx = if freeform {
+                best_id // Reflexion-style: iterate on the current best
+            } else {
+                let mut members = clustering.members(cluster_id);
+                debug_assert!(!members.is_empty());
+                // frontier pruning: only promising kernels are expandable
+                let best_t =
+                    candidates[best_id].measurement.total_latency_s;
+                let promising: Vec<usize> = members
+                    .iter()
+                    .copied()
+                    .filter(|&m| {
+                        candidates[m].measurement.total_latency_s
+                            <= cfg.prune_factor * best_t
+                    })
+                    .collect();
+                if !promising.is_empty() {
+                    members = promising;
+                }
+                if cfg.mode == PolicyMode::NoProfiling {
+                    // recency tie-break (Table 4's w/o-Profiling variant)
+                    *members
+                        .iter()
+                        .max_by_key(|&&m| candidates[m].born_at)
+                        .unwrap()
+                } else {
+                    let s = strategy.expect("strategy modes only");
+                    let headrooms: Vec<f64> = members
+                        .iter()
+                        .map(|&m| {
+                            HardwareSignature::from_counters(
+                                &candidates[m].measurement.counters,
+                            )
+                            .headroom(s, cfg.theta_sat)
+                        })
+                        .collect();
+                    let pick = softmax_kernel_pick(
+                        &headrooms,
+                        &mut rng.split("pick", t as u64),
+                    );
+                    members[pick]
+                }
+            };
+
+            // --- line 18: generative transition
+            let parent_cfg = candidates[parent_idx].config;
+            let req = ProposalRequest {
+                task,
+                parent: &parent_cfg,
+                mode: prompt_mode,
+                sim: engine.gpu(),
+                iterative: true,
+            };
+            let proposal = llm.propose(&req, &mut rng.split("gen", t as u64));
+            let verdict = verify_outcome(proposal.outcome);
+
+            // --- lines 19–23: verify, measure, reward, frontier update
+            let mut reward = 0.0;
+            let mut accepted = None;
+            if verdict.passed() {
+                let meas = engine.measure(
+                    task,
+                    &proposal.config,
+                    &mut rng.split("m", t as u64),
+                );
+                let parent_t =
+                    candidates[parent_idx].measurement.total_latency_s;
+                reward = ((parent_t - meas.total_latency_s) / parent_t)
+                    .clamp(0.0, 1.0);
+                let id = candidates.len();
+                let cand = Candidate {
+                    id,
+                    config: proposal.config,
+                    origin: Origin::Llm {
+                        parent: parent_idx,
+                        strategy: strategy.unwrap_or(Strategy::Reordering),
+                    },
+                    measurement: meas,
+                    born_at: t,
+                };
+                phis.push(phi(&cand.measurement, naive_latency_s));
+                // assign the newcomer to its nearest current centroid so
+                // it is selectable before the next re-clustering
+                let nearest = clustering
+                    .centroids
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        phi_distance(phis.last().unwrap(), a)
+                            .total_cmp(&phi_distance(phis.last().unwrap(), b))
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                clustering.assign.push(nearest);
+                if cand.measurement.total_latency_s
+                    < candidates[best_id].measurement.total_latency_s
+                {
+                    best_id = id;
+                }
+                accepted = Some(id);
+                candidates.push(cand);
+            }
+
+            // --- §2.2 reward accounting (see module docs)
+            if let Some(s) = strategy {
+                stats.update(cluster_id, s, reward);
+                history.push(RewardRecord {
+                    kernel: parent_idx,
+                    strategy: s,
+                    reward,
+                });
+            }
+
+            let best_speedup_so_far = if candidates.len() > 1 {
+                naive_latency_s
+                    / candidates[best_id].measurement.total_latency_s
+            } else {
+                0.0
+            };
+            records.push(IterationRecord {
+                t,
+                cluster: cluster_id,
+                strategy,
+                parent: parent_idx,
+                verdict,
+                reward,
+                accepted,
+                cost_usd: proposal.cost_usd,
+                llm_serial_s: proposal.latency_s,
+                best_speedup_so_far,
+            });
+        }
+
+        Trace {
+            task_id: task.id,
+            task_name: task.name.clone(),
+            difficulty: task.difficulty,
+            candidates,
+            records,
+            best_id,
+            naive_latency_s,
+            profile_cost_s: profiler.total_cost_s,
+            profile_runs: profiler.misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SimEngine;
+    use crate::gpu_model::Device;
+    use crate::llm::{LlmProfile, SurrogateLlm};
+    use crate::workload::Suite;
+
+    fn run_one(mode: PolicyMode, t: usize, seed: u64) -> Trace {
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+        let mut cfg = PolicyConfig::with_mode(mode);
+        cfg.iterations = t;
+        KernelBand::new(cfg).optimize(
+            &suite.tasks[4],
+            &engine,
+            &llm,
+            &Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn runs_full_budget_and_is_deterministic() {
+        let a = run_one(PolicyMode::Full, 20, 3);
+        let b = run_one(PolicyMode::Full, 20, 3);
+        assert_eq!(a.records.len(), 20);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        assert_eq!(a.best_id, b.best_id);
+        assert_eq!(a.best_speedup(), b.best_speedup());
+    }
+
+    #[test]
+    fn best_never_regresses_over_iterations() {
+        let tr = run_one(PolicyMode::Full, 30, 7);
+        let curve = tr.speedup_curve();
+        for w in curve.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn frontier_contains_only_verified() {
+        let tr = run_one(PolicyMode::Full, 25, 11);
+        // every accepted record points at a real candidate
+        for r in &tr.records {
+            if let Some(id) = r.accepted {
+                assert!(id < tr.candidates.len());
+                assert!(r.verdict.passed());
+            } else {
+                assert!(!r.verdict.passed());
+            }
+        }
+        // frontier = 1 (naive) + accepted count
+        let accepted = tr.records.iter().filter(|r| r.accepted.is_some()).count();
+        assert_eq!(tr.candidates.len(), 1 + accepted);
+    }
+
+    #[test]
+    fn rewards_are_clipped_to_unit_interval() {
+        let tr = run_one(PolicyMode::Full, 30, 13);
+        for r in &tr.records {
+            assert!((0.0..=1.0).contains(&r.reward));
+            if !r.verdict.passed() {
+                assert_eq!(r.reward, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn best_chain_roots_at_naive() {
+        let tr = run_one(PolicyMode::Full, 30, 17);
+        let chain = tr.best_chain();
+        assert_eq!(*chain.last().unwrap(), 0);
+        assert_eq!(chain[0], tr.best_id);
+    }
+
+    #[test]
+    fn no_clustering_mode_uses_single_cluster() {
+        let tr = run_one(PolicyMode::NoClustering, 25, 19);
+        for r in &tr.records {
+            assert_eq!(r.cluster, 0);
+        }
+    }
+
+    #[test]
+    fn freeform_modes_have_no_strategy() {
+        for mode in [PolicyMode::NoStrategySet, PolicyMode::NoStrategyRawProfiling] {
+            let tr = run_one(mode, 15, 23);
+            assert!(tr.records.iter().all(|r| r.strategy.is_none()));
+        }
+    }
+
+    #[test]
+    fn strategy_modes_record_strategies() {
+        let tr = run_one(PolicyMode::Full, 20, 29);
+        assert!(tr.records.iter().all(|r| r.strategy.is_some()));
+        let counts = tr.strategy_counts();
+        let total: usize = counts.iter().map(|c| c.selected).sum();
+        assert_eq!(total, 20);
+    }
+
+    #[test]
+    fn profiling_happens_only_after_reclustering() {
+        let tr = run_one(PolicyMode::Full, 9, 31);
+        // τ = 10 → no re-clustering within 9 iterations → no NCU runs
+        assert_eq!(tr.profile_runs, 0);
+        let tr2 = run_one(PolicyMode::Full, 40, 31);
+        // with 40 iterations clustering fires; representative-only
+        // profiling keeps the NCU count far below 40
+        assert!(tr2.profile_runs <= 4 * 3 + 3, "runs={}", tr2.profile_runs);
+    }
+
+    #[test]
+    fn no_profiling_mode_never_profiles() {
+        let tr = run_one(PolicyMode::NoProfiling, 40, 37);
+        assert_eq!(tr.profile_runs, 0);
+        assert_eq!(tr.profile_cost_s, 0.0);
+    }
+
+    #[test]
+    fn full_beats_bon_style_ablation_on_average() {
+        // quick sanity: Full ≥ NoStrategySet in fallback geomean over a
+        // few tasks (the Table-4 direction).
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+        let mut full_ls = 0.0;
+        let mut nostrat_ls = 0.0;
+        for (i, task) in suite.tasks.iter().take(8).enumerate() {
+            let root = Rng::new(100 + i as u64);
+            let full = KernelBand::new(PolicyConfig::with_mode(PolicyMode::Full))
+                .optimize(task, &engine, &llm, &root);
+            let nos = KernelBand::new(PolicyConfig::with_mode(
+                PolicyMode::NoStrategySet,
+            ))
+            .optimize(task, &engine, &llm, &root);
+            full_ls += full.outcome().fallback_speedup().ln();
+            nostrat_ls += nos.outcome().fallback_speedup().ln();
+        }
+        assert!(
+            full_ls >= nostrat_ls,
+            "full {} vs no-strategy {}",
+            (full_ls / 8.0_f64).exp(),
+            (nostrat_ls / 8.0_f64).exp()
+        );
+    }
+}

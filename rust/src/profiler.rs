@@ -1,0 +1,173 @@
+//! Hardware signatures h(k) and the NCU-style profiling cost model.
+//!
+//! Paper §3.2/Appendix A: the hardware signature is three Nsight-Compute
+//! throughput metrics — SM, DRAM and L2 `pct_of_peak_sustained_elapsed`.
+//! Profiling is expensive (≈10 s per kernel), which is why KernelBand
+//! profiles only the *centroid* of each cluster during re-clustering and
+//! caches results by code hash (§3.3, §3.6). This module reproduces both
+//! the signature and the cost accounting so the Fig. 3 time-breakdown and
+//! the representative-profiling ablation are measurable.
+
+use std::collections::HashMap;
+
+
+use crate::kernel::Counters;
+use crate::strategy::{Resource, Strategy};
+
+/// Seconds per NCU profiling run (paper §3.3: "≈10 s").
+pub const PROFILE_COST_S: f64 = 10.0;
+
+/// Default saturation threshold θ_sat (paper §3.6: 75%).
+pub const THETA_SAT: f64 = 75.0;
+
+/// The 3-metric NCU signature (percent of peak).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HardwareSignature {
+    pub sm_pct: f64,
+    pub dram_pct: f64,
+    pub l2_pct: f64,
+}
+
+impl HardwareSignature {
+    pub fn from_counters(c: &Counters) -> Self {
+        HardwareSignature { sm_pct: c.sm_pct, dram_pct: c.dram_pct, l2_pct: c.l2_pct }
+    }
+
+    /// `h(k)[resource]`.
+    pub fn get(&self, r: Resource) -> f64 {
+        match r {
+            Resource::Sm => self.sm_pct,
+            Resource::Dram => self.dram_pct,
+            Resource::L2 => self.l2_pct,
+        }
+    }
+
+    /// The dominant bottleneck.
+    pub fn bottleneck(&self) -> Resource {
+        let mut best = Resource::Sm;
+        let mut val = self.sm_pct;
+        if self.dram_pct > val {
+            best = Resource::Dram;
+            val = self.dram_pct;
+        }
+        if self.l2_pct > val {
+            best = Resource::L2;
+        }
+        best
+    }
+
+    /// Paper Eq. 5: strategy `s` is valid iff its target resource is not
+    /// saturated.
+    pub fn strategy_valid(&self, s: Strategy, theta_sat: f64) -> bool {
+        self.get(s.target()) < theta_sat
+    }
+
+    /// Paper §3.4: remaining headroom score for the within-cluster
+    /// softmax pick, `V_hw(k, s) = θ_sat − h(k)[Target(s)]`.
+    pub fn headroom(&self, s: Strategy, theta_sat: f64) -> f64 {
+        theta_sat - self.get(s.target())
+    }
+}
+
+/// Code-hash-keyed profile cache with cost accounting.
+#[derive(Debug, Default, Clone)]
+pub struct Profiler {
+    cache: HashMap<u64, HardwareSignature>,
+    /// Cumulative simulated NCU time spent (cache misses × 10 s).
+    pub total_cost_s: f64,
+    /// Cache statistics.
+    pub misses: u64,
+    pub hits: u64,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Profile a kernel: returns the NCU signature derived from its
+    /// execution counters, charging [`PROFILE_COST_S`] on a cache miss.
+    pub fn profile(&mut self, code_hash: u64, counters: &Counters)
+                   -> HardwareSignature {
+        if let Some(sig) = self.cache.get(&code_hash) {
+            self.hits += 1;
+            return *sig;
+        }
+        let sig = HardwareSignature::from_counters(counters);
+        self.cache.insert(code_hash, sig);
+        self.misses += 1;
+        self.total_cost_s += PROFILE_COST_S;
+        sig
+    }
+
+    pub fn cached(&self, code_hash: u64) -> Option<HardwareSignature> {
+        self.cache.get(&code_hash).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counters(sm: f64, dram: f64, l2: f64) -> Counters {
+        Counters { sm_pct: sm, dram_pct: dram, l2_pct: l2, ..Default::default() }
+    }
+
+    #[test]
+    fn bottleneck_detection() {
+        assert_eq!(
+            HardwareSignature { sm_pct: 80.0, dram_pct: 40.0, l2_pct: 30.0 }
+                .bottleneck(),
+            Resource::Sm
+        );
+        assert_eq!(
+            HardwareSignature { sm_pct: 20.0, dram_pct: 90.0, l2_pct: 30.0 }
+                .bottleneck(),
+            Resource::Dram
+        );
+        assert_eq!(
+            HardwareSignature { sm_pct: 20.0, dram_pct: 30.0, l2_pct: 95.0 }
+                .bottleneck(),
+            Resource::L2
+        );
+    }
+
+    #[test]
+    fn saturated_resource_masks_strategy() {
+        let sig = HardwareSignature { sm_pct: 80.0, dram_pct: 40.0, l2_pct: 30.0 };
+        // Tiling targets SM which is saturated at θ=75
+        assert!(!sig.strategy_valid(Strategy::Tiling, THETA_SAT));
+        // Vectorization targets DRAM which has headroom
+        assert!(sig.strategy_valid(Strategy::Vectorization, THETA_SAT));
+        assert!(sig.strategy_valid(Strategy::AccessLayout, THETA_SAT));
+    }
+
+    #[test]
+    fn headroom_matches_definition() {
+        let sig = HardwareSignature { sm_pct: 50.0, dram_pct: 60.0, l2_pct: 10.0 };
+        assert!((sig.headroom(Strategy::Fusion, 75.0) - 15.0).abs() < 1e-12);
+        assert!((sig.headroom(Strategy::Tiling, 75.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_avoids_recharging() {
+        let mut p = Profiler::new();
+        let c = counters(10.0, 20.0, 30.0);
+        let s1 = p.profile(42, &c);
+        let s2 = p.profile(42, &c);
+        assert_eq!(s1, s2);
+        assert_eq!(p.misses, 1);
+        assert_eq!(p.hits, 1);
+        assert!((p.total_cost_s - PROFILE_COST_S).abs() < 1e-12);
+        p.profile(43, &c);
+        assert!((p.total_cost_s - 2.0 * PROFILE_COST_S).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_lookup() {
+        let mut p = Profiler::new();
+        assert!(p.cached(7).is_none());
+        p.profile(7, &counters(1.0, 2.0, 3.0));
+        assert!(p.cached(7).is_some());
+    }
+}

@@ -1,0 +1,414 @@
+//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py` and
+//! DESIGN.md): `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `execute`. One `PjRtClient` is created per
+//! [`Runtime`] and executables are compiled once and cached by artifact
+//! name, so repeated hot-path calls pay only buffer transfer + execution.
+//!
+//! Every artifact was lowered with `return_tuple=True`, so outputs always
+//! arrive as a tuple literal and are decomposed here.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow as eyre, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use crate::cluster::{kmeanspp_init, representatives, ClusterBackend, Clustering};
+use crate::features::{Phi, PHI_DIM};
+use crate::rng::Rng;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Tensor shape+dtype as recorded by the AOT manifest.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub dims: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub op: String,
+    pub role: String,
+    pub params: Json,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub flops: f64,
+    pub hbm_bytes: f64,
+    pub vmem_bytes: f64,
+    pub mxu_util: f64,
+}
+
+impl ArtifactMeta {
+    /// The optimization-strategy family this variant belongs to, if any.
+    pub fn strategy(&self) -> Option<&str> {
+        self.params.get("strategy").and_then(|v| v.as_str())
+    }
+}
+
+/// `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let root = json::parse(&text).map_err(|e| eyre!("{e}"))?;
+        let tensors = |v: &Json| -> Result<Vec<TensorMeta>> {
+            v.as_arr()
+                .ok_or_else(|| eyre!("tensor list"))?
+                .iter()
+                .map(|t| {
+                    Ok(TensorMeta {
+                        dims: t
+                            .get("dims")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| eyre!("dims"))?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                        dtype: t.str_field("dtype").map_err(|e| eyre!("{e}"))?.to_string(),
+                    })
+                })
+                .collect()
+        };
+        let artifacts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| eyre!("manifest missing artifacts"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    name: a.str_field("name").map_err(|e| eyre!("{e}"))?.to_string(),
+                    file: a.str_field("file").map_err(|e| eyre!("{e}"))?.to_string(),
+                    op: a.str_field("op").map_err(|e| eyre!("{e}"))?.to_string(),
+                    role: a.str_field("role").map_err(|e| eyre!("{e}"))?.to_string(),
+                    params: a.get("params").cloned().unwrap_or(Json::Null),
+                    inputs: tensors(a.get("inputs").unwrap_or(&Json::Null))?,
+                    outputs: tensors(a.get("outputs").unwrap_or(&Json::Null))?,
+                    flops: a.f64_field("flops"),
+                    hbm_bytes: a.f64_field("hbm_bytes"),
+                    vmem_bytes: a.f64_field("vmem_bytes"),
+                    mxu_util: a.f64_field("mxu_util"),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            version: root.f64_field("version") as u32,
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Variant artifacts of an op family.
+    pub fn variants(&self, op: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.op == op && a.role == "variant")
+            .collect()
+    }
+
+    /// Reference artifact of an op family.
+    pub fn reference(&self, op: &str) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.op == op && a.role == "reference")
+    }
+
+    /// All op families that have both variants and a reference.
+    pub fn variant_ops(&self) -> Vec<String> {
+        let mut ops: Vec<String> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.role == "variant")
+            .map(|a| a.op.clone())
+            .collect();
+        ops.sort();
+        ops.dedup();
+        ops.retain(|op| self.reference(op).is_some());
+        ops
+    }
+}
+
+/// Output buffers of one execution, one `Vec<f32>` per tuple element
+/// (i32 outputs are converted to f32 for a uniform interface; the only
+/// i32 output in the registry is the K-means assignment vector, whose
+/// values are small integers and exactly representable).
+pub type Outputs = Vec<Vec<f32>>;
+
+/// The PJRT CPU runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative compile/execute wall-clock (perf accounting).
+    pub compile_time_s: RefCell<f64>,
+    pub execute_time_s: RefCell<f64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| eyre!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_time_s: RefCell::new(0.0),
+            execute_time_s: RefCell::new(0.0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| eyre!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| eyre!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| eyre!("compiling {name}: {e:?}"))?;
+        *self.compile_time_s.borrow_mut() += t0.elapsed().as_secs_f64();
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn literals_for(&self, meta: &ArtifactMeta, inputs: &[Vec<f32>])
+                    -> Result<Vec<xla::Literal>> {
+        if inputs.len() != meta.inputs.len() {
+            return Err(eyre!(
+                "{}: expected {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        meta.inputs
+            .iter()
+            .zip(inputs)
+            .map(|(tm, data)| {
+                if data.len() != tm.element_count() {
+                    return Err(eyre!(
+                        "{}: input needs {} elements, got {}",
+                        meta.name,
+                        tm.element_count(),
+                        data.len()
+                    ));
+                }
+                let lit = xla::Literal::vec1(data.as_slice());
+                let dims: Vec<i64> =
+                    tm.dims.iter().map(|&d| d as i64).collect();
+                let lit = if dims.len() <= 1 {
+                    lit
+                } else {
+                    lit.reshape(&dims).map_err(|e| eyre!("reshape: {e:?}"))?
+                };
+                if tm.dtype == "i32" {
+                    lit.convert(xla::PrimitiveType::S32)
+                        .map_err(|e| eyre!("convert: {e:?}"))
+                } else {
+                    Ok(lit)
+                }
+            })
+            .collect()
+    }
+
+    /// Execute an artifact with f32 input buffers; returns the flattened
+    /// f32 output buffers (tuple decomposed).
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Outputs> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| eyre!("unknown artifact {name:?}"))?
+            .clone();
+        let exe = self.executable(name)?;
+        let lits = self.literals_for(&meta, inputs)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| eyre!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("fetch: {e:?}"))?;
+        *self.execute_time_s.borrow_mut() += t0.elapsed().as_secs_f64();
+        let parts = result
+            .to_tuple()
+            .map_err(|e| eyre!("tuple decompose: {e:?}"))?;
+        parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, om)| {
+                let lit = if om.dtype == "i32" {
+                    lit.convert(xla::PrimitiveType::F32)
+                        .map_err(|e| eyre!("convert out: {e:?}"))?
+                } else {
+                    lit
+                };
+                lit.to_vec::<f32>().map_err(|e| eyre!("to_vec: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Execute `reps` times and return (outputs, median seconds/rep).
+    ///
+    /// Mirrors `triton.testing.do_bench`'s discipline at small scale: one
+    /// warmup execution (also absorbing lazy compilation), then timed
+    /// repetitions with the *median* reported to shed outliers.
+    pub fn time_execution(&self, name: &str, inputs: &[Vec<f32>], reps: usize)
+                          -> Result<(Outputs, f64)> {
+        let _ = self.execute(name, inputs)?; // warmup + compile
+        let mut times = Vec::with_capacity(reps);
+        let mut outputs = Vec::new();
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            outputs = self.execute(name, inputs)?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(f64::total_cmp);
+        Ok((outputs, times[times.len() / 2]))
+    }
+
+    /// Deterministic pseudo-random input buffers for an artifact.
+    pub fn example_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| eyre!("unknown artifact {name:?}"))?;
+        let mut rng = Rng::new(seed).split(name, 0);
+        Ok(meta
+            .inputs
+            .iter()
+            .map(|tm| {
+                (0..tm.element_count())
+                    .map(|_| rng.normal() as f32)
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+/// K-means clustering executed through the AOT Pallas artifact
+/// (`kmeans_run_k{K}`), implementing the same [`ClusterBackend`] trait as
+/// the pure-Rust path. The frontier is padded/masked to the artifact's
+/// fixed 64×5 shape; initial centroids come from the same deterministic
+/// k-means++ seeding, so the two backends are numerically comparable
+/// (parity test in `rust/tests/pjrt_runtime.rs`).
+pub struct PjrtKmeans<'rt> {
+    pub runtime: &'rt Runtime,
+}
+
+/// The Ks with compiled artifacts.
+pub const PJRT_KMEANS_KS: [usize; 5] = [1, 2, 3, 5, 8];
+const PJRT_KMEANS_N: usize = 64;
+
+impl ClusterBackend for PjrtKmeans<'_> {
+    fn cluster(&self, points: &[Phi], k: usize, rng: &mut Rng) -> Clustering {
+        let k = k.max(1).min(points.len().max(1));
+        assert!(PJRT_KMEANS_KS.contains(&k), "no kmeans artifact for K={k}");
+        assert!(
+            points.len() <= PJRT_KMEANS_N,
+            "frontier exceeds artifact capacity"
+        );
+        let init = kmeanspp_init(points, k, rng);
+
+        let mut pts = vec![0.0f32; PJRT_KMEANS_N * PHI_DIM];
+        for (i, p) in points.iter().enumerate() {
+            for (j, &v) in p.iter().enumerate() {
+                pts[i * PHI_DIM + j] = v as f32;
+            }
+        }
+        let mut cents = vec![0.0f32; k * PHI_DIM];
+        for (i, c) in init.iter().enumerate() {
+            for (j, &v) in c.iter().enumerate() {
+                cents[i * PHI_DIM + j] = v as f32;
+            }
+        }
+        let mut mask = vec![0.0f32; PJRT_KMEANS_N];
+        for m in mask.iter_mut().take(points.len()) {
+            *m = 1.0;
+        }
+
+        let name = format!("kmeans_run_k{k}");
+        let outs = self
+            .runtime
+            .execute(&name, &[pts, cents, mask])
+            .expect("kmeans artifact execution");
+        let centroids: Vec<Phi> = (0..k)
+            .map(|i| {
+                let mut c = [0.0f64; PHI_DIM];
+                for (j, slot) in c.iter_mut().enumerate() {
+                    *slot = outs[0][i * PHI_DIM + j] as f64;
+                }
+                c
+            })
+            .collect();
+        let assign: Vec<usize> = outs[1][..points.len()]
+            .iter()
+            .map(|&a| a as usize)
+            .collect();
+        let reps = representatives(points, &assign, &centroids);
+        Clustering { assign, centroids, representatives: reps }
+    }
+}
+
+/// Masked-UCB scores computed through the AOT `ucb_k{K}` artifact —
+/// parity path for `bandit::MaskedUcb::index` (integration-tested).
+pub fn pjrt_ucb_scores(rt: &Runtime, mu: &[f64], n: &[f64], t: usize,
+                       mask: &[bool], k: usize) -> Result<Vec<f64>> {
+    let name = format!("ucb_k{k}");
+    let s = crate::strategy::NUM_STRATEGIES;
+    assert_eq!(mu.len(), k * s);
+    let mu32: Vec<f32> = mu.iter().map(|&x| x as f32).collect();
+    let n32: Vec<f32> = n.iter().map(|&x| x as f32).collect();
+    let t32 = vec![t as f32];
+    let m32: Vec<f32> =
+        mask.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+    let outs = rt.execute(&name, &[mu32, n32, t32, m32])?;
+    Ok(outs[0].iter().map(|&x| x as f64).collect())
+}

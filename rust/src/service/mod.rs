@@ -1,0 +1,498 @@
+//! Optimization service: concurrent per-kernel optimization with a
+//! batched LLM gateway (paper §4.4.1, Figure 3).
+//!
+//! The paper's wall-clock win comes from batching: serially, one
+//! iteration costs ≈13.4 min, 87% of it LLM inference (the ~8 chained
+//! plan/generate/repair calls); with batched LLM calls the iteration
+//! collapses to ≈129 s and the bottleneck shifts to kernel compilation
+//! (34%) and execution (30%). This module provides:
+//!
+//! * [`TimeModel`] — the calibrated per-component costs, from which the
+//!   Fig.-3 serial and batched breakdowns are computed analytically;
+//! * [`BatchedLlmGateway`] — a real OS-thread batching gateway: bounded
+//!   ingress queue (backpressure: submitters block when it is full), a
+//!   window/size-triggered batcher thread, and scaled-latency simulation
+//!   (1 modeled second = [`TIME_SCALE`] of wall-clock), used by the
+//!   service tests and the `serve` subcommand to demonstrate the same
+//!   collapse end-to-end;
+//! * [`OptimizationService`] — drives N concurrent kernel-optimization
+//!   jobs through the gateway.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Wall-clock seconds per *modeled* second (the service simulates the
+/// paper's minute-scale latencies in milliseconds: 1000× compression).
+pub const TIME_SCALE: f64 = 1.0 / 1000.0;
+
+/// Calibrated component costs (seconds), per kernel/iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct TimeModel {
+    /// One LLM API call (serial).
+    pub llm_call_s: f64,
+    /// Chained calls per iteration (plan → generate → repair loop).
+    pub calls_per_iter: f64,
+    /// Kernel compilation per iteration (all candidate builds).
+    pub compile_s: f64,
+    /// Benchmark execution per iteration (10+ shapes, do_bench style).
+    pub exec_s: f64,
+    /// NCU profiling, amortized per iteration (representatives only,
+    /// every τ iterations).
+    pub profile_amortized_s: f64,
+    /// Wall-clock of one *batched* LLM round (the chained calls of one
+    /// iteration submitted together; latency ≈ the longest call chain
+    /// after parallelization, not the sum).
+    pub llm_batched_s: f64,
+}
+
+impl Default for TimeModel {
+    fn default() -> Self {
+        // Calibrated against both panels of Fig. 3: serial total
+        // 803.7 s = 13.4 min with LLM at 87.0%; batched total 129.0 s
+        // with compilation at 34.0% and execution at 30.0%. The
+        // profiling slice covers NCU runs on cluster representatives
+        // plus the do_bench warmup discipline.
+        TimeModel {
+            llm_call_s: 87.4,
+            calls_per_iter: 8.0,
+            compile_s: 43.9,
+            exec_s: 38.7,
+            profile_amortized_s: 21.9,
+            llm_batched_s: 24.5,
+        }
+    }
+}
+
+/// One slice of the Fig.-3 pie.
+#[derive(Debug, Clone)]
+pub struct BreakdownRow {
+    pub component: &'static str,
+    pub seconds: f64,
+    pub percent: f64,
+}
+
+impl TimeModel {
+    /// Serial cumulative time per iteration (Fig. 3a).
+    pub fn serial_iteration_s(&self) -> f64 {
+        self.llm_call_s * self.calls_per_iter
+            + self.compile_s
+            + self.exec_s
+            + self.profile_amortized_s
+    }
+
+    /// Batched wall-clock per iteration (Fig. 3b).
+    pub fn batched_iteration_s(&self) -> f64 {
+        self.llm_batched_s + self.compile_s + self.exec_s
+            + self.profile_amortized_s
+    }
+
+    fn rows(&self, llm: f64, total: f64) -> Vec<BreakdownRow> {
+        let mk = |component, seconds: f64| BreakdownRow {
+            component,
+            seconds,
+            percent: 100.0 * seconds / total,
+        };
+        vec![
+            mk("LLM inference", llm),
+            mk("Compilation", self.compile_s),
+            mk("Execution", self.exec_s),
+            mk("Profiling", self.profile_amortized_s),
+        ]
+    }
+
+    pub fn serial_breakdown(&self) -> Vec<BreakdownRow> {
+        self.rows(
+            self.llm_call_s * self.calls_per_iter,
+            self.serial_iteration_s(),
+        )
+    }
+
+    pub fn batched_breakdown(&self) -> Vec<BreakdownRow> {
+        self.rows(self.llm_batched_s, self.batched_iteration_s())
+    }
+}
+
+fn scaled_sleep(model_seconds: f64) {
+    std::thread::sleep(Duration::from_secs_f64(
+        (model_seconds * TIME_SCALE).max(0.0),
+    ));
+}
+
+/// One queued request: a payload plus its completion slot.
+struct Pending<T> {
+    payload: T,
+    done: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+/// Gateway configuration (modeled seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct GatewayConfig {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Batching window (modeled seconds): a partial batch is flushed
+    /// after this long.
+    pub window_s: f64,
+    /// Modeled latency of one batched API round.
+    pub call_latency_s: f64,
+    /// Ingress queue bound — submitters block when it is full
+    /// (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            max_batch: 64,
+            window_s: 2.0,
+            call_latency_s: 24.5,
+            queue_depth: 256,
+        }
+    }
+}
+
+/// Gateway runtime statistics.
+#[derive(Debug, Default)]
+pub struct GatewayStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub max_batch_seen: AtomicU64,
+}
+
+struct GatewayShared<T> {
+    queue: Mutex<VecDeque<Pending<T>>>,
+    ingress: Condvar,
+    shutdown: AtomicBool,
+    config: GatewayConfig,
+    stats: GatewayStats,
+}
+
+/// The batched LLM gateway (one batcher OS thread).
+pub struct BatchedLlmGateway<T: Send + 'static> {
+    shared: Arc<GatewayShared<T>>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> BatchedLlmGateway<T> {
+    pub fn spawn(config: GatewayConfig) -> Self {
+        let shared = Arc::new(GatewayShared {
+            queue: Mutex::new(VecDeque::new()),
+            ingress: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            config,
+            stats: GatewayStats::default(),
+        });
+        let s = shared.clone();
+        let batcher = std::thread::spawn(move || Self::batcher_loop(&s));
+        BatchedLlmGateway { shared, batcher: Some(batcher) }
+    }
+
+    fn batcher_loop(s: &GatewayShared<T>) {
+        loop {
+            // wait for the head of the next batch
+            let mut q = s.queue.lock().unwrap();
+            while q.is_empty() {
+                if s.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let (guard, _timeout) = s
+                    .ingress
+                    .wait_timeout(q, Duration::from_millis(5))
+                    .unwrap();
+                q = guard;
+            }
+            // window: wait (in scaled time) for the batch to fill
+            drop(q);
+            let window = Duration::from_secs_f64(s.config.window_s * TIME_SCALE);
+            let deadline = Instant::now() + window;
+            loop {
+                let filled = s.queue.lock().unwrap().len() >= s.config.max_batch;
+                if filled || Instant::now() >= deadline {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            // take the batch
+            let mut batch = Vec::new();
+            {
+                let mut q = s.queue.lock().unwrap();
+                while batch.len() < s.config.max_batch {
+                    match q.pop_front() {
+                        Some(p) => batch.push(p),
+                        None => break,
+                    }
+                }
+            }
+            s.ingress.notify_all(); // wake blocked submitters
+            if batch.is_empty() {
+                continue;
+            }
+            // one API round for the whole batch
+            scaled_sleep(s.config.call_latency_s);
+            s.stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            s.stats.batches.fetch_add(1, Ordering::Relaxed);
+            s.stats
+                .max_batch_seen
+                .fetch_max(batch.len() as u64, Ordering::Relaxed);
+            for p in batch {
+                let (slot, cv) = &*p.done;
+                *slot.lock().unwrap() = Some(p.payload);
+                cv.notify_one();
+            }
+        }
+    }
+
+    /// Submit a request and block until its (batched) completion.
+    /// Blocks on a full ingress queue — the backpressure mechanism.
+    pub fn call(&self, payload: T) -> T {
+        let done = Arc::new((Mutex::new(None), Condvar::new()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            while q.len() >= self.shared.config.queue_depth {
+                q = self
+                    .shared
+                    .ingress
+                    .wait_timeout(q, Duration::from_millis(5))
+                    .unwrap()
+                    .0;
+            }
+            q.push_back(Pending { payload, done: done.clone() });
+        }
+        self.shared.ingress.notify_all();
+        let (slot, cv) = &*done;
+        let mut guard = slot.lock().unwrap();
+        while guard.is_none() {
+            guard = cv.wait(guard).unwrap();
+        }
+        guard.take().unwrap()
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.shared.stats.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.shared.stats.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn max_batch_seen(&self) -> u64 {
+        self.shared.stats.max_batch_seen.load(Ordering::Relaxed)
+    }
+}
+
+impl<T: Send + 'static> Drop for BatchedLlmGateway<T> {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.ingress.notify_all();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-job result of a service run.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub job_id: usize,
+    pub iterations: usize,
+    /// Modeled wall-clock the job spent end-to-end (seconds).
+    pub wall_model_s: f64,
+}
+
+/// Outcome of a whole service run (times in modeled seconds).
+#[derive(Debug, Clone)]
+pub struct ServiceReport {
+    pub jobs: Vec<JobReport>,
+    pub wall_model_s: f64,
+    pub gateway_requests: u64,
+    pub gateway_batches: u64,
+    pub gateway_max_batch: u64,
+    /// Serial-equivalent modeled time (sum over jobs × iterations of the
+    /// serial iteration model).
+    pub serial_equivalent_s: f64,
+}
+
+impl ServiceReport {
+    pub fn batching_speedup(&self) -> f64 {
+        self.serial_equivalent_s / self.wall_model_s.max(1e-9)
+    }
+}
+
+/// Drives N concurrent optimization jobs through a batched gateway.
+pub struct OptimizationService {
+    pub time_model: TimeModel,
+    pub gateway_config: GatewayConfig,
+}
+
+impl Default for OptimizationService {
+    fn default() -> Self {
+        OptimizationService {
+            time_model: TimeModel::default(),
+            gateway_config: GatewayConfig::default(),
+        }
+    }
+}
+
+impl OptimizationService {
+    /// Run `jobs` concurrent kernel optimizations of `iterations` each.
+    /// Latencies are scaled by [`TIME_SCALE`], so the run measures the
+    /// pipeline's *shape* — batching efficiency, overlap, backpressure —
+    /// in milliseconds of real time.
+    pub fn run(&self, jobs: usize, iterations: usize) -> ServiceReport {
+        let gateway: Arc<BatchedLlmGateway<usize>> =
+            Arc::new(BatchedLlmGateway::spawn(self.gateway_config));
+        let tm = self.time_model;
+        let t0 = Instant::now();
+        let reports: Vec<JobReport> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..jobs)
+                .map(|job_id| {
+                    let gw = gateway.clone();
+                    scope.spawn(move || {
+                        let j0 = Instant::now();
+                        for _ in 0..iterations {
+                            // the iteration's chained LLM calls, batched
+                            let _ = gw.call(job_id);
+                            // compile + execute + amortized profiling
+                            scaled_sleep(
+                                tm.compile_s + tm.exec_s
+                                    + tm.profile_amortized_s,
+                            );
+                        }
+                        JobReport {
+                            job_id,
+                            iterations,
+                            wall_model_s: j0.elapsed().as_secs_f64()
+                                / TIME_SCALE,
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall_model_s = t0.elapsed().as_secs_f64() / TIME_SCALE;
+        ServiceReport {
+            jobs: reports,
+            wall_model_s,
+            gateway_requests: gateway.requests(),
+            gateway_batches: gateway.batches(),
+            gateway_max_batch: gateway.max_batch_seen(),
+            serial_equivalent_s: jobs as f64
+                * iterations as f64
+                * tm.serial_iteration_s(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_model_matches_paper_figure3() {
+        let tm = TimeModel::default();
+        // Fig. 3a: 13.4 min serial
+        let serial_min = tm.serial_iteration_s() / 60.0;
+        assert!((13.0..14.0).contains(&serial_min), "serial = {serial_min} min");
+        // Fig. 3b: 129 s batched
+        let batched = tm.batched_iteration_s();
+        assert!((125.0..133.0).contains(&batched), "batched = {batched} s");
+        // serial breakdown: LLM dominates at ~87%
+        let llm_pct = tm.serial_breakdown()[0].percent;
+        assert!((85.0..89.0).contains(&llm_pct), "llm = {llm_pct}%");
+        // batched breakdown: compilation becomes the largest component
+        let b = tm.batched_breakdown();
+        let compile_pct = b[1].percent;
+        let exec_pct = b[2].percent;
+        assert!((32.0..36.0).contains(&compile_pct), "compile = {compile_pct}%");
+        assert!((28.0..32.0).contains(&exec_pct), "exec = {exec_pct}%");
+        assert!(b[1].seconds >= b[0].seconds);
+    }
+
+    #[test]
+    fn breakdown_percentages_sum_to_100() {
+        let tm = TimeModel::default();
+        for rows in [tm.serial_breakdown(), tm.batched_breakdown()] {
+            let sum: f64 = rows.iter().map(|r| r.percent).sum();
+            assert!((sum - 100.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gateway_batches_concurrent_requests() {
+        let gw: Arc<BatchedLlmGateway<usize>> =
+            Arc::new(BatchedLlmGateway::spawn(GatewayConfig {
+                max_batch: 32,
+                window_s: 5.0,
+                call_latency_s: 40.0,
+                queue_depth: 64,
+            }));
+        let results: Vec<usize> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..16)
+                .map(|i| {
+                    let g = gw.clone();
+                    scope.spawn(move || g.call(i))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results, (0..16).collect::<Vec<_>>());
+        assert_eq!(gw.requests(), 16);
+        // 16 concurrent requests should coalesce into very few batches
+        assert!(gw.batches() <= 4, "batches = {}", gw.batches());
+        assert!(gw.max_batch_seen() >= 4);
+    }
+
+    #[test]
+    fn service_batching_beats_serial() {
+        let svc = OptimizationService::default();
+        let report = svc.run(8, 3);
+        assert_eq!(report.jobs.len(), 8);
+        // with 8 concurrent jobs the run must land far below the
+        // serial-equivalent time
+        assert!(
+            report.batching_speedup() > 4.0,
+            "speedup = {}",
+            report.batching_speedup()
+        );
+        assert_eq!(report.gateway_requests, 8 * 3);
+    }
+
+    #[test]
+    fn single_job_wall_time_tracks_batched_model() {
+        let svc = OptimizationService::default();
+        let report = svc.run(1, 2);
+        let per_iter = report.wall_model_s / 2.0;
+        let expected = svc.time_model.batched_iteration_s();
+        // one lone job still pays window + call latency per iteration;
+        // generous bounds because scaled sleeps are milliseconds
+        assert!(
+            per_iter > 0.6 * expected && per_iter < 2.0 * expected,
+            "per-iter {per_iter} vs model {expected}"
+        );
+    }
+
+    #[test]
+    fn backpressure_bounds_queue() {
+        // queue_depth 2 with 8 submitters: all complete, none lost
+        let gw: Arc<BatchedLlmGateway<usize>> =
+            Arc::new(BatchedLlmGateway::spawn(GatewayConfig {
+                max_batch: 2,
+                window_s: 1.0,
+                call_latency_s: 5.0,
+                queue_depth: 2,
+            }));
+        let results: Vec<usize> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let g = gw.clone();
+                    scope.spawn(move || g.call(i))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results.len(), 8);
+        assert_eq!(gw.requests(), 8);
+        assert!(gw.batches() >= 4); // max_batch=2 forces ≥4 rounds
+    }
+}

@@ -1,0 +1,144 @@
+//! The optimization-strategy set `S` (paper §3.6, Appendix D).
+//!
+//! Six strategies, each targeting a hardware resource; the mapping from
+//! strategy to *target resource* drives the hardware-aware mask
+//! `M[i,s] = 1[h(k_c)[Target(s)] < θ_sat]` (paper Eq. 5).
+
+
+/// The hardware resource a strategy primarily relieves (paper §3.2:
+/// the NCU signature measures DRAM, L2 and SM peak-throughput %).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Resource {
+    /// Streaming-multiprocessor / compute-pipe utilization.
+    Sm,
+    /// DRAM (HBM) bandwidth.
+    Dram,
+    /// L2-cache bandwidth / hit behaviour.
+    L2,
+}
+
+/// The paper's refined 6-strategy set (Appendix D, Table 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Partition computation into configurable tile sizes for cache
+    /// locality and parallelism.
+    Tiling,
+    /// Vector loads/stores (float4 on CUDA; lane-aligned blocks on TPU).
+    Vectorization,
+    /// Combine ops to cut intermediate memory traffic.
+    Fusion,
+    /// Software-pipelining depth for latency hiding.
+    Pipeline,
+    /// Loop order / instruction scheduling for ILP.
+    Reordering,
+    /// Memory access patterns, coalescing, data layout.
+    AccessLayout,
+}
+
+/// `|S|` — used to size arm matrices.
+pub const NUM_STRATEGIES: usize = 6;
+
+/// All strategies in canonical order (matches the L1 `ucb` artifact's
+/// column order and the paper's Table 3 row order).
+pub const ALL_STRATEGIES: [Strategy; NUM_STRATEGIES] = [
+    Strategy::Tiling,
+    Strategy::Vectorization,
+    Strategy::Fusion,
+    Strategy::Pipeline,
+    Strategy::Reordering,
+    Strategy::AccessLayout,
+];
+
+impl Strategy {
+    /// Canonical index in `[0, NUM_STRATEGIES)`.
+    pub fn index(self) -> usize {
+        ALL_STRATEGIES.iter().position(|&s| s == self).unwrap()
+    }
+
+    /// Inverse of [`Strategy::index`].
+    pub fn from_index(i: usize) -> Strategy {
+        ALL_STRATEGIES[i]
+    }
+
+    /// `Target(s)` — the resource whose saturation gates this strategy
+    /// (paper Eq. 5). A strategy is only worth applying while its target
+    /// resource still has headroom:
+    ///
+    /// * Tiling / Reordering raise *compute* efficiency → gated on SM.
+    /// * Vectorization / Fusion relieve *DRAM* traffic → gated on DRAM.
+    /// * Pipeline hides latency → gated on SM (issue slots).
+    /// * Access & layout improves locality → gated on L2.
+    pub fn target(self) -> Resource {
+        match self {
+            Strategy::Tiling => Resource::Sm,
+            Strategy::Vectorization => Resource::Dram,
+            Strategy::Fusion => Resource::Dram,
+            Strategy::Pipeline => Resource::Sm,
+            Strategy::Reordering => Resource::Sm,
+            Strategy::AccessLayout => Resource::L2,
+        }
+    }
+
+    /// Human-readable name (paper table row labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Tiling => "Tiling",
+            Strategy::Vectorization => "Vectorization",
+            Strategy::Fusion => "Fusion",
+            Strategy::Pipeline => "Pipeline",
+            Strategy::Reordering => "Reordering",
+            Strategy::AccessLayout => "Access & Layout",
+        }
+    }
+
+    /// Parse from the names used in configs/CLI (case-insensitive).
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "tiling" => Some(Strategy::Tiling),
+            "vectorization" | "vectorize" => Some(Strategy::Vectorization),
+            "fusion" | "fuse" => Some(Strategy::Fusion),
+            "pipeline" => Some(Strategy::Pipeline),
+            "reordering" | "reorder" => Some(Strategy::Reordering),
+            "access_layout" | "access & layout" | "layout" => {
+                Some(Strategy::AccessLayout)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        for (i, &s) in ALL_STRATEGIES.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(Strategy::from_index(i), s);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for &s in &ALL_STRATEGIES {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn targets_cover_all_resources() {
+        let targets: std::collections::HashSet<_> =
+            ALL_STRATEGIES.iter().map(|s| s.target()).collect();
+        assert!(targets.contains(&Resource::Sm));
+        assert!(targets.contains(&Resource::Dram));
+        assert!(targets.contains(&Resource::L2));
+    }
+}

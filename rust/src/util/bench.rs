@@ -1,0 +1,142 @@
+//! Criterion-style timing harness for `cargo bench` (harness = false).
+//!
+//! Each bench target builds a [`BenchSuite`], registers closures, and
+//! prints `name  time: [median ± spread]  throughput` lines plus the
+//! experiment tables they regenerate. Measurement discipline follows
+//! `triton.testing.do_bench`: warmup iterations, then timed samples with
+//! median/percentile reporting.
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub samples: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub p95: Duration,
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then timed samples until
+/// `min_samples` samples *and* `min_time` total measurement are reached.
+pub fn measure<F: FnMut()>(mut f: F, warmup: usize, min_samples: usize,
+                           min_time: Duration) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while samples.len() < min_samples || t0.elapsed() < min_time {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    BenchStats {
+        samples: n,
+        median: samples[n / 2],
+        mean: total / n as u32,
+        min: samples[0],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+    }
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// A named collection of benches with uniform reporting.
+pub struct BenchSuite {
+    name: String,
+    warmup: usize,
+    min_samples: usize,
+    min_time: Duration,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        println!("==== bench suite: {name} ====");
+        BenchSuite {
+            name: name.to_string(),
+            warmup: 1,
+            min_samples: 5,
+            min_time: Duration::from_millis(200),
+        }
+    }
+
+    /// For heavyweight end-to-end benches: fewer samples.
+    pub fn heavy(name: &str) -> Self {
+        println!("==== bench suite: {name} ====");
+        BenchSuite {
+            name: name.to_string(),
+            warmup: 0,
+            min_samples: 3,
+            min_time: Duration::from_millis(0),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&self, name: &str, f: F) -> BenchStats {
+        let stats = measure(f, self.warmup, self.min_samples, self.min_time);
+        println!(
+            "{}/{:<42} time: [{} .. median {} .. p95 {}]  ({} samples)",
+            self.name,
+            name,
+            fmt_duration(stats.min),
+            fmt_duration(stats.median),
+            fmt_duration(stats.p95),
+            stats.samples
+        );
+        stats
+    }
+
+    /// Bench with a throughput annotation (`items` processed per call).
+    pub fn bench_throughput<F: FnMut()>(&self, name: &str, items: f64, f: F)
+                                        -> BenchStats {
+        let stats = self.bench(name, f);
+        let per_s = items / stats.median.as_secs_f64().max(1e-12);
+        println!("{}/{:<42} throughput: {per_s:.1} items/s", self.name, name);
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_samples() {
+        let mut calls = 0u64;
+        let stats = measure(
+            || calls += 1,
+            2,
+            7,
+            Duration::from_millis(0),
+        );
+        assert!(stats.samples >= 7);
+        assert!(calls as usize >= stats.samples + 2);
+        assert!(stats.min <= stats.median && stats.median <= stats.p95);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(Duration::from_secs(2)).contains('s'));
+        assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_duration(Duration::from_nanos(50)).contains("ns"));
+    }
+}

@@ -1,0 +1,14 @@
+//! In-crate replacements for the usual third-party utilities.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the pieces a production crate would
+//! pull from crates.io are implemented here, scoped to exactly what this
+//! system needs:
+//!
+//! * [`json`] — a strict, minimal JSON parser for `artifacts/manifest.json`
+//! * [`par`] — deterministic scoped-thread parallel map (rayon stand-in)
+//! * [`bench`] — a criterion-style timing harness for `cargo bench`
+
+pub mod bench;
+pub mod json;
+pub mod par;

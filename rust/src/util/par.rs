@@ -1,0 +1,97 @@
+//! Deterministic scoped-thread parallel map (rayon stand-in).
+//!
+//! Results come back in input order regardless of scheduling, and every
+//! work item derives its randomness from a split RNG keyed by its index,
+//! so experiment outputs are invariant to the degree of parallelism.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `items` using up to `threads` OS threads (0 = available
+/// parallelism). Output order matches input order.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(items.len().max(1));
+
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let slots_ptr = SlicePtr(slots.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slots_ptr = SlicePtr(slots_ptr.0);
+            scope.spawn(move || {
+                // force whole-struct capture (edition-2021 closures would
+                // otherwise capture the raw pointer field, which is !Send)
+                let slots_ptr = slots_ptr;
+                loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                // SAFETY: each index is claimed by exactly one thread via
+                // the atomic counter, so writes never alias; the scope
+                // guarantees the buffer outlives all threads.
+                unsafe {
+                    *slots_ptr.0.add(i) = Some(r);
+                }
+            }});
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("slot filled")).collect()
+}
+
+/// Send/Sync wrapper for the disjoint-write output pointer.
+struct SlicePtr<R>(*mut Option<R>);
+unsafe impl<R: Send> Send for SlicePtr<R> {}
+unsafe impl<R: Send> Sync for SlicePtr<R> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_serial_execution() {
+        let items: Vec<u64> = (0..50).collect();
+        let serial = parallel_map(&items, 1, |i, &x| x.wrapping_mul(i as u64 + 7));
+        let parallel = parallel_map(&items, 8, |i, &x| x.wrapping_mul(i as u64 + 7));
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn handles_empty_and_singleton() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[42u32], 4, |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn index_argument_is_correct() {
+        let items = vec!["a"; 64];
+        let out = parallel_map(&items, 6, |i, _| i);
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,116 @@
+//! Two-stage correctness verification (paper §4.1, Appendix H).
+//!
+//! *Call Accuracy* checks that the candidate runs at all (compile/launch
+//! errors); *Execution Accuracy* checks numerical equivalence with
+//! `torch.allclose(atol=1e-4, rtol=1e-4)`. In the simulated engine the
+//! failure mode is carried by the surrogate LLM's [`GenOutcome`]; on the
+//! PJRT engine the allclose check runs for real against the reference
+//! artifact's output buffers.
+
+use crate::llm::GenOutcome;
+
+/// The paper's tolerances (Appendix H).
+pub const ATOL: f32 = 1e-4;
+pub const RTOL: f32 = 1e-4;
+
+/// Result of the two-stage check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Verdict {
+    /// Stage 1: no runtime/compile errors.
+    pub call_ok: bool,
+    /// Stage 2: numerically equivalent to the reference.
+    pub exec_ok: bool,
+}
+
+impl Verdict {
+    pub fn passed(&self) -> bool {
+        self.call_ok && self.exec_ok
+    }
+
+    pub fn pass() -> Verdict {
+        Verdict { call_ok: true, exec_ok: true }
+    }
+}
+
+/// Map a simulated generation outcome onto the two stages.
+pub fn verify_outcome(outcome: GenOutcome) -> Verdict {
+    match outcome {
+        GenOutcome::Ok => Verdict { call_ok: true, exec_ok: true },
+        GenOutcome::CompileError => Verdict { call_ok: false, exec_ok: false },
+        GenOutcome::WrongOutput => Verdict { call_ok: true, exec_ok: false },
+    }
+}
+
+/// `|a - b| <= atol + rtol * |b|` elementwise — the torch.allclose
+/// criterion used by the PJRT engine's execution-accuracy stage.
+pub fn allclose(got: &[f32], want: &[f32], atol: f32, rtol: f32) -> bool {
+    if got.len() != want.len() {
+        return false;
+    }
+    got.iter().zip(want).all(|(&g, &w)| {
+        if g.is_nan() || w.is_nan() {
+            return false;
+        }
+        (g - w).abs() <= atol + rtol * w.abs()
+    })
+}
+
+/// Two-stage verification of real output buffers.
+pub fn verify_buffers(got: Option<&[f32]>, want: &[f32]) -> Verdict {
+    match got {
+        None => Verdict { call_ok: false, exec_ok: false },
+        Some(g) => Verdict {
+            call_ok: true,
+            exec_ok: allclose(g, want, ATOL, RTOL),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_mapping() {
+        assert!(verify_outcome(GenOutcome::Ok).passed());
+        let compile = verify_outcome(GenOutcome::CompileError);
+        assert!(!compile.call_ok && !compile.passed());
+        let wrong = verify_outcome(GenOutcome::WrongOutput);
+        assert!(wrong.call_ok && !wrong.exec_ok && !wrong.passed());
+    }
+
+    #[test]
+    fn allclose_exact_and_tolerant() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert!(allclose(&a, &a, ATOL, RTOL));
+        let b = [1.00005f32, 2.0, 3.0];
+        assert!(allclose(&b, &a, ATOL, RTOL));
+        let c = [1.1f32, 2.0, 3.0];
+        assert!(!allclose(&c, &a, ATOL, RTOL));
+    }
+
+    #[test]
+    fn allclose_relative_scales_with_magnitude() {
+        let want = [10_000.0f32];
+        let got = [10_000.9f32]; // within rtol*|want| = 1.0
+        assert!(allclose(&got, &want, ATOL, RTOL));
+        let got2 = [10_002.0f32];
+        assert!(!allclose(&got2, &want, ATOL, RTOL));
+    }
+
+    #[test]
+    fn allclose_rejects_nan_and_shape_mismatch() {
+        assert!(!allclose(&[f32::NAN], &[0.0], ATOL, RTOL));
+        assert!(!allclose(&[0.0], &[f32::NAN], ATOL, RTOL));
+        assert!(!allclose(&[0.0, 1.0], &[0.0], ATOL, RTOL));
+    }
+
+    #[test]
+    fn buffer_verification_stages() {
+        let want = [1.0f32, 2.0];
+        assert!(verify_buffers(Some(&[1.0, 2.0]), &want).passed());
+        let v = verify_buffers(Some(&[9.0, 2.0]), &want);
+        assert!(v.call_ok && !v.exec_ok);
+        assert!(!verify_buffers(None, &want).call_ok);
+    }
+}

@@ -1,0 +1,518 @@
+//! TritonBench-G-like workload suite.
+//!
+//! The paper evaluates on a corrected TritonBench-G: 183 Triton kernels
+//! across 13 functional categories and 5 difficulty levels, each
+//! benchmarked over 10+ input shapes (paper §4.1, Appendix E/F). The real
+//! benchmark only runs on NVIDIA GPUs, so this module synthesizes a suite
+//! with the same *observable structure*: the exact category distribution
+//! of Table 7, the difficulty profile of Table 1/Appendix E, per-shape
+//! FLOP/byte workloads with category-appropriate arithmetic intensity,
+//! and per-task latent optima that the optimization strategies move
+//! candidates toward.
+//!
+//! Everything is generated deterministically from a seed; the 50-kernel
+//! detailed-analysis subset uses stratified sampling with the paper's
+//! seed (42) and reproduces the Table 7 subset counts exactly.
+
+
+use crate::kernel::{KernelConfig, NUM_LAYOUTS, NUM_LOOP_ORDERS};
+use crate::rng::Rng;
+
+/// The 13 functional categories of TritonBench-G (Table 7 order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    Attention,
+    MatMul,
+    Normalization,
+    LinearAttention,
+    ElementWise,
+    MemoryIndex,
+    Other,
+    EmbeddingRope,
+    Softmax,
+    FusedActivation,
+    Quantization,
+    LossFunctions,
+    Reduction,
+}
+
+/// All categories in Table 7 order.
+pub const ALL_CATEGORIES: [Category; 13] = [
+    Category::Attention,
+    Category::MatMul,
+    Category::Normalization,
+    Category::LinearAttention,
+    Category::ElementWise,
+    Category::MemoryIndex,
+    Category::Other,
+    Category::EmbeddingRope,
+    Category::Softmax,
+    Category::FusedActivation,
+    Category::Quantization,
+    Category::LossFunctions,
+    Category::Reduction,
+];
+
+/// Full-benchmark category counts (Table 7, 184 kernels; one
+/// Element-wise kernel — `sin_computation` — is excluded, giving 183).
+pub const FULL_COUNTS: [usize; 13] = [29, 26, 18, 17, 16, 13, 12, 11, 11, 10, 8, 7, 6];
+
+/// 50-kernel subset category counts (Table 7 right column).
+pub const SUBSET_COUNTS: [usize; 13] = [7, 7, 4, 4, 3, 3, 3, 3, 4, 4, 2, 3, 3];
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Attention => "Attention",
+            Category::MatMul => "MatMul/GEMM",
+            Category::Normalization => "Normalization",
+            Category::LinearAttention => "Linear Attention/SSM",
+            Category::ElementWise => "Element-wise Ops",
+            Category::MemoryIndex => "Memory/Index Ops",
+            Category::Other => "Other",
+            Category::EmbeddingRope => "Embedding/RoPE",
+            Category::Softmax => "Softmax",
+            Category::FusedActivation => "Fused Ops/Activation",
+            Category::Quantization => "Quantization",
+            Category::LossFunctions => "Loss Functions",
+            Category::Reduction => "Reduction",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        ALL_CATEGORIES.iter().position(|&c| c == self).unwrap()
+    }
+
+    /// Typical arithmetic intensity (FLOPs per byte of minimal HBM
+    /// traffic) — the category's position on the roofline.
+    pub fn base_intensity(self) -> f64 {
+        match self {
+            Category::MatMul => 96.0,
+            Category::Attention => 24.0,
+            Category::LinearAttention => 8.0,
+            Category::FusedActivation => 2.0,
+            Category::Normalization => 1.6,
+            Category::Softmax => 1.2,
+            Category::LossFunctions => 1.0,
+            Category::Quantization => 0.6,
+            Category::Reduction => 0.5,
+            Category::EmbeddingRope => 0.35,
+            Category::ElementWise => 0.25,
+            Category::Other => 0.8,
+            Category::MemoryIndex => 0.08,
+        }
+    }
+
+    /// How many epilogue/prologue ops can usefully be fused (latent cap
+    /// for the FUSION strategy).
+    pub fn max_fusion(self) -> u8 {
+        match self {
+            Category::ElementWise | Category::FusedActivation => 3,
+            Category::Normalization | Category::Softmax
+            | Category::LossFunctions | Category::EmbeddingRope => 2,
+            Category::MatMul | Category::Attention
+            | Category::LinearAttention | Category::Quantization => 1,
+            Category::MemoryIndex | Category::Reduction | Category::Other => 1,
+        }
+    }
+
+    /// Whether a native PyTorch operator exists (Appendix G's
+    /// torch-comparable criterion).
+    pub fn torch_comparable(self) -> bool {
+        !matches!(
+            self,
+            Category::Quantization
+                | Category::MemoryIndex
+                | Category::LinearAttention
+                | Category::Other
+        )
+    }
+}
+
+/// Difficulty levels L1 (easiest) – L5 (hardest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Difficulty {
+    L1,
+    L2,
+    L3,
+    L4,
+    L5,
+}
+
+pub const ALL_DIFFICULTIES: [Difficulty; 5] = [
+    Difficulty::L1,
+    Difficulty::L2,
+    Difficulty::L3,
+    Difficulty::L4,
+    Difficulty::L5,
+];
+
+/// Full-suite difficulty counts. L1 = 3 and L5 = 5 are stated in the
+/// Table 1 caption; L2–L4 are chosen to match the 27.2% subset ratio
+/// against the subset's (1, 7, 18, 23, 1) split. Total = 183.
+pub const FULL_DIFFICULTY_COUNTS: [usize; 5] = [3, 26, 66, 83, 5];
+
+impl Difficulty {
+    pub fn level(self) -> usize {
+        match self {
+            Difficulty::L1 => 1,
+            Difficulty::L2 => 2,
+            Difficulty::L3 => 3,
+            Difficulty::L4 => 4,
+            Difficulty::L5 => 5,
+        }
+    }
+
+    pub fn from_level(l: usize) -> Difficulty {
+        ALL_DIFFICULTIES[l - 1]
+    }
+
+    /// Multiplier on the surrogate LLM's failure probability — harder
+    /// kernels are harder to transform correctly.
+    pub fn hardness(self) -> f64 {
+        match self {
+            Difficulty::L1 => 0.55,
+            Difficulty::L2 => 0.75,
+            Difficulty::L3 => 1.0,
+            Difficulty::L4 => 1.35,
+            Difficulty::L5 => 1.7,
+        }
+    }
+}
+
+/// One benchmark input shape: the minimal work the kernel must do.
+#[derive(Debug, Clone, Copy)]
+pub struct ShapeSpec {
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Minimal HBM bytes moved by an un-fused implementation.
+    pub bytes: f64,
+    /// Resident working set (bytes) — drives L2 behaviour.
+    pub working_set: f64,
+}
+
+/// Latent per-task structure: where the optima live and how much each
+/// schedule dimension matters. The optimizer never sees these directly —
+/// only latencies and counters.
+#[derive(Debug, Clone, Copy)]
+pub struct Latent {
+    /// Best loop-order permutation id.
+    pub best_loop_order: u8,
+    /// Best layout id.
+    pub best_layout: u8,
+    /// Useful fusion depth cap (≤ category cap).
+    pub max_fusion: u8,
+    /// Fraction of HBM traffic removed at full fusion.
+    pub fusion_saving: f64,
+    /// Best vector-width index.
+    pub best_vector: u8,
+    /// Task-specific jitter (in index steps) applied to the
+    /// device-optimal tile.
+    pub tile_bias: i8,
+    /// Sensitivity weights in [0,1] for (tiling, vector, fusion,
+    /// pipeline, reorder, layout) — how much a wrong setting hurts.
+    pub sensitivity: [f64; 6],
+}
+
+/// One kernel-optimization task.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub id: usize,
+    pub name: String,
+    pub category: Category,
+    pub difficulty: Difficulty,
+    pub shapes: Vec<ShapeSpec>,
+    pub latent: Latent,
+    /// Appendix G: does a native PyTorch op exist for this task?
+    pub torch_comparable: bool,
+}
+
+impl TaskSpec {
+    /// The reference implementation every optimization starts from.
+    pub fn naive_config(&self) -> KernelConfig {
+        KernelConfig::naive()
+    }
+
+    /// Total FLOPs across benchmark shapes.
+    pub fn total_flops(&self) -> f64 {
+        self.shapes.iter().map(|s| s.flops).sum()
+    }
+}
+
+/// A generated benchmark suite.
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub tasks: Vec<TaskSpec>,
+}
+
+fn gen_latent(cat: Category, diff: Difficulty, rng: &mut Rng) -> Latent {
+    let mem_bound = cat.base_intensity() < 4.0;
+    // Memory-bound kernels want wide vectors; compute-bound moderate.
+    let best_vector = if mem_bound {
+        2 + rng.below(2) as u8 // 4 or 8 lanes
+    } else {
+        1 + rng.below(2) as u8 // 2 or 4 lanes
+    };
+    let max_fusion = cat.max_fusion().min(1 + rng.below(3) as u8);
+    let fusion_saving = if mem_bound {
+        rng.uniform_in(0.2, 0.45)
+    } else {
+        rng.uniform_in(0.05, 0.2)
+    };
+    // Harder kernels are sensitive in more dimensions.
+    let base = 0.2 + 0.12 * (diff.level() as f64 - 1.0);
+    let mut sensitivity = [0.0f64; 6];
+    for s in sensitivity.iter_mut() {
+        *s = (base + rng.uniform_in(-0.12, 0.28)).clamp(0.05, 0.85);
+    }
+    // Category emphasis: GEMM/attention are tiling-heavy, element-wise is
+    // vector/layout-heavy, fused-ops fusion-heavy.
+    match cat {
+        Category::MatMul | Category::Attention | Category::LinearAttention => {
+            sensitivity[0] = (sensitivity[0] + 0.45).min(1.0);
+            sensitivity[3] = (sensitivity[3] + 0.2).min(1.0);
+        }
+        Category::ElementWise | Category::MemoryIndex | Category::EmbeddingRope => {
+            sensitivity[1] = (sensitivity[1] + 0.4).min(1.0);
+            sensitivity[5] = (sensitivity[5] + 0.3).min(1.0);
+        }
+        Category::FusedActivation | Category::Normalization | Category::Softmax => {
+            sensitivity[2] = (sensitivity[2] + 0.4).min(1.0);
+        }
+        _ => {}
+    }
+    Latent {
+        best_loop_order: rng.below(NUM_LOOP_ORDERS as u64) as u8,
+        best_layout: rng.below(NUM_LAYOUTS as u64) as u8,
+        max_fusion,
+        fusion_saving,
+        best_vector,
+        tile_bias: rng.below(3) as i8 - 1,
+        sensitivity,
+    }
+}
+
+fn gen_shapes(cat: Category, diff: Difficulty, rng: &mut Rng) -> Vec<ShapeSpec> {
+    let n_shapes = 10 + rng.below(5) as usize; // "10+ input shapes"
+    // Base problem scale: harder levels tend to be larger/fused problems.
+    let scale = 2.0f64.powf(diff.level() as f64 - 1.0);
+    let intensity = cat.base_intensity();
+    (0..n_shapes)
+        .map(|_| {
+            // Shape sizes span ~2 orders of magnitude so the
+            // runtime-weighted aggregation (Appendix H) is non-trivial.
+            let size = rng.uniform_in(0.5, 64.0) * scale * 1.0e6; // bytes
+            let bytes = size;
+            let flops = bytes * intensity * rng.uniform_in(0.7, 1.4);
+            let working_set = bytes * rng.uniform_in(0.1, 0.9);
+            ShapeSpec { flops, bytes, working_set }
+        })
+        .collect()
+}
+
+impl Suite {
+    /// The full 183-kernel suite (deterministic in `seed`).
+    pub fn full(seed: u64) -> Suite {
+        let root = Rng::new(seed);
+        // Interleave categories and difficulties deterministically so the
+        // joint distribution matches both marginals.
+        let mut cats: Vec<Category> = Vec::new();
+        for (ci, &n) in FULL_COUNTS.iter().enumerate() {
+            let n = if ALL_CATEGORIES[ci] == Category::ElementWise {
+                n - 1 // sin_computation excluded (paper §4.1)
+            } else {
+                n
+            };
+            cats.extend(std::iter::repeat(ALL_CATEGORIES[ci]).take(n));
+        }
+        let mut diffs: Vec<Difficulty> = Vec::new();
+        for (di, &n) in FULL_DIFFICULTY_COUNTS.iter().enumerate() {
+            diffs.extend(std::iter::repeat(ALL_DIFFICULTIES[di]).take(n));
+        }
+        assert_eq!(cats.len(), 183);
+        assert_eq!(diffs.len(), 183);
+        let mut shuffle_rng = root.split("assign", 0);
+        shuffle_rng.shuffle(&mut diffs);
+
+        let tasks = cats
+            .into_iter()
+            .zip(diffs)
+            .enumerate()
+            .map(|(id, (category, difficulty))| {
+                let mut trng = root.split("task", id as u64);
+                let per_cat_idx = id; // unique suffix
+                TaskSpec {
+                    id,
+                    name: format!(
+                        "{}_{:03}",
+                        category.name().to_ascii_lowercase().replace(['/', ' ', '-'], "_"),
+                        per_cat_idx
+                    ),
+                    category,
+                    difficulty,
+                    shapes: gen_shapes(category, difficulty, &mut trng),
+                    latent: gen_latent(category, difficulty, &mut trng),
+                    torch_comparable: category.torch_comparable()
+                        && difficulty < Difficulty::L5,
+                }
+            })
+            .collect();
+        Suite { tasks }
+    }
+
+    /// The 50-kernel detailed-analysis subset: stratified by category with
+    /// the exact Table 7 subset counts, sampled with the paper's seed.
+    pub fn subset50(&self) -> Suite {
+        let mut rng = Rng::new(42).split("subset", 0);
+        let mut tasks = Vec::with_capacity(50);
+        for (ci, &want) in SUBSET_COUNTS.iter().enumerate() {
+            let cat = ALL_CATEGORIES[ci];
+            let pool: Vec<&TaskSpec> = self
+                .tasks
+                .iter()
+                .filter(|t| t.category == cat)
+                .collect();
+            let picks = rng.sample_indices(pool.len(), want);
+            for p in picks {
+                tasks.push(pool[p].clone());
+            }
+        }
+        tasks.sort_by_key(|t| t.id);
+        Suite { tasks }
+    }
+
+    /// The 30-kernel PyTorch-comparable subset of the 50 (Appendix G).
+    pub fn torch_subset(&self) -> Suite {
+        let mut tasks: Vec<TaskSpec> = self
+            .tasks
+            .iter()
+            .filter(|t| t.torch_comparable)
+            .cloned()
+            .collect();
+        tasks.truncate(30);
+        Suite { tasks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Count per category (diagnostics / tests).
+    pub fn category_counts(&self) -> [usize; 13] {
+        let mut counts = [0usize; 13];
+        for t in &self.tasks {
+            counts[t.category.index()] += 1;
+        }
+        counts
+    }
+
+    /// Count per difficulty level.
+    pub fn difficulty_counts(&self) -> [usize; 5] {
+        let mut counts = [0usize; 5];
+        for t in &self.tasks {
+            counts[t.difficulty.level() - 1] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_suite_matches_table7() {
+        let suite = Suite::full(1);
+        assert_eq!(suite.len(), 183);
+        let counts = suite.category_counts();
+        // Element-wise is one short of Table 7's 16 (sin_computation).
+        let mut expected = FULL_COUNTS;
+        expected[Category::ElementWise.index()] -= 1;
+        assert_eq!(counts, expected);
+    }
+
+    #[test]
+    fn full_suite_difficulty_totals() {
+        let suite = Suite::full(1);
+        assert_eq!(suite.difficulty_counts(), FULL_DIFFICULTY_COUNTS);
+    }
+
+    #[test]
+    fn suite_is_deterministic() {
+        let a = Suite::full(1);
+        let b = Suite::full(1);
+        for (ta, tb) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(ta.name, tb.name);
+            assert_eq!(ta.shapes.len(), tb.shapes.len());
+            assert!((ta.shapes[0].flops - tb.shapes[0].flops).abs() < 1e-9);
+        }
+        let c = Suite::full(2);
+        assert!(a
+            .tasks
+            .iter()
+            .zip(&c.tasks)
+            .any(|(x, y)| (x.shapes[0].flops - y.shapes[0].flops).abs() > 1.0));
+    }
+
+    #[test]
+    fn subset50_matches_table7_subset() {
+        let suite = Suite::full(1);
+        let sub = suite.subset50();
+        assert_eq!(sub.len(), 50);
+        assert_eq!(sub.category_counts(), SUBSET_COUNTS);
+        // stratified sampling is deterministic
+        let sub2 = suite.subset50();
+        let ids: Vec<_> = sub.tasks.iter().map(|t| t.id).collect();
+        let ids2: Vec<_> = sub2.tasks.iter().map(|t| t.id).collect();
+        assert_eq!(ids, ids2);
+    }
+
+    #[test]
+    fn torch_subset_is_30_and_comparable() {
+        let sub = Suite::full(1).subset50().torch_subset();
+        assert!(sub.len() <= 30);
+        assert!(sub.len() >= 25, "len={}", sub.len());
+        assert!(sub.tasks.iter().all(|t| t.torch_comparable));
+    }
+
+    #[test]
+    fn shapes_have_ten_plus_entries_and_positive_work() {
+        let suite = Suite::full(1);
+        for t in &suite.tasks {
+            assert!(t.shapes.len() >= 10, "{}", t.name);
+            for s in &t.shapes {
+                assert!(s.flops > 0.0 && s.bytes > 0.0 && s.working_set > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn latents_are_legal() {
+        let suite = Suite::full(3);
+        for t in &suite.tasks {
+            let l = &t.latent;
+            assert!((l.best_loop_order as u32) < NUM_LOOP_ORDERS);
+            assert!((l.best_layout as u32) < NUM_LAYOUTS);
+            assert!(l.max_fusion <= t.category.max_fusion());
+            assert!((0.0..=0.6).contains(&l.fusion_saving));
+            assert!(l.sensitivity.iter().all(|&s| (0.0..=1.0).contains(&s)));
+        }
+    }
+
+    #[test]
+    fn gemm_is_compute_intense_elementwise_is_not() {
+        assert!(Category::MatMul.base_intensity() > 50.0);
+        assert!(Category::ElementWise.base_intensity() < 1.0);
+    }
+
+    #[test]
+    fn category_name_roundtrip_unique() {
+        let names: std::collections::HashSet<_> =
+            ALL_CATEGORIES.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), 13);
+    }
+}

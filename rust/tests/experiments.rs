@@ -1,0 +1,227 @@
+//! Experiment-level regression tests: the paper's qualitative claims,
+//! checked on reduced budgets so `cargo test` stays fast. The full-size
+//! regenerations live in `kernelband repro` and `cargo bench`.
+
+use kernelband::eval::{self, Method};
+use kernelband::gpu_model::Device;
+use kernelband::llm::LlmProfile;
+use kernelband::metrics::aggregate;
+use kernelband::policy::PolicyMode;
+use kernelband::workload::Suite;
+
+fn subset() -> Suite {
+    Suite::full(eval::EXPERIMENT_SEED).subset50()
+}
+
+fn geomean_std(m: Method, suite: &Suite, device: Device, llm: LlmProfile,
+               t: usize) -> f64 {
+    let traces = m.run(suite, device, llm, t, eval::EXPERIMENT_SEED);
+    aggregate(&eval::outcomes(&traces)).geomean_standard
+}
+
+fn correct(m: Method, suite: &Suite, device: Device, llm: LlmProfile,
+           t: usize) -> f64 {
+    let traces = m.run(suite, device, llm, t, eval::EXPERIMENT_SEED);
+    aggregate(&eval::outcomes(&traces)).correct_pct
+}
+
+const KB: Method = Method::KernelBand(PolicyMode::Full, 3);
+
+/// Table 1's headline: KernelBand dominates both baselines on every
+/// platform in geomean speedup and correctness.
+#[test]
+fn claim_kernelband_dominates_on_all_platforms() {
+    let suite = subset();
+    for device in kernelband::gpu_model::ALL_DEVICES {
+        let g_kb = geomean_std(KB, &suite, device, LlmProfile::DeepSeekV32, 20);
+        let g_geak =
+            geomean_std(Method::Geak, &suite, device, LlmProfile::DeepSeekV32, 20);
+        let g_bon =
+            geomean_std(Method::BoN, &suite, device, LlmProfile::DeepSeekV32, 20);
+        assert!(g_kb > g_geak && g_kb > g_bon,
+                "{}: kb {g_kb} geak {g_geak} bon {g_bon}", device.name());
+        let c_kb = correct(KB, &suite, device, LlmProfile::DeepSeekV32, 20);
+        let c_bon =
+            correct(Method::BoN, &suite, device, LlmProfile::DeepSeekV32, 20);
+        assert!(c_kb > c_bon + 15.0, "{}: {c_kb} vs {c_bon}", device.name());
+    }
+}
+
+/// §4.2: KernelBand improves over GEAK by a large margin (paper: >33%
+/// average; we require >15% on the reduced subset).
+#[test]
+fn claim_improvement_margin_over_geak() {
+    let suite = subset();
+    let mut ratio_sum = 0.0;
+    for device in kernelband::gpu_model::ALL_DEVICES {
+        let g_kb = geomean_std(KB, &suite, device, LlmProfile::DeepSeekV32, 20);
+        let g_geak =
+            geomean_std(Method::Geak, &suite, device, LlmProfile::DeepSeekV32, 20);
+        ratio_sum += g_kb / g_geak;
+    }
+    let avg = ratio_sum / 3.0;
+    assert!(avg > 1.15, "average KB/GEAK ratio = {avg}");
+}
+
+/// Table 2: the advantage holds for every LLM backend, and stronger
+/// models yield stronger absolute results for KernelBand.
+#[test]
+fn claim_llm_generalization() {
+    let suite = subset();
+    let mut g = std::collections::HashMap::new();
+    for llm in kernelband::llm::ALL_LLMS {
+        let kb = geomean_std(KB, &suite, Device::H20, llm, 15);
+        let bon = geomean_std(Method::BoN, &suite, Device::H20, llm, 15);
+        assert!(kb > bon, "{}: kb {kb} vs bon {bon}", llm.spec().name);
+        g.insert(llm.spec().name, kb);
+    }
+    // Claude (strongest capability) beats Gemini Flash (weakest)
+    assert!(g["Claude Opus 4.5"] > g["Gemini 3 Flash"]);
+}
+
+/// Table 4's central ablation: structured bandit selection beats both
+/// free-form generation and raw-profiling prompt injection; removing the
+/// strategy set collapses correctness.
+#[test]
+fn claim_ablation_ordering() {
+    let suite = subset();
+    let llm = LlmProfile::DeepSeekV32;
+    let full = geomean_std(KB, &suite, Device::H20, llm, 20);
+    let no_strat = geomean_std(
+        Method::KernelBand(PolicyMode::NoStrategySet, 3),
+        &suite, Device::H20, llm, 20);
+    let raw = geomean_std(
+        Method::KernelBand(PolicyMode::NoStrategyRawProfiling, 3),
+        &suite, Device::H20, llm, 20);
+    let bon = geomean_std(Method::BoN, &suite, Device::H20, llm, 20);
+    assert!(full > no_strat, "full {full} vs w/o-strategy {no_strat}");
+    assert!(full > raw, "full {full} vs raw-prof {raw}");
+    assert!(no_strat > bon, "w/o-strategy {no_strat} vs bon {bon}");
+    // raw profiling hurts correctness vs the full system (paper: 43.9 vs 87.8)
+    let c_full = correct(KB, &suite, Device::H20, llm, 20);
+    let c_raw = correct(
+        Method::KernelBand(PolicyMode::NoStrategyRawProfiling, 3),
+        &suite, Device::H20, llm, 20);
+    assert!(c_raw < c_full - 10.0, "correctness: raw {c_raw} vs full {c_full}");
+}
+
+/// Figure 2: baselines saturate while KernelBand keeps improving —
+/// KB's late-half curve gain exceeds GEAK's.
+#[test]
+fn claim_scaling_behaviour() {
+    let suite = subset();
+    let llm = LlmProfile::DeepSeekV32;
+    let kb = KB.run(&suite, Device::H20, llm, 30, eval::EXPERIMENT_SEED);
+    let geak =
+        Method::Geak.run(&suite, Device::H20, llm, 30, eval::EXPERIMENT_SEED);
+    let ck = eval::scaling_curve(&kb);
+    let cg = eval::scaling_curve(&geak);
+    // final value: KB above GEAK
+    assert!(ck[29] > cg[29], "kb {} vs geak {}", ck[29], cg[29]);
+    let late_gain_kb = ck[29] - ck[14];
+    let late_gain_geak = cg[29] - cg[14];
+    assert!(
+        late_gain_kb > late_gain_geak,
+        "late gains: kb {late_gain_kb} vs geak {late_gain_geak}"
+    );
+}
+
+/// Figure 4: at equal API budget KernelBand delivers more speedup.
+#[test]
+fn claim_cost_efficiency() {
+    let suite = subset();
+    let llm = LlmProfile::DeepSeekV32;
+    let kb = KB.run(&suite, Device::H20, llm, 30, eval::EXPERIMENT_SEED);
+    let bon =
+        Method::BoN.run(&suite, Device::H20, llm, 30, eval::EXPERIMENT_SEED);
+    for budget in [0.15, 0.3] {
+        let g = |traces: &[kernelband::policy::Trace]| {
+            let ls: f64 = traces
+                .iter()
+                .map(|t| eval::speedup_within_budget(t, budget).ln())
+                .sum();
+            (ls / traces.len() as f64).exp()
+        };
+        assert!(
+            g(&kb) > g(&bon),
+            "budget ${budget}: kb {} vs bon {}",
+            g(&kb),
+            g(&bon)
+        );
+    }
+}
+
+/// Appendix I / Table 10: the strategy mix adapts to hardware — the
+/// selection-frequency vector differs measurably between H20 and 4090.
+#[test]
+fn claim_hardware_adaptation() {
+    let suite = subset();
+    let llm = LlmProfile::DeepSeekV32;
+    let h20 = KB.run(&suite, Device::H20, llm, 20, eval::EXPERIMENT_SEED);
+    let rtx = KB.run(&suite, Device::Rtx4090, llm, 20, eval::EXPERIMENT_SEED);
+    let f_h20: Vec<f64> =
+        eval::strategy_stats(&h20).iter().map(|r| r.1).collect();
+    let f_rtx: Vec<f64> =
+        eval::strategy_stats(&rtx).iter().map(|r| r.1).collect();
+    let l1: f64 = f_h20
+        .iter()
+        .zip(&f_rtx)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    // the shift is muted at T=20 (UCB is still mostly exploring, as in
+    // the paper's ~3-6 point per-strategy deltas) but must be present
+    assert!(l1 > 1.5, "strategy mixes identical across devices: {l1}");
+}
+
+/// Table 3: tiling is high-risk (lowest success rate among frequently
+/// used strategies) while fusion/vectorization are reliable.
+#[test]
+fn claim_strategy_risk_profiles() {
+    let suite = subset();
+    let traces = KB.run(
+        &suite,
+        Device::H20,
+        LlmProfile::DeepSeekV32,
+        20,
+        eval::EXPERIMENT_SEED,
+    );
+    let stats = eval::strategy_stats(&traces);
+    let succ = |name: &str| {
+        stats.iter().find(|r| r.0 == name).map(|r| r.2).unwrap()
+    };
+    assert!(succ("Tiling") < succ("Fusion"), "tiling should be riskier");
+    assert!(succ("Tiling") < succ("Vectorization"));
+}
+
+/// Table 9: KernelBand-optimized kernels beat all three PyTorch modes.
+#[test]
+fn claim_beats_pytorch_modes() {
+    let text = eval::table9(15);
+    for line in text.lines().filter(|l| l.starts_with("vs.")) {
+        let x: f64 = line
+            .split_whitespace()
+            .last()
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!(x > 1.0, "lost to a torch mode: {line}");
+    }
+}
+
+/// All render entrypoints produce non-empty tables (smoke for `repro all`
+/// at reduced budgets).
+#[test]
+fn all_experiments_render_at_reduced_budget() {
+    for text in [
+        eval::table2(6),
+        eval::table3(6),
+        eval::table4(6),
+        eval::table9(6),
+        eval::table10(6),
+        eval::fig2(8),
+        eval::fig4(8),
+    ] {
+        assert!(text.lines().count() > 4, "{text}");
+    }
+}

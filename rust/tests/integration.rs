@@ -1,0 +1,249 @@
+//! Cross-module integration tests: suite → engine → LLM → policy →
+//! metrics, plus baselines and the service, wired the way the eval
+//! harnesses wire them.
+
+use kernelband::baselines::{BestOfN, Geak, TorchMode};
+use kernelband::engine::{EvalEngine, SimEngine};
+use kernelband::eval::{self, Method};
+use kernelband::gpu_model::{Device, ALL_DEVICES};
+use kernelband::llm::{LlmProfile, SurrogateLlm, ALL_LLMS};
+use kernelband::metrics::aggregate;
+use kernelband::policy::{KernelBand, PolicyConfig, PolicyMode};
+use kernelband::rng::Rng;
+use kernelband::service::OptimizationService;
+use kernelband::workload::Suite;
+
+fn small_suite() -> Suite {
+    let full = Suite::full(eval::EXPERIMENT_SEED);
+    Suite { tasks: full.tasks.into_iter().step_by(13).collect() }
+}
+
+#[test]
+fn kernelband_beats_baselines_on_fallback_geomean() {
+    let suite = small_suite();
+    let seed = eval::EXPERIMENT_SEED;
+    let kb = Method::KernelBand(PolicyMode::Full, 3)
+        .run(&suite, Device::H20, LlmProfile::DeepSeekV32, 20, seed);
+    let geak =
+        Method::Geak.run(&suite, Device::H20, LlmProfile::DeepSeekV32, 20, seed);
+    let bon =
+        Method::BoN.run(&suite, Device::H20, LlmProfile::DeepSeekV32, 20, seed);
+    let g = |traces: &[kernelband::policy::Trace]| {
+        aggregate(&eval::outcomes(traces)).geomean_fallback
+    };
+    let (g_kb, g_geak, g_bon) = (g(&kb), g(&geak), g(&bon));
+    assert!(g_kb > g_geak, "KB {g_kb} vs GEAK {g_geak}");
+    assert!(g_geak >= g_bon * 0.95, "GEAK {g_geak} vs BoN {g_bon}");
+}
+
+#[test]
+fn kernelband_correctness_dominates_bon() {
+    let suite = small_suite();
+    let seed = eval::EXPERIMENT_SEED;
+    let kb = Method::KernelBand(PolicyMode::Full, 3)
+        .run(&suite, Device::A100, LlmProfile::DeepSeekV32, 20, seed);
+    let bon =
+        Method::BoN.run(&suite, Device::A100, LlmProfile::DeepSeekV32, 20, seed);
+    let c_kb = aggregate(&eval::outcomes(&kb)).correct_pct;
+    let c_bon = aggregate(&eval::outcomes(&bon)).correct_pct;
+    assert!(c_kb > c_bon, "KB {c_kb}% vs BoN {c_bon}%");
+}
+
+#[test]
+fn results_are_reproducible_across_runs_and_parallelism() {
+    let suite = small_suite();
+    let m = Method::KernelBand(PolicyMode::Full, 3);
+    let a = m.run(&suite, Device::H20, LlmProfile::Gpt5, 15, 99);
+    let b = m.run(&suite, Device::H20, LlmProfile::Gpt5, 15, 99);
+    for (ta, tb) in a.iter().zip(&b) {
+        assert_eq!(ta.best_id, tb.best_id);
+        assert_eq!(ta.candidates.len(), tb.candidates.len());
+        assert_eq!(ta.best_speedup(), tb.best_speedup());
+        assert_eq!(ta.total_cost_usd(), tb.total_cost_usd());
+    }
+}
+
+#[test]
+fn every_llm_backend_runs_end_to_end() {
+    let suite = Suite {
+        tasks: small_suite().tasks.into_iter().take(4).collect(),
+    };
+    for llm in ALL_LLMS {
+        let traces = Method::KernelBand(PolicyMode::Full, 3)
+            .run(&suite, Device::H20, llm, 10, 7);
+        assert_eq!(traces.len(), 4);
+        for tr in &traces {
+            assert_eq!(tr.records.len(), 10);
+        }
+    }
+}
+
+#[test]
+fn every_device_runs_end_to_end() {
+    let suite = Suite {
+        tasks: small_suite().tasks.into_iter().take(4).collect(),
+    };
+    for device in ALL_DEVICES {
+        let traces = Method::KernelBand(PolicyMode::Full, 3)
+            .run(&suite, device, LlmProfile::DeepSeekV32, 10, 7);
+        assert!(traces.iter().all(|t| t.naive_latency_s > 0.0));
+    }
+}
+
+#[test]
+fn all_ablation_modes_complete() {
+    let suite = Suite {
+        tasks: small_suite().tasks.into_iter().take(3).collect(),
+    };
+    let engine = SimEngine::new(Device::H20);
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    for mode in [
+        PolicyMode::Full,
+        PolicyMode::NoClustering,
+        PolicyMode::NoProfiling,
+        PolicyMode::LlmStrategySelection,
+        PolicyMode::NoStrategyRawProfiling,
+        PolicyMode::NoStrategySet,
+    ] {
+        for task in &suite.tasks {
+            let mut cfg = PolicyConfig::with_mode(mode);
+            cfg.iterations = 12;
+            let tr = KernelBand::new(cfg).optimize(
+                task,
+                &engine,
+                &llm,
+                &Rng::new(5),
+            );
+            assert_eq!(tr.records.len(), 12, "{mode:?}");
+            let _ = tr.outcome();
+        }
+    }
+}
+
+#[test]
+fn scaling_curves_are_monotone() {
+    let suite = Suite {
+        tasks: small_suite().tasks.into_iter().take(6).collect(),
+    };
+    for m in [
+        Method::KernelBand(PolicyMode::Full, 3),
+        Method::Geak,
+        Method::BoN,
+    ] {
+        let traces =
+            m.run(&suite, Device::H20, LlmProfile::DeepSeekV32, 25, 11);
+        let curve = eval::scaling_curve(&traces);
+        assert_eq!(curve.len(), 25);
+        for w in curve.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "{m:?} curve regressed");
+        }
+        assert!(curve[0] >= 1.0);
+    }
+}
+
+#[test]
+fn budgeted_speedup_is_monotone_in_budget() {
+    let suite = Suite {
+        tasks: small_suite().tasks.into_iter().take(5).collect(),
+    };
+    let traces = Method::KernelBand(PolicyMode::Full, 3).run(
+        &suite,
+        Device::H20,
+        LlmProfile::DeepSeekV32,
+        30,
+        13,
+    );
+    for tr in &traces {
+        let mut prev = 0.0;
+        for b in [0.02, 0.05, 0.1, 0.2, 0.5, 1.0] {
+            let s = eval::speedup_within_budget(tr, b);
+            assert!(s >= prev);
+            prev = s;
+        }
+    }
+}
+
+#[test]
+fn torch_modes_and_kernelband_compose_for_table9() {
+    let suite = Suite::full(eval::EXPERIMENT_SEED).subset50().torch_subset();
+    let engine = SimEngine::new(Device::H20);
+    let root = Rng::new(1);
+    // the torch-comparable subset is non-trivial and all latencies finite
+    assert!(suite.len() >= 20);
+    for task in suite.tasks.iter().take(8) {
+        for mode in [TorchMode::Eager, TorchMode::Inductor, TorchMode::MaxAutotune] {
+            let t = mode.latency(task, &engine, &root);
+            assert!(t.is_finite() && t > 0.0);
+        }
+    }
+}
+
+#[test]
+fn geak_reflexion_retry_costs_more_than_bon_per_failure() {
+    // GEAK's self-repair retries show up as extra spend on hard tasks
+    let suite = Suite::full(eval::EXPERIMENT_SEED);
+    let hard: Vec<_> = suite
+        .tasks
+        .iter()
+        .filter(|t| t.difficulty.level() >= 4)
+        .take(6)
+        .cloned()
+        .collect();
+    let hard_suite = Suite { tasks: hard };
+    let engine = SimEngine::new(Device::H20);
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    let mut geak_cost = 0.0;
+    let mut bon_cost = 0.0;
+    for task in &hard_suite.tasks {
+        let root = Rng::new(17);
+        geak_cost += Geak::new(15)
+            .optimize(task, &engine, &llm, &root)
+            .total_cost_usd();
+        bon_cost += BestOfN::new(15)
+            .optimize(task, &engine, &llm, &root)
+            .total_cost_usd();
+    }
+    assert!(geak_cost > bon_cost, "geak {geak_cost} vs bon {bon_cost}");
+}
+
+#[test]
+fn service_report_is_consistent() {
+    let report = OptimizationService::default().run(4, 2);
+    assert_eq!(report.jobs.len(), 4);
+    assert_eq!(report.gateway_requests, 8);
+    assert!(report.wall_model_s > 0.0);
+    assert!(report.batching_speedup() > 1.0);
+    // per-job wall time can't exceed the whole run's wall time
+    for j in &report.jobs {
+        assert!(j.wall_model_s <= report.wall_model_s + 1.0);
+    }
+}
+
+#[test]
+fn fig3_and_regret_render() {
+    let fig3 = eval::fig3();
+    assert!(fig3.contains("LLM inference"));
+    assert!(fig3.contains("batched"));
+    let regret = eval::regret(400);
+    assert!(regret.contains("avg regret"));
+    // regret decreases between first and last checkpoint
+    let rows: Vec<&str> = regret.lines().skip(3).collect();
+    let first: f64 = rows.first().unwrap().split_whitespace().nth(1).unwrap()
+        .parse().unwrap();
+    let last: f64 = rows.last().unwrap().split_whitespace().nth(1).unwrap()
+        .parse().unwrap();
+    assert!(last < first, "regret did not decay: {first} -> {last}");
+}
+
+#[test]
+fn engine_trait_object_usable() {
+    // EvalEngine is the substitution point for real backends
+    let engine: &dyn EvalEngine = &SimEngine::noiseless(Device::A100);
+    let suite = small_suite();
+    let m = engine.measure(
+        &suite.tasks[0],
+        &suite.tasks[0].naive_config(),
+        &mut Rng::new(0),
+    );
+    assert!(m.total_latency_s > 0.0);
+}

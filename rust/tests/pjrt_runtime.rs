@@ -1,0 +1,191 @@
+//! PJRT runtime integration: load real AOT artifacts, execute through
+//! the XLA CPU client, verify numerics against the pure-jnp reference
+//! artifacts, and check Rust↔Pallas parity for the coordinator kernels
+//! (K-means, masked UCB).
+//!
+//! Requires `make artifacts`; each test skips gracefully when the
+//! directory is missing so `cargo test` stays runnable pre-build.
+
+use kernelband::bandit::MaskedUcb;
+use kernelband::cluster::{ClusterBackend, RustKmeans};
+use kernelband::engine::pjrt::PjrtBench;
+use kernelband::features::Phi;
+use kernelband::rng::Rng;
+use kernelband::runtime::{pjrt_ucb_scores, PjrtKmeans, Runtime};
+use kernelband::strategy::NUM_STRATEGIES;
+use kernelband::verify::allclose;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime loads"))
+}
+
+#[test]
+fn manifest_covers_all_op_families() {
+    let Some(rt) = runtime() else { return };
+    let ops = rt.manifest().variant_ops();
+    for op in ["matmul", "fused", "softmax", "layernorm", "attention"] {
+        assert!(ops.iter().any(|o| o == op), "missing op {op}");
+        assert!(!rt.manifest().variants(op).is_empty());
+        assert!(rt.manifest().reference(op).is_some());
+    }
+    assert!(rt.manifest().artifacts.len() >= 40);
+}
+
+#[test]
+fn matmul_variant_matches_reference_artifact() {
+    let Some(rt) = runtime() else { return };
+    let mut bench = PjrtBench::new(&rt);
+    bench.reps = 2;
+    for meta in rt.manifest().variants("matmul") {
+        let r = bench.run_variant(meta).expect("variant runs");
+        assert!(r.verdict.passed(), "{} failed allclose", meta.name);
+        assert!(r.latency_s.is_finite() && r.latency_s > 0.0);
+    }
+}
+
+#[test]
+fn fused_and_unfused_epilogues_agree_with_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut bench = PjrtBench::new(&rt);
+    bench.reps = 2;
+    let results = bench.sweep("fused").expect("sweep");
+    assert!(results.len() >= 6);
+    for r in &results {
+        assert!(r.verdict.passed(), "{} failed", r.name);
+    }
+    // fused variant beats (or at worst matches) its unfused twin at
+    // equal tiles — generous margin because cargo test runs test
+    // binaries concurrently and CPU timing is noisy; the clean ordering
+    // is recorded from a quiet machine in EXPERIMENTS.md §End-to-end
+    let lat = |name: &str| {
+        results.iter().find(|r| r.name == name).unwrap().latency_s
+    };
+    assert!(
+        lat("fused_bias_relu_t128x128x64")
+            < lat("unfused_bias_relu_t128x128x64") * 1.5
+    );
+}
+
+#[test]
+fn softmax_layernorm_attention_verify() {
+    let Some(rt) = runtime() else { return };
+    let mut bench = PjrtBench::new(&rt);
+    bench.reps = 2;
+    for op in ["softmax", "layernorm", "attention"] {
+        for r in bench.sweep(op).expect("sweep") {
+            assert!(r.verdict.passed(), "{} failed allclose", r.name);
+        }
+    }
+}
+
+#[test]
+fn pjrt_kmeans_matches_rust_kmeans() {
+    let Some(rt) = runtime() else { return };
+    // two well-separated blobs in phi-space
+    let mut rng = Rng::new(42);
+    let mut points: Vec<Phi> = Vec::new();
+    for i in 0..24 {
+        let base = if i < 12 { 0.15 } else { 0.8 };
+        points.push([
+            base + 0.01 * rng.normal(),
+            base + 0.01 * rng.normal(),
+            base,
+            base,
+            base,
+        ]);
+    }
+    let rust = RustKmeans::default().cluster(&points, 2, &mut Rng::new(7));
+    let pjrt = PjrtKmeans { runtime: &rt }.cluster(&points, 2, &mut Rng::new(7));
+    // identical seeding + identical Lloyd semantics → identical partition
+    assert_eq!(rust.assign, pjrt.assign);
+    for (rc, pc) in rust.centroids.iter().zip(&pjrt.centroids) {
+        for j in 0..5 {
+            assert!(
+                (rc[j] - pc[j]).abs() < 1e-4,
+                "centroid mismatch: {rc:?} vs {pc:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_ucb_matches_rust_ucb() {
+    let Some(rt) = runtime() else { return };
+    let k = 3usize;
+    let mut rng = Rng::new(9);
+    let mu: Vec<f64> = (0..k * NUM_STRATEGIES).map(|_| rng.uniform()).collect();
+    let n: Vec<f64> =
+        (0..k * NUM_STRATEGIES).map(|_| 1.0 + rng.below(30) as f64).collect();
+    let mask: Vec<bool> =
+        (0..k * NUM_STRATEGIES).map(|_| rng.chance(0.6)).collect();
+    let t = 17usize;
+    let got = pjrt_ucb_scores(&rt, &mu, &n, t, &mask, k).expect("ucb artifact");
+    let ucb = MaskedUcb::default();
+    for i in 0..k * NUM_STRATEGIES {
+        if mask[i] {
+            let want = ucb.index(mu[i], n[i], t as f64);
+            assert!(
+                (got[i] - want).abs() < 1e-4 * want.abs().max(1.0),
+                "arm {i}: {} vs {}",
+                got[i],
+                want
+            );
+        } else {
+            assert!(got[i] < -1e20, "masked arm {i} not -inf: {}", got[i]);
+        }
+    }
+}
+
+#[test]
+fn executable_cache_makes_second_call_cheap() {
+    let Some(rt) = runtime() else { return };
+    let inputs = rt.example_inputs("softmax_b32", 1).unwrap();
+    let t0 = std::time::Instant::now();
+    let _ = rt.execute("softmax_b32", &inputs).unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _ = rt.execute("softmax_b32", &inputs).unwrap();
+    let warm = t1.elapsed();
+    assert!(warm < cold, "cache ineffective: warm {warm:?} cold {cold:?}");
+}
+
+#[test]
+fn execute_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    // wrong arity
+    assert!(rt.execute("softmax_b32", &[]).is_err());
+    // wrong element count
+    assert!(rt.execute("softmax_b32", &[vec![0.0f32; 7]]).is_err());
+    // unknown artifact
+    assert!(rt.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn bandit_search_improves_or_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut bench = PjrtBench::new(&rt);
+    bench.reps = 2;
+    let mut rng = Rng::new(3);
+    let out = bench.bandit_search("matmul", 5, &mut rng).expect("search");
+    assert!(out.evaluations() <= 5);
+    assert!(out.reference_latency_s > 0.0);
+    if let Some(best) = &out.best {
+        assert!(best.verdict.passed());
+        assert!(best.latency_s.is_finite());
+    }
+}
+
+#[test]
+fn allclose_used_by_engine_is_strict() {
+    // meta-test on the numeric gate the PJRT engine relies on
+    let a: Vec<f32> = (0..100).map(|i| i as f32).collect();
+    let mut b = a.clone();
+    assert!(allclose(&a, &b, 1e-4, 1e-4));
+    b[50] += 1.0;
+    assert!(!allclose(&a, &b, 1e-4, 1e-4));
+}

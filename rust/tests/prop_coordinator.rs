@@ -1,0 +1,403 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! proptest is not available in this offline environment, so these are
+//! hand-rolled property sweeps: each property is checked over hundreds
+//! of randomized cases drawn from the crate's own splittable RNG, with
+//! the failing seed printed on assertion failure (shrinking is replaced
+//! by deterministic reproducibility — re-run with the printed seed).
+
+use kernelband::bandit::{softmax_kernel_pick, ArmStats, MaskedUcb, RewardRecord};
+use kernelband::cluster::{lloyd_step, ClusterBackend, RustKmeans};
+use kernelband::engine::SimEngine;
+use kernelband::features::{phi, phi_distance, Phi, PHI_DIM};
+use kernelband::gpu_model::{Device, GpuSim, ALL_DEVICES};
+use kernelband::kernel::{Counters, KernelConfig, Measurement};
+use kernelband::llm::{LlmProfile, SurrogateLlm};
+use kernelband::policy::{KernelBand, PolicyConfig, PolicyMode};
+use kernelband::rng::Rng;
+use kernelband::strategy::{Strategy, ALL_STRATEGIES, NUM_STRATEGIES};
+use kernelband::workload::Suite;
+
+const CASES: u64 = 200;
+
+fn arbitrary_config(rng: &mut Rng) -> KernelConfig {
+    KernelConfig {
+        tile_m: rng.below(6) as u8,
+        tile_n: rng.below(6) as u8,
+        tile_k: rng.below(6) as u8,
+        vector: rng.below(4) as u8,
+        fusion: rng.below(4) as u8,
+        pipeline: rng.below(4) as u8,
+        loop_order: rng.below(6) as u8,
+        layout: rng.below(4) as u8,
+    }
+}
+
+fn arbitrary_phi(rng: &mut Rng) -> Phi {
+    let mut p = [0.0; PHI_DIM];
+    for v in p.iter_mut() {
+        *v = rng.uniform();
+    }
+    p
+}
+
+// --- bandit invariants ------------------------------------------------
+
+#[test]
+fn prop_masked_ucb_never_selects_masked_arm() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("ucb", 0);
+        let k = 1 + rng.below(6) as usize;
+        let mut stats = ArmStats::new(k);
+        // random update history
+        for _ in 0..rng.below(50) {
+            let c = rng.below(k as u64) as usize;
+            let s = Strategy::from_index(rng.below(6) as usize);
+            stats.update(c, s, rng.uniform());
+        }
+        let mask: Vec<bool> =
+            (0..k * NUM_STRATEGIES).map(|_| rng.chance(0.5)).collect();
+        let t = 1 + rng.below(1000) as usize;
+        match MaskedUcb::default().select(&stats, t, &mask) {
+            Some((c, s)) => {
+                assert!(
+                    mask[c * NUM_STRATEGIES + s.index()],
+                    "case {case}: selected masked arm"
+                );
+            }
+            None => {
+                assert!(mask.iter().all(|&m| !m), "case {case}: spurious None");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ucb_selects_max_index_among_valid() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("ucbmax", 0);
+        let k = 1 + rng.below(4) as usize;
+        let mut stats = ArmStats::new(k);
+        for _ in 0..rng.below(80) {
+            let c = rng.below(k as u64) as usize;
+            let s = Strategy::from_index(rng.below(6) as usize);
+            stats.update(c, s, rng.uniform());
+        }
+        let mask = vec![true; k * NUM_STRATEGIES];
+        let t = 2 + rng.below(500) as usize;
+        let ucb = MaskedUcb::default();
+        let (c, s) = ucb.select(&stats, t, &mask).unwrap();
+        let chosen = ucb.index(
+            stats.mean(c, s),
+            stats.visits(c, s),
+            t as f64,
+        );
+        for ci in 0..k {
+            for &si in &ALL_STRATEGIES {
+                let idx =
+                    ucb.index(stats.mean(ci, si), stats.visits(ci, si), t as f64);
+                assert!(idx <= chosen + 1e-12, "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_arm_update_keeps_mean_in_reward_hull() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("hull", 0);
+        let mut stats = ArmStats::new(1);
+        let s = Strategy::from_index(rng.below(6) as usize);
+        let mut lo = 0.5f64; // prior mean
+        let mut hi = 0.5f64;
+        for _ in 0..rng.below(60) {
+            let r = rng.uniform();
+            lo = lo.min(r);
+            hi = hi.max(r);
+            stats.update(0, s, r);
+            let m = stats.mean(0, s);
+            assert!(m >= lo - 1e-12 && m <= hi + 1e-12, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_reseed_visit_counts_conserve_history() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("reseed", 0);
+        let k = 1 + rng.below(5) as usize;
+        let n_kernels = 1 + rng.below(20) as usize;
+        let assign: Vec<usize> =
+            (0..n_kernels).map(|_| rng.below(k as u64) as usize).collect();
+        let history: Vec<RewardRecord> = (0..rng.below(60))
+            .map(|_| RewardRecord {
+                kernel: rng.below(n_kernels as u64) as usize,
+                strategy: Strategy::from_index(rng.below(6) as usize),
+                reward: rng.uniform(),
+            })
+            .collect();
+        let stats = ArmStats::reseed(k, &history, &assign);
+        // total extra visits (beyond priors) equals history length
+        let total: f64 = stats.n.iter().sum();
+        let priors = (k * NUM_STRATEGIES) as f64;
+        assert!(
+            (total - priors - history.len() as f64).abs() < 1e-9,
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_softmax_pick_in_bounds() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("smx", 0);
+        let n = 1 + rng.below(30) as usize;
+        let headrooms: Vec<f64> =
+            (0..n).map(|_| rng.uniform_in(-80.0, 80.0)).collect();
+        let pick = softmax_kernel_pick(&headrooms, &mut rng);
+        assert!(pick < n, "case {case}");
+    }
+}
+
+// --- clustering invariants --------------------------------------------
+
+#[test]
+fn prop_kmeans_assignment_is_nearest_centroid() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("km", 0);
+        let n = 2 + rng.below(40) as usize;
+        let k = 1 + rng.below(5) as usize;
+        let points: Vec<Phi> = (0..n).map(|_| arbitrary_phi(&mut rng)).collect();
+        let c = RustKmeans::default().cluster(&points, k, &mut rng);
+        for (pi, p) in points.iter().enumerate() {
+            let assigned_d = phi_distance(p, &c.centroids[c.assign[pi]]);
+            for cent in &c.centroids {
+                assert!(
+                    assigned_d <= phi_distance(p, cent) + 1e-9,
+                    "case {case}: point {pi} not at nearest centroid"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lloyd_never_increases_inertia() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("lloyd", 0);
+        let n = 3 + rng.below(30) as usize;
+        let k = 1 + rng.below(4) as usize;
+        let points: Vec<Phi> = (0..n).map(|_| arbitrary_phi(&mut rng)).collect();
+        let mut centroids: Vec<Phi> =
+            (0..k).map(|_| arbitrary_phi(&mut rng)).collect();
+        let inertia = |cents: &[Phi]| -> f64 {
+            points
+                .iter()
+                .map(|p| {
+                    cents
+                        .iter()
+                        .map(|c| {
+                            let d = phi_distance(p, c);
+                            d * d
+                        })
+                        .fold(f64::INFINITY, f64::min)
+                })
+                .sum()
+        };
+        let mut prev = inertia(&centroids);
+        for _ in 0..5 {
+            lloyd_step(&points, &mut centroids);
+            let cur = inertia(&centroids);
+            assert!(cur <= prev + 1e-9, "case {case}: inertia rose");
+            prev = cur;
+        }
+    }
+}
+
+// --- feature invariants -------------------------------------------------
+
+#[test]
+fn prop_phi_always_in_unit_box() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("phi", 0);
+        let m = Measurement {
+            total_latency_s: 10f64.powf(rng.uniform_in(-9.0, 3.0)),
+            per_shape_s: vec![],
+            counters: Counters {
+                regs_per_thread: rng.uniform_in(0.0, 500.0),
+                smem_per_block: rng.uniform_in(0.0, 1e6),
+                block_dim: rng.uniform_in(0.0, 4096.0),
+                occupancy: rng.uniform_in(-0.5, 1.5),
+                sm_pct: rng.uniform_in(0.0, 100.0),
+                dram_pct: rng.uniform_in(0.0, 100.0),
+                l2_pct: rng.uniform_in(0.0, 100.0),
+            },
+        };
+        let reference = 10f64.powf(rng.uniform_in(-9.0, 3.0));
+        let p = phi(&m, reference);
+        for (i, v) in p.iter().enumerate() {
+            assert!((0.0..=1.0).contains(v), "case {case} dim {i}: {v}");
+        }
+    }
+}
+
+// --- simulator invariants -----------------------------------------------
+
+#[test]
+fn prop_simulator_latency_positive_and_counters_bounded() {
+    let suite = Suite::full(3);
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("sim", 0);
+        let task = &suite.tasks[rng.below(suite.len() as u64) as usize];
+        let device = ALL_DEVICES[rng.below(3) as usize];
+        let cfg = arbitrary_config(&mut rng).clamped();
+        let sim = GpuSim::new(device);
+        let m = sim.evaluate(task, &cfg, &mut rng);
+        assert!(m.total_latency_s.is_finite() && m.total_latency_s > 0.0);
+        assert!((0.0..=100.0).contains(&m.counters.sm_pct), "case {case}");
+        assert!((0.0..=100.0).contains(&m.counters.dram_pct), "case {case}");
+        assert!((0.0..=100.0).contains(&m.counters.l2_pct), "case {case}");
+        assert!((0.0..=1.0).contains(&m.counters.occupancy), "case {case}");
+        assert!(
+            (m.per_shape_s.iter().sum::<f64>() - m.total_latency_s).abs()
+                < 1e-9 * m.total_latency_s.max(1.0),
+            "case {case}: per-shape sum mismatch"
+        );
+    }
+}
+
+#[test]
+fn prop_oracle_config_is_near_optimal_along_each_dim() {
+    // Perturbing any single dimension of the oracle config by one step
+    // never improves noiseless latency by more than a few percent.
+    // (The oracle is heuristic: occupancy couples dimensions, so tiny
+    // cross-dimension wins are possible — but nothing material.)
+    let suite = Suite::full(4);
+    for case in 0..40 {
+        let mut rng = Rng::new(case).split("oracle", 0);
+        let task = &suite.tasks[(case as usize * 7) % suite.len()];
+        let device = ALL_DEVICES[case as usize % 3];
+        let sim = GpuSim::noiseless(device);
+        let oracle = sim.oracle_config(task);
+        let base = sim.evaluate(task, &oracle, &mut rng).total_latency_s;
+        let neighbors = {
+            let mut v = Vec::new();
+            for delta in [-1i32, 1] {
+                for dim in 0..8 {
+                    let mut c = oracle;
+                    let field = match dim {
+                        0 => &mut c.tile_m,
+                        1 => &mut c.tile_n,
+                        2 => &mut c.tile_k,
+                        3 => &mut c.vector,
+                        4 => &mut c.fusion,
+                        5 => &mut c.pipeline,
+                        6 => &mut c.loop_order,
+                        _ => &mut c.layout,
+                    };
+                    let nv = *field as i32 + delta;
+                    if nv < 0 {
+                        continue;
+                    }
+                    *field = nv as u8;
+                    v.push(c.clamped());
+                }
+            }
+            v
+        };
+        for n in neighbors {
+            if n == oracle {
+                continue;
+            }
+            let t = sim.evaluate(task, &n, &mut rng).total_latency_s;
+            assert!(
+                t >= base * 0.85,
+                "case {case}: neighbor beat oracle by >15% on {} ({t} < {base})",
+                task.name
+            );
+        }
+    }
+}
+
+// --- policy invariants ----------------------------------------------------
+
+#[test]
+fn prop_policy_trace_wellformed_across_seeds_and_modes() {
+    let suite = Suite::full(5);
+    let engine = SimEngine::new(Device::H20);
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    let modes = [
+        PolicyMode::Full,
+        PolicyMode::NoClustering,
+        PolicyMode::NoProfiling,
+        PolicyMode::LlmStrategySelection,
+        PolicyMode::NoStrategySet,
+    ];
+    for case in 0..60 {
+        let mut rng = Rng::new(case).split("pol", 0);
+        let task = &suite.tasks[rng.below(suite.len() as u64) as usize];
+        let mode = modes[case as usize % modes.len()];
+        let mut cfg = PolicyConfig::with_mode(mode);
+        cfg.iterations = 5 + rng.below(20) as usize;
+        let tr = KernelBand::new(cfg.clone()).optimize(
+            task,
+            &engine,
+            &llm,
+            &Rng::new(case),
+        );
+        // trace shape
+        assert_eq!(tr.records.len(), cfg.iterations, "case {case}");
+        // candidate ids are dense and parents precede children
+        for (i, c) in tr.candidates.iter().enumerate() {
+            assert_eq!(c.id, i);
+            if let kernelband::kernel::Origin::Llm { parent, .. } = c.origin {
+                assert!(parent < i, "case {case}: parent after child");
+            }
+        }
+        // best is the argmin over candidates
+        let min_t = tr
+            .candidates
+            .iter()
+            .map(|c| c.measurement.total_latency_s)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(
+            tr.candidates[tr.best_id].measurement.total_latency_s, min_t,
+            "case {case}"
+        );
+        // rewards clipped; failures have zero reward and no candidate
+        for r in &tr.records {
+            assert!((0.0..=1.0).contains(&r.reward), "case {case}");
+            if !r.verdict.passed() {
+                assert_eq!(r.reward, 0.0);
+                assert!(r.accepted.is_none());
+            }
+            assert!(r.parent < tr.candidates.len());
+            assert!(r.cost_usd >= 0.0 && r.llm_serial_s >= 0.0);
+        }
+        // cost is the sum of per-iteration costs
+        let sum: f64 = tr.records.iter().map(|r| r.cost_usd).sum();
+        assert!((sum - tr.total_cost_usd()).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_config_clamp_is_idempotent_and_legalizes() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("clamp", 0);
+        let raw = KernelConfig {
+            tile_m: rng.below(256) as u8,
+            tile_n: rng.below(256) as u8,
+            tile_k: rng.below(256) as u8,
+            vector: rng.below(256) as u8,
+            fusion: rng.below(256) as u8,
+            pipeline: rng.below(256) as u8,
+            loop_order: rng.below(256) as u8,
+            layout: rng.below(256) as u8,
+        };
+        let c = raw.clamped();
+        assert_eq!(c, c.clamped(), "case {case}");
+        assert!((c.tile_m as usize) < 6 && (c.vector as usize) < 4);
+        assert!(c.fusion <= 3 && c.pipeline <= 3);
+        assert!(c.loop_order <= 5 && c.layout <= 3);
+    }
+}
