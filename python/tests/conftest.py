@@ -3,3 +3,25 @@ import sys
 
 # Make `compile.*` importable when pytest is run from python/ or repo root.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _importable(module_name):
+    try:
+        __import__(module_name)
+        return True
+    except Exception:
+        return False
+
+
+# Skip-if-missing guards: the Rust tier-1 pipeline must stay green on
+# machines without the JAX/Pallas toolchain, so test modules are only
+# collected when their dependencies import cleanly. When JAX is
+# available the AOT layer is exercised for real.
+collect_ignore = []
+
+if not _importable("jax"):
+    collect_ignore += ["test_kernel.py", "test_model_aot.py"]
+elif not _importable("hypothesis"):
+    # the kernel property sweeps are hypothesis-driven; the AOT tests
+    # only need jax + numpy + pytest
+    collect_ignore += ["test_kernel.py"]

@@ -1,28 +1,51 @@
 //! Experiment harnesses: regenerate every table and figure of the
 //! paper's evaluation (§4) from this reproduction's substrates.
 //!
-//! Each `table*`/`fig*` function runs the full experiment and renders
-//! the same rows/series the paper reports; `kernelband repro <exp>`
-//! exposes them on the CLI and `rust/benches/` wraps scaled-down
-//! versions in criterion. Absolute numbers differ from the paper (the
-//! substrate is a simulator, not the authors' testbed) — the *shape*
-//! (who wins, by roughly what factor, orderings) is the reproduction
-//! target; EXPERIMENTS.md records paper-vs-measured side by side.
+//! Each `table*`/`fig*` experiment has two entry points: the legacy
+//! `table1(iterations) -> String` renderers (kept for tests and
+//! benches) and the `table1_report(iterations, threads)` functions that
+//! run the full (device × llm × method × seed) grid through the shared
+//! [`ExperimentRunner`] and return a [`ReproReport`] carrying both the
+//! rendered text and a machine-readable JSON artifact
+//! (`BENCH_<exp>.json`). `kernelband repro <exp> [--threads N]
+//! [--out DIR]` exposes them on the CLI and `rust/benches/` wraps
+//! scaled-down versions.
+//!
+//! Absolute numbers differ from the paper (the substrate is a
+//! simulator, not the authors' testbed) — the *shape* (who wins, by
+//! roughly what factor, orderings) is the reproduction target.
+//!
+//! Determinism contract: every experiment derives all randomness from
+//! `EXPERIMENT_SEED` through split RNG lineages, and the runner's
+//! fan-out preserves input order, so rendered tables and JSON artifacts
+//! are byte-identical for any `--threads` value.
+
+pub mod runner;
+
+pub use runner::{CellResult, CellSpec, ExperimentRunner, ReproReport};
 
 use crate::baselines::{BestOfN, Geak, TorchMode};
-use crate::engine::SimEngine;
+use crate::engine::{EvalEngine, SimEngine};
 use crate::gpu_model::{Device, ALL_DEVICES};
-use crate::llm::{LlmProfile, SurrogateLlm, ALL_LLMS};
-use crate::metrics::{aggregate, stratified, Aggregate, TaskOutcome};
+use crate::llm::{LlmBackend, LlmProfile, SurrogateLlm, ALL_LLMS};
+use crate::metrics::{stratified, Aggregate, TaskOutcome};
 use crate::policy::{KernelBand, PolicyConfig, PolicyMode, Trace};
 use crate::rng::Rng;
-use crate::service::TimeModel;
+use crate::service::{BreakdownRow, TimeModel};
 use crate::strategy::{ALL_STRATEGIES, NUM_STRATEGIES};
-use crate::workload::Suite;
+use crate::util::json::Json;
+use crate::util::par::parallel_map;
+use crate::workload::{Suite, TaskSpec};
 
 /// Root seed for all experiments (subset sampling uses the paper's 42
 /// independently; this keys simulator noise and LLM sampling).
 pub const EXPERIMENT_SEED: u64 = 20_260_212;
+
+/// Every experiment `kernelband repro` knows, in `repro all` order.
+pub const ALL_EXPERIMENTS: [&str; 10] = [
+    "table1", "table2", "table3", "table4", "table9", "table10", "fig2",
+    "fig3", "fig4", "regret",
+];
 
 /// An optimization method under evaluation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -46,29 +69,53 @@ impl Method {
         }
     }
 
-    /// Run the method on every task of a suite (rayon-parallel; the
-    /// split RNG keys make results order-invariant).
-    pub fn run(self, suite: &Suite, device: Device, llm_profile: LlmProfile,
-               iterations: usize, seed: u64) -> Vec<Trace> {
+    /// Optimize a single task. `root` must be the method-lineage stream
+    /// (`Rng::new(seed).split("method", tag)`); per-task streams derive
+    /// from it by task id, so calls are independent of execution order.
+    pub fn run_task<E: EvalEngine, L: LlmBackend>(
+        self,
+        task: &TaskSpec,
+        engine: &E,
+        llm: &L,
+        iterations: usize,
+        root: &Rng,
+    ) -> Trace {
+        match self {
+            Method::KernelBand(mode, k) => {
+                let mut cfg = PolicyConfig::with_mode(mode);
+                cfg.iterations = iterations;
+                if mode != PolicyMode::NoClustering {
+                    cfg.clusters = k;
+                }
+                KernelBand::new(cfg).optimize(task, engine, llm, root)
+            }
+            Method::BoN => {
+                BestOfN::new(iterations).optimize(task, engine, llm, root)
+            }
+            Method::Geak => {
+                Geak::new(iterations).optimize(task, engine, llm, root)
+            }
+        }
+    }
+
+    /// Run the method on every task of a suite with an explicit worker
+    /// bound (0 = available parallelism). The split RNG keys make
+    /// results invariant to thread count and execution order.
+    pub fn run_threads(self, suite: &Suite, device: Device,
+                       llm_profile: LlmProfile, iterations: usize, seed: u64,
+                       threads: usize) -> Vec<Trace> {
         let engine = SimEngine::new(device);
         let llm = SurrogateLlm::new(llm_profile);
         let root = Rng::new(seed).split("method", self.tag());
-        crate::util::par::parallel_map(&suite.tasks, 0, |_, task| match self {
-                Method::KernelBand(mode, k) => {
-                    let mut cfg = PolicyConfig::with_mode(mode);
-                    cfg.iterations = iterations;
-                    if mode != PolicyMode::NoClustering {
-                        cfg.clusters = k;
-                    }
-                    KernelBand::new(cfg).optimize(task, &engine, &llm, &root)
-                }
-                Method::BoN => {
-                    BestOfN::new(iterations).optimize(task, &engine, &llm, &root)
-                }
-                Method::Geak => {
-                    Geak::new(iterations).optimize(task, &engine, &llm, &root)
-                }
-            })
+        parallel_map(&suite.tasks, threads, |_, task| {
+            self.run_task(task, &engine, &llm, iterations, &root)
+        })
+    }
+
+    /// [`Method::run_threads`] with all available cores.
+    pub fn run(self, suite: &Suite, device: Device, llm_profile: LlmProfile,
+               iterations: usize, seed: u64) -> Vec<Trace> {
+        self.run_threads(suite, device, llm_profile, iterations, seed, 0)
     }
 
     fn tag(self) -> u64 {
@@ -82,6 +129,29 @@ impl Method {
 
 pub fn outcomes(traces: &[Trace]) -> Vec<TaskOutcome> {
     traces.iter().map(|t| t.outcome()).collect()
+}
+
+/// Dispatch an experiment by name at the standard budgets (tables
+/// default to T=20, figures to T=40, regret's horizon to T=3200);
+/// `None` for an unknown name. `threads` bounds the runner fan-out and
+/// is ignored by the analytic/synthetic experiments (fig3, regret).
+pub fn report(exp: &str, iterations: Option<usize>, threads: usize)
+              -> Option<ReproReport> {
+    let t20 = iterations.unwrap_or(20);
+    let t40 = iterations.unwrap_or(40);
+    match exp {
+        "table1" => Some(table1_report(t20, threads)),
+        "table2" => Some(table2_report(t20, threads)),
+        "table3" => Some(table3_report(t20, threads)),
+        "table4" => Some(table4_report(t20, threads)),
+        "table9" => Some(table9_report(t20, threads)),
+        "table10" => Some(table10_report(t20, threads)),
+        "fig2" => Some(fig2_report(t40, threads)),
+        "fig3" => Some(fig3_report()),
+        "fig4" => Some(fig4_report(t40, threads)),
+        "regret" => Some(regret_report(iterations.unwrap_or(3200))),
+        _ => None,
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -138,40 +208,53 @@ fn fmt_cfg(a: &Aggregate) -> [String; 3] {
 
 /// Table 1: {RTX 4090, H20, A100} × {BoN, GEAK, KernelBand}, stratified
 /// by difficulty, on the full 183-kernel suite, T = 20.
-pub fn table1(iterations: usize) -> String {
+pub fn table1_report(iterations: usize, threads: usize) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED);
     let methods = [
         Method::BoN,
         Method::Geak,
         Method::KernelBand(PolicyMode::Full, 3),
     ];
-    let mut rows = Vec::new();
+    let mut cells = Vec::new();
     for device in ALL_DEVICES {
         for method in methods {
-            let traces = method.run(
-                &suite,
+            cells.push(CellSpec::new(
+                method,
                 device,
                 LlmProfile::DeepSeekV32,
                 iterations,
                 EXPERIMENT_SEED,
-            );
-            let outs = outcomes(&traces);
-            let strata = stratified(&outs);
-            let mut row = vec![device.name().to_string(), method.name()];
+            ));
+        }
+    }
+    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            let strata = stratified(&outcomes(&r.traces));
+            let mut row =
+                vec![r.spec.device.name().to_string(), r.spec.label.clone()];
             for (_, agg) in &strata {
                 row.extend(fmt_cfg(agg));
             }
-            rows.push(row);
-        }
-    }
-    render_table(
+            row
+        })
+        .collect();
+    let text = render_table(
         "Table 1 — TritonBench-G main results (C %, F %, G geomean; standard mode)",
         &[
             "Platform", "Method", "L1-2 C", "F", "G", "L3 C", "F", "G",
             "L4-5 C", "F", "G", "All C", "F", "G",
         ],
         &rows,
-    )
+    );
+    let json =
+        runner::experiment_json("table1", iterations, EXPERIMENT_SEED, &results);
+    ReproReport { name: "table1".into(), text, json }
+}
+
+pub fn table1(iterations: usize) -> String {
+    table1_report(iterations, 0).text
 }
 
 // ---------------------------------------------------------------------------
@@ -179,28 +262,51 @@ pub fn table1(iterations: usize) -> String {
 // ---------------------------------------------------------------------------
 
 /// Table 2: 4 LLM backends × 3 methods on the 50-kernel subset, H20.
-pub fn table2(iterations: usize) -> String {
+pub fn table2_report(iterations: usize, threads: usize) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
     let methods = [
         Method::BoN,
         Method::Geak,
         Method::KernelBand(PolicyMode::Full, 3),
     ];
-    let mut rows = Vec::new();
+    let mut cells = Vec::new();
     for llm in ALL_LLMS {
         for method in methods {
-            let traces =
-                method.run(&suite, Device::H20, llm, iterations, EXPERIMENT_SEED);
-            let agg = aggregate(&outcomes(&traces));
-            let [c, f, g] = fmt_cfg(&agg);
-            rows.push(vec![llm.spec().name.to_string(), method.name(), c, f, g]);
+            cells.push(CellSpec::new(
+                method,
+                Device::H20,
+                llm,
+                iterations,
+                EXPERIMENT_SEED,
+            ));
         }
     }
-    render_table(
+    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            let [c, f, g] = fmt_cfg(&r.aggregate);
+            vec![
+                r.spec.llm.spec().name.to_string(),
+                r.spec.label.clone(),
+                c,
+                f,
+                g,
+            ]
+        })
+        .collect();
+    let text = render_table(
         "Table 2 — LLM generalization (50-kernel subset, H20, T=20)",
         &["Model", "Method", "C (%)", "F (%)", "G"],
         &rows,
-    )
+    );
+    let json =
+        runner::experiment_json("table2", iterations, EXPERIMENT_SEED, &results);
+    ReproReport { name: "table2".into(), text, json }
+}
+
+pub fn table2(iterations: usize) -> String {
+    table2_report(iterations, 0).text
 }
 
 // ---------------------------------------------------------------------------
@@ -234,16 +340,24 @@ pub fn strategy_stats(traces: &[Trace]) -> Vec<(String, f64, f64, f64)> {
         .collect()
 }
 
-fn strategy_table(device: Device, iterations: usize) -> Vec<Vec<String>> {
-    let suite = Suite::full(EXPERIMENT_SEED).subset50();
-    let traces = Method::KernelBand(PolicyMode::Full, 3).run(
-        &suite,
-        device,
-        LlmProfile::DeepSeekV32,
-        iterations,
-        EXPERIMENT_SEED,
-    );
-    strategy_stats(&traces)
+fn strategy_stats_json(traces: &[Trace]) -> Json {
+    Json::Arr(
+        strategy_stats(traces)
+            .into_iter()
+            .map(|(name, f, s, b)| {
+                Json::obj(vec![
+                    ("strategy", Json::str(name)),
+                    ("freq_pct", Json::num(f)),
+                    ("succ_pct", Json::num(s)),
+                    ("best_pct", Json::num(b)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn strategy_rows(traces: &[Trace]) -> Vec<Vec<String>> {
+    strategy_stats(traces)
         .into_iter()
         .map(|(name, f, s, b)| {
             vec![
@@ -256,20 +370,47 @@ fn strategy_table(device: Device, iterations: usize) -> Vec<Vec<String>> {
         .collect()
 }
 
+fn kernelband_cell(device: Device, iterations: usize) -> CellSpec {
+    CellSpec::new(
+        Method::KernelBand(PolicyMode::Full, 3),
+        device,
+        LlmProfile::DeepSeekV32,
+        iterations,
+        EXPERIMENT_SEED,
+    )
+}
+
 /// Table 3: strategy risk/reward profiles on H20.
-pub fn table3(iterations: usize) -> String {
-    render_table(
+pub fn table3_report(iterations: usize, threads: usize) -> ReproReport {
+    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let cells = vec![kernelband_cell(Device::H20, iterations)];
+    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let text = render_table(
         "Table 3 — strategy selection statistics (H20, 50-kernel subset)",
         &["Strategy", "Freq (%)", "Succ (%)", "Best (%)"],
-        &strategy_table(Device::H20, iterations),
-    )
+        &strategy_rows(&results[0].traces),
+    );
+    let mut json =
+        runner::experiment_json("table3", iterations, EXPERIMENT_SEED, &results);
+    json.insert("strategies", strategy_stats_json(&results[0].traces));
+    ReproReport { name: "table3".into(), text, json }
+}
+
+pub fn table3(iterations: usize) -> String {
+    table3_report(iterations, 0).text
 }
 
 /// Table 10: strategy statistics on H20 vs RTX 4090 (hardware
 /// adaptation, Appendix I).
-pub fn table10(iterations: usize) -> String {
-    let h20 = strategy_table(Device::H20, iterations);
-    let rtx = strategy_table(Device::Rtx4090, iterations);
+pub fn table10_report(iterations: usize, threads: usize) -> ReproReport {
+    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let cells = vec![
+        kernelband_cell(Device::H20, iterations),
+        kernelband_cell(Device::Rtx4090, iterations),
+    ];
+    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let h20 = strategy_rows(&results[0].traces);
+    let rtx = strategy_rows(&results[1].traces);
     let rows: Vec<Vec<String>> = h20
         .into_iter()
         .zip(rtx)
@@ -285,13 +426,29 @@ pub fn table10(iterations: usize) -> String {
             ]
         })
         .collect();
-    render_table(
+    let text = render_table(
         "Table 10 — strategy utilization, H20 vs RTX 4090",
         &[
             "Strategy", "H20 Freq", "Succ", "Best", "4090 Freq", "Succ", "Best",
         ],
         &rows,
-    )
+    );
+    let mut json = runner::experiment_json(
+        "table10",
+        iterations,
+        EXPERIMENT_SEED,
+        &results,
+    );
+    json.insert("strategies_h20", strategy_stats_json(&results[0].traces));
+    json.insert(
+        "strategies_rtx4090",
+        strategy_stats_json(&results[1].traces),
+    );
+    ReproReport { name: "table10".into(), text, json }
+}
+
+pub fn table10(iterations: usize) -> String {
+    table10_report(iterations, 0).text
 }
 
 // ---------------------------------------------------------------------------
@@ -300,7 +457,7 @@ pub fn table10(iterations: usize) -> String {
 
 /// Table 4: single-component and framework-level ablations (H20,
 /// 50-kernel subset).
-pub fn table4(iterations: usize) -> String {
+pub fn table4_report(iterations: usize, threads: usize) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
     let configs: Vec<(&str, Method)> = vec![
         ("KernelBand (Full)", Method::KernelBand(PolicyMode::Full, 3)),
@@ -326,24 +483,39 @@ pub fn table4(iterations: usize) -> String {
         ),
         ("BoN (baseline)", Method::BoN),
     ];
-    let mut rows = Vec::new();
-    for (label, method) in configs {
-        let traces = method.run(
-            &suite,
-            Device::H20,
-            LlmProfile::DeepSeekV32,
-            iterations,
-            EXPERIMENT_SEED,
-        );
-        let agg = aggregate(&outcomes(&traces));
-        let [c, f, g] = fmt_cfg(&agg);
-        rows.push(vec![label.to_string(), c, f, g]);
-    }
-    render_table(
+    let cells: Vec<CellSpec> = configs
+        .iter()
+        .map(|(label, method)| {
+            CellSpec::new(
+                *method,
+                Device::H20,
+                LlmProfile::DeepSeekV32,
+                iterations,
+                EXPERIMENT_SEED,
+            )
+            .with_label(label)
+        })
+        .collect();
+    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            let [c, f, g] = fmt_cfg(&r.aggregate);
+            vec![r.spec.label.clone(), c, f, g]
+        })
+        .collect();
+    let text = render_table(
         "Table 4 — ablations (H20, 50-kernel subset, T=20)",
         &["Configuration", "C (%)", "F (%)", "G"],
         &rows,
-    )
+    );
+    let json =
+        runner::experiment_json("table4", iterations, EXPERIMENT_SEED, &results);
+    ReproReport { name: "table4".into(), text, json }
+}
+
+pub fn table4(iterations: usize) -> String {
+    table4_report(iterations, 0).text
 }
 
 // ---------------------------------------------------------------------------
@@ -352,21 +524,18 @@ pub fn table4(iterations: usize) -> String {
 
 /// Table 9: KernelBand-optimized kernels vs PyTorch eager / inductor /
 /// max-autotune on the 30-kernel torch-comparable subset (H20).
-pub fn table9(iterations: usize) -> String {
+pub fn table9_report(iterations: usize, threads: usize) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50().torch_subset();
     let engine = SimEngine::new(Device::H20);
-    let traces = Method::KernelBand(PolicyMode::Full, 3).run(
-        &suite,
-        Device::H20,
-        LlmProfile::DeepSeekV32,
-        iterations,
-        EXPERIMENT_SEED,
-    );
+    let cells = vec![kernelband_cell(Device::H20, iterations)];
+    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let traces = &results[0].traces;
     let root = Rng::new(EXPERIMENT_SEED).split("torch", 0);
     let mut rows = Vec::new();
+    let mut modes_json = Vec::new();
     for mode in [TorchMode::Eager, TorchMode::Inductor, TorchMode::MaxAutotune] {
         let mut log_sum = 0.0;
-        for (task, trace) in suite.tasks.iter().zip(&traces) {
+        for (task, trace) in suite.tasks.iter().zip(traces) {
             let torch_latency = mode.latency(task, &engine, &root);
             // fallback semantics: if optimization failed, the deployed
             // kernel is the Triton reference
@@ -383,12 +552,24 @@ pub fn table9(iterations: usize) -> String {
             format!("vs. {}", mode.name()),
             format!("{geomean:.2}x"),
         ]);
+        modes_json.push(Json::obj(vec![
+            ("baseline", Json::str(mode.name())),
+            ("geomean_speedup", Json::num(geomean)),
+        ]));
     }
-    render_table(
+    let text = render_table(
         "Table 9 — speedup over PyTorch baselines (30 kernels, H20, T=20)",
         &["PyTorch Baseline", "Speedup"],
         &rows,
-    )
+    );
+    let mut json =
+        runner::experiment_json("table9", iterations, EXPERIMENT_SEED, &results);
+    json.insert("torch_baselines", Json::Arr(modes_json));
+    ReproReport { name: "table9".into(), text, json }
+}
+
+pub fn table9(iterations: usize) -> String {
+    table9_report(iterations, 0).text
 }
 
 // ---------------------------------------------------------------------------
@@ -412,45 +593,57 @@ pub fn scaling_curve(traces: &[Trace]) -> Vec<f64> {
 
 /// Figure 2: T = 40 scaling for KernelBand K ∈ {1, 2, 3, 5} vs BoN and
 /// GEAK (fallback-mode geomean, 50-kernel subset, H20).
-pub fn fig2(iterations: usize) -> String {
+pub fn fig2_report(iterations: usize, threads: usize) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
-    let series: Vec<(String, Vec<f64>)> = [
+    let methods = [
         Method::KernelBand(PolicyMode::Full, 1),
         Method::KernelBand(PolicyMode::Full, 2),
         Method::KernelBand(PolicyMode::Full, 3),
         Method::KernelBand(PolicyMode::Full, 5),
         Method::Geak,
         Method::BoN,
-    ]
-    .into_iter()
-    .map(|m| {
-        let traces = m.run(
-            &suite,
-            Device::H20,
-            LlmProfile::DeepSeekV32,
-            iterations,
-            EXPERIMENT_SEED,
-        );
-        (m.name(), scaling_curve(&traces))
-    })
-    .collect();
+    ];
+    let cells: Vec<CellSpec> = methods
+        .iter()
+        .map(|&m| {
+            CellSpec::new(
+                m,
+                Device::H20,
+                LlmProfile::DeepSeekV32,
+                iterations,
+                EXPERIMENT_SEED,
+            )
+        })
+        .collect();
+    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let series: Vec<(String, Vec<f64>)> = results
+        .iter()
+        .map(|r| (r.spec.label.clone(), scaling_curve(&r.traces)))
+        .collect();
 
     let mut headers = vec!["iter".to_string()];
     headers.extend(series.iter().map(|(n, _)| n.clone()));
     let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
     let mut rows = Vec::new();
-    for t in (0..iterations).step_by(1) {
+    for t in 0..iterations {
         let mut row = vec![format!("{}", t + 1)];
         for (_, curve) in &series {
             row.push(format!("{:.3}", curve[t]));
         }
         rows.push(row);
     }
-    render_table(
+    let text = render_table(
         "Figure 2 — scaling & clustering sensitivity (fallback geomean, H20)",
         &headers_ref,
         &rows,
-    )
+    );
+    let json =
+        runner::experiment_json("fig2", iterations, EXPERIMENT_SEED, &results);
+    ReproReport { name: "fig2".into(), text, json }
+}
+
+pub fn fig2(iterations: usize) -> String {
+    fig2_report(iterations, 0).text
 }
 
 // ---------------------------------------------------------------------------
@@ -458,7 +651,7 @@ pub fn fig2(iterations: usize) -> String {
 // ---------------------------------------------------------------------------
 
 /// Figure 3: per-kernel/iteration time breakdown, serial vs batched.
-pub fn fig3() -> String {
+pub fn fig3_report() -> ReproReport {
     let tm = TimeModel::default();
     let mut rows = Vec::new();
     for r in tm.serial_breakdown() {
@@ -490,11 +683,47 @@ pub fn fig3() -> String {
         format!("{:.1} s", tm.batched_iteration_s()),
         "100.0".into(),
     ]);
-    render_table(
+    let text = render_table(
         "Figure 3 — time breakdown per kernel/iteration",
         &["Pipeline", "Component", "Seconds", "% of total"],
         &rows,
-    )
+    );
+    let breakdown_json = |rows: &[BreakdownRow], total_s: f64| {
+        Json::obj(vec![
+            ("total_s", Json::num(total_s)),
+            (
+                "components",
+                Json::Arr(
+                    rows.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("component", Json::str(r.component)),
+                                ("seconds", Json::num(r.seconds)),
+                                ("percent", Json::num(r.percent)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    };
+    let json = Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("experiment", Json::str("fig3")),
+        (
+            "serial",
+            breakdown_json(&tm.serial_breakdown(), tm.serial_iteration_s()),
+        ),
+        (
+            "batched",
+            breakdown_json(&tm.batched_breakdown(), tm.batched_iteration_s()),
+        ),
+    ]);
+    ReproReport { name: "fig3".into(), text, json }
+}
+
+pub fn fig3() -> String {
+    fig3_report().text
 }
 
 // ---------------------------------------------------------------------------
@@ -517,7 +746,7 @@ pub fn speedup_within_budget(trace: &Trace, budget_usd: f64) -> f64 {
 }
 
 /// Figure 4: geomean speedup as a function of API budget per kernel.
-pub fn fig4(iterations: usize) -> String {
+pub fn fig4_report(iterations: usize, threads: usize) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
     let budgets = [0.05, 0.10, 0.15, 0.20, 0.30, 0.40, 0.50];
     let methods = [
@@ -525,33 +754,74 @@ pub fn fig4(iterations: usize) -> String {
         Method::Geak,
         Method::BoN,
     ];
-    let all: Vec<(String, Vec<Trace>)> = methods
-        .into_iter()
-        .map(|m| {
-            (
-                m.name(),
-                m.run(&suite, Device::H20, LlmProfile::DeepSeekV32,
-                      iterations, EXPERIMENT_SEED),
+    let cells: Vec<CellSpec> = methods
+        .iter()
+        .map(|&m| {
+            CellSpec::new(
+                m,
+                Device::H20,
+                LlmProfile::DeepSeekV32,
+                iterations,
+                EXPERIMENT_SEED,
             )
         })
         .collect();
+    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let budget_geomean = |traces: &[Trace], b: f64| {
+        let log_sum: f64 = traces
+            .iter()
+            .map(|tr| speedup_within_budget(tr, b).ln())
+            .sum();
+        (log_sum / traces.len() as f64).exp()
+    };
     let mut rows = Vec::new();
     for &b in &budgets {
         let mut row = vec![format!("${b:.2}")];
-        for (_, traces) in &all {
-            let log_sum: f64 = traces
-                .iter()
-                .map(|tr| speedup_within_budget(tr, b).ln())
-                .sum();
-            row.push(format!("{:.3}", (log_sum / traces.len() as f64).exp()));
+        for r in &results {
+            row.push(format!("{:.3}", budget_geomean(&r.traces, b)));
         }
         rows.push(row);
     }
-    render_table(
+    let text = render_table(
         "Figure 4 — geomean speedup vs API cost per kernel (H20, T=40)",
         &["Budget", "KernelBand", "GEAK", "BoN"],
         &rows,
-    )
+    );
+    let curves = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("method", Json::str(r.spec.label.clone())),
+                (
+                    "points",
+                    Json::Arr(
+                        budgets
+                            .iter()
+                            .map(|&b| {
+                                Json::obj(vec![
+                                    ("budget_usd", Json::num(b)),
+                                    (
+                                        "geomean_fallback_speedup",
+                                        Json::num(budget_geomean(
+                                            &r.traces, b,
+                                        )),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    let mut json =
+        runner::experiment_json("fig4", iterations, EXPERIMENT_SEED, &results);
+    json.insert("budget_curves", Json::Arr(curves));
+    ReproReport { name: "fig4".into(), text, json }
+}
+
+pub fn fig4(iterations: usize) -> String {
+    fig4_report(iterations, 0).text
 }
 
 // ---------------------------------------------------------------------------
@@ -560,7 +830,7 @@ pub fn fig4(iterations: usize) -> String {
 
 /// Empirical average regret of masked UCB on a synthetic (K × S)-arm
 /// instance vs the Theorem-1 rate `C·sqrt(K|S| ln T / T)`.
-pub fn regret(max_t: usize) -> String {
+pub fn regret_report(max_t: usize) -> ReproReport {
     use crate::bandit::{ArmStats, MaskedUcb};
     let k = 3usize;
     let s = NUM_STRATEGIES;
@@ -573,7 +843,7 @@ pub fn regret(max_t: usize) -> String {
     let mut stats = ArmStats::new(k);
     let mask = vec![true; k * s];
     let mut cum_regret = 0.0;
-    let mut rows = Vec::new();
+    let mut checkpoint_data = Vec::new();
     let checkpoints: Vec<usize> =
         [10, 25, 50, 100, 200, 400, 800, 1600, 3200]
             .into_iter()
@@ -590,17 +860,51 @@ pub fn regret(max_t: usize) -> String {
             let avg = cum_regret / t as f64;
             let bound =
                 ((k * s) as f64 * (t as f64).ln() / t as f64).sqrt();
-            rows.push(vec![
+            checkpoint_data.push((t, avg, bound, avg <= bound * 1.5));
+        }
+    }
+    let rows: Vec<Vec<String>> = checkpoint_data
+        .iter()
+        .map(|&(t, avg, bound, within)| {
+            vec![
                 format!("{t}"),
                 format!("{avg:.4}"),
                 format!("{bound:.4}"),
-                format!("{}", avg <= bound * 1.5),
-            ]);
-        }
-    }
-    render_table(
+                format!("{within}"),
+            ]
+        })
+        .collect();
+    let text = render_table(
         "Theorem 1 — empirical avg regret vs O(sqrt(K|S| ln T / T)) rate",
         &["T", "avg regret", "rate (C=1)", "within 1.5x rate"],
         &rows,
-    )
+    );
+    let json = Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("experiment", Json::str("regret")),
+        ("max_t", Json::num(max_t as f64)),
+        ("clusters", Json::num(k as f64)),
+        ("strategies", Json::num(s as f64)),
+        (
+            "checkpoints",
+            Json::Arr(
+                checkpoint_data
+                    .iter()
+                    .map(|&(t, avg, bound, within)| {
+                        Json::obj(vec![
+                            ("t", Json::num(t as f64)),
+                            ("avg_regret", Json::num(avg)),
+                            ("rate_bound", Json::num(bound)),
+                            ("within_1_5x", Json::Bool(within)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    ReproReport { name: "regret".into(), text, json }
+}
+
+pub fn regret(max_t: usize) -> String {
+    regret_report(max_t).text
 }

@@ -1,0 +1,311 @@
+//! Shared experiment runner: one deterministic parallel fan-out for the
+//! whole (device × llm × method × seed) grid, plus the machine-readable
+//! JSON result artifacts every table/figure emits.
+//!
+//! The runner flattens its grid into (cell, task) work items and pushes
+//! them through [`crate::util::par::parallel_map`], so a 9-cell Table-1
+//! campaign keeps every core busy even though individual cells have
+//! tails. Determinism is structural, not accidental:
+//!
+//! * every work item derives its RNG from the cell's `(seed, method)`
+//!   lineage and the task id — never from shared mutable state — so
+//!   results are invariant to scheduling;
+//! * `parallel_map` returns results in input order regardless of which
+//!   thread ran what;
+//! * JSON artifacts serialize with sorted keys and shortest-roundtrip
+//!   float formatting, and contain no wall-clock or thread-count fields.
+//!
+//! Consequently the `BENCH_<exp>.json` artifact produced with
+//! `--threads 1` is byte-identical to the one produced with
+//! `--threads 8` (covered by `rust/tests/runner_artifacts.rs`).
+
+use std::path::{Path, PathBuf};
+
+use crate::engine::SimEngine;
+use crate::eval::{outcomes, scaling_curve, Method};
+use crate::gpu_model::Device;
+use crate::llm::{LlmProfile, SurrogateLlm};
+use crate::metrics::{aggregate, stratified, Aggregate};
+use crate::policy::Trace;
+use crate::rng::Rng;
+use crate::util::json::Json;
+use crate::util::par::parallel_map;
+use crate::workload::Suite;
+
+/// One cell of the experiment grid: a method evaluated on a device with
+/// an LLM backend for `iterations` steps under `seed`.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    /// Row label in rendered tables ("KernelBand", "w/o Profiling", …).
+    pub label: String,
+    pub method: Method,
+    pub device: Device,
+    pub llm: LlmProfile,
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl CellSpec {
+    pub fn new(method: Method, device: Device, llm: LlmProfile,
+               iterations: usize, seed: u64) -> CellSpec {
+        CellSpec {
+            label: method.name(),
+            method,
+            device,
+            llm,
+            iterations,
+            seed,
+        }
+    }
+
+    /// Override the display label (Table 4's ablation row names).
+    pub fn with_label(mut self, label: &str) -> CellSpec {
+        self.label = label.to_string();
+        self
+    }
+}
+
+/// Per-cell result: traces in suite task order plus aggregate metrics.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub spec: CellSpec,
+    pub traces: Vec<Trace>,
+    pub aggregate: Aggregate,
+}
+
+impl CellResult {
+    /// The cell as a result-artifact JSON object: spec, aggregate
+    /// metrics, per-stratum metrics, and the fallback-geomean trajectory
+    /// over iterations (the `BENCH_*.json` curve consumers read).
+    pub fn to_json(&self) -> Json {
+        let outs = outcomes(&self.traces);
+        let strata = stratified(&outs)
+            .iter()
+            .map(|(s, a)| {
+                Json::obj(vec![
+                    ("stratum", Json::str(s.name())),
+                    ("metrics", aggregate_json(a)),
+                ])
+            })
+            .collect();
+        let curve = scaling_curve(&self.traces)
+            .into_iter()
+            .map(Json::num)
+            .collect();
+        Json::obj(vec![
+            ("label", Json::str(self.spec.label.clone())),
+            ("method", Json::str(self.spec.method.name())),
+            ("device", Json::str(self.spec.device.name())),
+            ("llm", Json::str(self.spec.llm.spec().name)),
+            ("iterations", Json::num(self.spec.iterations as f64)),
+            ("seed", Json::num(self.spec.seed as f64)),
+            ("metrics", aggregate_json(&self.aggregate)),
+            ("strata", Json::Arr(strata)),
+            ("curve", Json::Arr(curve)),
+        ])
+    }
+}
+
+/// Aggregate metrics as a JSON object (NaN geomeans become `null`).
+pub fn aggregate_json(a: &Aggregate) -> Json {
+    Json::obj(vec![
+        ("tasks", Json::num(a.tasks as f64)),
+        ("correct_pct", Json::num(a.correct_pct)),
+        ("fast1_pct", Json::num(a.fast1_pct)),
+        ("geomean_standard", Json::num(a.geomean_standard)),
+        ("geomean_fallback", Json::num(a.geomean_fallback)),
+        ("total_cost_usd", Json::num(a.total_cost_usd)),
+    ])
+}
+
+/// The result-artifact root for a grid experiment.
+pub fn experiment_json(name: &str, iterations: usize, seed: u64,
+                       cells: &[CellResult]) -> Json {
+    Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("experiment", Json::str(name)),
+        ("iterations", Json::num(iterations as f64)),
+        ("seed", Json::num(seed as f64)),
+        (
+            "cells",
+            Json::Arr(cells.iter().map(CellResult::to_json).collect()),
+        ),
+    ])
+}
+
+/// Fans (cell × task) work items through the deterministic parallel map.
+#[derive(Debug, Clone, Copy)]
+pub struct ExperimentRunner {
+    /// Worker threads (0 = available parallelism). Results are invariant
+    /// to this value.
+    pub threads: usize,
+}
+
+impl ExperimentRunner {
+    pub fn new(threads: usize) -> ExperimentRunner {
+        ExperimentRunner { threads }
+    }
+
+    /// Run every cell of the grid over every task of `suite`.
+    ///
+    /// The flattened (cell, task) item list is processed by
+    /// `parallel_map`; each item rebuilds its engine/LLM substrate
+    /// (both are cheap value types) and derives its RNG from the cell
+    /// seed + method lineage, so the traces returned for a cell are
+    /// bit-identical to `Method::run` on the same inputs.
+    pub fn run(&self, suite: &Suite, cells: &[CellSpec]) -> Vec<CellResult> {
+        let items: Vec<(usize, usize)> = (0..cells.len())
+            .flat_map(|c| (0..suite.len()).map(move |t| (c, t)))
+            .collect();
+        let traces = parallel_map(&items, self.threads, |_, &(c, t)| {
+            let spec = &cells[c];
+            let engine = SimEngine::new(spec.device);
+            let llm = SurrogateLlm::new(spec.llm);
+            let root = Rng::new(spec.seed).split("method", spec.method.tag());
+            spec.method.run_task(
+                &suite.tasks[t],
+                &engine,
+                &llm,
+                spec.iterations,
+                &root,
+            )
+        });
+        let mut it = traces.into_iter();
+        cells
+            .iter()
+            .map(|spec| {
+                let cell_traces: Vec<Trace> =
+                    it.by_ref().take(suite.len()).collect();
+                let agg = aggregate(&outcomes(&cell_traces));
+                CellResult {
+                    spec: spec.clone(),
+                    traces: cell_traces,
+                    aggregate: agg,
+                }
+            })
+            .collect()
+    }
+}
+
+/// A fully-rendered experiment: the text table the CLI prints and the
+/// JSON artifact it writes.
+#[derive(Debug, Clone)]
+pub struct ReproReport {
+    /// Experiment name ("table1", "fig2", …).
+    pub name: String,
+    /// Rendered text table(s).
+    pub text: String,
+    /// Machine-readable result artifact.
+    pub json: Json,
+}
+
+impl ReproReport {
+    /// `BENCH_<name>.json` — the artifact filename convention consumed
+    /// by downstream tooling and the CI smoke job.
+    pub fn artifact_filename(&self) -> String {
+        format!("BENCH_{}.json", self.name)
+    }
+
+    /// Write the pretty-printed artifact under `dir` (created if
+    /// missing); returns the path written.
+    pub fn write_artifact(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(self.artifact_filename());
+        std::fs::write(&path, self.json.pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PolicyMode;
+
+    fn tiny_suite() -> Suite {
+        let full = Suite::full(crate::eval::EXPERIMENT_SEED);
+        Suite { tasks: full.tasks.into_iter().step_by(31).collect() }
+    }
+
+    #[test]
+    fn runner_regroups_cells_in_order() {
+        let suite = tiny_suite();
+        let cells = vec![
+            CellSpec::new(
+                Method::BoN,
+                Device::H20,
+                LlmProfile::DeepSeekV32,
+                4,
+                3,
+            ),
+            CellSpec::new(
+                Method::KernelBand(PolicyMode::Full, 3),
+                Device::A100,
+                LlmProfile::Gpt5,
+                4,
+                3,
+            ),
+        ];
+        let results = ExperimentRunner::new(2).run(&suite, &cells);
+        assert_eq!(results.len(), 2);
+        for (res, spec) in results.iter().zip(&cells) {
+            assert_eq!(res.spec.label, spec.label);
+            assert_eq!(res.traces.len(), suite.len());
+            assert_eq!(res.aggregate.tasks, suite.len());
+        }
+        assert_eq!(results[0].spec.device, Device::H20);
+        assert_eq!(results[1].spec.device, Device::A100);
+    }
+
+    #[test]
+    fn with_label_overrides_display_name() {
+        let cell = CellSpec::new(
+            Method::KernelBand(PolicyMode::NoProfiling, 3),
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            2,
+            1,
+        )
+        .with_label("w/o Profiling");
+        assert_eq!(cell.label, "w/o Profiling");
+        assert_eq!(cell.method, Method::KernelBand(PolicyMode::NoProfiling, 3));
+    }
+
+    #[test]
+    fn cell_json_has_schema_fields() {
+        let suite = tiny_suite();
+        let cells = vec![CellSpec::new(
+            Method::Geak,
+            Device::Rtx4090,
+            LlmProfile::Gemini3Flash,
+            3,
+            9,
+        )];
+        let results = ExperimentRunner::new(1).run(&suite, &cells);
+        let json = results[0].to_json();
+        assert_eq!(json.str_field("device").unwrap(), "RTX 4090");
+        assert_eq!(json.f64_field("iterations"), 3.0);
+        let metrics = json.get("metrics").unwrap();
+        assert_eq!(metrics.f64_field("tasks"), suite.len() as f64);
+        let curve = json.get("curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 3);
+        let strata = json.get("strata").unwrap().as_arr().unwrap();
+        assert_eq!(strata.len(), 4);
+    }
+
+    #[test]
+    fn experiment_json_wraps_cells() {
+        let suite = tiny_suite();
+        let cells = vec![CellSpec::new(
+            Method::BoN,
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            2,
+            5,
+        )];
+        let results = ExperimentRunner::new(0).run(&suite, &cells);
+        let root = experiment_json("unit", 2, 5, &results);
+        assert_eq!(root.str_field("experiment").unwrap(), "unit");
+        assert_eq!(root.f64_field("schema_version"), 1.0);
+        assert_eq!(root.get("cells").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -41,8 +41,8 @@
 //! | [`metrics`] | Correct / Fast@1 / geomean (standard & fallback) / strata |
 //! | [`engine`] | `EvalEngine` trait: simulated vs PJRT-real measurement |
 //! | [`runtime`] | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
-//! | [`service`] | tokio optimization service: batched LLM scheduler (Fig. 3) |
-//! | [`eval`] | experiment harnesses regenerating every paper table/figure |
+//! | [`service`] | optimization service: batched LLM scheduler (Fig. 3) |
+//! | [`eval`] | experiment harnesses regenerating every paper table/figure; [`eval::ExperimentRunner`] fans the grid out in parallel and emits `BENCH_*.json` artifacts |
 
 pub mod bandit;
 pub mod baselines;

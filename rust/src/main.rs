@@ -2,22 +2,31 @@
 //!
 //! ```text
 //! kernelband repro <table1|table2|table3|table4|table9|table10|fig2|fig3|fig4|regret|all>
-//!            [--iterations N]
+//!            [--iterations N] [--threads N] [--out DIR]
 //! kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
 //!            [--llm deepseek|gpt5|claude|gemini] [--mode full|no-clustering|
 //!            no-profiling|llm-select|raw-profiling|no-strategy]
 //!            [--iterations N] [--seed S]
 //! kernelband pjrt [--artifacts DIR] [--budget N]
-//! kernelband serve [--jobs N] [--iterations N]
+//! kernelband serve [--jobs N] [--iterations N] [--out DIR]
 //! kernelband list [--subset]
 //! ```
 //!
-//! Argument parsing is hand-rolled (the build environment vendors no CLI
-//! crate); each flag takes a value except `--subset`.
+//! `repro` runs the experiment grid through [`eval::ExperimentRunner`]:
+//! `--threads` bounds the fan-out (0 = available parallelism; results
+//! are bit-identical for any thread count), and every experiment writes
+//! a machine-readable `BENCH_<exp>.json` artifact under `--out`
+//! (default `out/`) next to the rendered text table.
+//!
+//! Argument parsing is hand-rolled (the workspace's only dependency is
+//! `anyhow`); each flag takes a value except `--subset`.
+
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
 use kernelband::engine::pjrt::PjrtBench;
+use kernelband::eval::ReproReport;
 use kernelband::engine::SimEngine;
 use kernelband::eval;
 use kernelband::gpu_model::Device;
@@ -26,23 +35,46 @@ use kernelband::policy::{KernelBand, PolicyConfig, PolicyMode};
 use kernelband::rng::Rng;
 use kernelband::runtime::Runtime;
 use kernelband::service::OptimizationService;
+use kernelband::util::json::Json;
 use kernelband::workload::Suite;
 
 const USAGE: &str = "\
 kernelband — hardware-aware MAB for LLM kernel optimization (reproduction)
 
 USAGE:
-  kernelband repro <EXPERIMENT> [--iterations N]
+  kernelband repro <EXPERIMENT> [--iterations N] [--threads N] [--out DIR]
       EXPERIMENT: table1 table2 table3 table4 table9 table10
                   fig2 fig3 fig4 regret all
+      --threads 0 (default) uses every core; results are identical
+      for any thread count. JSON artifacts land in DIR (default out/).
+      fig3 is analytic and regret is synthetic: both ignore --threads
+      (regret reads --iterations as its horizon T, default 3200).
   kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
       [--llm deepseek|gpt5|claude|gemini]
       [--mode full|no-clustering|no-profiling|llm-select|raw-profiling|no-strategy]
       [--iterations N] [--seed S]
   kernelband pjrt [--artifacts DIR] [--budget N]
-  kernelband serve [--jobs N] [--iterations N]
+  kernelband serve [--jobs N] [--iterations N] [--out DIR]
   kernelband list [--subset]
 ";
+
+/// Print to stdout, dying quietly when the pipe closes: Rust ignores
+/// SIGPIPE at startup, so under `kernelband list | head` a bare
+/// `println!` would panic on EPIPE instead of behaving like a unix CLI.
+fn emit(args: std::fmt::Arguments<'_>) {
+    use std::io::Write;
+    let mut out = std::io::stdout().lock();
+    if out.write_fmt(args).is_err() {
+        std::process::exit(0);
+    }
+}
+
+macro_rules! outln {
+    () => { emit(format_args!("\n")) };
+    ($($arg:tt)*) => {
+        emit(format_args!("{}\n", format_args!($($arg)*)))
+    };
+}
 
 /// Tiny flag parser: `--key value` pairs plus boolean switches.
 struct Args {
@@ -133,40 +165,24 @@ fn parse_mode(s: &str) -> Result<PolicyMode> {
     }
 }
 
-fn repro(exp: &str, iterations: Option<usize>) -> Result<()> {
-    let t20 = iterations.unwrap_or(20);
-    let t40 = iterations.unwrap_or(40);
-    let run = |name: &str| -> Option<String> {
-        match name {
-            "table1" => Some(eval::table1(t20)),
-            "table2" => Some(eval::table2(t20)),
-            "table3" => Some(eval::table3(t20)),
-            "table4" => Some(eval::table4(t20)),
-            "table9" => Some(eval::table9(t20)),
-            "table10" => Some(eval::table10(t20)),
-            "fig2" => Some(eval::fig2(t40)),
-            "fig3" => Some(eval::fig3()),
-            "fig4" => Some(eval::fig4(t40)),
-            "regret" => Some(eval::regret(3200)),
-            _ => None,
-        }
+fn repro(exp: &str, iterations: Option<usize>, threads: usize, out: &str)
+         -> Result<()> {
+    let run_one = |name: &str| -> Result<()> {
+        let report = eval::report(name, iterations, threads)
+            .ok_or_else(|| anyhow!("unknown experiment {name:?}\n{USAGE}"))?;
+        outln!("{}", report.text);
+        let path = report.write_artifact(Path::new(out))?;
+        outln!("[artifact] {}", path.display());
+        Ok(())
     };
     if exp == "all" {
-        for name in [
-            "table1", "table2", "table3", "table4", "table9", "table10",
-            "fig2", "fig3", "fig4", "regret",
-        ] {
-            println!("{}\n", run(name).unwrap());
+        for name in eval::ALL_EXPERIMENTS {
+            run_one(name)?;
+            outln!();
         }
         return Ok(());
     }
-    match run(exp) {
-        Some(text) => {
-            println!("{text}");
-            Ok(())
-        }
-        None => bail!("unknown experiment {exp:?}\n{USAGE}"),
-    }
+    run_one(exp)
 }
 
 fn optimize(task_sub: &str, device: Device, llm_profile: LlmProfile,
@@ -177,7 +193,7 @@ fn optimize(task_sub: &str, device: Device, llm_profile: LlmProfile,
         .iter()
         .find(|t| t.name.contains(task_sub))
         .ok_or_else(|| anyhow!("no task matching {task_sub:?}"))?;
-    println!(
+    outln!(
         "task {} [{} / {:?}] on {} with {}",
         task.name,
         task.category.name(),
@@ -192,7 +208,7 @@ fn optimize(task_sub: &str, device: Device, llm_profile: LlmProfile,
     let trace =
         KernelBand::new(cfg).optimize(task, &engine, &llm, &Rng::new(seed));
     for r in &trace.records {
-        println!(
+        outln!(
             "  t={:>2} cluster={} strategy={:<16} verdict={}{} reward={:.3} best={:.3}x",
             r.t,
             r.cluster,
@@ -203,7 +219,7 @@ fn optimize(task_sub: &str, device: Device, llm_profile: LlmProfile,
             r.best_speedup_so_far.max(1.0),
         );
     }
-    println!(
+    outln!(
         "result: correct={} best_speedup={:.3}x cost=${:.3} ncu_runs={}",
         trace.correct(),
         trace.best_speedup(),
@@ -215,7 +231,7 @@ fn optimize(task_sub: &str, device: Device, llm_profile: LlmProfile,
 
 fn pjrt(artifacts: &str, budget: usize) -> Result<()> {
     let rt = Runtime::load(artifacts)?;
-    println!(
+    outln!(
         "PJRT platform: {} | {} artifacts",
         rt.platform(),
         rt.manifest().artifacts.len()
@@ -225,13 +241,13 @@ fn pjrt(artifacts: &str, budget: usize) -> Result<()> {
     let mut rng = Rng::new(0).split("pjrt-cli", 0);
     for op in ops {
         let out = bench.bandit_search(&op, budget, &mut rng)?;
-        println!(
+        outln!(
             "\nop {op}: reference {:.3} ms, {} evaluations",
             out.reference_latency_s * 1e3,
             out.evaluations()
         );
         for v in &out.tried {
-            println!(
+            outln!(
                 "  {:<28} {}{} {:>9.3} ms  speedup {:.2}x",
                 v.name,
                 if v.verdict.call_ok { "C" } else { "-" },
@@ -241,15 +257,15 @@ fn pjrt(artifacts: &str, budget: usize) -> Result<()> {
             );
         }
         if let Some(best) = &out.best {
-            println!("  BEST: {} at {:.2}x", best.name, best.speedup);
+            outln!("  BEST: {} at {:.2}x", best.name, best.speedup);
         }
     }
     Ok(())
 }
 
-fn serve(jobs: usize, iterations: usize) -> Result<()> {
+fn serve(jobs: usize, iterations: usize, out: Option<&str>) -> Result<()> {
     let report = OptimizationService::default().run(jobs, iterations);
-    println!(
+    outln!(
         "service: {} jobs x {} iterations  wall {:.1}s (modeled)  \
          serial-equivalent {:.1}s  batching speedup {:.1}x",
         jobs,
@@ -258,20 +274,40 @@ fn serve(jobs: usize, iterations: usize) -> Result<()> {
         report.serial_equivalent_s,
         report.batching_speedup()
     );
-    println!(
+    outln!(
         "gateway: {} requests in {} batches (max batch {})",
         report.gateway_requests, report.gateway_batches,
         report.gateway_max_batch
     );
+    if let Some(dir) = out {
+        let json = Json::obj(vec![
+            ("schema_version", Json::num(1.0)),
+            ("experiment", Json::str("serve")),
+            ("jobs", Json::num(jobs as f64)),
+            ("iterations", Json::num(iterations as f64)),
+            ("wall_model_s", Json::num(report.wall_model_s)),
+            ("serial_equivalent_s", Json::num(report.serial_equivalent_s)),
+            ("batching_speedup", Json::num(report.batching_speedup())),
+            ("gateway_requests", Json::num(report.gateway_requests as f64)),
+            ("gateway_batches", Json::num(report.gateway_batches as f64)),
+            ("gateway_max_batch", Json::num(report.gateway_max_batch as f64)),
+        ]);
+        // reuse the repro artifact convention (BENCH_<name>.json,
+        // pretty + trailing newline) instead of duplicating it here
+        let artifact =
+            ReproReport { name: "serve".into(), text: String::new(), json };
+        let path = artifact.write_artifact(Path::new(dir))?;
+        outln!("[artifact] {}", path.display());
+    }
     Ok(())
 }
 
 fn list(subset: bool) -> Result<()> {
     let full = Suite::full(eval::EXPERIMENT_SEED);
     let suite = if subset { full.subset50() } else { full };
-    println!("{} tasks", suite.len());
+    outln!("{} tasks", suite.len());
     for t in &suite.tasks {
-        println!(
+        outln!(
             "  [{:>3}] {:<36} {:<22} {:?} shapes={} torch={}",
             t.id,
             t.name,
@@ -285,14 +321,9 @@ fn list(subset: bool) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    // behave like a unix CLI under `| head`: die silently on SIGPIPE
-    // instead of panicking on a broken stdout
-    unsafe {
-        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
-    }
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
-        print!("{USAGE}");
+        emit(format_args!("{USAGE}"));
         return Ok(());
     };
     let rest = &argv[1..];
@@ -305,7 +336,12 @@ fn main() -> Result<()> {
                 .ok_or_else(|| anyhow!("repro needs an experiment\n{USAGE}"))?;
             let iters = args.get("iterations").map(|v| v.parse()).transpose()
                 .map_err(|_| anyhow!("--iterations: bad number"))?;
-            repro(exp, iters)
+            repro(
+                exp,
+                iters,
+                args.get_usize("threads", 0)?,
+                args.get("out").unwrap_or("out"),
+            )
         }
         "optimize" => {
             let args = Args::parse(rest, &[])?;
@@ -327,14 +363,18 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let args = Args::parse(rest, &[])?;
-            serve(args.get_usize("jobs", 16)?, args.get_usize("iterations", 3)?)
+            serve(
+                args.get_usize("jobs", 16)?,
+                args.get_usize("iterations", 3)?,
+                args.get("out"),
+            )
         }
         "list" => {
             let args = Args::parse(rest, &["subset"])?;
             list(args.has("subset"))
         }
         "help" | "--help" | "-h" => {
-            print!("{USAGE}");
+            emit(format_args!("{USAGE}"));
             Ok(())
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),

@@ -339,37 +339,34 @@ impl OptimizationService {
     /// Latencies are scaled by [`TIME_SCALE`], so the run measures the
     /// pipeline's *shape* — batching efficiency, overlap, backpressure —
     /// in milliseconds of real time.
+    ///
+    /// Job fan-out rides the same scoped-thread machinery as the
+    /// experiment runner ([`crate::util::par`]): `spawn_map` gives every
+    /// job a dedicated thread so all jobs block on the gateway at once,
+    /// which is what keeps its batching window full.
     pub fn run(&self, jobs: usize, iterations: usize) -> ServiceReport {
-        let gateway: Arc<BatchedLlmGateway<usize>> =
-            Arc::new(BatchedLlmGateway::spawn(self.gateway_config));
+        let gateway: BatchedLlmGateway<usize> =
+            BatchedLlmGateway::spawn(self.gateway_config);
         let tm = self.time_model;
         let t0 = Instant::now();
-        let reports: Vec<JobReport> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..jobs)
-                .map(|job_id| {
-                    let gw = gateway.clone();
-                    scope.spawn(move || {
-                        let j0 = Instant::now();
-                        for _ in 0..iterations {
-                            // the iteration's chained LLM calls, batched
-                            let _ = gw.call(job_id);
-                            // compile + execute + amortized profiling
-                            scaled_sleep(
-                                tm.compile_s + tm.exec_s
-                                    + tm.profile_amortized_s,
-                            );
-                        }
-                        JobReport {
-                            job_id,
-                            iterations,
-                            wall_model_s: j0.elapsed().as_secs_f64()
-                                / TIME_SCALE,
-                        }
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
+        let job_ids: Vec<usize> = (0..jobs).collect();
+        let reports: Vec<JobReport> =
+            crate::util::par::spawn_map(&job_ids, |_, &job_id| {
+                let j0 = Instant::now();
+                for _ in 0..iterations {
+                    // the iteration's chained LLM calls, batched
+                    let _ = gateway.call(job_id);
+                    // compile + execute + amortized profiling
+                    scaled_sleep(
+                        tm.compile_s + tm.exec_s + tm.profile_amortized_s,
+                    );
+                }
+                JobReport {
+                    job_id,
+                    iterations,
+                    wall_model_s: j0.elapsed().as_secs_f64() / TIME_SCALE,
+                }
+            });
         let wall_model_s = t0.elapsed().as_secs_f64() / TIME_SCALE;
         ServiceReport {
             jobs: reports,

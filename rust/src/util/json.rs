@@ -1,9 +1,16 @@
-//! Minimal strict JSON parser — enough for `artifacts/manifest.json`.
+//! Minimal strict JSON parser and writer.
 //!
-//! Supports the full JSON grammar (objects, arrays, strings with escape
-//! sequences, numbers, booleans, null); numbers are parsed as f64, which
-//! is exact for every integer the AOT manifest emits (< 2^53). Errors
-//! carry byte offsets for debuggability.
+//! Parsing covers the full JSON grammar (objects, arrays, strings with
+//! escape sequences, numbers, booleans, null); numbers are parsed as
+//! f64, which is exact for every integer the AOT manifest emits
+//! (< 2^53). Errors carry byte offsets for debuggability.
+//!
+//! Writing ([`Json::dump`] / [`Json::pretty`]) is the output half used
+//! by the experiment runner's `BENCH_*.json` result artifacts: object
+//! keys serialize in sorted (BTreeMap) order and floats use Rust's
+//! shortest-roundtrip formatting, so serialization is byte-deterministic
+//! and `parse(dump(j)) == j` for every finite value. Non-finite numbers
+//! (NaN geomeans of empty strata) serialize as `null`.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -62,6 +69,141 @@ impl Json {
     pub fn f64_field(&self, key: &str) -> f64 {
         self.get(key).and_then(Json::as_f64).unwrap_or(0.0)
     }
+
+    // --- construction helpers (result-artifact building) ---------------
+
+    /// A string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// A numeric value; non-finite inputs (NaN geomeans) become `null`.
+    pub fn num(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// An object from `(key, value)` pairs (keys serialize sorted).
+    pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            entries
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Insert a key into an object in place; debug-panics on non-objects.
+    pub fn insert(&mut self, key: &str, value: Json) {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), value);
+            }
+            _ => debug_assert!(false, "Json::insert on a non-object"),
+        }
+    }
+
+    // --- serialization -------------------------------------------------
+
+    /// Compact serialization (no whitespace), byte-deterministic.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Pretty serialization with 2-space indentation, byte-deterministic.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(out, *n),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                if map.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_str(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(width) = indent {
+        out.push('\n');
+        for _ in 0..width * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_num(out: &mut String, n: f64) {
+    if n.is_finite() {
+        // f64 Display is shortest-roundtrip and never uses exponent
+        // notation, so the output is valid JSON and parses back exactly.
+        out.push_str(&format!("{n}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn write_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse error with byte offset.
@@ -345,6 +487,71 @@ mod tests {
     fn error_carries_offset() {
         let err = parse("[1, x]").unwrap_err();
         assert_eq!(err.offset, 4);
+    }
+
+    #[test]
+    fn dump_serializes_scalars_compactly() {
+        assert_eq!(Json::Null.dump(), "null");
+        assert_eq!(Json::Bool(true).dump(), "true");
+        assert_eq!(Json::num(1.0).dump(), "1");
+        assert_eq!(Json::num(0.25).dump(), "0.25");
+        assert_eq!(Json::str("hi").dump(), "\"hi\"");
+        assert_eq!(
+            Json::obj(vec![("b", Json::num(2.0)), ("a", Json::num(1.0))])
+                .dump(),
+            "{\"a\":1,\"b\":2}" // BTreeMap: sorted keys
+        );
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::num(f64::NAN), Json::Null);
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let original = Json::str("a\n\t\"\\ \u{1}é");
+        let dumped = original.dump();
+        assert_eq!(parse(&dumped).unwrap(), original);
+    }
+
+    #[test]
+    fn writer_parser_roundtrip_compact_and_pretty() {
+        let v = Json::obj(vec![
+            ("experiment", Json::str("table1")),
+            ("iterations", Json::num(20.0)),
+            ("geomean", Json::num(1.2345678901234567)),
+            ("failed_geomean", Json::num(f64::NAN)),
+            ("cells", Json::Arr(vec![
+                Json::obj(vec![
+                    ("device", Json::str("H20")),
+                    ("correct_pct", Json::num(87.5)),
+                    ("curve", Json::Arr(vec![
+                        Json::num(1.0),
+                        Json::num(1.5),
+                    ])),
+                ]),
+                Json::Arr(vec![]),
+                Json::obj(vec![]),
+            ])),
+        ]);
+        let reparsed = parse(&v.dump()).unwrap();
+        assert_eq!(reparsed, v);
+        let pretty = v.pretty();
+        assert_eq!(parse(&pretty).unwrap(), v);
+        assert!(pretty.contains('\n'));
+        // identical structure serializes to identical bytes
+        assert_eq!(v.dump(), reparsed.dump());
+    }
+
+    #[test]
+    fn insert_extends_objects() {
+        let mut v = Json::obj(vec![("a", Json::num(1.0))]);
+        v.insert("b", Json::str("x"));
+        assert_eq!(v.str_field("b").unwrap(), "x");
+        assert_eq!(v.f64_field("a"), 1.0);
     }
 
     #[test]

@@ -1,12 +1,13 @@
 //! In-crate replacements for the usual third-party utilities.
 //!
-//! The build environment is fully offline with only the `xla` crate's
-//! dependency closure vendored, so the pieces a production crate would
-//! pull from crates.io are implemented here, scoped to exactly what this
-//! system needs:
+//! The workspace's only external dependency is `anyhow`, so the pieces
+//! a production crate would pull from crates.io are implemented here,
+//! scoped to exactly what this system needs:
 //!
-//! * [`json`] — a strict, minimal JSON parser for `artifacts/manifest.json`
+//! * [`json`] — a strict, minimal JSON parser + deterministic writer
+//!   (`artifacts/manifest.json` in, `BENCH_*.json` result artifacts out)
 //! * [`par`] — deterministic scoped-thread parallel map (rayon stand-in)
+//!   plus a one-thread-per-item fan-out for the service layer
 //! * [`bench`] — a criterion-style timing harness for `cargo bench`
 
 pub mod bench;

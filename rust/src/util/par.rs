@@ -62,6 +62,32 @@ struct SlicePtr<R>(*mut Option<R>);
 unsafe impl<R: Send> Send for SlicePtr<R> {}
 unsafe impl<R: Send> Sync for SlicePtr<R> {}
 
+/// Map `f` over `items` with one dedicated OS thread per item.
+///
+/// Unlike [`parallel_map`], which multiplexes items over a bounded
+/// worker pool, every item here owns a thread for its whole lifetime —
+/// the right shape for latency-bound jobs that block on shared
+/// infrastructure (the optimization service's batched LLM gateway needs
+/// *all* jobs submitting concurrently to fill its batching window; a
+/// pooled worker that ran two jobs back-to-back would serialize them
+/// and starve the batch). Output order matches input order.
+pub fn spawn_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = items
+            .iter()
+            .enumerate()
+            .map(|(i, t)| scope.spawn(move || f(i, t)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +119,55 @@ mod tests {
         let items = vec!["a"; 64];
         let out = parallel_map(&items, 6, |i, _| i);
         assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_across_1_2_8_threads() {
+        // per-item work draws from a split RNG keyed by (item, index) —
+        // the experiment runner's pattern — so outputs must be invariant
+        // to the degree of parallelism, bit for bit.
+        use crate::rng::Rng;
+        let items: Vec<u64> = (0..64).collect();
+        let run = |threads: usize| -> Vec<f64> {
+            parallel_map(&items, threads, |i, &x| {
+                let mut rng = Rng::new(x).split("par-test", i as u64);
+                let mut acc = 0.0;
+                for _ in 0..16 {
+                    acc += rng.uniform();
+                }
+                acc
+            })
+        };
+        let t1 = run(1);
+        let t2 = run(2);
+        let t8 = run(8);
+        assert_eq!(t1, t2);
+        assert_eq!(t1, t8);
+    }
+
+    #[test]
+    fn spawn_map_preserves_order_and_indices() {
+        let items: Vec<usize> = (0..12).collect();
+        let out = spawn_map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * 3
+        });
+        assert_eq!(out, (0..12).map(|x| x * 3).collect::<Vec<_>>());
+        let empty: Vec<u32> = vec![];
+        assert!(spawn_map(&empty, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn spawn_map_runs_every_item_on_its_own_thread() {
+        // all items rendezvous on one barrier: this can only complete if
+        // every item really has a dedicated live thread.
+        use std::sync::Barrier;
+        let items: Vec<usize> = (0..8).collect();
+        let barrier = Barrier::new(items.len());
+        let out = spawn_map(&items, |i, &x| {
+            barrier.wait();
+            i + x
+        });
+        assert_eq!(out, (0..8).map(|x| x * 2).collect::<Vec<_>>());
     }
 }

@@ -1,0 +1,180 @@
+//! ExperimentRunner + result-artifact integration tests: thread-count
+//! invariance (the tier-1 acceptance bar for the parallel refactor),
+//! runner ↔ `Method::run` parity, and JSON round-trips on the
+//! `BENCH_*.json` schema.
+
+use kernelband::eval::{self, CellSpec, ExperimentRunner, Method};
+use kernelband::gpu_model::Device;
+use kernelband::llm::LlmProfile;
+use kernelband::policy::PolicyMode;
+use kernelband::util::json;
+use kernelband::workload::Suite;
+
+fn tiny_suite() -> Suite {
+    let full = Suite::full(eval::EXPERIMENT_SEED);
+    Suite { tasks: full.tasks.into_iter().step_by(23).collect() }
+}
+
+#[test]
+fn runner_results_invariant_to_thread_count() {
+    let suite = tiny_suite();
+    let cells = vec![
+        CellSpec::new(
+            Method::KernelBand(PolicyMode::Full, 3),
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            8,
+            7,
+        ),
+        CellSpec::new(Method::BoN, Device::A100, LlmProfile::Gpt5, 8, 7),
+        CellSpec::new(
+            Method::Geak,
+            Device::Rtx4090,
+            LlmProfile::Gemini3Flash,
+            8,
+            7,
+        ),
+    ];
+    let one = ExperimentRunner::new(1).run(&suite, &cells);
+    let two = ExperimentRunner::new(2).run(&suite, &cells);
+    let eight = ExperimentRunner::new(8).run(&suite, &cells);
+    for ((a, b), c) in one.iter().zip(&two).zip(&eight) {
+        // bit-identical metrics, serialized bytes included
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+        assert_eq!(a.to_json().dump(), c.to_json().dump());
+        for ((ta, tb), tc) in a.traces.iter().zip(&b.traces).zip(&c.traces) {
+            assert_eq!(ta.best_id, tb.best_id);
+            assert_eq!(ta.best_speedup(), tc.best_speedup());
+            assert_eq!(ta.total_cost_usd(), tb.total_cost_usd());
+        }
+    }
+}
+
+#[test]
+fn runner_matches_method_run() {
+    // the runner's flattened fan-out derives exactly the RNG streams
+    // Method::run derives, so both paths agree trace for trace
+    let suite = tiny_suite();
+    let m = Method::KernelBand(PolicyMode::Full, 3);
+    let direct = m.run(&suite, Device::H20, LlmProfile::DeepSeekV32, 8, 7);
+    let cells =
+        vec![CellSpec::new(m, Device::H20, LlmProfile::DeepSeekV32, 8, 7)];
+    let via = ExperimentRunner::new(2).run(&suite, &cells);
+    assert_eq!(direct.len(), via[0].traces.len());
+    for (d, v) in direct.iter().zip(&via[0].traces) {
+        assert_eq!(d.task_id, v.task_id);
+        assert_eq!(d.best_id, v.best_id);
+        assert_eq!(d.candidates.len(), v.candidates.len());
+        assert_eq!(d.best_speedup(), v.best_speedup());
+        assert_eq!(d.total_cost_usd(), v.total_cost_usd());
+    }
+}
+
+#[test]
+fn method_run_threads_is_thread_invariant() {
+    let suite = tiny_suite();
+    let m = Method::KernelBand(PolicyMode::Full, 3);
+    let t1 =
+        m.run_threads(&suite, Device::H20, LlmProfile::DeepSeekV32, 6, 3, 1);
+    let t8 =
+        m.run_threads(&suite, Device::H20, LlmProfile::DeepSeekV32, 6, 3, 8);
+    for (a, b) in t1.iter().zip(&t8) {
+        assert_eq!(a.best_speedup(), b.best_speedup());
+        assert_eq!(a.candidates.len(), b.candidates.len());
+    }
+}
+
+#[test]
+fn table_report_artifact_bit_identical_across_threads() {
+    // the acceptance bar: the BENCH_*.json artifact is byte-identical
+    // for --threads 1 and --threads 8 at the same seed
+    let a = eval::table3_report(2, 1);
+    let b = eval::table3_report(2, 8);
+    assert_eq!(a.text, b.text);
+    assert_eq!(a.json.dump(), b.json.dump());
+    assert_eq!(a.json.pretty(), b.json.pretty());
+}
+
+#[test]
+fn artifact_roundtrips_through_parser() {
+    let rep = eval::table3_report(3, 4);
+    let parsed = json::parse(&rep.json.dump()).expect("compact parses");
+    assert_eq!(parsed, rep.json);
+    let pretty = json::parse(&rep.json.pretty()).expect("pretty parses");
+    assert_eq!(pretty, rep.json);
+    // schema essentials downstream consumers rely on
+    assert_eq!(parsed.str_field("experiment").unwrap(), "table3");
+    assert_eq!(parsed.f64_field("schema_version"), 1.0);
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert!(!cells.is_empty());
+    let metrics = cells[0].get("metrics").unwrap();
+    for key in [
+        "tasks",
+        "correct_pct",
+        "fast1_pct",
+        "geomean_fallback",
+        "total_cost_usd",
+    ] {
+        assert!(metrics.get(key).is_some(), "missing metrics.{key}");
+    }
+    let curve = cells[0].get("curve").unwrap().as_arr().unwrap();
+    assert_eq!(curve.len(), 3);
+}
+
+#[test]
+fn write_artifact_creates_bench_json() {
+    let rep = eval::fig3_report();
+    let dir = std::env::temp_dir().join(format!(
+        "kernelband_artifact_test_{}",
+        std::process::id()
+    ));
+    let path = rep.write_artifact(&dir).expect("write artifact");
+    assert!(path.ends_with("BENCH_fig3.json"), "{path:?}");
+    let text = std::fs::read_to_string(&path).expect("artifact readable");
+    let parsed = json::parse(&text).expect("artifact is valid JSON");
+    assert_eq!(parsed, rep.json);
+    assert_eq!(parsed.str_field("experiment").unwrap(), "fig3");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn report_dispatch_covers_all_experiments() {
+    // every name in ALL_EXPERIMENTS must dispatch AND run: T=1 keeps
+    // the grid experiments cheap, and a name added to the list without
+    // a matching report() arm fails here instead of mid-`repro all`
+    for name in eval::ALL_EXPERIMENTS {
+        let iters = if name == "regret" { Some(100) } else { Some(1) };
+        let rep = eval::report(name, iters, 2)
+            .unwrap_or_else(|| panic!("{name} listed but not dispatchable"));
+        assert_eq!(rep.name, name);
+        assert!(!rep.text.is_empty(), "{name} rendered nothing");
+        let parsed = json::parse(&rep.json.dump())
+            .unwrap_or_else(|e| panic!("{name} artifact invalid: {e}"));
+        assert_eq!(parsed.str_field("experiment").unwrap(), name);
+    }
+    assert!(eval::report("nope", None, 1).is_none());
+    // regret honors --iterations as its horizon
+    let rep = eval::regret_report(100);
+    assert_eq!(rep.name, "regret");
+    let parsed = json::parse(&rep.json.dump()).unwrap();
+    let cps = parsed.get("checkpoints").unwrap().as_arr().unwrap();
+    assert!(!cps.is_empty());
+    assert_eq!(parsed.f64_field("max_t"), 100.0);
+}
+
+#[test]
+fn fig2_artifact_curves_are_monotone_trajectories() {
+    let rep = eval::fig2_report(6, 4);
+    let cells = rep.json.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 6);
+    for cell in cells {
+        let curve = cell.get("curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 6);
+        let vals: Vec<f64> =
+            curve.iter().map(|v| v.as_f64().unwrap()).collect();
+        for w in vals.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "curve regressed: {vals:?}");
+        }
+        assert!(vals[0] >= 1.0);
+    }
+}
