@@ -62,7 +62,7 @@ fn main() {
         let handles: Vec<_> = (0..32)
             .map(|i| {
                 let g = gw.clone();
-                scope.spawn(move || g.call(i))
+                scope.spawn(move || g.call(i).expect("gateway alive"))
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()

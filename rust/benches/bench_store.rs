@@ -1,0 +1,106 @@
+//! Store hot-path benchmark: content-address hashing + cache lookup vs
+//! the simulated compile+exec it replaces.
+//!
+//! The store's value proposition is that a warm run turns every
+//! measurement into `hash + HashMap hit` and every LLM proposal into
+//! `hash + clone`. This bench quantifies that hot path against the
+//! simulated work it elides (roofline evaluation over the task's shape
+//! list; surrogate-LLM proposal) and prints the resulting speedup.
+//! Numbers are recorded in CHANGES.md.
+
+use std::sync::Arc;
+
+use kernelband::engine::{EvalEngine, SimEngine};
+use kernelband::eval;
+use kernelband::gpu_model::{Device, GpuSim};
+use kernelband::llm::{LlmBackend, LlmProfile, PromptMode, ProposalRequest,
+                      SurrogateLlm};
+use kernelband::rng::Rng;
+use kernelband::store::cache::measurement_key;
+use kernelband::store::wrap::{CachedEngine, CachedLlm};
+use kernelband::store::TraceStore;
+use kernelband::strategy::Strategy;
+use kernelband::util::bench::BenchSuite;
+use kernelband::workload::Suite;
+
+fn main() {
+    let bs = BenchSuite::new("store");
+    let suite = Suite::full(eval::EXPERIMENT_SEED);
+    let task = &suite.tasks[0];
+    let cfg = task.naive_config();
+    let sim = GpuSim::new(Device::H20);
+    let device_fp = sim.fingerprint();
+    let mut rng = Rng::new(0);
+
+    // the work a cache hit elides: simulated compile+exec over shapes
+    let engine = SimEngine::new(Device::H20);
+    let sim_stats =
+        bs.bench_throughput("simulated_compile_exec", 1.0, || {
+            let m = engine.measure(task, &cfg, &mut rng);
+            std::hint::black_box(m.total_latency_s);
+        });
+
+    // the replacement: key hash alone…
+    let probe = Rng::new(1).split("m", 3);
+    let hash_stats = bs.bench_throughput("measurement_key_hash", 1.0, || {
+        std::hint::black_box(measurement_key(task, &cfg, device_fp, &probe));
+    });
+
+    // …and hash + lookup through the full CachedEngine path (hot)
+    let store = Arc::new(TraceStore::in_memory());
+    let cached = CachedEngine::new(SimEngine::new(Device::H20), store.clone());
+    let _ = cached.measure(task, &cfg, &mut Rng::new(1).split("m", 3));
+    let hit_stats =
+        bs.bench_throughput("cached_engine_hit", 1.0, || {
+            let m = cached.measure(task, &cfg, &mut Rng::new(1).split("m", 3));
+            std::hint::black_box(m.total_latency_s);
+        });
+
+    // same comparison for the LLM side
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    let parent = cfg;
+    let req = ProposalRequest {
+        task,
+        parent: &parent,
+        mode: PromptMode::Strategy(Strategy::Fusion),
+        sim: &sim,
+        iterative: true,
+    };
+    let llm_sim_stats = bs.bench_throughput("simulated_llm_propose", 1.0, || {
+        std::hint::black_box(llm.propose(&req, &mut rng).cost_usd);
+    });
+    let cached_llm = CachedLlm::new(
+        SurrogateLlm::new(LlmProfile::DeepSeekV32),
+        store.clone(),
+    );
+    let _ = cached_llm.propose(&req, &mut Rng::new(2).split("gen", 5));
+    let llm_hit_stats =
+        bs.bench_throughput("cached_llm_hit", 1.0, || {
+            let p = cached_llm.propose(&req, &mut Rng::new(2).split("gen", 5));
+            std::hint::black_box(p.cost_usd);
+        });
+
+    let ratio = |slow: f64, fast: f64| slow / fast.max(1e-12);
+    println!();
+    println!(
+        "speedup: compile+exec -> key hash          {:>10.1}x",
+        ratio(
+            sim_stats.median.as_secs_f64(),
+            hash_stats.median.as_secs_f64()
+        )
+    );
+    println!(
+        "speedup: compile+exec -> cached-engine hit {:>10.1}x",
+        ratio(
+            sim_stats.median.as_secs_f64(),
+            hit_stats.median.as_secs_f64()
+        )
+    );
+    println!(
+        "speedup: llm propose  -> cached-llm hit    {:>10.1}x",
+        ratio(
+            llm_sim_stats.median.as_secs_f64(),
+            llm_hit_stats.median.as_secs_f64()
+        )
+    );
+}

@@ -170,10 +170,12 @@ pub fn representatives(points: &[Phi], assign: &[usize], centroids: &[Phi])
     reps
 }
 
-impl ClusterBackend for RustKmeans {
-    fn cluster(&self, points: &[Phi], k: usize, rng: &mut Rng) -> Clustering {
-        let k = k.max(1).min(points.len().max(1));
-        let mut centroids = kmeanspp_init(points, k, rng);
+impl RustKmeans {
+    /// Shared tail of both clustering entry points: Lloyd-iterate the
+    /// given centroids, take the final assignment against the converged
+    /// centroids, and pick representatives.
+    fn lloyd_finish(&self, points: &[Phi], mut centroids: Vec<Phi>)
+                    -> Clustering {
         for _ in 0..self.iters {
             lloyd_step(points, &mut centroids);
         }
@@ -184,6 +186,26 @@ impl ClusterBackend for RustKmeans {
         };
         let reps = representatives(points, &assign, &centroids);
         Clustering { assign, centroids, representatives: reps }
+    }
+
+    /// Lloyd iterations from *given* initial centroids instead of
+    /// k-means++ seeding — the warm-start path: a prior session's
+    /// converged centroids (replayed from the trace store) seed the
+    /// first re-clustering, so the frontier partition starts where the
+    /// previous run ended rather than from scratch. `init` is truncated
+    /// to the point count; semantics otherwise match
+    /// [`ClusterBackend::cluster`].
+    pub fn cluster_seeded(&self, points: &[Phi], init: &[Phi]) -> Clustering {
+        assert!(!points.is_empty() && !init.is_empty());
+        let k = init.len().min(points.len());
+        self.lloyd_finish(points, init[..k].to_vec())
+    }
+}
+
+impl ClusterBackend for RustKmeans {
+    fn cluster(&self, points: &[Phi], k: usize, rng: &mut Rng) -> Clustering {
+        let k = k.max(1).min(points.len().max(1));
+        self.lloyd_finish(points, kmeanspp_init(points, k, rng))
     }
 }
 
@@ -293,6 +315,31 @@ mod tests {
         let assign = lloyd_step(&pts, &mut centroids);
         assert!(assign.iter().all(|&a| a == 0));
         assert_eq!(centroids[1], [5.0; PHI_DIM]);
+    }
+
+    #[test]
+    fn seeded_clustering_converges_from_given_centroids() {
+        let pts = two_blobs();
+        // seeds dropped near each blob converge to the blob partition
+        let init = vec![[0.2; PHI_DIM], [0.8; PHI_DIM]];
+        let c = RustKmeans::default().cluster_seeded(&pts, &init);
+        assert_eq!(c.centroids.len(), 2);
+        let a = c.assign[0];
+        assert!(c.assign[..20].iter().all(|&x| x == a));
+        assert!(c.assign[20..].iter().all(|&x| x != a));
+        // deterministic: no RNG is involved at all
+        let c2 = RustKmeans::default().cluster_seeded(&pts, &init);
+        assert_eq!(c.assign, c2.assign);
+        assert_eq!(c.centroids, c2.centroids);
+    }
+
+    #[test]
+    fn seeded_clustering_truncates_to_point_count() {
+        let pts = vec![[0.0; PHI_DIM], [1.0; PHI_DIM]];
+        let init = vec![[0.0; PHI_DIM], [0.5; PHI_DIM], [1.0; PHI_DIM]];
+        let c = RustKmeans::default().cluster_seeded(&pts, &init);
+        assert_eq!(c.centroids.len(), 2);
+        assert!(c.assign.iter().all(|&a| a < 2));
     }
 
     #[test]

@@ -24,6 +24,8 @@ pub mod runner;
 
 pub use runner::{CellResult, CellSpec, ExperimentRunner, ReproReport};
 
+use std::sync::Arc;
+
 use crate::baselines::{BestOfN, Geak, TorchMode};
 use crate::engine::{EvalEngine, SimEngine};
 use crate::gpu_model::{Device, ALL_DEVICES};
@@ -32,6 +34,8 @@ use crate::metrics::{stratified, Aggregate, TaskOutcome};
 use crate::policy::{KernelBand, PolicyConfig, PolicyMode, Trace};
 use crate::rng::Rng;
 use crate::service::{BreakdownRow, TimeModel};
+use crate::store::warm::TaskWarmStart;
+use crate::store::TraceStore;
 use crate::strategy::{ALL_STRATEGIES, NUM_STRATEGIES};
 use crate::util::json::Json;
 use crate::util::par::parallel_map;
@@ -80,6 +84,22 @@ impl Method {
         iterations: usize,
         root: &Rng,
     ) -> Trace {
+        self.run_task_warm(task, engine, llm, iterations, root, None)
+    }
+
+    /// [`Method::run_task`] with optional warm-start state replayed
+    /// from a prior trace. Only KernelBand consumes it (the baselines
+    /// have no arms or clusters to seed); `None` is bit-identical to
+    /// `run_task`.
+    pub fn run_task_warm<E: EvalEngine, L: LlmBackend>(
+        self,
+        task: &TaskSpec,
+        engine: &E,
+        llm: &L,
+        iterations: usize,
+        root: &Rng,
+        warm: Option<&TaskWarmStart>,
+    ) -> Trace {
         match self {
             Method::KernelBand(mode, k) => {
                 let mut cfg = PolicyConfig::with_mode(mode);
@@ -87,7 +107,7 @@ impl Method {
                 if mode != PolicyMode::NoClustering {
                     cfg.clusters = k;
                 }
-                KernelBand::new(cfg).optimize(task, engine, llm, root)
+                KernelBand::new(cfg).optimize_warm(task, engine, llm, root, warm)
             }
             Method::BoN => {
                 BestOfN::new(iterations).optimize(task, engine, llm, root)
@@ -131,24 +151,52 @@ pub fn outcomes(traces: &[Trace]) -> Vec<TaskOutcome> {
     traces.iter().map(|t| t.outcome()).collect()
 }
 
+/// How a grid experiment runs: fan-out width plus the optional
+/// persistent store session ([`crate::store`]). `RunOpts::default()` is
+/// the pre-store behavior (all cores, no session).
+#[derive(Debug, Clone, Default)]
+pub struct RunOpts {
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+    /// Store session shared by every cell of the experiment: caches,
+    /// warm-start, trace emission.
+    pub session: Option<Arc<TraceStore>>,
+}
+
+impl RunOpts {
+    pub fn threads(threads: usize) -> RunOpts {
+        RunOpts { threads, session: None }
+    }
+
+    fn runner(&self) -> ExperimentRunner {
+        ExperimentRunner::new(self.threads).with_session(self.session.clone())
+    }
+}
+
 /// Dispatch an experiment by name at the standard budgets (tables
 /// default to T=20, figures to T=40, regret's horizon to T=3200);
 /// `None` for an unknown name. `threads` bounds the runner fan-out and
 /// is ignored by the analytic/synthetic experiments (fig3, regret).
 pub fn report(exp: &str, iterations: Option<usize>, threads: usize)
               -> Option<ReproReport> {
+    report_opts(exp, iterations, &RunOpts::threads(threads))
+}
+
+/// [`report`] with full run options (store session, warm-start).
+pub fn report_opts(exp: &str, iterations: Option<usize>, opts: &RunOpts)
+                   -> Option<ReproReport> {
     let t20 = iterations.unwrap_or(20);
     let t40 = iterations.unwrap_or(40);
     match exp {
-        "table1" => Some(table1_report(t20, threads)),
-        "table2" => Some(table2_report(t20, threads)),
-        "table3" => Some(table3_report(t20, threads)),
-        "table4" => Some(table4_report(t20, threads)),
-        "table9" => Some(table9_report(t20, threads)),
-        "table10" => Some(table10_report(t20, threads)),
-        "fig2" => Some(fig2_report(t40, threads)),
+        "table1" => Some(table1_report_opts(t20, opts)),
+        "table2" => Some(table2_report_opts(t20, opts)),
+        "table3" => Some(table3_report_opts(t20, opts)),
+        "table4" => Some(table4_report_opts(t20, opts)),
+        "table9" => Some(table9_report_opts(t20, opts)),
+        "table10" => Some(table10_report_opts(t20, opts)),
+        "fig2" => Some(fig2_report_opts(t40, opts)),
         "fig3" => Some(fig3_report()),
-        "fig4" => Some(fig4_report(t40, threads)),
+        "fig4" => Some(fig4_report_opts(t40, opts)),
         "regret" => Some(regret_report(iterations.unwrap_or(3200))),
         _ => None,
     }
@@ -209,6 +257,11 @@ fn fmt_cfg(a: &Aggregate) -> [String; 3] {
 /// Table 1: {RTX 4090, H20, A100} × {BoN, GEAK, KernelBand}, stratified
 /// by difficulty, on the full 183-kernel suite, T = 20.
 pub fn table1_report(iterations: usize, threads: usize) -> ReproReport {
+    table1_report_opts(iterations, &RunOpts::threads(threads))
+}
+
+/// [`table1_report`] with full run options.
+pub fn table1_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED);
     let methods = [
         Method::BoN,
@@ -227,7 +280,7 @@ pub fn table1_report(iterations: usize, threads: usize) -> ReproReport {
             ));
         }
     }
-    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let results = opts.runner().run(&suite, &cells);
     let rows: Vec<Vec<String>> = results
         .iter()
         .map(|r| {
@@ -263,6 +316,11 @@ pub fn table1(iterations: usize) -> String {
 
 /// Table 2: 4 LLM backends × 3 methods on the 50-kernel subset, H20.
 pub fn table2_report(iterations: usize, threads: usize) -> ReproReport {
+    table2_report_opts(iterations, &RunOpts::threads(threads))
+}
+
+/// [`table2_report`] with full run options.
+pub fn table2_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
     let methods = [
         Method::BoN,
@@ -281,7 +339,7 @@ pub fn table2_report(iterations: usize, threads: usize) -> ReproReport {
             ));
         }
     }
-    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let results = opts.runner().run(&suite, &cells);
     let rows: Vec<Vec<String>> = results
         .iter()
         .map(|r| {
@@ -382,9 +440,14 @@ fn kernelband_cell(device: Device, iterations: usize) -> CellSpec {
 
 /// Table 3: strategy risk/reward profiles on H20.
 pub fn table3_report(iterations: usize, threads: usize) -> ReproReport {
+    table3_report_opts(iterations, &RunOpts::threads(threads))
+}
+
+/// [`table3_report`] with full run options.
+pub fn table3_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
     let cells = vec![kernelband_cell(Device::H20, iterations)];
-    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let results = opts.runner().run(&suite, &cells);
     let text = render_table(
         "Table 3 — strategy selection statistics (H20, 50-kernel subset)",
         &["Strategy", "Freq (%)", "Succ (%)", "Best (%)"],
@@ -403,12 +466,17 @@ pub fn table3(iterations: usize) -> String {
 /// Table 10: strategy statistics on H20 vs RTX 4090 (hardware
 /// adaptation, Appendix I).
 pub fn table10_report(iterations: usize, threads: usize) -> ReproReport {
+    table10_report_opts(iterations, &RunOpts::threads(threads))
+}
+
+/// [`table10_report`] with full run options.
+pub fn table10_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
     let cells = vec![
         kernelband_cell(Device::H20, iterations),
         kernelband_cell(Device::Rtx4090, iterations),
     ];
-    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let results = opts.runner().run(&suite, &cells);
     let h20 = strategy_rows(&results[0].traces);
     let rtx = strategy_rows(&results[1].traces);
     let rows: Vec<Vec<String>> = h20
@@ -458,6 +526,11 @@ pub fn table10(iterations: usize) -> String {
 /// Table 4: single-component and framework-level ablations (H20,
 /// 50-kernel subset).
 pub fn table4_report(iterations: usize, threads: usize) -> ReproReport {
+    table4_report_opts(iterations, &RunOpts::threads(threads))
+}
+
+/// [`table4_report`] with full run options.
+pub fn table4_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
     let configs: Vec<(&str, Method)> = vec![
         ("KernelBand (Full)", Method::KernelBand(PolicyMode::Full, 3)),
@@ -496,7 +569,7 @@ pub fn table4_report(iterations: usize, threads: usize) -> ReproReport {
             .with_label(label)
         })
         .collect();
-    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let results = opts.runner().run(&suite, &cells);
     let rows: Vec<Vec<String>> = results
         .iter()
         .map(|r| {
@@ -525,18 +598,24 @@ pub fn table4(iterations: usize) -> String {
 /// Table 9: KernelBand-optimized kernels vs PyTorch eager / inductor /
 /// max-autotune on the 30-kernel torch-comparable subset (H20).
 pub fn table9_report(iterations: usize, threads: usize) -> ReproReport {
-    let suite = Suite::full(EXPERIMENT_SEED).subset50().torch_subset();
-    let engine = SimEngine::new(Device::H20);
-    let cells = vec![kernelband_cell(Device::H20, iterations)];
-    let results = ExperimentRunner::new(threads).run(&suite, &cells);
-    let traces = &results[0].traces;
+    table9_report_opts(iterations, &RunOpts::threads(threads))
+}
+
+/// Geomean speedups of the KernelBand traces over each PyTorch mode,
+/// measured through `engine` — generic so a store session's
+/// [`CachedEngine`](crate::store::wrap::CachedEngine) covers the torch
+/// baselines too (a warm run must re-simulate nothing, and the `[store]`
+/// ledger must count this work).
+fn torch_baseline_rows<E: EvalEngine>(suite: &Suite, traces: &[Trace],
+                                      engine: &E)
+                                      -> (Vec<Vec<String>>, Vec<Json>) {
     let root = Rng::new(EXPERIMENT_SEED).split("torch", 0);
     let mut rows = Vec::new();
     let mut modes_json = Vec::new();
     for mode in [TorchMode::Eager, TorchMode::Inductor, TorchMode::MaxAutotune] {
         let mut log_sum = 0.0;
         for (task, trace) in suite.tasks.iter().zip(traces) {
-            let torch_latency = mode.latency(task, &engine, &root);
+            let torch_latency = mode.latency(task, engine, &root);
             // fallback semantics: if optimization failed, the deployed
             // kernel is the Triton reference
             let best = if trace.correct() {
@@ -557,6 +636,30 @@ pub fn table9_report(iterations: usize, threads: usize) -> ReproReport {
             ("geomean_speedup", Json::num(geomean)),
         ]));
     }
+    (rows, modes_json)
+}
+
+/// [`table9_report`] with full run options.
+pub fn table9_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
+    let suite = Suite::full(EXPERIMENT_SEED).subset50().torch_subset();
+    let cells = vec![kernelband_cell(Device::H20, iterations)];
+    let results = opts.runner().run(&suite, &cells);
+    let traces = &results[0].traces;
+    let (rows, modes_json) = match &opts.session {
+        Some(store) => torch_baseline_rows(
+            &suite,
+            traces,
+            &crate::store::wrap::CachedEngine::new(
+                SimEngine::new(Device::H20),
+                store.clone(),
+            ),
+        ),
+        None => torch_baseline_rows(
+            &suite,
+            traces,
+            &SimEngine::new(Device::H20),
+        ),
+    };
     let text = render_table(
         "Table 9 — speedup over PyTorch baselines (30 kernels, H20, T=20)",
         &["PyTorch Baseline", "Speedup"],
@@ -594,6 +697,11 @@ pub fn scaling_curve(traces: &[Trace]) -> Vec<f64> {
 /// Figure 2: T = 40 scaling for KernelBand K ∈ {1, 2, 3, 5} vs BoN and
 /// GEAK (fallback-mode geomean, 50-kernel subset, H20).
 pub fn fig2_report(iterations: usize, threads: usize) -> ReproReport {
+    fig2_report_opts(iterations, &RunOpts::threads(threads))
+}
+
+/// [`fig2_report`] with full run options.
+pub fn fig2_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
     let methods = [
         Method::KernelBand(PolicyMode::Full, 1),
@@ -615,7 +723,7 @@ pub fn fig2_report(iterations: usize, threads: usize) -> ReproReport {
             )
         })
         .collect();
-    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let results = opts.runner().run(&suite, &cells);
     let series: Vec<(String, Vec<f64>)> = results
         .iter()
         .map(|r| (r.spec.label.clone(), scaling_curve(&r.traces)))
@@ -747,6 +855,11 @@ pub fn speedup_within_budget(trace: &Trace, budget_usd: f64) -> f64 {
 
 /// Figure 4: geomean speedup as a function of API budget per kernel.
 pub fn fig4_report(iterations: usize, threads: usize) -> ReproReport {
+    fig4_report_opts(iterations, &RunOpts::threads(threads))
+}
+
+/// [`fig4_report`] with full run options.
+pub fn fig4_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
     let suite = Suite::full(EXPERIMENT_SEED).subset50();
     let budgets = [0.05, 0.10, 0.15, 0.20, 0.30, 0.40, 0.50];
     let methods = [
@@ -766,7 +879,7 @@ pub fn fig4_report(iterations: usize, threads: usize) -> ReproReport {
             )
         })
         .collect();
-    let results = ExperimentRunner::new(threads).run(&suite, &cells);
+    let results = opts.runner().run(&suite, &cells);
     let budget_geomean = |traces: &[Trace], b: f64| {
         let log_sum: f64 = traces
             .iter()

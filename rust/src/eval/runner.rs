@@ -20,6 +20,7 @@
 //! `--threads 8` (covered by `rust/tests/runner_artifacts.rs`).
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::engine::SimEngine;
 use crate::eval::{outcomes, scaling_curve, Method};
@@ -28,6 +29,9 @@ use crate::llm::{LlmProfile, SurrogateLlm};
 use crate::metrics::{aggregate, stratified, Aggregate};
 use crate::policy::Trace;
 use crate::rng::Rng;
+use crate::store::log::records_for_trace;
+use crate::store::wrap::{CachedEngine, CachedLlm};
+use crate::store::TraceStore;
 use crate::util::json::Json;
 use crate::util::par::parallel_map;
 use crate::workload::Suite;
@@ -134,16 +138,28 @@ pub fn experiment_json(name: &str, iterations: usize, seed: u64,
 }
 
 /// Fans (cell × task) work items through the deterministic parallel map.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Default)]
 pub struct ExperimentRunner {
     /// Worker threads (0 = available parallelism). Results are invariant
     /// to this value.
     pub threads: usize,
+    /// Optional persistent store session: when set, every measurement
+    /// and LLM proposal routes through the content-addressed caches
+    /// ([`crate::store::wrap`]), warm-start state is applied per task,
+    /// and the run's traces are queued on the store's append-only log.
+    pub session: Option<Arc<TraceStore>>,
 }
 
 impl ExperimentRunner {
     pub fn new(threads: usize) -> ExperimentRunner {
-        ExperimentRunner { threads }
+        ExperimentRunner { threads, session: None }
+    }
+
+    /// Attach (or detach) a store session.
+    pub fn with_session(mut self, session: Option<Arc<TraceStore>>)
+                        -> ExperimentRunner {
+        self.session = session;
+        self
     }
 
     /// Run every cell of the grid over every task of `suite`.
@@ -152,38 +168,95 @@ impl ExperimentRunner {
     /// `parallel_map`; each item rebuilds its engine/LLM substrate
     /// (both are cheap value types) and derives its RNG from the cell
     /// seed + method lineage, so the traces returned for a cell are
-    /// bit-identical to `Method::run` on the same inputs.
+    /// bit-identical to `Method::run` on the same inputs — with or
+    /// without a store session, cold or warm (cache keys embed the same
+    /// seed lineages the substrates consume).
+    ///
+    /// Trace-log emission is sharded per cell and merged in canonical
+    /// cell order (then task order) after the parallel fan-in, so the
+    /// appended log bytes are invariant to `threads`.
     pub fn run(&self, suite: &Suite, cells: &[CellSpec]) -> Vec<CellResult> {
         let items: Vec<(usize, usize)> = (0..cells.len())
             .flat_map(|c| (0..suite.len()).map(move |t| (c, t)))
             .collect();
+        // each item reports whether it performed any *new* simulated
+        // work (false = fully replayed from cache)
         let traces = parallel_map(&items, self.threads, |_, &(c, t)| {
             let spec = &cells[c];
-            let engine = SimEngine::new(spec.device);
-            let llm = SurrogateLlm::new(spec.llm);
+            let task = &suite.tasks[t];
             let root = Rng::new(spec.seed).split("method", spec.method.tag());
-            spec.method.run_task(
-                &suite.tasks[t],
-                &engine,
-                &llm,
-                spec.iterations,
-                &root,
-            )
+            match &self.session {
+                None => {
+                    let engine = SimEngine::new(spec.device);
+                    let llm = SurrogateLlm::new(spec.llm);
+                    let trace = spec.method.run_task(
+                        task, &engine, &llm, spec.iterations, &root,
+                    );
+                    (trace, true)
+                }
+                Some(store) => {
+                    let engine = CachedEngine::new(
+                        SimEngine::new(spec.device),
+                        store.clone(),
+                    );
+                    let llm = CachedLlm::new(
+                        SurrogateLlm::new(spec.llm),
+                        store.clone(),
+                    );
+                    let trace = spec.method.run_task_warm(
+                        task,
+                        &engine,
+                        &llm,
+                        spec.iterations,
+                        &root,
+                        store.warm_for(
+                            spec.device.name(),
+                            spec.llm.spec().name,
+                            &task.name,
+                        ),
+                    );
+                    let new_work =
+                        engine.local_sims() + llm.local_sims() > 0;
+                    (trace, new_work)
+                }
+            }
         });
         let mut it = traces.into_iter();
-        cells
+        let results: Vec<(CellResult, Vec<bool>)> = cells
             .iter()
             .map(|spec| {
-                let cell_traces: Vec<Trace> =
-                    it.by_ref().take(suite.len()).collect();
+                let (cell_traces, new_work): (Vec<Trace>, Vec<bool>) =
+                    it.by_ref().take(suite.len()).unzip();
                 let agg = aggregate(&outcomes(&cell_traces));
-                CellResult {
-                    spec: spec.clone(),
-                    traces: cell_traces,
-                    aggregate: agg,
-                }
+                (
+                    CellResult {
+                        spec: spec.clone(),
+                        traces: cell_traces,
+                        aggregate: agg,
+                    },
+                    new_work,
+                )
             })
-            .collect()
+            .collect();
+        if let Some(store) = &self.session {
+            // a fully-replayed (task, cell) trace contributes no new
+            // history — appending it would only grow the log with
+            // byte-identical duplicates on every overlapping rerun
+            for (res, new_work) in &results {
+                for (trace, &fresh) in res.traces.iter().zip(new_work) {
+                    if fresh {
+                        store.append_trace(records_for_trace(
+                            &res.spec.label,
+                            res.spec.device.name(),
+                            res.spec.llm.spec().name,
+                            res.spec.seed,
+                            trace,
+                        ));
+                    }
+                }
+            }
+        }
+        results.into_iter().map(|(res, _)| res).collect()
     }
 }
 

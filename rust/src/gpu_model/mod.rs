@@ -179,6 +179,29 @@ impl GpuSim {
         GpuSim { profile: device.profile(), noise_sigma: 0.0 }
     }
 
+    /// Stable fingerprint of the simulated hardware: every
+    /// [`DeviceProfile`] field plus the noise model. Part of the
+    /// persistent store's content-address ([`crate::store`]) — a
+    /// measurement cached on one device (or at one noise setting, or
+    /// before a profile retune) is never served for another.
+    pub fn fingerprint(&self) -> u64 {
+        let p = &self.profile;
+        crate::util::hash::KeyHasher::new("gpu")
+            .str(p.device.name())
+            .f64(p.peak_tflops)
+            .f64(p.dram_gbps)
+            .f64(p.l2_mb)
+            .f64(p.l2_bw_factor)
+            .u64(p.sm_count as u64)
+            .u64(p.regfile_per_sm as u64)
+            .f64(p.smem_per_sm_kb)
+            .u64(p.max_threads_per_sm as u64)
+            .f64(p.launch_us)
+            .u64(p.optimal_tile_idx as u64)
+            .f64(self.noise_sigma)
+            .finish()
+    }
+
     /// The device+task optimal tile index for each of (m, n, k).
     pub fn optimal_tile(&self, task: &TaskSpec) -> (i8, i8, i8) {
         let base = (self.profile.optimal_tile_idx + task.latent.tile_bias)

@@ -42,6 +42,7 @@
 //! | [`engine`] | `EvalEngine` trait: simulated vs PJRT-real measurement |
 //! | [`runtime`] | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
 //! | [`service`] | optimization service: batched LLM scheduler (Fig. 3) |
+//! | [`store`] | persistent trace store: content-addressed kernel cache, append-only trace log, cross-session warm-start |
 //! | [`eval`] | experiment harnesses regenerating every paper table/figure; [`eval::ExperimentRunner`] fans the grid out in parallel and emits `BENCH_*.json` artifacts |
 
 pub mod bandit;
@@ -59,6 +60,7 @@ pub mod profiler;
 pub mod rng;
 pub mod runtime;
 pub mod service;
+pub mod store;
 pub mod strategy;
 pub mod util;
 pub mod verify;

@@ -195,6 +195,41 @@ const INTRACTABLE_FLOOR: f64 = 0.015;
 /// ~8 calls × ~87 s ≈ the 13.4-min serial iteration with LLM at 87%.
 pub const CALLS_PER_ITERATION: u64 = 8;
 
+/// Cache-hit bypass accounting for the Fig.-3/4 cost model.
+///
+/// When the persistent store ([`crate::store`]) serves a proposal from
+/// its content-addressed cache, the whole chained plan/generate/repair
+/// round-trip — the 87%-of-wall-clock slice of Fig. 3a and the
+/// dollars-per-kernel axis of Fig. 4 — is bypassed. The `Proposal`
+/// still carries the cost/latency the call *would* have had (so
+/// replayed artifacts stay byte-identical); this module accounts for
+/// what the bypass saved, in integer micro-units so the counters can
+/// live in lock-free atomics.
+pub mod accounting {
+    use super::Proposal;
+
+    /// Spend and latency bypassed by one proposal-cache hit.
+    #[derive(Debug, Clone, Copy, Default)]
+    pub struct BypassSavings {
+        /// Micro-USD of API spend avoided.
+        pub cost_micro_usd: u64,
+        /// Milliseconds of *serial* LLM latency avoided (the Fig.-3a
+        /// component; the batched pipeline saves its batched slice).
+        pub serial_ms: u64,
+    }
+
+    /// Savings of serving `p` from cache instead of calling the model.
+    /// The session-wide aggregation lives in the store's atomic
+    /// counters ([`crate::store::StoreStats`]), fed by
+    /// [`crate::store::wrap::CachedLlm`] on every hit.
+    pub fn bypass_savings(p: &Proposal) -> BypassSavings {
+        BypassSavings {
+            cost_micro_usd: (p.cost_usd * 1e6).max(0.0) as u64,
+            serial_ms: (p.latency_s * 1e3).max(0.0) as u64,
+        }
+    }
+}
+
 /// Abstract LLM interface — swap in a real API client here.
 pub trait LlmBackend {
     fn spec(&self) -> &ModelSpec;
@@ -592,6 +627,26 @@ mod tests {
         }
         // prior puts ~0.35 weight on tiling for GEMM — far above uniform
         assert!(tiling > 200, "tiling picks = {tiling}");
+    }
+
+    #[test]
+    fn bypass_savings_match_proposal_accounting() {
+        let p = Proposal {
+            outcome: GenOutcome::Ok,
+            config: KernelConfig::naive(),
+            tokens_in: 1000,
+            tokens_out: 500,
+            cost_usd: 0.0123,
+            latency_s: 700.5,
+        };
+        let s = accounting::bypass_savings(&p);
+        assert_eq!(s.cost_micro_usd, 12_300);
+        assert_eq!(s.serial_ms, 700_500);
+        // negative inputs must not wrap the unsigned micro-units
+        let free = Proposal { cost_usd: -0.5, latency_s: -1.0, ..p };
+        let z = accounting::bypass_savings(&free);
+        assert_eq!(z.cost_micro_usd, 0);
+        assert_eq!(z.serial_ms, 0);
     }
 
     #[test]

@@ -3,12 +3,14 @@
 //! ```text
 //! kernelband repro <table1|table2|table3|table4|table9|table10|fig2|fig3|fig4|regret|all>
 //!            [--iterations N] [--threads N] [--out DIR]
+//!            [--store DIR] [--warm-start TRACE]
 //! kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
 //!            [--llm deepseek|gpt5|claude|gemini] [--mode full|no-clustering|
 //!            no-profiling|llm-select|raw-profiling|no-strategy]
 //!            [--iterations N] [--seed S]
 //! kernelband pjrt [--artifacts DIR] [--budget N]
-//! kernelband serve [--jobs N] [--iterations N] [--out DIR]
+//! kernelband serve [--jobs N] [--iterations N] [--out DIR] [--store DIR]
+//! kernelband trace <record|replay|stats> …
 //! kernelband list [--subset]
 //! ```
 //!
@@ -18,15 +20,26 @@
 //! a machine-readable `BENCH_<exp>.json` artifact under `--out`
 //! (default `out/`) next to the rendered text table.
 //!
+//! `--store DIR` attaches the persistent trace store
+//! ([`kernelband::store`]): measurements and LLM proposals already
+//! recorded there are served from the content-addressed cache (a second
+//! identical run performs zero simulated compile/exec steps and zero
+//! LLM round-trips, with byte-identical artifacts), and the run's
+//! bandit traces append to `DIR/trace.jsonl`. `--warm-start TRACE`
+//! replays a prior trace into bandit priors and cluster seeds. The
+//! `trace` subcommand records single-task traces and inspects/replays
+//! existing logs.
+//!
 //! Argument parsing is hand-rolled (the workspace's only dependency is
 //! `anyhow`); each flag takes a value except `--subset`.
 
 use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use kernelband::engine::pjrt::PjrtBench;
-use kernelband::eval::ReproReport;
+use kernelband::eval::{ReproReport, RunOpts};
 use kernelband::engine::SimEngine;
 use kernelband::eval;
 use kernelband::gpu_model::Device;
@@ -35,6 +48,9 @@ use kernelband::policy::{KernelBand, PolicyConfig, PolicyMode};
 use kernelband::rng::Rng;
 use kernelband::runtime::Runtime;
 use kernelband::service::OptimizationService;
+use kernelband::store::log::records_for_trace;
+use kernelband::store::wrap::{CachedEngine, CachedLlm};
+use kernelband::store::{log as trace_log, warm::WarmIndex, TraceStore};
 use kernelband::util::json::Json;
 use kernelband::workload::Suite;
 
@@ -43,18 +59,32 @@ kernelband — hardware-aware MAB for LLM kernel optimization (reproduction)
 
 USAGE:
   kernelband repro <EXPERIMENT> [--iterations N] [--threads N] [--out DIR]
+                   [--store DIR] [--warm-start TRACE]
       EXPERIMENT: table1 table2 table3 table4 table9 table10
                   fig2 fig3 fig4 regret all
       --threads 0 (default) uses every core; results are identical
       for any thread count. JSON artifacts land in DIR (default out/).
       fig3 is analytic and regret is synthetic: both ignore --threads
       (regret reads --iterations as its horizon T, default 3200).
+      --store DIR persists a content-addressed kernel cache and the
+      run's bandit traces under DIR (a repeated run is pure lookups,
+      byte-identical artifacts); --warm-start TRACE replays a prior
+      trace log into bandit priors and cluster seeds.
   kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
       [--llm deepseek|gpt5|claude|gemini]
       [--mode full|no-clustering|no-profiling|llm-select|raw-profiling|no-strategy]
       [--iterations N] [--seed S]
   kernelband pjrt [--artifacts DIR] [--budget N]
-  kernelband serve [--jobs N] [--iterations N] [--out DIR]
+  kernelband serve [--jobs N] [--iterations N] [--out DIR] [--store DIR]
+      --store DIR records completed job iterations; a repeated run
+      skips their LLM gateway round-trips entirely (cache-hit fast path).
+  kernelband trace record --store DIR [--task SUBSTR] [--device D]
+      [--llm L] [--iterations N] [--seed S]
+      run one optimization through the store and append its trace.
+  kernelband trace replay <TRACE> [--clusters K]
+      replay a trace log into warm-start state and print it.
+  kernelband trace stats <TRACE-or-STORE-DIR>
+      record counts, versions skipped, corrupt lines, cache sizes.
   kernelband list [--subset]
 ";
 
@@ -165,10 +195,41 @@ fn parse_mode(s: &str) -> Result<PolicyMode> {
     }
 }
 
-fn repro(exp: &str, iterations: Option<usize>, threads: usize, out: &str)
-         -> Result<()> {
+/// Default cluster count K warm-start centroid seeds are fitted for
+/// (matches `PolicyConfig::default().clusters`).
+const WARM_CLUSTERS: usize = 3;
+
+/// Build the optional store session for `--store` / `--warm-start`.
+fn open_session(store_dir: Option<&str>, warm: Option<&str>)
+                -> Result<Option<Arc<TraceStore>>> {
+    let mut store = match store_dir {
+        Some(dir) => TraceStore::open(Path::new(dir))
+            .with_context(|| format!("opening store {dir:?}"))?,
+        None if warm.is_some() => TraceStore::in_memory(),
+        None => return Ok(None),
+    };
+    if let Some(trace) = warm {
+        let summary = store
+            .load_warm(Path::new(trace), WARM_CLUSTERS)
+            .with_context(|| format!("replaying warm-start trace {trace:?}"))?;
+        outln!(
+            "[warm-start] {} tasks, {} steps replayed from {trace} \
+             (corrupt={} skipped_versions={})",
+            store.warm_index().map_or(0, |w| w.len()),
+            summary.steps(),
+            summary.corrupt_lines,
+            summary.skipped_versions,
+        );
+    }
+    Ok(Some(Arc::new(store)))
+}
+
+fn repro(exp: &str, iterations: Option<usize>, threads: usize, out: &str,
+         store_dir: Option<&str>, warm: Option<&str>) -> Result<()> {
+    let session = open_session(store_dir, warm)?;
+    let opts = RunOpts { threads, session: session.clone() };
     let run_one = |name: &str| -> Result<()> {
-        let report = eval::report(name, iterations, threads)
+        let report = eval::report_opts(name, iterations, &opts)
             .ok_or_else(|| anyhow!("unknown experiment {name:?}\n{USAGE}"))?;
         outln!("{}", report.text);
         let path = report.write_artifact(Path::new(out))?;
@@ -180,9 +241,14 @@ fn repro(exp: &str, iterations: Option<usize>, threads: usize, out: &str)
             run_one(name)?;
             outln!();
         }
-        return Ok(());
+    } else {
+        run_one(exp)?;
     }
-    run_one(exp)
+    if let Some(store) = &session {
+        store.persist().context("persisting store")?;
+        outln!("[store] {}", store.stats_line());
+    }
+    Ok(())
 }
 
 fn optimize(task_sub: &str, device: Device, llm_profile: LlmProfile,
@@ -263,8 +329,14 @@ fn pjrt(artifacts: &str, budget: usize) -> Result<()> {
     Ok(())
 }
 
-fn serve(jobs: usize, iterations: usize, out: Option<&str>) -> Result<()> {
-    let report = OptimizationService::default().run(jobs, iterations);
+fn serve(jobs: usize, iterations: usize, out: Option<&str>,
+         store_dir: Option<&str>) -> Result<()> {
+    let session = open_session(store_dir, None)?;
+    let report = OptimizationService::default().run_with_store(
+        jobs,
+        iterations,
+        session.as_deref(),
+    );
     outln!(
         "service: {} jobs x {} iterations  wall {:.1}s (modeled)  \
          serial-equivalent {:.1}s  batching speedup {:.1}x",
@@ -279,8 +351,11 @@ fn serve(jobs: usize, iterations: usize, out: Option<&str>) -> Result<()> {
         report.gateway_requests, report.gateway_batches,
         report.gateway_max_batch
     );
+    if session.is_some() {
+        outln!("gateway_bypassed={}", report.gateway_bypassed);
+    }
     if let Some(dir) = out {
-        let json = Json::obj(vec![
+        let mut json = Json::obj(vec![
             ("schema_version", Json::num(1.0)),
             ("experiment", Json::str("serve")),
             ("jobs", Json::num(jobs as f64)),
@@ -292,6 +367,14 @@ fn serve(jobs: usize, iterations: usize, out: Option<&str>) -> Result<()> {
             ("gateway_batches", Json::num(report.gateway_batches as f64)),
             ("gateway_max_batch", Json::num(report.gateway_max_batch as f64)),
         ]);
+        // only present with a store, so storeless artifacts keep their
+        // pre-store byte layout
+        if session.is_some() {
+            json.insert(
+                "gateway_bypassed",
+                Json::num(report.gateway_bypassed as f64),
+            );
+        }
         // reuse the repro artifact convention (BENCH_<name>.json,
         // pretty + trailing newline) instead of duplicating it here
         let artifact =
@@ -299,7 +382,198 @@ fn serve(jobs: usize, iterations: usize, out: Option<&str>) -> Result<()> {
         let path = artifact.write_artifact(Path::new(dir))?;
         outln!("[artifact] {}", path.display());
     }
+    if let Some(store) = &session {
+        store.persist().context("persisting store")?;
+        outln!("[store] service jobs recorded; dir persisted");
+    }
     Ok(())
+}
+
+/// `trace record`: run one optimization through the store (cache +
+/// warm-start active) and append its trace to the log.
+fn trace_record(store_dir: &str, task_sub: &str, device: Device,
+                llm_profile: LlmProfile, iterations: usize, seed: u64)
+                -> Result<()> {
+    let mut store = TraceStore::open(Path::new(store_dir))
+        .with_context(|| format!("opening store {store_dir:?}"))?;
+    // warm-start from the store's own accumulated trace, when present
+    if let Some(trace_path) = store.trace_path() {
+        if trace_path.exists() {
+            let summary = store.load_warm(&trace_path, WARM_CLUSTERS)?;
+            outln!(
+                "[warm-start] {} prior steps replayed from {}",
+                summary.steps(),
+                trace_path.display()
+            );
+        }
+    }
+    let store = Arc::new(store);
+
+    let suite = Suite::full(eval::EXPERIMENT_SEED);
+    let task = suite
+        .tasks
+        .iter()
+        .find(|t| t.name.contains(task_sub))
+        .ok_or_else(|| anyhow!("no task matching {task_sub:?}"))?;
+    let engine = CachedEngine::new(SimEngine::new(device), store.clone());
+    let llm = CachedLlm::new(SurrogateLlm::new(llm_profile), store.clone());
+    let mut cfg = PolicyConfig::default();
+    cfg.iterations = iterations;
+    let trace = KernelBand::new(cfg).optimize_warm(
+        task,
+        &engine,
+        &llm,
+        &Rng::new(seed),
+        store.warm_for(device.name(), llm_profile.spec().name, &task.name),
+    );
+    outln!(
+        "recorded {}: correct={} best_speedup={:.3}x steps={}",
+        task.name,
+        trace.correct(),
+        trace.best_speedup(),
+        trace.records.len()
+    );
+    // same pure-replay guard as the experiment runner: an identical
+    // rerun served entirely from cache appends no duplicate records
+    if engine.local_sims() + llm.local_sims() > 0 {
+        store.append_trace(records_for_trace(
+            "record",
+            device.name(),
+            llm_profile.spec().name,
+            seed,
+            &trace,
+        ));
+    } else {
+        outln!("[store] pure replay — trace already recorded, not re-appended");
+    }
+    store.persist().context("persisting store")?;
+    outln!("[store] {}", store.stats_line());
+    Ok(())
+}
+
+/// `trace replay`: rebuild warm-start state from a trace log and print
+/// the per-task bandit priors and cluster seeds it would install.
+fn trace_replay(trace_path: &str, clusters: usize) -> Result<()> {
+    let summary = trace_log::replay_file(Path::new(trace_path))
+        .with_context(|| format!("reading {trace_path:?}"))?;
+    let index = WarmIndex::from_records(&summary.records, clusters);
+    outln!(
+        "{}: {} records ({} tasks, {} steps), corrupt_lines={} \
+         skipped_versions={} skipped_kinds={}",
+        trace_path,
+        summary.records.len(),
+        summary.tasks(),
+        summary.steps(),
+        summary.corrupt_lines,
+        summary.skipped_versions,
+        summary.skipped_kinds,
+    );
+    for key in index.keys() {
+        let (device, llm, task) = key;
+        let w = index.get(device, llm, task).expect("listed key");
+        let mean_reward = if w.rewards.is_empty() {
+            0.0
+        } else {
+            w.rewards.iter().map(|&(_, r)| r).sum::<f64>()
+                / w.rewards.len() as f64
+        };
+        outln!(
+            "  {:<36} [{} / {}] steps={:<4} priors={:<3} mean_reward={:.3} \
+             centroids={} best_runtime={:.3e}s",
+            task,
+            device,
+            llm,
+            w.steps,
+            w.rewards.len(),
+            mean_reward,
+            w.centroids.len(),
+            w.best_runtime_s,
+        );
+    }
+    Ok(())
+}
+
+/// `trace stats`: counts for a trace file or a whole store directory.
+fn trace_stats(path_str: &str) -> Result<()> {
+    let path = Path::new(path_str);
+    if path.is_dir() {
+        let store = TraceStore::open(path)
+            .with_context(|| format!("opening store {path_str:?}"))?;
+        outln!(
+            "store {}: kernels={} proposals={} service={} skipped_lines={}",
+            path_str,
+            store.loaded.kernels,
+            store.loaded.proposals,
+            store.loaded.service,
+            store.loaded.skipped,
+        );
+        match store.trace_path() {
+            Some(trace) if trace.exists() => {
+                let summary = trace_log::replay_file(&trace)?;
+                outln!(
+                    "trace {}: records={} tasks={} steps={} corrupt_lines={} \
+                     skipped_versions={} skipped_kinds={}",
+                    trace.display(),
+                    summary.records.len(),
+                    summary.tasks(),
+                    summary.steps(),
+                    summary.corrupt_lines,
+                    summary.skipped_versions,
+                    summary.skipped_kinds,
+                );
+            }
+            _ => outln!("trace: none recorded yet"),
+        }
+        return Ok(());
+    }
+    let summary = trace_log::replay_file(path)
+        .with_context(|| format!("reading {path_str:?}"))?;
+    outln!(
+        "trace {}: records={} tasks={} steps={} corrupt_lines={} \
+         skipped_versions={} skipped_kinds={}",
+        path_str,
+        summary.records.len(),
+        summary.tasks(),
+        summary.steps(),
+        summary.corrupt_lines,
+        summary.skipped_versions,
+        summary.skipped_kinds,
+    );
+    Ok(())
+}
+
+fn trace_cmd(rest: &[String]) -> Result<()> {
+    let sub = rest
+        .first()
+        .ok_or_else(|| anyhow!("trace needs record|replay|stats\n{USAGE}"))?;
+    let args = Args::parse(&rest[1..], &[])?;
+    match sub.as_str() {
+        "record" => trace_record(
+            args.get("store")
+                .ok_or_else(|| anyhow!("trace record needs --store DIR"))?,
+            args.get("task").unwrap_or("matmul"),
+            parse_device(args.get("device").unwrap_or("h20"))?,
+            parse_llm(args.get("llm").unwrap_or("deepseek"))?,
+            args.get_usize("iterations", 20)?,
+            args.get_u64("seed", 0)?,
+        ),
+        "replay" => trace_replay(
+            args.positional
+                .first()
+                .map(String::as_str)
+                .ok_or_else(|| anyhow!("trace replay needs a TRACE file"))?,
+            args.get_usize("clusters", WARM_CLUSTERS)?,
+        ),
+        "stats" => trace_stats(
+            args.positional
+                .first()
+                .map(String::as_str)
+                .ok_or_else(|| {
+                    anyhow!("trace stats needs a TRACE file or store DIR")
+                })?,
+        ),
+        other => bail!("unknown trace subcommand {other:?}\n{USAGE}"),
+    }
 }
 
 fn list(subset: bool) -> Result<()> {
@@ -341,6 +615,8 @@ fn main() -> Result<()> {
                 iters,
                 args.get_usize("threads", 0)?,
                 args.get("out").unwrap_or("out"),
+                args.get("store"),
+                args.get("warm-start"),
             )
         }
         "optimize" => {
@@ -367,8 +643,10 @@ fn main() -> Result<()> {
                 args.get_usize("jobs", 16)?,
                 args.get_usize("iterations", 3)?,
                 args.get("out"),
+                args.get("store"),
             )
         }
+        "trace" => trace_cmd(rest),
         "list" => {
             let args = Args::parse(rest, &["subset"])?;
             list(args.has("subset"))

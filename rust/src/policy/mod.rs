@@ -26,6 +26,7 @@ use crate::llm::{LlmBackend, PromptMode, ProposalRequest};
 use crate::metrics::TaskOutcome;
 use crate::profiler::{HardwareSignature, Profiler, THETA_SAT};
 use crate::rng::Rng;
+use crate::store::warm::TaskWarmStart;
 use crate::strategy::{Strategy, ALL_STRATEGIES, NUM_STRATEGIES};
 use crate::verify::{verify_outcome, Verdict};
 use crate::workload::TaskSpec;
@@ -242,6 +243,30 @@ impl KernelBand {
         llm: &L,
         root: &Rng,
     ) -> Trace {
+        self.optimize_warm(task, engine, llm, root, None)
+    }
+
+    /// [`KernelBand::optimize`] with optional cross-session warm-start
+    /// state replayed from a prior trace ([`crate::store::warm`]):
+    ///
+    /// * historical `(strategy, reward)` pulls pre-update the arms (and
+    ///   join the reward history, so they survive re-clustering via
+    ///   [`ArmStats::reseed`]);
+    /// * the prior session's converged centroids seed the *first*
+    ///   re-clustering in place of k-means++ when the frontier is large
+    ///   enough to hold them.
+    ///
+    /// With `warm = None` the run is bit-identical to the pre-store
+    /// behavior; warm state never consumes RNG, so the stochastic
+    /// lineage of every downstream draw is unchanged either way.
+    pub fn optimize_warm<E: EvalEngine, L: LlmBackend>(
+        &self,
+        task: &TaskSpec,
+        engine: &E,
+        llm: &L,
+        root: &Rng,
+        warm: Option<&TaskWarmStart>,
+    ) -> Trace {
         let cfg = &self.config;
         let rng = root.split("kernelband", task.id as u64);
         let freeform = matches!(
@@ -276,6 +301,25 @@ impl KernelBand {
         let mut records: Vec<IterationRecord> = Vec::new();
         let mut best_id = 0usize;
 
+        // cross-session warm-start: prior pulls sharpen the arms before
+        // the first selection; attributed to the naive kernel so reseed
+        // keeps them with whatever cluster it lands in later.
+        let mut warm_centroids: Option<Vec<Phi>> = None;
+        if let Some(w) = warm {
+            if !freeform {
+                for &(s, r) in &w.rewards {
+                    stats.update(0, s, r);
+                    history.push(RewardRecord { kernel: 0, strategy: s, reward: r });
+                }
+                // seeds fitted for a different K must not override the
+                // cell's configured cluster count (the Fig.-2 ablation
+                // varies K; a 3-centroid seed would collapse it)
+                if w.centroids.len() == cfg.clusters {
+                    warm_centroids = Some(w.centroids.clone());
+                }
+            }
+        }
+
         for t in 1..=cfg.iterations {
             // --- lines 6–10: periodic clustering & representative profiling
             let may_cluster = !freeform
@@ -283,8 +327,19 @@ impl KernelBand {
                 && candidates.len() >= 2 * cfg.clusters;
             if may_cluster {
                 let mut crng = rng.split("cluster", t as u64);
-                clustering =
-                    self.kmeans.cluster(&phis, cfg.clusters, &mut crng);
+                // first re-clustering with enough frontier points
+                // starts Lloyd from the prior session's converged
+                // centroids; a too-small frontier keeps the seeds for
+                // the next re-clustering instead of discarding them
+                let use_warm = warm_centroids
+                    .as_ref()
+                    .map_or(false, |init| init.len() <= phis.len());
+                clustering = if use_warm {
+                    let init = warm_centroids.take().expect("checked above");
+                    self.kmeans.cluster_seeded(&phis, &init)
+                } else {
+                    self.kmeans.cluster(&phis, cfg.clusters, &mut crng)
+                };
                 let k = clustering.centroids.len();
                 stats = if cfg.reset_arms_on_recluster {
                     ArmStats::new(k)
@@ -629,6 +684,80 @@ mod tests {
         let tr = run_one(PolicyMode::NoProfiling, 40, 37);
         assert_eq!(tr.profile_runs, 0);
         assert_eq!(tr.profile_cost_s, 0.0);
+    }
+
+    #[test]
+    fn optimize_warm_none_is_bit_identical_to_optimize() {
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+        let cfg = PolicyConfig::default();
+        let a = KernelBand::new(cfg.clone()).optimize(
+            &suite.tasks[7],
+            &engine,
+            &llm,
+            &Rng::new(41),
+        );
+        let b = KernelBand::new(cfg).optimize_warm(
+            &suite.tasks[7],
+            &engine,
+            &llm,
+            &Rng::new(41),
+            None,
+        );
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        assert_eq!(a.best_id, b.best_id);
+        assert_eq!(
+            a.candidates[a.best_id].measurement.total_latency_s.to_bits(),
+            b.candidates[b.best_id].measurement.total_latency_s.to_bits()
+        );
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.cluster, rb.cluster);
+            assert_eq!(ra.strategy, rb.strategy);
+            assert_eq!(ra.parent, rb.parent);
+            assert_eq!(ra.reward.to_bits(), rb.reward.to_bits());
+        }
+    }
+
+    #[test]
+    fn warm_rewards_pre_update_the_arms() {
+        use crate::store::warm::TaskWarmStart;
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+        // a history of 30 zero-reward Tiling pulls: the very first pick
+        // (all other arms at the optimistic prior, and no exploration
+        // bonus at t=1) must avoid the arm warmed toward zero
+        let mut rewards = Vec::new();
+        for _ in 0..30 {
+            rewards.push((Strategy::Tiling, 0.0));
+        }
+        let warm = TaskWarmStart {
+            rewards,
+            centroids: Vec::new(),
+            best_runtime_s: 1.0,
+            steps: 30,
+        };
+        let mut cfg = PolicyConfig::default();
+        cfg.iterations = 1;
+        let tr = KernelBand::new(cfg).optimize_warm(
+            &suite.tasks[4],
+            &engine,
+            &llm,
+            &Rng::new(3),
+            Some(&warm),
+        );
+        // t=1, single cluster: UCB with a 31-visit zero-mean Tiling arm
+        // must not pick Tiling
+        assert_ne!(tr.records[0].strategy, Some(Strategy::Tiling));
+        // warm start is deterministic
+        let tr2 = KernelBand::new({
+            let mut c = PolicyConfig::default();
+            c.iterations = 1;
+            c
+        })
+        .optimize_warm(&suite.tasks[4], &engine, &llm, &Rng::new(3), Some(&warm));
+        assert_eq!(tr.records[0].strategy, tr2.records[0].strategy);
     }
 
     #[test]

@@ -45,6 +45,19 @@ impl Rng {
         Rng { state: mix(h ^ index.wrapping_mul(GOLDEN)) }
     }
 
+    /// Stable 64-bit fingerprint of this stream's seed lineage.
+    ///
+    /// Two `Rng`s produce identical draws iff their fingerprints match,
+    /// so the fingerprint is usable as a cache key component: the
+    /// persistent kernel store keys measurements by (task, config,
+    /// device, noise lineage) and a replayed run reconstructs the exact
+    /// same fingerprints, turning every simulated measurement into a
+    /// lookup (see [`crate::store`]).
+    #[inline]
+    pub fn fingerprint(&self) -> u64 {
+        self.state
+    }
+
     /// Next raw 64 bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

@@ -14,14 +14,31 @@
 //!   window/size-triggered batcher thread, and scaled-latency simulation
 //!   (1 modeled second = [`TIME_SCALE`] of wall-clock), used by the
 //!   service tests and the `serve` subcommand to demonstrate the same
-//!   collapse end-to-end;
+//!   collapse end-to-end. Shutdown is drain-and-error: pending and
+//!   newly-arriving requests complete with [`GatewayClosed`] instead of
+//!   blocking forever, so no submitter ever hangs on a dying gateway;
 //! * [`OptimizationService`] — drives N concurrent kernel-optimization
 //!   jobs through the gateway.
+//!
+//! ## Cache-hit fast path
+//!
+//! With a persistent store attached
+//! ([`OptimizationService::run_with_store`]), a job iteration whose
+//! content key is already recorded as completed **skips the LLM gateway
+//! round-trip entirely** — no enqueue, no batching window, no modeled
+//! API latency; only the compile/execute/profile slice remains. A
+//! repeated `serve --store DIR` run therefore reports
+//! [`ServiceReport::gateway_bypassed`] > 0 and proportionally fewer
+//! gateway requests, mirroring the repro path where proposal-cache hits
+//! bypass the simulated LLM (see [`crate::store`]).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::store::TraceStore;
+use crate::util::hash::KeyHasher;
 
 /// Wall-clock seconds per *modeled* second (the service simulates the
 /// paper's minute-scale latencies in milliseconds: 1000× compression).
@@ -120,10 +137,22 @@ fn scaled_sleep(model_seconds: f64) {
     ));
 }
 
+/// Error returned to submitters when the gateway shuts down while their
+/// request is queued (or arrives after shutdown began). The payload is
+/// handed back so the caller can retry elsewhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatewayClosed<T>(pub T);
+
+impl<T> std::fmt::Display for GatewayClosed<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "LLM gateway shut down before the request completed")
+    }
+}
+
 /// One queued request: a payload plus its completion slot.
 struct Pending<T> {
     payload: T,
-    done: Arc<(Mutex<Option<T>>, Condvar)>,
+    done: Arc<(Mutex<Option<Result<T, GatewayClosed<T>>>>, Condvar)>,
 }
 
 /// Gateway configuration (modeled seconds).
@@ -171,7 +200,7 @@ struct GatewayShared<T> {
 /// The batched LLM gateway (one batcher OS thread).
 pub struct BatchedLlmGateway<T: Send + 'static> {
     shared: Arc<GatewayShared<T>>,
-    batcher: Option<std::thread::JoinHandle<()>>,
+    batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl<T: Send + 'static> BatchedLlmGateway<T> {
@@ -185,7 +214,23 @@ impl<T: Send + 'static> BatchedLlmGateway<T> {
         });
         let s = shared.clone();
         let batcher = std::thread::spawn(move || Self::batcher_loop(&s));
-        BatchedLlmGateway { shared, batcher: Some(batcher) }
+        BatchedLlmGateway { shared, batcher: Mutex::new(Some(batcher)) }
+    }
+
+    /// Complete every queued request with [`GatewayClosed`] and wake
+    /// blocked submitters. Runs under the queue lock so it serializes
+    /// with `call`'s shutdown check: a request either lands in the
+    /// queue before the drain (and is errored here) or observes
+    /// `shutdown` and never enqueues.
+    fn drain_and_error(s: &GatewayShared<T>) {
+        let drained: Vec<Pending<T>> =
+            s.queue.lock().unwrap().drain(..).collect();
+        for p in drained {
+            let (slot, cv) = &*p.done;
+            *slot.lock().unwrap() = Some(Err(GatewayClosed(p.payload)));
+            cv.notify_one();
+        }
+        s.ingress.notify_all();
     }
 
     fn batcher_loop(s: &GatewayShared<T>) {
@@ -194,6 +239,10 @@ impl<T: Send + 'static> BatchedLlmGateway<T> {
             let mut q = s.queue.lock().unwrap();
             while q.is_empty() {
                 if s.shutdown.load(Ordering::Acquire) {
+                    drop(q);
+                    // drain-and-error: anything racing in between the
+                    // emptiness check and here is completed with an error
+                    Self::drain_and_error(s);
                     return;
                 }
                 let (guard, _timeout) = s
@@ -202,11 +251,16 @@ impl<T: Send + 'static> BatchedLlmGateway<T> {
                     .unwrap();
                 q = guard;
             }
-            // window: wait (in scaled time) for the batch to fill
+            // window: wait (in scaled time) for the batch to fill;
+            // shutdown mid-window drains instead of firing the batch
             drop(q);
             let window = Duration::from_secs_f64(s.config.window_s * TIME_SCALE);
             let deadline = Instant::now() + window;
             loop {
+                if s.shutdown.load(Ordering::Acquire) {
+                    Self::drain_and_error(s);
+                    return;
+                }
                 let filled = s.queue.lock().unwrap().len() >= s.config.max_batch;
                 if filled || Instant::now() >= deadline {
                     break;
@@ -228,7 +282,9 @@ impl<T: Send + 'static> BatchedLlmGateway<T> {
             if batch.is_empty() {
                 continue;
             }
-            // one API round for the whole batch
+            // one API round for the whole batch. An already-taken batch
+            // completes normally even during shutdown (it is "in
+            // flight"); the next loop iteration drains the rest.
             scaled_sleep(s.config.call_latency_s);
             s.stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
             s.stats.batches.fetch_add(1, Ordering::Relaxed);
@@ -237,19 +293,30 @@ impl<T: Send + 'static> BatchedLlmGateway<T> {
                 .fetch_max(batch.len() as u64, Ordering::Relaxed);
             for p in batch {
                 let (slot, cv) = &*p.done;
-                *slot.lock().unwrap() = Some(p.payload);
+                *slot.lock().unwrap() = Some(Ok(p.payload));
                 cv.notify_one();
             }
         }
     }
 
     /// Submit a request and block until its (batched) completion.
-    /// Blocks on a full ingress queue — the backpressure mechanism.
-    pub fn call(&self, payload: T) -> T {
+    /// Blocks on a full ingress queue — the backpressure mechanism —
+    /// but never blocks across shutdown: a request queued (or still
+    /// waiting for queue space) when the gateway shuts down completes
+    /// with [`GatewayClosed`] instead of hanging.
+    pub fn call(&self, payload: T) -> Result<T, GatewayClosed<T>> {
         let done = Arc::new((Mutex::new(None), Condvar::new()));
         {
             let mut q = self.shared.queue.lock().unwrap();
-            while q.len() >= self.shared.config.queue_depth {
+            loop {
+                // checked under the queue lock: serialized against the
+                // batcher's final drain (see `drain_and_error`)
+                if self.shared.shutdown.load(Ordering::Acquire) {
+                    return Err(GatewayClosed(payload));
+                }
+                if q.len() < self.shared.config.queue_depth {
+                    break;
+                }
                 q = self
                     .shared
                     .ingress
@@ -268,6 +335,21 @@ impl<T: Send + 'static> BatchedLlmGateway<T> {
         guard.take().unwrap()
     }
 
+    /// Initiate shutdown and join the batcher. Idempotent; called by
+    /// `Drop`. Queued and newly-arriving requests drain with
+    /// [`GatewayClosed`] rather than blocking their submitters.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.ingress.notify_all();
+        let handle = self.batcher.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        // belt-and-braces for requests that slipped in after the
+        // batcher's final drain but before its thread exited
+        Self::drain_and_error(&self.shared);
+    }
+
     pub fn requests(&self) -> u64 {
         self.shared.stats.requests.load(Ordering::Relaxed)
     }
@@ -283,11 +365,7 @@ impl<T: Send + 'static> BatchedLlmGateway<T> {
 
 impl<T: Send + 'static> Drop for BatchedLlmGateway<T> {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.ingress.notify_all();
-        if let Some(h) = self.batcher.take() {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -308,6 +386,10 @@ pub struct ServiceReport {
     pub gateway_requests: u64,
     pub gateway_batches: u64,
     pub gateway_max_batch: u64,
+    /// Iterations whose LLM round-trip was skipped entirely because the
+    /// store had already recorded their completion (cache-hit fast
+    /// path; 0 without a store).
+    pub gateway_bypassed: u64,
     /// Serial-equivalent modeled time (sum over jobs × iterations of the
     /// serial iteration model).
     pub serial_equivalent_s: f64,
@@ -345,17 +427,53 @@ impl OptimizationService {
     /// job a dedicated thread so all jobs block on the gateway at once,
     /// which is what keeps its batching window full.
     pub fn run(&self, jobs: usize, iterations: usize) -> ServiceReport {
+        self.run_with_store(jobs, iterations, None)
+    }
+
+    /// [`OptimizationService::run`] with an optional persistent store.
+    ///
+    /// Each (job, iteration) has a deterministic content key; when the
+    /// store already records it as completed, the iteration takes the
+    /// cache-hit fast path — the LLM gateway round-trip is skipped
+    /// entirely and only compile/execute/profile time is paid. Freshly
+    /// completed keys are recorded so the *next* run over the same
+    /// store bypasses them.
+    pub fn run_with_store(&self, jobs: usize, iterations: usize,
+                          store: Option<&TraceStore>) -> ServiceReport {
         let gateway: BatchedLlmGateway<usize> =
             BatchedLlmGateway::spawn(self.gateway_config);
+        let bypassed = AtomicU64::new(0);
         let tm = self.time_model;
         let t0 = Instant::now();
         let job_ids: Vec<usize> = (0..jobs).collect();
         let reports: Vec<JobReport> =
             crate::util::par::spawn_map(&job_ids, |_, &job_id| {
                 let j0 = Instant::now();
-                for _ in 0..iterations {
-                    // the iteration's chained LLM calls, batched
-                    let _ = gateway.call(job_id);
+                for it in 0..iterations {
+                    // keyed by the iteration's content identity alone —
+                    // not the grid shape — so a re-run with different
+                    // --jobs/--iterations still reuses overlapping work
+                    let key = KeyHasher::new("serve")
+                        .u64(job_id as u64)
+                        .u64(it as u64)
+                        .finish();
+                    let hit =
+                        store.map_or(false, |s| s.service_done(key));
+                    if hit {
+                        // cache-hit fast path: no enqueue, no window,
+                        // no modeled API latency
+                        bypassed.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        // the iteration's chained LLM calls, batched;
+                        // only a completed round-trip is recorded as
+                        // done (a shutdown error must not poison the
+                        // store with a bypass key for skipped work)
+                        if gateway.call(job_id).is_ok() {
+                            if let Some(s) = store {
+                                s.service_insert(key);
+                            }
+                        }
+                    }
                     // compile + execute + amortized profiling
                     scaled_sleep(
                         tm.compile_s + tm.exec_s + tm.profile_amortized_s,
@@ -374,6 +492,7 @@ impl OptimizationService {
             gateway_requests: gateway.requests(),
             gateway_batches: gateway.batches(),
             gateway_max_batch: gateway.max_batch_seen(),
+            gateway_bypassed: bypassed.load(Ordering::Relaxed),
             serial_equivalent_s: jobs as f64
                 * iterations as f64
                 * tm.serial_iteration_s(),
@@ -428,7 +547,7 @@ mod tests {
             let handles: Vec<_> = (0..16)
                 .map(|i| {
                     let g = gw.clone();
-                    scope.spawn(move || g.call(i))
+                    scope.spawn(move || g.call(i).unwrap())
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -470,6 +589,48 @@ mod tests {
     }
 
     #[test]
+    fn repeated_store_run_bypasses_the_gateway() {
+        let store = TraceStore::in_memory();
+        let svc = OptimizationService::default();
+        let cold = svc.run_with_store(4, 2, Some(&store));
+        assert_eq!(cold.gateway_bypassed, 0);
+        assert_eq!(cold.gateway_requests, 8);
+        let warm = svc.run_with_store(4, 2, Some(&store));
+        assert_eq!(warm.gateway_bypassed, 8);
+        assert_eq!(warm.gateway_requests, 0);
+        // a larger grid reuses the overlapping (job, iteration) work
+        // and only pays the gateway for the new cells
+        let grown = svc.run_with_store(4, 3, Some(&store));
+        assert_eq!(grown.gateway_bypassed, 8);
+        assert_eq!(grown.gateway_requests, 4);
+        // a storeless run never bypasses
+        let none = svc.run_with_store(2, 2, None);
+        assert_eq!(none.gateway_bypassed, 0);
+        assert_eq!(none.gateway_requests, 4);
+    }
+
+    #[test]
+    fn shutdown_errors_queued_requests_instead_of_hanging() {
+        let gw: Arc<BatchedLlmGateway<usize>> =
+            Arc::new(BatchedLlmGateway::spawn(GatewayConfig {
+                max_batch: 64,
+                // enormous window + latency: nothing completes on its own
+                window_s: 1e6,
+                call_latency_s: 1e6,
+                queue_depth: 64,
+            }));
+        let g2 = gw.clone();
+        let submitter = std::thread::spawn(move || g2.call(1));
+        // give the request time to enqueue, then pull the plug
+        std::thread::sleep(Duration::from_millis(20));
+        gw.shutdown();
+        let out = submitter.join().unwrap();
+        assert_eq!(out, Err(GatewayClosed(1)));
+        // post-shutdown submissions fail fast
+        assert_eq!(gw.call(2), Err(GatewayClosed(2)));
+    }
+
+    #[test]
     fn backpressure_bounds_queue() {
         // queue_depth 2 with 8 submitters: all complete, none lost
         let gw: Arc<BatchedLlmGateway<usize>> =
@@ -483,7 +644,7 @@ mod tests {
             let handles: Vec<_> = (0..8)
                 .map(|i| {
                     let g = gw.clone();
-                    scope.spawn(move || g.call(i))
+                    scope.spawn(move || g.call(i).unwrap())
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()

@@ -1,0 +1,364 @@
+//! Content-addressed caches for measurements and LLM proposals.
+//!
+//! Keys are 64-bit digests ([`crate::util::hash::KeyHasher`]) over
+//! everything that determines the result bit for bit:
+//!
+//! * **measurements** — task fingerprint, schedule `code_hash`, device
+//!   fingerprint, and the measurement RNG's seed lineage (simulator
+//!   noise is part of the result, so the noise stream is part of the
+//!   address);
+//! * **proposals** — model name, task fingerprint, parent schedule,
+//!   prompt mode, device fingerprint, and the generation RNG lineage.
+//!
+//! Because every experiment derives its RNG from split seed lineages,
+//! a re-run of the same grid reconstructs the exact same keys, so a
+//! populated cache turns the whole run into lookups while keeping the
+//! artifacts byte-identical to the cold run. Entries serialize to JSONL
+//! through [`crate::util::json`], whose shortest-roundtrip float
+//! formatting guarantees `parse(dump(x)) == x` — a reloaded measurement
+//! is bit-identical to the one simulated.
+
+use std::collections::HashMap;
+
+use crate::kernel::{Counters, KernelConfig, Measurement};
+use crate::llm::{GenOutcome, Proposal, PromptMode, ProposalRequest};
+use crate::rng::Rng;
+use crate::util::hash::KeyHasher;
+use crate::util::json::{parse_lines_lossy, Json};
+use crate::workload::TaskSpec;
+
+/// Cache-record schema version (bumped on layout changes; unknown
+/// versions are skipped at load, mirroring the trace log).
+pub const CACHE_VERSION: f64 = 1.0;
+
+/// Content address of one measurement.
+pub fn measurement_key(task: &TaskSpec, cfg: &KernelConfig, device_fp: u64,
+                       rng: &Rng) -> u64 {
+    KeyHasher::new("measure")
+        .u64(task.fingerprint())
+        .u64(cfg.code_hash())
+        .u64(device_fp)
+        .u64(rng.fingerprint())
+        .finish()
+}
+
+/// Content address of one LLM proposal.
+pub fn proposal_key(model: &str, req: &ProposalRequest<'_>, rng: &Rng) -> u64 {
+    let mut h = KeyHasher::new("proposal")
+        .str(model)
+        .u64(req.task.fingerprint())
+        .u64(req.parent.code_hash())
+        .u64(req.sim.fingerprint())
+        .u64(req.iterative as u64)
+        .u64(rng.fingerprint());
+    h = match req.mode {
+        PromptMode::Strategy(s) => h.u64(1).u64(s.index() as u64),
+        PromptMode::FreeForm => h.u64(2),
+        PromptMode::RawProfiling(sig) => {
+            h.u64(3).f64(sig.sm_pct).f64(sig.dram_pct).f64(sig.l2_pct)
+        }
+    };
+    h.finish()
+}
+
+use super::{
+    counters_from_json, counters_to_json, hex_u64 as hex,
+    parse_hex_u64 as parse_hex,
+};
+
+fn config_to_arr(c: &KernelConfig) -> Json {
+    Json::Arr(
+        [c.tile_m, c.tile_n, c.tile_k, c.vector, c.fusion, c.pipeline,
+         c.loop_order, c.layout]
+            .iter()
+            .map(|&v| Json::num(v as f64))
+            .collect(),
+    )
+}
+
+fn config_from_arr(j: &Json) -> Option<KernelConfig> {
+    let a = j.as_arr()?;
+    if a.len() != 8 {
+        return None;
+    }
+    let f = |i: usize| a[i].as_f64().unwrap_or(0.0) as u8;
+    Some(KernelConfig {
+        tile_m: f(0),
+        tile_n: f(1),
+        tile_k: f(2),
+        vector: f(3),
+        fusion: f(4),
+        pipeline: f(5),
+        loop_order: f(6),
+        layout: f(7),
+    })
+}
+
+/// One generic content-addressed cache with persistence bookkeeping:
+/// entries inserted since the last flush are tracked so persistence can
+/// append exactly the new records (the on-disk file is append-only).
+#[derive(Debug)]
+pub struct ContentCache<V> {
+    entries: HashMap<u64, V>,
+    dirty: Vec<u64>,
+}
+
+// manual impl: the derive would demand `V: Default`, which cached
+// payloads (Measurement, Proposal) do not and should not implement
+impl<V> Default for ContentCache<V> {
+    fn default() -> Self {
+        ContentCache { entries: HashMap::new(), dirty: Vec::new() }
+    }
+}
+
+impl<V: Clone> ContentCache<V> {
+    pub fn get(&self, key: u64) -> Option<V> {
+        self.entries.get(&key).cloned()
+    }
+
+    pub fn insert(&mut self, key: u64, value: V) {
+        if self.entries.insert(key, value).is_none() {
+            self.dirty.push(key);
+        }
+    }
+
+    /// Insert at load time (not marked dirty).
+    pub fn insert_loaded(&mut self, key: u64, value: V) {
+        self.entries.insert(key, value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drain the new entries, sorted by key so the appended bytes are
+    /// deterministic regardless of insertion (thread) order.
+    pub fn take_dirty(&mut self) -> Vec<(u64, V)> {
+        let mut keys = std::mem::take(&mut self.dirty);
+        keys.sort_unstable();
+        keys.dedup();
+        keys.into_iter()
+            .filter_map(|k| self.entries.get(&k).map(|v| (k, v.clone())))
+            .collect()
+    }
+}
+
+// --- measurement serialization ---------------------------------------------
+
+/// Serialize one measurement cache entry as a JSONL value.
+pub fn measurement_record(key: u64, m: &Measurement) -> Json {
+    Json::obj(vec![
+        ("v", Json::num(CACHE_VERSION)),
+        ("key", hex(key)),
+        ("total_s", Json::num(m.total_latency_s)),
+        (
+            "shapes",
+            Json::Arr(m.per_shape_s.iter().map(|&s| Json::num(s)).collect()),
+        ),
+        ("counters", counters_to_json(&m.counters)),
+    ])
+}
+
+/// Decode one measurement cache entry.
+pub fn measurement_from_record(j: &Json) -> Option<(u64, Measurement)> {
+    if j.get("v").and_then(Json::as_f64) != Some(CACHE_VERSION) {
+        return None;
+    }
+    let key = parse_hex(j.get("key"))?;
+    let per_shape_s = j
+        .get("shapes")?
+        .as_arr()?
+        .iter()
+        .map(|s| s.as_f64().unwrap_or(0.0))
+        .collect();
+    Some((
+        key,
+        Measurement {
+            total_latency_s: j.get("total_s")?.as_f64()?,
+            per_shape_s,
+            counters: counters_from_json(j.get("counters")?),
+        },
+    ))
+}
+
+// --- proposal serialization ------------------------------------------------
+
+fn outcome_str(o: GenOutcome) -> &'static str {
+    match o {
+        GenOutcome::Ok => "ok",
+        GenOutcome::CompileError => "compile_error",
+        GenOutcome::WrongOutput => "wrong_output",
+    }
+}
+
+fn outcome_from_str(s: &str) -> Option<GenOutcome> {
+    match s {
+        "ok" => Some(GenOutcome::Ok),
+        "compile_error" => Some(GenOutcome::CompileError),
+        "wrong_output" => Some(GenOutcome::WrongOutput),
+        _ => None,
+    }
+}
+
+/// Serialize one proposal cache entry as a JSONL value.
+pub fn proposal_record(key: u64, p: &Proposal) -> Json {
+    Json::obj(vec![
+        ("v", Json::num(CACHE_VERSION)),
+        ("key", hex(key)),
+        ("outcome", Json::str(outcome_str(p.outcome))),
+        ("config", config_to_arr(&p.config)),
+        ("tokens_in", Json::num(p.tokens_in as f64)),
+        ("tokens_out", Json::num(p.tokens_out as f64)),
+        ("cost_usd", Json::num(p.cost_usd)),
+        ("latency_s", Json::num(p.latency_s)),
+    ])
+}
+
+/// Decode one proposal cache entry.
+pub fn proposal_from_record(j: &Json) -> Option<(u64, Proposal)> {
+    if j.get("v").and_then(Json::as_f64) != Some(CACHE_VERSION) {
+        return None;
+    }
+    let key = parse_hex(j.get("key"))?;
+    Some((
+        key,
+        Proposal {
+            outcome: outcome_from_str(j.str_field("outcome").ok()?)?,
+            config: config_from_arr(j.get("config")?)?,
+            tokens_in: j.f64_field("tokens_in") as u64,
+            tokens_out: j.f64_field("tokens_out") as u64,
+            cost_usd: j.get("cost_usd")?.as_f64()?,
+            latency_s: j.get("latency_s")?.as_f64()?,
+        },
+    ))
+}
+
+/// Load a cache file's JSONL text into entries via `decode`, skipping
+/// corrupt lines and unknown versions. Returns entries + skipped count.
+pub fn load_entries<V>(
+    text: &str,
+    decode: impl Fn(&Json) -> Option<(u64, V)>,
+) -> (Vec<(u64, V)>, usize) {
+    let (values, corrupt) = parse_lines_lossy(text);
+    let mut skipped = corrupt;
+    let mut out = Vec::with_capacity(values.len());
+    for v in &values {
+        match decode(v) {
+            Some(kv) => out.push(kv),
+            None => skipped += 1,
+        }
+    }
+    (out, skipped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_model::{Device, GpuSim};
+    use crate::workload::Suite;
+
+    fn sample_measurement() -> Measurement {
+        Measurement {
+            total_latency_s: 0.001234567890123,
+            per_shape_s: vec![0.0004, 0.0008345678901234],
+            counters: Counters {
+                regs_per_thread: 96.0,
+                smem_per_block: 49152.0,
+                block_dim: 512.0,
+                occupancy: 0.625,
+                sm_pct: 33.33333333333333,
+                dram_pct: 81.0,
+                l2_pct: 12.5,
+            },
+        }
+    }
+
+    #[test]
+    fn measurement_roundtrip_is_bit_exact() {
+        let m = sample_measurement();
+        let rec = measurement_record(0xabcd_ef01_2345_6789, &m);
+        let line = rec.dump();
+        let parsed = crate::util::json::parse(&line).unwrap();
+        let (key, back) = measurement_from_record(&parsed).unwrap();
+        assert_eq!(key, 0xabcd_ef01_2345_6789);
+        assert_eq!(back.total_latency_s.to_bits(), m.total_latency_s.to_bits());
+        assert_eq!(back.per_shape_s, m.per_shape_s);
+        assert_eq!(back.counters.sm_pct.to_bits(), m.counters.sm_pct.to_bits());
+        assert_eq!(back.counters.occupancy.to_bits(),
+                   m.counters.occupancy.to_bits());
+    }
+
+    #[test]
+    fn proposal_roundtrip_is_exact() {
+        let p = Proposal {
+            outcome: GenOutcome::WrongOutput,
+            config: KernelConfig {
+                tile_m: 3,
+                tile_n: 4,
+                tile_k: 2,
+                vector: 1,
+                fusion: 2,
+                pipeline: 3,
+                loop_order: 5,
+                layout: 1,
+            },
+            tokens_in: 20_800,
+            tokens_out: 11_200,
+            cost_usd: 0.01234567,
+            latency_s: 700.125,
+        };
+        let rec = proposal_record(7, &p);
+        let parsed = crate::util::json::parse(&rec.dump()).unwrap();
+        let (key, back) = proposal_from_record(&parsed).unwrap();
+        assert_eq!(key, 7);
+        assert_eq!(back.outcome, p.outcome);
+        assert_eq!(back.config, p.config);
+        assert_eq!(back.tokens_in, p.tokens_in);
+        assert_eq!(back.tokens_out, p.tokens_out);
+        assert_eq!(back.cost_usd.to_bits(), p.cost_usd.to_bits());
+    }
+
+    #[test]
+    fn unknown_cache_version_is_skipped() {
+        let text = "{\"v\":9,\"key\":\"00000000000000ff\",\"total_s\":1}\n";
+        let (entries, skipped) = load_entries(text, measurement_from_record);
+        assert!(entries.is_empty());
+        assert_eq!(skipped, 1);
+    }
+
+    #[test]
+    fn keys_separate_devices_tasks_and_lineages() {
+        let suite = Suite::full(1);
+        let cfg = KernelConfig::naive();
+        let h20 = GpuSim::new(Device::H20).fingerprint();
+        let a100 = GpuSim::new(Device::A100).fingerprint();
+        let rng = Rng::new(3).split("m", 1);
+        let k0 = measurement_key(&suite.tasks[0], &cfg, h20, &rng);
+        assert_ne!(k0, measurement_key(&suite.tasks[1], &cfg, h20, &rng));
+        assert_ne!(k0, measurement_key(&suite.tasks[0], &cfg, a100, &rng));
+        assert_ne!(
+            k0,
+            measurement_key(&suite.tasks[0], &cfg, h20, &Rng::new(3).split("m", 2))
+        );
+        // and the address is stable across calls
+        assert_eq!(k0, measurement_key(&suite.tasks[0], &cfg, h20, &rng));
+    }
+
+    #[test]
+    fn content_cache_tracks_dirty_entries_sorted() {
+        let mut c: ContentCache<u32> = ContentCache::default();
+        c.insert(9, 90);
+        c.insert(3, 30);
+        c.insert(9, 91); // overwrite: not re-marked dirty
+        c.insert_loaded(1, 10); // loaded: never dirty
+        let dirty = c.take_dirty();
+        assert_eq!(dirty.iter().map(|&(k, _)| k).collect::<Vec<_>>(), vec![3, 9]);
+        assert!(c.take_dirty().is_empty());
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.get(9), Some(91));
+    }
+}

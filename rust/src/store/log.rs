@@ -1,0 +1,428 @@
+//! Append-only, versioned JSONL trace log.
+//!
+//! Every bandit step of every optimization run can be captured as one
+//! self-describing JSON line: `{"v": 1, "kind": "task" | "step", ...}`.
+//! Records are written through the deterministic [`crate::util::json`]
+//! writer (sorted keys, shortest-roundtrip floats), so a log produced by
+//! a replayed run is byte-identical to the original.
+//!
+//! Replay is corruption-tolerant by construction:
+//!
+//! * a truncated final line (crash mid-append) parses as garbage and is
+//!   counted in [`ReplaySummary::corrupt_lines`], never fatal;
+//! * records with an unknown `v` are skipped and counted in
+//!   [`ReplaySummary::skipped_versions`] — a newer writer's records do
+//!   not break an older reader;
+//! * unknown `kind`s under a known version are likewise skipped.
+//!
+//! Determinism under `--threads N`: the experiment runner generates
+//! per-(cell, task) traces in parallel but serializes their records in
+//! canonical cell order then task order ([`records_for_traces`] is
+//! called per cell after the fan-in), so the log bytes are invariant to
+//! the thread count.
+
+use crate::kernel::Counters;
+use crate::policy::Trace;
+use crate::strategy::{Strategy, ALL_STRATEGIES};
+use crate::util::json::{parse_lines_lossy, Json};
+
+/// Current trace-record schema version.
+pub const TRACE_VERSION: f64 = 1.0;
+
+/// Header emitted once per (cell, task): identifies the run context and
+/// the reference point warm-start normalization needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskRecord {
+    /// Cell label ("KernelBand", "BoN", "optimize", …).
+    pub cell: String,
+    pub device: String,
+    pub llm: String,
+    /// Cell seed, hex-encoded on disk (u64 range exceeds JSON f64).
+    pub seed: u64,
+    pub task_id: usize,
+    pub task: String,
+    pub difficulty: usize,
+    pub naive_latency_s: f64,
+}
+
+/// One bandit step `(parent, strategy) -> child` with its measurement.
+///
+/// Carries its own device/llm context (not just the cell label): warm
+/// start aggregates rewards per `(device, llm, task)` — Table 10 shows
+/// strategy profiles differ across devices, so priors must never mix
+/// hardware — and a step must stay attributable even when its task
+/// header line is the one a crash tore.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    pub cell: String,
+    pub device: String,
+    pub llm: String,
+    pub task: String,
+    pub t: usize,
+    pub cluster: usize,
+    /// `None` for free-form (strategy-less) modes.
+    pub strategy: Option<Strategy>,
+    /// Frontier index of the expanded kernel.
+    pub parent: usize,
+    /// Content hash of the parent schedule.
+    pub parent_hash: u64,
+    /// Content hash of the accepted child schedule, if verification
+    /// passed.
+    pub child_hash: Option<u64>,
+    pub call_ok: bool,
+    pub exec_ok: bool,
+    pub reward: f64,
+    pub cost_usd: f64,
+    /// Child total latency (seconds) when accepted.
+    pub runtime_s: Option<f64>,
+    pub best_speedup: f64,
+    /// Child execution counters when accepted (feeds φ(k) on replay).
+    pub counters: Option<Counters>,
+}
+
+/// A parsed trace-log record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceRecord {
+    Task(TaskRecord),
+    Step(StepRecord),
+}
+
+use super::{
+    counters_from_json, counters_to_json as counters_json,
+    hex_u64 as hex, parse_hex_u64 as parse_hex,
+};
+
+fn strategy_json(s: Option<Strategy>) -> Json {
+    match s {
+        Some(s) => Json::str(s.name()),
+        None => Json::Null,
+    }
+}
+
+fn strategy_from_json(j: Option<&Json>) -> Option<Strategy> {
+    let name = j?.as_str()?;
+    ALL_STRATEGIES.iter().copied().find(|s| s.name() == name)
+}
+
+impl TraceRecord {
+    /// Serialize as one JSONL value (sorted keys, deterministic bytes).
+    pub fn to_json(&self) -> Json {
+        match self {
+            TraceRecord::Task(t) => Json::obj(vec![
+                ("v", Json::num(TRACE_VERSION)),
+                ("kind", Json::str("task")),
+                ("cell", Json::str(t.cell.clone())),
+                ("device", Json::str(t.device.clone())),
+                ("llm", Json::str(t.llm.clone())),
+                ("seed", hex(t.seed)),
+                ("task_id", Json::num(t.task_id as f64)),
+                ("task", Json::str(t.task.clone())),
+                ("difficulty", Json::num(t.difficulty as f64)),
+                ("naive_latency_s", Json::num(t.naive_latency_s)),
+            ]),
+            TraceRecord::Step(s) => {
+                let mut obj = Json::obj(vec![
+                    ("v", Json::num(TRACE_VERSION)),
+                    ("kind", Json::str("step")),
+                    ("cell", Json::str(s.cell.clone())),
+                    ("device", Json::str(s.device.clone())),
+                    ("llm", Json::str(s.llm.clone())),
+                    ("task", Json::str(s.task.clone())),
+                    ("t", Json::num(s.t as f64)),
+                    ("cluster", Json::num(s.cluster as f64)),
+                    ("strategy", strategy_json(s.strategy)),
+                    ("parent", Json::num(s.parent as f64)),
+                    ("parent_hash", hex(s.parent_hash)),
+                    ("call_ok", Json::Bool(s.call_ok)),
+                    ("exec_ok", Json::Bool(s.exec_ok)),
+                    ("reward", Json::num(s.reward)),
+                    ("cost_usd", Json::num(s.cost_usd)),
+                    ("best_speedup", Json::num(s.best_speedup)),
+                ]);
+                if let Some(h) = s.child_hash {
+                    obj.insert("child_hash", hex(h));
+                }
+                if let Some(r) = s.runtime_s {
+                    obj.insert("runtime_s", Json::num(r));
+                }
+                if let Some(c) = &s.counters {
+                    obj.insert("counters", counters_json(c));
+                }
+                obj
+            }
+        }
+    }
+
+    /// Decode one parsed JSONL value; `None` for unknown kinds (the
+    /// version gate lives in [`replay_values`]).
+    pub fn from_json(j: &Json) -> Option<TraceRecord> {
+        match j.get("kind")?.as_str()? {
+            "task" => Some(TraceRecord::Task(TaskRecord {
+                cell: j.str_field("cell").ok()?.to_string(),
+                device: j.str_field("device").ok()?.to_string(),
+                llm: j.str_field("llm").ok()?.to_string(),
+                seed: parse_hex(j.get("seed"))?,
+                task_id: j.f64_field("task_id") as usize,
+                task: j.str_field("task").ok()?.to_string(),
+                difficulty: j.f64_field("difficulty") as usize,
+                naive_latency_s: j.f64_field("naive_latency_s"),
+            })),
+            "step" => Some(TraceRecord::Step(StepRecord {
+                cell: j.str_field("cell").ok()?.to_string(),
+                device: j.str_field("device").ok()?.to_string(),
+                llm: j.str_field("llm").ok()?.to_string(),
+                task: j.str_field("task").ok()?.to_string(),
+                t: j.f64_field("t") as usize,
+                cluster: j.f64_field("cluster") as usize,
+                strategy: strategy_from_json(j.get("strategy")),
+                parent: j.f64_field("parent") as usize,
+                parent_hash: parse_hex(j.get("parent_hash"))?,
+                child_hash: parse_hex(j.get("child_hash")),
+                call_ok: j.get("call_ok") == Some(&Json::Bool(true)),
+                exec_ok: j.get("exec_ok") == Some(&Json::Bool(true)),
+                reward: j.f64_field("reward"),
+                cost_usd: j.f64_field("cost_usd"),
+                runtime_s: j.get("runtime_s").and_then(Json::as_f64),
+                best_speedup: j.f64_field("best_speedup"),
+                counters: j.get("counters").map(counters_from_json),
+            })),
+            _ => None,
+        }
+    }
+
+    /// Task name the record belongs to.
+    pub fn task_name(&self) -> &str {
+        match self {
+            TraceRecord::Task(t) => &t.task,
+            TraceRecord::Step(s) => &s.task,
+        }
+    }
+}
+
+/// Outcome of replaying a trace log.
+#[derive(Debug, Default, Clone)]
+pub struct ReplaySummary {
+    pub records: Vec<TraceRecord>,
+    /// Lines that failed to parse (truncation, corruption).
+    pub corrupt_lines: usize,
+    /// Well-formed records with an unrecognized `v`.
+    pub skipped_versions: usize,
+    /// Known-version records with an unrecognized `kind`.
+    pub skipped_kinds: usize,
+}
+
+impl ReplaySummary {
+    pub fn tasks(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r, TraceRecord::Task(_)))
+            .count()
+    }
+
+    pub fn steps(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r, TraceRecord::Step(_)))
+            .count()
+    }
+}
+
+/// Replay already-parsed JSONL values (see [`replay_text`]).
+pub fn replay_values(values: &[Json]) -> ReplaySummary {
+    let mut out = ReplaySummary::default();
+    for v in values {
+        if v.get("v").and_then(Json::as_f64) != Some(TRACE_VERSION) {
+            out.skipped_versions += 1;
+            continue;
+        }
+        match TraceRecord::from_json(v) {
+            Some(r) => out.records.push(r),
+            None => out.skipped_kinds += 1,
+        }
+    }
+    out
+}
+
+/// Replay a trace log from its raw text, tolerating truncated or
+/// corrupt lines and unknown record versions.
+pub fn replay_text(text: &str) -> ReplaySummary {
+    let (values, corrupt) = parse_lines_lossy(text);
+    let mut summary = replay_values(&values);
+    summary.corrupt_lines = corrupt;
+    summary
+}
+
+/// Replay a trace log file.
+pub fn replay_file(path: &std::path::Path) -> std::io::Result<ReplaySummary> {
+    Ok(replay_text(&std::fs::read_to_string(path)?))
+}
+
+/// Serialize an optimization [`Trace`] as log records: one task header
+/// followed by its steps in iteration order.
+pub fn records_for_trace(cell: &str, device: &str, llm: &str, seed: u64,
+                         trace: &Trace) -> Vec<TraceRecord> {
+    let mut out = Vec::with_capacity(1 + trace.records.len());
+    out.push(TraceRecord::Task(TaskRecord {
+        cell: cell.to_string(),
+        device: device.to_string(),
+        llm: llm.to_string(),
+        seed,
+        task_id: trace.task_id,
+        task: trace.task_name.clone(),
+        difficulty: trace.difficulty.level(),
+        naive_latency_s: trace.naive_latency_s,
+    }));
+    for r in &trace.records {
+        let child = r.accepted.map(|id| &trace.candidates[id]);
+        out.push(TraceRecord::Step(StepRecord {
+            cell: cell.to_string(),
+            device: device.to_string(),
+            llm: llm.to_string(),
+            task: trace.task_name.clone(),
+            t: r.t,
+            cluster: r.cluster,
+            strategy: r.strategy,
+            parent: r.parent,
+            parent_hash: trace.candidates[r.parent].config.code_hash(),
+            child_hash: child.map(|c| c.config.code_hash()),
+            call_ok: r.verdict.call_ok,
+            exec_ok: r.verdict.exec_ok,
+            reward: r.reward,
+            cost_usd: r.cost_usd,
+            runtime_s: child.map(|c| c.measurement.total_latency_s),
+            best_speedup: r.best_speedup_so_far,
+            counters: child.map(|c| c.measurement.counters),
+        }));
+    }
+    out
+}
+
+/// Render records as JSONL text (one compact line per record, trailing
+/// newline). Byte-deterministic.
+pub fn to_jsonl(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json().dump());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_step() -> StepRecord {
+        StepRecord {
+            cell: "KernelBand".into(),
+            device: "H20".into(),
+            llm: "DeepSeek-V3.2".into(),
+            task: "matmul_0".into(),
+            t: 3,
+            cluster: 1,
+            strategy: Some(Strategy::Fusion),
+            parent: 0,
+            parent_hash: 0xdead_beef_0123_4567,
+            child_hash: Some(0xffff_0000_aaaa_5555),
+            call_ok: true,
+            exec_ok: true,
+            reward: 0.25,
+            cost_usd: 0.013,
+            runtime_s: Some(0.0042),
+            best_speedup: 1.7,
+            counters: Some(Counters {
+                regs_per_thread: 64.0,
+                smem_per_block: 16384.0,
+                block_dim: 256.0,
+                occupancy: 0.5,
+                sm_pct: 41.0,
+                dram_pct: 72.5,
+                l2_pct: 30.25,
+            }),
+        }
+    }
+
+    fn sample_task() -> TaskRecord {
+        TaskRecord {
+            cell: "KernelBand".into(),
+            device: "H20".into(),
+            llm: "DeepSeek-V3.2".into(),
+            seed: u64::MAX - 3, // above 2^53: exercises hex encoding
+            task_id: 17,
+            task: "matmul_0".into(),
+            difficulty: 4,
+            naive_latency_s: 0.031,
+        }
+    }
+
+    #[test]
+    fn record_roundtrip_is_exact() {
+        for rec in [
+            TraceRecord::Task(sample_task()),
+            TraceRecord::Step(sample_step()),
+            TraceRecord::Step(StepRecord {
+                strategy: None,
+                child_hash: None,
+                runtime_s: None,
+                counters: None,
+                call_ok: false,
+                exec_ok: false,
+                ..sample_step()
+            }),
+        ] {
+            let line = rec.to_json().dump();
+            let parsed = crate::util::json::parse(&line).unwrap();
+            assert_eq!(TraceRecord::from_json(&parsed).unwrap(), rec);
+        }
+    }
+
+    #[test]
+    fn replay_skips_unknown_versions_and_kinds() {
+        let mut text = to_jsonl(&[TraceRecord::Step(sample_step())]);
+        text.push_str("{\"v\":99,\"kind\":\"step\",\"future\":true}\n");
+        text.push_str("{\"v\":1,\"kind\":\"hologram\"}\n");
+        let summary = replay_text(&text);
+        assert_eq!(summary.records.len(), 1);
+        assert_eq!(summary.skipped_versions, 1);
+        assert_eq!(summary.skipped_kinds, 1);
+        assert_eq!(summary.corrupt_lines, 0);
+    }
+
+    #[test]
+    fn replay_recovers_before_truncated_tail() {
+        let full = to_jsonl(&[
+            TraceRecord::Task(sample_task()),
+            TraceRecord::Step(sample_step()),
+        ]);
+        // crash mid-append: cut the final line in half
+        let cut = &full[..full.len() - 40];
+        let summary = replay_text(cut);
+        assert_eq!(summary.records.len(), 1);
+        assert_eq!(summary.corrupt_lines, 1);
+        assert_eq!(summary.tasks(), 1);
+        assert_eq!(summary.steps(), 0);
+    }
+
+    #[test]
+    fn jsonl_bytes_are_deterministic() {
+        let recs = vec![
+            TraceRecord::Task(sample_task()),
+            TraceRecord::Step(sample_step()),
+        ];
+        assert_eq!(to_jsonl(&recs), to_jsonl(&recs));
+        // and replay . serialize is the identity on bytes
+        let summary = replay_text(&to_jsonl(&recs));
+        assert_eq!(to_jsonl(&summary.records), to_jsonl(&recs));
+    }
+
+    #[test]
+    fn seed_survives_full_u64_range() {
+        let rec = TraceRecord::Task(sample_task());
+        let line = rec.to_json().dump();
+        let parsed = crate::util::json::parse(&line).unwrap();
+        match TraceRecord::from_json(&parsed).unwrap() {
+            TraceRecord::Task(t) => assert_eq!(t.seed, u64::MAX - 3),
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,503 @@
+//! Persistent trace store: content-addressed kernel cache +
+//! append-only trace log + cross-session warm-start.
+//!
+//! Every `repro`/`serve` run used to start cold and throw its
+//! optimization history away at exit. This subsystem makes that history
+//! durable and reusable:
+//!
+//! * [`cache`] — **content-addressed caches**: measurements keyed by
+//!   `(task, schedule, device, noise lineage)` and LLM proposals keyed
+//!   by `(model, task, parent schedule, prompt mode, generation
+//!   lineage)`. Any kernel already compiled + benchmarked anywhere in a
+//!   previous grid is a lookup instead of a simulated compile/exec, and
+//!   a cached proposal skips the (simulated) LLM round-trip entirely.
+//! * [`log`] — an **append-only JSONL trace log** with versioned
+//!   records and corruption-tolerant replay: every bandit step `(parent
+//!   kernel, strategy, child kernel, runtime, profile counters, seed
+//!   lineage)` survives the process.
+//! * [`warm`] — a **warm-start loader** that replays a prior trace into
+//!   bandit priors and seeds K-means centroids from historical
+//!   runtimes.
+//! * [`wrap`] — [`wrap::CachedEngine`] / [`wrap::CachedLlm`]: drop-in
+//!   [`crate::engine::EvalEngine`] / [`crate::llm::LlmBackend`]
+//!   decorators that route every measurement and proposal through the
+//!   store.
+//!
+//! ## Determinism contract
+//!
+//! Cache keys include the split-RNG seed lineage of the call site, so a
+//! hit returns *exactly* the bytes the simulation would have produced —
+//! a run against a populated store emits `BENCH_*.json` artifacts
+//! byte-identical to a cold run, for any `--threads N`. Trace records
+//! are serialized per cell in canonical cell order after the parallel
+//! fan-in, so the log is thread-count-invariant too.
+//!
+//! ## On-disk layout (`--store DIR`)
+//!
+//! ```text
+//! DIR/kernels.jsonl    measurement cache (append-only, content-addressed)
+//! DIR/proposals.jsonl  LLM-proposal cache (append-only, content-addressed)
+//! DIR/service.jsonl    service-job completions (gateway bypass keys)
+//! DIR/trace.jsonl      the trace log (append-only, versioned records)
+//! ```
+//!
+//! All four files tolerate truncated tails and unknown record versions
+//! on load ([`crate::util::json::parse_lines_lossy`]).
+
+pub mod cache;
+pub mod log;
+pub mod warm;
+pub mod wrap;
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::kernel::Measurement;
+use crate::llm::Proposal;
+use crate::util::json::{parse_lines_lossy, Json};
+
+use self::cache::ContentCache;
+use self::log::TraceRecord;
+use self::warm::{TaskWarmStart, WarmIndex};
+
+const KERNELS_FILE: &str = "kernels.jsonl";
+const PROPOSALS_FILE: &str = "proposals.jsonl";
+const SERVICE_FILE: &str = "service.jsonl";
+const TRACE_FILE: &str = "trace.jsonl";
+
+/// u64 → zero-padded hex JSON string. Hashes and seeds span the full
+/// u64 range, which exceeds what a JSON number (f64) represents
+/// exactly, so every store file encodes them as 16-digit hex strings.
+pub(crate) fn hex_u64(v: u64) -> Json {
+    Json::str(format!("{v:016x}"))
+}
+
+/// Inverse of [`hex_u64`]; `None` on a missing/non-string/bad field.
+pub(crate) fn parse_hex_u64(j: Option<&Json>) -> Option<u64> {
+    u64::from_str_radix(j?.as_str()?, 16).ok()
+}
+
+/// The single on-disk encoding of [`Counters`] shared by the
+/// measurement cache and the trace log: a named object, so field
+/// addition/reordering can never silently scramble values the way a
+/// positional array would.
+pub(crate) fn counters_to_json(c: &crate::kernel::Counters) -> Json {
+    Json::obj(vec![
+        ("regs_per_thread", Json::num(c.regs_per_thread)),
+        ("smem_per_block", Json::num(c.smem_per_block)),
+        ("block_dim", Json::num(c.block_dim)),
+        ("occupancy", Json::num(c.occupancy)),
+        ("sm_pct", Json::num(c.sm_pct)),
+        ("dram_pct", Json::num(c.dram_pct)),
+        ("l2_pct", Json::num(c.l2_pct)),
+    ])
+}
+
+/// Inverse of [`counters_to_json`] (missing fields decode as 0.0).
+pub(crate) fn counters_from_json(j: &Json) -> crate::kernel::Counters {
+    crate::kernel::Counters {
+        regs_per_thread: j.f64_field("regs_per_thread"),
+        smem_per_block: j.f64_field("smem_per_block"),
+        block_dim: j.f64_field("block_dim"),
+        occupancy: j.f64_field("occupancy"),
+        sm_pct: j.f64_field("sm_pct"),
+        dram_pct: j.f64_field("dram_pct"),
+        l2_pct: j.f64_field("l2_pct"),
+    }
+}
+
+/// Lock-free hit/miss accounting, shared across worker threads.
+///
+/// `*_sims` count work actually simulated this session; `*_hits` count
+/// simulated compile/exec steps and LLM round-trips bypassed by the
+/// cache. Saved cost/latency are accumulated in integer micro-units so
+/// plain atomics suffice.
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub measure_hits: AtomicU64,
+    pub measure_sims: AtomicU64,
+    pub llm_hits: AtomicU64,
+    pub llm_sims: AtomicU64,
+    /// Micro-USD of LLM spend bypassed by proposal-cache hits.
+    pub saved_cost_micro_usd: AtomicU64,
+    /// Milliseconds of *serial* LLM latency bypassed by hits.
+    pub saved_serial_llm_ms: AtomicU64,
+}
+
+impl StoreStats {
+    pub fn saved_cost_usd(&self) -> f64 {
+        self.saved_cost_micro_usd.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    pub fn saved_serial_llm_s(&self) -> f64 {
+        self.saved_serial_llm_ms.load(Ordering::Relaxed) as f64 * 1e-3
+    }
+}
+
+/// What a load found on disk.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LoadSummary {
+    pub kernels: usize,
+    pub proposals: usize,
+    pub service: usize,
+    /// Cache/service lines skipped (corrupt or unknown version).
+    pub skipped: usize,
+}
+
+/// The persistent store. Thread-safe: the experiment runner's workers
+/// share one instance behind an `Arc`.
+#[derive(Debug)]
+pub struct TraceStore {
+    dir: Option<PathBuf>,
+    kernels: Mutex<ContentCache<Measurement>>,
+    proposals: Mutex<ContentCache<Proposal>>,
+    service: Mutex<ServiceCache>,
+    /// Records appended this session, flushed by [`TraceStore::persist`].
+    pending_log: Mutex<Vec<TraceRecord>>,
+    warm: Option<WarmIndex>,
+    pub stats: StoreStats,
+    pub loaded: LoadSummary,
+}
+
+#[derive(Debug, Default)]
+struct ServiceCache {
+    keys: HashSet<u64>,
+    dirty: Vec<u64>,
+}
+
+impl TraceStore {
+    /// A store with no backing directory: caches and warm-start work,
+    /// [`TraceStore::persist`] is a no-op.
+    pub fn in_memory() -> TraceStore {
+        TraceStore {
+            dir: None,
+            kernels: Mutex::new(ContentCache::default()),
+            proposals: Mutex::new(ContentCache::default()),
+            service: Mutex::new(ServiceCache::default()),
+            pending_log: Mutex::new(Vec::new()),
+            warm: None,
+            stats: StoreStats::default(),
+            loaded: LoadSummary::default(),
+        }
+    }
+
+    /// Open (creating if missing) a store directory and load its
+    /// caches. Corrupt lines and unknown record versions are skipped,
+    /// never fatal.
+    pub fn open(dir: &Path) -> std::io::Result<TraceStore> {
+        std::fs::create_dir_all(dir)?;
+        let mut store = TraceStore::in_memory();
+        store.dir = Some(dir.to_path_buf());
+
+        let read = |name: &str| -> std::io::Result<String> {
+            match std::fs::read_to_string(dir.join(name)) {
+                Ok(text) => Ok(text),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    Ok(String::new())
+                }
+                Err(e) => Err(e),
+            }
+        };
+
+        let mut summary = LoadSummary::default();
+        {
+            let (entries, skipped) = cache::load_entries(
+                &read(KERNELS_FILE)?,
+                cache::measurement_from_record,
+            );
+            summary.skipped += skipped;
+            let mut kernels = store.kernels.lock().unwrap();
+            for (k, v) in entries {
+                kernels.insert_loaded(k, v);
+            }
+            summary.kernels = kernels.len();
+        }
+        {
+            let (entries, skipped) = cache::load_entries(
+                &read(PROPOSALS_FILE)?,
+                cache::proposal_from_record,
+            );
+            summary.skipped += skipped;
+            let mut proposals = store.proposals.lock().unwrap();
+            for (k, v) in entries {
+                proposals.insert_loaded(k, v);
+            }
+            summary.proposals = proposals.len();
+        }
+        {
+            let (values, corrupt) = parse_lines_lossy(&read(SERVICE_FILE)?);
+            summary.skipped += corrupt;
+            let mut service = store.service.lock().unwrap();
+            for v in &values {
+                if v.get("v").and_then(Json::as_f64)
+                    != Some(cache::CACHE_VERSION)
+                {
+                    summary.skipped += 1;
+                    continue;
+                }
+                match parse_hex_u64(v.get("key")) {
+                    Some(k) => {
+                        service.keys.insert(k);
+                    }
+                    None => summary.skipped += 1,
+                }
+            }
+            summary.service = service.keys.len();
+        }
+        store.loaded = summary;
+        Ok(store)
+    }
+
+    /// Attach a warm-start index replayed from `trace_path` (fitting
+    /// centroid seeds for `clusters` clusters). Returns the replay
+    /// summary for display.
+    pub fn load_warm(&mut self, trace_path: &Path, clusters: usize)
+                     -> std::io::Result<log::ReplaySummary> {
+        let summary = log::replay_file(trace_path)?;
+        self.warm = Some(WarmIndex::from_records(&summary.records, clusters));
+        Ok(summary)
+    }
+
+    /// Attach a warm-start index built from in-memory records.
+    pub fn set_warm(&mut self, index: WarmIndex) {
+        self.warm = Some(index);
+    }
+
+    /// Warm-start state for exactly this (device, llm, task) context,
+    /// if a warm index is attached and has matching history. Priors are
+    /// never served across hardware or model boundaries.
+    pub fn warm_for(&self, device: &str, llm: &str, task_name: &str)
+                    -> Option<&TaskWarmStart> {
+        self.warm.as_ref()?.get(device, llm, task_name)
+    }
+
+    pub fn warm_index(&self) -> Option<&WarmIndex> {
+        self.warm.as_ref()
+    }
+
+    /// Path of this store's trace log (None for in-memory stores).
+    pub fn trace_path(&self) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(TRACE_FILE))
+    }
+
+    // --- cache access (used by `wrap`) ---------------------------------
+
+    pub fn lookup_measurement(&self, key: u64) -> Option<Measurement> {
+        self.kernels.lock().unwrap().get(key)
+    }
+
+    pub fn insert_measurement(&self, key: u64, m: &Measurement) {
+        self.kernels.lock().unwrap().insert(key, m.clone());
+    }
+
+    pub fn lookup_proposal(&self, key: u64) -> Option<Proposal> {
+        self.proposals.lock().unwrap().get(key)
+    }
+
+    pub fn insert_proposal(&self, key: u64, p: &Proposal) {
+        self.proposals.lock().unwrap().insert(key, p.clone());
+    }
+
+    /// Service-job completion check (the gateway-bypass fast path).
+    pub fn service_done(&self, key: u64) -> bool {
+        self.service.lock().unwrap().keys.contains(&key)
+    }
+
+    /// Record a completed service job.
+    pub fn service_insert(&self, key: u64) {
+        let mut s = self.service.lock().unwrap();
+        if s.keys.insert(key) {
+            s.dirty.push(key);
+        }
+    }
+
+    /// Queue trace records for the next [`TraceStore::persist`].
+    pub fn append_trace(&self, records: Vec<TraceRecord>) {
+        self.pending_log.lock().unwrap().extend(records);
+    }
+
+    pub fn kernel_count(&self) -> usize {
+        self.kernels.lock().unwrap().len()
+    }
+
+    pub fn proposal_count(&self) -> usize {
+        self.proposals.lock().unwrap().len()
+    }
+
+    // --- persistence ----------------------------------------------------
+
+    /// Flush pending trace records and new cache entries, appending to
+    /// the store files. New cache entries are written sorted by key, so
+    /// the bytes are independent of worker scheduling. No-op without a
+    /// backing directory.
+    ///
+    /// Ordering matters for crash tolerance: the trace log flushes
+    /// *before* the caches. The pure-replay guards skip re-appending a
+    /// trace when every step cache-hits, so if the caches landed but the
+    /// trace didn't, that history would be unrecoverable; the reverse
+    /// failure (trace landed, caches torn) only makes the next run
+    /// re-simulate and re-append byte-identical records, which warm
+    /// replay deduplicates.
+    pub fn persist(&self) -> std::io::Result<()> {
+        let Some(dir) = &self.dir else { return Ok(()) };
+
+        let append = |name: &str, text: String| -> std::io::Result<()> {
+            if text.is_empty() {
+                return Ok(());
+            }
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(dir.join(name))?;
+            f.write_all(text.as_bytes())
+        };
+
+        let pending = std::mem::take(&mut *self.pending_log.lock().unwrap());
+        append(TRACE_FILE, log::to_jsonl(&pending))?;
+
+        let mut kernels_text = String::new();
+        for (k, m) in self.kernels.lock().unwrap().take_dirty() {
+            kernels_text.push_str(&cache::measurement_record(k, &m).dump());
+            kernels_text.push('\n');
+        }
+        append(KERNELS_FILE, kernels_text)?;
+
+        let mut proposals_text = String::new();
+        for (k, p) in self.proposals.lock().unwrap().take_dirty() {
+            proposals_text.push_str(&cache::proposal_record(k, &p).dump());
+            proposals_text.push('\n');
+        }
+        append(PROPOSALS_FILE, proposals_text)?;
+
+        let mut service_text = String::new();
+        {
+            let mut s = self.service.lock().unwrap();
+            let mut dirty = std::mem::take(&mut s.dirty);
+            dirty.sort_unstable();
+            dirty.dedup();
+            for k in dirty {
+                let rec = Json::obj(vec![
+                    ("v", Json::num(cache::CACHE_VERSION)),
+                    ("key", hex_u64(k)),
+                ]);
+                service_text.push_str(&rec.dump());
+                service_text.push('\n');
+            }
+        }
+        append(SERVICE_FILE, service_text)?;
+        Ok(())
+    }
+
+    /// One-line, grep-friendly summary for the CLI (`[store] …`).
+    pub fn stats_line(&self) -> String {
+        let s = &self.stats;
+        format!(
+            "measure_sim={} measure_hit={} llm_sim={} llm_hit={} \
+             cost_saved_usd={:.4} serial_llm_s_saved={:.1} \
+             kernels={} proposals={}",
+            s.measure_sims.load(Ordering::Relaxed),
+            s.measure_hits.load(Ordering::Relaxed),
+            s.llm_sims.load(Ordering::Relaxed),
+            s.llm_hits.load(Ordering::Relaxed),
+            s.saved_cost_usd(),
+            s.saved_serial_llm_s(),
+            self.kernel_count(),
+            self.proposal_count(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Counters;
+
+    fn meas(t: f64) -> Measurement {
+        Measurement {
+            total_latency_s: t,
+            per_shape_s: vec![t],
+            counters: Counters { sm_pct: 12.0, ..Default::default() },
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "kb_store_unit_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn in_memory_store_caches_without_disk() {
+        let store = TraceStore::in_memory();
+        assert!(store.lookup_measurement(1).is_none());
+        store.insert_measurement(1, &meas(0.5));
+        assert_eq!(store.lookup_measurement(1).unwrap().total_latency_s, 0.5);
+        store.persist().unwrap(); // no-op, no panic
+        assert!(store.trace_path().is_none());
+    }
+
+    #[test]
+    fn open_persist_reopen_roundtrips() {
+        let dir = tmp_dir("roundtrip");
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            assert_eq!(store.loaded.kernels, 0);
+            store.insert_measurement(42, &meas(0.25));
+            store.service_insert(7);
+            store.persist().unwrap();
+        }
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            assert_eq!(store.loaded.kernels, 1);
+            assert_eq!(store.loaded.service, 1);
+            assert_eq!(
+                store.lookup_measurement(42).unwrap().total_latency_s,
+                0.25
+            );
+            assert!(store.service_done(7));
+            assert!(!store.service_done(8));
+            // reloaded entries are not re-appended
+            store.persist().unwrap();
+        }
+        let text =
+            std::fs::read_to_string(dir.join(KERNELS_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_tolerates_corrupt_cache_tail() {
+        let dir = tmp_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = TraceStore::open(&dir).unwrap();
+        store.insert_measurement(1, &meas(0.1));
+        store.insert_measurement(2, &meas(0.2));
+        store.persist().unwrap();
+        // simulate a crash mid-append
+        let path = dir.join(KERNELS_FILE);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"v\":1,\"key\":\"trunca");
+        std::fs::write(&path, text).unwrap();
+        let store = TraceStore::open(&dir).unwrap();
+        assert_eq!(store.loaded.kernels, 2);
+        assert_eq!(store.loaded.skipped, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_line_is_grep_friendly() {
+        let store = TraceStore::in_memory();
+        store.stats.measure_sims.fetch_add(3, Ordering::Relaxed);
+        store.stats.llm_hits.fetch_add(2, Ordering::Relaxed);
+        let line = store.stats_line();
+        assert!(line.contains("measure_sim=3"));
+        assert!(line.contains("llm_hit=2"));
+        assert!(line.contains("measure_hit=0"));
+    }
+}

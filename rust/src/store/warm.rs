@@ -1,0 +1,335 @@
+//! Warm-start: replay a prior trace into bandit priors and cluster
+//! seeds.
+//!
+//! A trace log records, per task, every `(strategy, reward)` pull and —
+//! for accepted candidates — the runtime and execution counters behind
+//! the behavioral features φ(k). [`WarmIndex::from_records`] folds a
+//! replayed log into [`TaskWarmStart`]s keyed by **(device, llm,
+//! task)** — never task alone: strategy profiles differ across
+//! hardware (the repo's own Table 10), so a prior learned on H20 must
+//! not pre-bias an RTX 4090 run:
+//!
+//! * **bandit priors** — the chronological reward history, capped at
+//!   the most recent [`MAX_WARM_REWARDS`] pulls so a long history
+//!   sharpens the arms without extinguishing UCB exploration; the
+//!   policy applies them as pre-run arm updates
+//!   ([`crate::policy::KernelBand::optimize_warm`]);
+//! * **cluster seeds** — K-means centroids fitted (deterministically)
+//!   over the historical φ(k) cloud, used as the initialization of the
+//!   first re-clustering in place of k-means++
+//!   ([`crate::cluster::RustKmeans::cluster_seeded`]).
+//!
+//! Replay is a pure function of the record list: the same trace always
+//! reconstructs bit-identical priors and centroids (property-tested in
+//! `rust/tests/prop_store.rs`). Exact-duplicate step records — an
+//! append-only log accumulates them when overlapping reruns re-log
+//! partially-replayed traces — fold into the priors exactly once.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cluster::{ClusterBackend, RustKmeans};
+use crate::features::{phi, Phi};
+use crate::kernel::Measurement;
+use crate::rng::Rng;
+use crate::store::log::TraceRecord;
+use crate::strategy::Strategy;
+use crate::util::hash::fnv1a;
+
+/// Reward-history cap per task (most recent pulls win).
+pub const MAX_WARM_REWARDS: usize = 64;
+
+/// Per-task warm-start state distilled from a prior trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskWarmStart {
+    /// Chronological `(strategy, reward)` pulls (capped, oldest first).
+    pub rewards: Vec<(Strategy, f64)>,
+    /// Seed centroids for the first re-clustering (empty when the
+    /// history is too thin to fit `clusters` centroids).
+    pub centroids: Vec<Phi>,
+    /// Fastest verified runtime seen historically (diagnostics).
+    pub best_runtime_s: f64,
+    /// Total steps replayed for this task.
+    pub steps: usize,
+}
+
+/// The context a prior is valid for: same hardware, same model, same
+/// task. `(device, llm, task)` as recorded in the step records.
+pub type WarmKey = (String, String, String);
+
+/// All warm-start state, keyed by `(device, llm, task)`.
+#[derive(Debug, Clone, Default)]
+pub struct WarmIndex {
+    tasks: HashMap<WarmKey, TaskWarmStart>,
+    /// Cluster count the centroids were fitted for.
+    pub clusters: usize,
+}
+
+impl WarmIndex {
+    /// Distill replayed records into per-(device, llm, task) warm-start
+    /// state; `clusters` is the K the centroid seeds are fitted for.
+    pub fn from_records(records: &[TraceRecord], clusters: usize) -> WarmIndex {
+        // naive reference latency per context (first task header wins;
+        // the reference differs per device, so it is keyed like steps)
+        let mut naive: HashMap<(&str, &str), f64> = HashMap::new();
+        for r in records {
+            if let TraceRecord::Task(t) = r {
+                naive
+                    .entry((&t.device, &t.task))
+                    .or_insert(t.naive_latency_s);
+            }
+        }
+
+        struct Acc {
+            rewards: Vec<(Strategy, f64)>,
+            phis: Vec<Phi>,
+            best_runtime_s: f64,
+            steps: usize,
+        }
+        let mut acc: HashMap<WarmKey, Acc> = HashMap::new();
+        // the log is append-only and overlapping reruns may re-log steps
+        // they partially replayed; an exact duplicate record is the same
+        // deterministic pull and must fold into the priors exactly once
+        let mut seen: HashSet<u64> = HashSet::new();
+        for r in records {
+            let TraceRecord::Step(s) = r else { continue };
+            if !seen.insert(fnv1a(r.to_json().dump().as_bytes())) {
+                continue;
+            }
+            let key =
+                (s.device.clone(), s.llm.clone(), s.task.clone());
+            let a = acc.entry(key).or_insert(Acc {
+                rewards: Vec::new(),
+                phis: Vec::new(),
+                best_runtime_s: f64::INFINITY,
+                steps: 0,
+            });
+            a.steps += 1;
+            if let Some(strategy) = s.strategy {
+                a.rewards.push((strategy, s.reward));
+            }
+            if let (Some(runtime), Some(counters)) = (s.runtime_s, &s.counters)
+            {
+                a.best_runtime_s = a.best_runtime_s.min(runtime);
+                let reference = naive
+                    .get(&(s.device.as_str(), s.task.as_str()))
+                    .copied()
+                    .unwrap_or(runtime);
+                let m = Measurement {
+                    total_latency_s: runtime,
+                    per_shape_s: Vec::new(),
+                    counters: *counters,
+                };
+                a.phis.push(phi(&m, reference));
+            }
+        }
+
+        let kmeans = RustKmeans::default();
+        let tasks = acc
+            .into_iter()
+            .map(|(key, mut a)| {
+                if a.rewards.len() > MAX_WARM_REWARDS {
+                    let cut = a.rewards.len() - MAX_WARM_REWARDS;
+                    a.rewards.drain(..cut);
+                }
+                let centroids = if clusters > 0 && a.phis.len() >= 2 * clusters
+                {
+                    // deterministic: the seeding RNG is keyed by the
+                    // warm key, never by wall clock or replay order
+                    let seed = fnv1a(
+                        format!("{}/{}/{}", key.0, key.1, key.2).as_bytes(),
+                    );
+                    let mut rng = Rng::new(seed).split("warm", 0);
+                    kmeans.cluster(&a.phis, clusters, &mut rng).centroids
+                } else {
+                    Vec::new()
+                };
+                (
+                    key,
+                    TaskWarmStart {
+                        rewards: a.rewards,
+                        centroids,
+                        best_runtime_s: a.best_runtime_s,
+                        steps: a.steps,
+                    },
+                )
+            })
+            .collect();
+        WarmIndex { tasks, clusters }
+    }
+
+    /// Warm state for exactly this (device, llm, task) context.
+    pub fn get(&self, device: &str, llm: &str, task: &str)
+               -> Option<&TaskWarmStart> {
+        self.tasks.get(&(
+            device.to_string(),
+            llm.to_string(),
+            task.to_string(),
+        ))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Keys in sorted order (deterministic iteration for display).
+    pub fn keys(&self) -> Vec<&WarmKey> {
+        let mut keys: Vec<&WarmKey> = self.tasks.keys().collect();
+        keys.sort_unstable();
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SimEngine;
+    use crate::gpu_model::Device;
+    use crate::llm::{LlmProfile, SurrogateLlm};
+    use crate::policy::{KernelBand, PolicyConfig};
+    use crate::store::log::records_for_trace;
+    use crate::workload::Suite;
+
+    fn sample_records() -> Vec<TraceRecord> {
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+        let mut cfg = PolicyConfig::default();
+        cfg.iterations = 25;
+        let trace = KernelBand::new(cfg).optimize(
+            &suite.tasks[4],
+            &engine,
+            &llm,
+            &Rng::new(11),
+        );
+        records_for_trace("KernelBand", "H20", "DeepSeek-V3.2", 11, &trace)
+    }
+
+    fn only_entry(idx: &WarmIndex) -> &TaskWarmStart {
+        assert_eq!(idx.len(), 1);
+        let (device, llm, task) = idx.keys()[0].clone();
+        idx.get(&device, &llm, &task).unwrap()
+    }
+
+    #[test]
+    fn index_collects_rewards_and_steps() {
+        let records = sample_records();
+        let idx = WarmIndex::from_records(&records, 3);
+        let w = only_entry(&idx);
+        assert_eq!(w.steps, 25);
+        assert_eq!(w.rewards.len(), 25); // Full mode: every step has a strategy
+        assert!(w.rewards.iter().all(|&(_, r)| (0.0..=1.0).contains(&r)));
+        assert!(w.best_runtime_s.is_finite());
+    }
+
+    #[test]
+    fn index_keys_by_device_and_llm_not_task_alone() {
+        let mut records = sample_records();
+        // the same task traced on another device must form its own entry
+        for r in sample_records() {
+            match r {
+                TraceRecord::Task(mut t) => {
+                    t.device = "A100".into();
+                    records.push(TraceRecord::Task(t));
+                }
+                TraceRecord::Step(mut s) => {
+                    s.device = "A100".into();
+                    records.push(TraceRecord::Step(s));
+                }
+            }
+        }
+        let idx = WarmIndex::from_records(&records, 3);
+        assert_eq!(idx.len(), 2);
+        let keys = idx.keys();
+        assert_eq!(keys[0].0, "A100");
+        assert_eq!(keys[1].0, "H20");
+        // priors never mix across devices
+        let task = keys[0].2.clone();
+        assert_eq!(
+            idx.get("H20", "DeepSeek-V3.2", &task).unwrap().rewards.len(),
+            25
+        );
+        assert!(idx.get("H20", "GPT-5", &task).is_none());
+    }
+
+    #[test]
+    fn index_is_deterministic() {
+        let records = sample_records();
+        let a = WarmIndex::from_records(&records, 3);
+        let b = WarmIndex::from_records(&records, 3);
+        assert_eq!(only_entry(&a), only_entry(&b));
+    }
+
+    #[test]
+    fn reward_history_is_capped_to_most_recent() {
+        // one genuinely long run: more distinct pulls than the cap
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+        let mut cfg = PolicyConfig::default();
+        cfg.iterations = MAX_WARM_REWARDS + 16;
+        let trace = KernelBand::new(cfg).optimize(
+            &suite.tasks[4],
+            &engine,
+            &llm,
+            &Rng::new(11),
+        );
+        let records =
+            records_for_trace("KernelBand", "H20", "DeepSeek-V3.2", 11, &trace);
+        let idx = WarmIndex::from_records(&records, 3);
+        let w = only_entry(&idx);
+        assert_eq!(w.steps, MAX_WARM_REWARDS + 16);
+        assert_eq!(w.rewards.len(), MAX_WARM_REWARDS);
+    }
+
+    #[test]
+    fn duplicate_step_records_fold_into_priors_once() {
+        let mut records = sample_records();
+        // an overlapping rerun re-appending the identical trace must not
+        // double-count pulls
+        let dup: Vec<TraceRecord> = records.clone();
+        for _ in 0..10 {
+            records.extend(dup.iter().cloned());
+        }
+        let idx = WarmIndex::from_records(&records, 3);
+        let w = only_entry(&idx);
+        assert_eq!(w.steps, 25);
+        assert_eq!(w.rewards.len(), 25);
+    }
+
+    #[test]
+    fn thin_history_yields_no_centroids() {
+        let records = sample_records();
+        // demand more clusters than the φ cloud can support
+        let idx = WarmIndex::from_records(&records, 1000);
+        assert!(only_entry(&idx).centroids.is_empty());
+    }
+
+    #[test]
+    fn centroids_form_when_history_is_rich() {
+        // run long enough that ≥ 6 candidates are accepted
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::ClaudeOpus45);
+        let mut cfg = PolicyConfig::default();
+        cfg.iterations = 40;
+        let trace = KernelBand::new(cfg).optimize(
+            &suite.tasks[2],
+            &engine,
+            &llm,
+            &Rng::new(5),
+        );
+        let records =
+            records_for_trace("KernelBand", "H20", "Claude Opus 4.5", 5, &trace);
+        let accepted =
+            trace.records.iter().filter(|r| r.accepted.is_some()).count();
+        let idx = WarmIndex::from_records(&records, 3);
+        let w = idx.get("H20", "Claude Opus 4.5", &trace.task_name).unwrap();
+        if accepted >= 6 {
+            assert_eq!(w.centroids.len(), 3);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Cache-decorated evaluation engine and LLM backend.
+//!
+//! [`CachedEngine`] and [`CachedLlm`] are transparent decorators: every
+//! policy and baseline is generic over [`EvalEngine`] / [`LlmBackend`],
+//! so wrapping the substrates is all it takes to route the entire
+//! system — Algorithm 1, BoN, GEAK, the experiment grids — through the
+//! persistent store.
+//!
+//! Transparency is literal: a cache hit returns the bit-identical
+//! [`Measurement`]/[`Proposal`] the wrapped substrate would have
+//! produced (keys include the call's RNG seed lineage), and a miss
+//! delegates and records. The only observable differences are the
+//! store's hit/miss counters and the work skipped, which is what the
+//! warm-vs-cold acceptance test asserts on.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::engine::EvalEngine;
+use crate::gpu_model::GpuSim;
+use crate::kernel::{KernelConfig, Measurement};
+use crate::llm::{accounting, LlmBackend, ModelSpec, Proposal, ProposalRequest};
+use crate::rng::Rng;
+use crate::store::cache::{measurement_key, proposal_key};
+use crate::store::TraceStore;
+use crate::strategy::Strategy;
+use crate::workload::TaskSpec;
+
+/// [`EvalEngine`] decorator: content-addressed measurement cache.
+pub struct CachedEngine<E: EvalEngine> {
+    inner: E,
+    store: Arc<TraceStore>,
+    device_fp: u64,
+    /// Misses served by *this instance* (the store's counters are
+    /// session-global; callers that wrap one engine per work item use
+    /// this to tell which items did new work).
+    local_sims: AtomicU64,
+}
+
+impl<E: EvalEngine> CachedEngine<E> {
+    pub fn new(inner: E, store: Arc<TraceStore>) -> CachedEngine<E> {
+        let device_fp = inner.gpu().fingerprint();
+        CachedEngine { inner, store, device_fp, local_sims: AtomicU64::new(0) }
+    }
+
+    /// Simulated (non-cached) measurements this instance performed.
+    pub fn local_sims(&self) -> u64 {
+        self.local_sims.load(Ordering::Relaxed)
+    }
+}
+
+impl<E: EvalEngine> EvalEngine for CachedEngine<E> {
+    fn gpu(&self) -> &GpuSim {
+        self.inner.gpu()
+    }
+
+    fn measure(&self, task: &TaskSpec, cfg: &KernelConfig, rng: &mut Rng)
+               -> Measurement {
+        let key = measurement_key(task, cfg, self.device_fp, rng);
+        if let Some(m) = self.store.lookup_measurement(key) {
+            self.store.stats.measure_hits.fetch_add(1, Ordering::Relaxed);
+            return m;
+        }
+        let m = self.inner.measure(task, cfg, rng);
+        self.store.stats.measure_sims.fetch_add(1, Ordering::Relaxed);
+        self.local_sims.fetch_add(1, Ordering::Relaxed);
+        self.store.insert_measurement(key, &m);
+        m
+    }
+}
+
+/// [`LlmBackend`] decorator: content-addressed proposal cache.
+///
+/// A hit skips the (simulated) LLM round-trip entirely; the bypassed
+/// spend and serial latency ([`crate::llm::accounting::bypass_savings`])
+/// are credited to the store's [`crate::store::StoreStats`] counters so
+/// the Fig.-3/4 cost model can report what the cache saved.
+pub struct CachedLlm<L: LlmBackend> {
+    inner: L,
+    store: Arc<TraceStore>,
+    /// Misses served by *this instance* (see [`CachedEngine::local_sims`]).
+    local_sims: AtomicU64,
+}
+
+impl<L: LlmBackend> CachedLlm<L> {
+    pub fn new(inner: L, store: Arc<TraceStore>) -> CachedLlm<L> {
+        CachedLlm { inner, store, local_sims: AtomicU64::new(0) }
+    }
+
+    /// Simulated (non-cached) proposals this instance performed.
+    pub fn local_sims(&self) -> u64 {
+        self.local_sims.load(Ordering::Relaxed)
+    }
+}
+
+impl<L: LlmBackend> LlmBackend for CachedLlm<L> {
+    fn spec(&self) -> &ModelSpec {
+        self.inner.spec()
+    }
+
+    fn propose(&self, req: &ProposalRequest<'_>, rng: &mut Rng) -> Proposal {
+        let key = proposal_key(self.inner.spec().name, req, rng);
+        if let Some(p) = self.store.lookup_proposal(key) {
+            let stats = &self.store.stats;
+            stats.llm_hits.fetch_add(1, Ordering::Relaxed);
+            let saved = accounting::bypass_savings(&p);
+            stats
+                .saved_cost_micro_usd
+                .fetch_add(saved.cost_micro_usd, Ordering::Relaxed);
+            stats
+                .saved_serial_llm_ms
+                .fetch_add(saved.serial_ms, Ordering::Relaxed);
+            return p;
+        }
+        let p = self.inner.propose(req, rng);
+        self.store.stats.llm_sims.fetch_add(1, Ordering::Relaxed);
+        self.local_sims.fetch_add(1, Ordering::Relaxed);
+        self.store.insert_proposal(key, &p);
+        p
+    }
+
+    fn select_strategy(&self, task: &TaskSpec, rng: &mut Rng) -> Strategy {
+        // strategy selection is a cheap single call with no compile/exec
+        // behind it; delegating keeps the ablation's behavior identical
+        self.inner.select_strategy(task, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SimEngine;
+    use crate::gpu_model::Device;
+    use crate::llm::{LlmProfile, PromptMode, SurrogateLlm};
+    use crate::workload::Suite;
+
+    #[test]
+    fn engine_hit_returns_bit_identical_measurement() {
+        let suite = Suite::full(1);
+        let store = Arc::new(TraceStore::in_memory());
+        let engine =
+            CachedEngine::new(SimEngine::new(Device::H20), store.clone());
+        let cfg = KernelConfig::naive();
+        let cold =
+            engine.measure(&suite.tasks[0], &cfg, &mut Rng::new(1).split("m", 0));
+        let warm =
+            engine.measure(&suite.tasks[0], &cfg, &mut Rng::new(1).split("m", 0));
+        assert_eq!(cold.total_latency_s.to_bits(), warm.total_latency_s.to_bits());
+        assert_eq!(store.stats.measure_sims.load(Ordering::Relaxed), 1);
+        assert_eq!(store.stats.measure_hits.load(Ordering::Relaxed), 1);
+        // a different noise lineage is a different address
+        let other =
+            engine.measure(&suite.tasks[0], &cfg, &mut Rng::new(1).split("m", 1));
+        assert_eq!(store.stats.measure_sims.load(Ordering::Relaxed), 2);
+        assert!(other.total_latency_s > 0.0);
+    }
+
+    #[test]
+    fn llm_hit_skips_round_trip_and_credits_savings() {
+        let suite = Suite::full(1);
+        let store = Arc::new(TraceStore::in_memory());
+        let sim = GpuSim::new(Device::H20);
+        let llm = CachedLlm::new(
+            SurrogateLlm::new(LlmProfile::DeepSeekV32),
+            store.clone(),
+        );
+        let parent = KernelConfig::naive();
+        let req = ProposalRequest {
+            task: &suite.tasks[0],
+            parent: &parent,
+            mode: PromptMode::Strategy(Strategy::Fusion),
+            sim: &sim,
+            iterative: true,
+        };
+        let cold = llm.propose(&req, &mut Rng::new(5).split("gen", 1));
+        let warm = llm.propose(&req, &mut Rng::new(5).split("gen", 1));
+        assert_eq!(cold.outcome, warm.outcome);
+        assert_eq!(cold.config, warm.config);
+        assert_eq!(cold.cost_usd.to_bits(), warm.cost_usd.to_bits());
+        assert_eq!(store.stats.llm_sims.load(Ordering::Relaxed), 1);
+        assert_eq!(store.stats.llm_hits.load(Ordering::Relaxed), 1);
+        assert!(store.stats.saved_cost_usd() > 0.0);
+        assert!(store.stats.saved_serial_llm_s() > 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! FNV-1a hashing for content-addressed store keys.
+//!
+//! The persistent kernel store ([`crate::store`]) addresses cached
+//! measurements and LLM proposals by a 64-bit FNV-1a digest over a
+//! domain tag plus the ingredients that determine the result bit for bit
+//! (task fingerprint, schedule hash, device fingerprint, RNG seed
+//! lineage). FNV is not cryptographic — collisions are theoretically
+//! possible but the keyed inputs are themselves 64-bit mixed values, and
+//! a collision only ever swaps one deterministic simulation result for
+//! another inside a diagnostic cache.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Builder for multi-field keys: every field is folded into the digest
+/// with a length-free little-endian encoding preceded by the byte count,
+/// so `("ab", "c")` and `("a", "bc")` hash differently.
+#[derive(Debug, Clone, Copy)]
+pub struct KeyHasher(u64);
+
+impl KeyHasher {
+    /// Start a digest in a named domain ("measure", "proposal", …) so
+    /// identical ingredients in different domains never collide.
+    pub fn new(domain: &str) -> KeyHasher {
+        KeyHasher(fnv1a(domain.as_bytes()))
+    }
+
+    fn fold(mut self, bytes: &[u8]) -> KeyHasher {
+        self = self.fold_raw(&(bytes.len() as u64).to_le_bytes());
+        self.fold_raw(bytes)
+    }
+
+    fn fold_raw(mut self, bytes: &[u8]) -> KeyHasher {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub fn u64(self, v: u64) -> KeyHasher {
+        self.fold(&v.to_le_bytes())
+    }
+
+    /// Bit-exact: NaN payloads and signed zeros are distinguished.
+    pub fn f64(self, v: f64) -> KeyHasher {
+        self.fold(&v.to_bits().to_le_bytes())
+    }
+
+    pub fn str(self, s: &str) -> KeyHasher {
+        self.fold(s.as_bytes())
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_known_vector() {
+        // FNV-1a("a") — standard test vector
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b""), FNV_OFFSET);
+    }
+
+    #[test]
+    fn domains_separate_identical_fields() {
+        let a = KeyHasher::new("measure").u64(7).finish();
+        let b = KeyHasher::new("proposal").u64(7).finish();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn field_boundaries_matter() {
+        let a = KeyHasher::new("t").str("ab").str("c").finish();
+        let b = KeyHasher::new("t").str("a").str("bc").finish();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn f64_is_bit_exact() {
+        let a = KeyHasher::new("t").f64(0.0).finish();
+        let b = KeyHasher::new("t").f64(-0.0).finish();
+        assert_ne!(a, b);
+        let c = KeyHasher::new("t").f64(1.5).finish();
+        let d = KeyHasher::new("t").f64(1.5).finish();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn order_matters() {
+        let a = KeyHasher::new("t").u64(1).u64(2).finish();
+        let b = KeyHasher::new("t").u64(2).u64(1).finish();
+        assert_ne!(a, b);
+    }
+}

@@ -227,6 +227,31 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Parse JSON-Lines text leniently: each non-empty line is parsed as an
+/// independent document, and lines that fail to parse are counted
+/// rather than fatal.
+///
+/// This is the replay half of the append-only trace log
+/// ([`crate::store::log`]): a process killed mid-append leaves a
+/// truncated final line, and a corruption-tolerant reader must recover
+/// every complete record before it. Returns the parsed values in file
+/// order plus the number of lines skipped as unparseable.
+pub fn parse_lines_lossy(text: &str) -> (Vec<Json>, usize) {
+    let mut values = Vec::new();
+    let mut skipped = 0usize;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse(line) {
+            Ok(v) => values.push(v),
+            Err(_) => skipped += 1,
+        }
+    }
+    (values, skipped)
+}
+
 /// Parse a complete JSON document (trailing whitespace allowed).
 pub fn parse(text: &str) -> Result<Json, JsonError> {
     let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
@@ -552,6 +577,44 @@ mod tests {
         v.insert("b", Json::str("x"));
         assert_eq!(v.str_field("b").unwrap(), "x");
         assert_eq!(v.f64_field("a"), 1.0);
+    }
+
+    #[test]
+    fn parse_lines_lossy_recovers_complete_records() {
+        let text = "{\"v\":1,\"kind\":\"step\",\"t\":1}\n\
+                    \n\
+                    {\"v\":1,\"kind\":\"step\",\"t\":2}\n";
+        let (vals, skipped) = parse_lines_lossy(text);
+        assert_eq!(vals.len(), 2);
+        assert_eq!(skipped, 0);
+        assert_eq!(vals[1].f64_field("t"), 2.0);
+    }
+
+    #[test]
+    fn parse_lines_lossy_skips_truncated_final_line() {
+        // the crash-mid-append shape: last record cut off mid-object
+        let text = "{\"v\":1,\"t\":1}\n{\"v\":1,\"t\":2}\n{\"v\":1,\"t\":";
+        let (vals, skipped) = parse_lines_lossy(text);
+        assert_eq!(vals.len(), 2);
+        assert_eq!(skipped, 1);
+    }
+
+    #[test]
+    fn parse_lines_lossy_skips_garbage_lines_independently() {
+        let text = "not json at all\n{\"ok\":true}\n[1,2,\n{\"ok\":false}";
+        let (vals, skipped) = parse_lines_lossy(text);
+        assert_eq!(vals.len(), 2);
+        assert_eq!(skipped, 2);
+        assert_eq!(vals[0].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(vals[1].get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn parse_lines_lossy_handles_empty_and_whitespace() {
+        assert_eq!(parse_lines_lossy("").0.len(), 0);
+        let (vals, skipped) = parse_lines_lossy("\n   \n\t\n");
+        assert!(vals.is_empty());
+        assert_eq!(skipped, 0);
     }
 
     #[test]

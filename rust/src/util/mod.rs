@@ -9,7 +9,9 @@
 //! * [`par`] — deterministic scoped-thread parallel map (rayon stand-in)
 //!   plus a one-thread-per-item fan-out for the service layer
 //! * [`bench`] — a criterion-style timing harness for `cargo bench`
+//! * [`hash`] — FNV-1a content-address hashing for the persistent store
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod par;

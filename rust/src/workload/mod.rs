@@ -237,6 +237,40 @@ impl TaskSpec {
     pub fn total_flops(&self) -> f64 {
         self.shapes.iter().map(|s| s.flops).sum()
     }
+
+    /// Stable content fingerprint of the task — everything that affects
+    /// a measurement except the schedule itself. Two suite generations
+    /// that produce the same task (same generator seed) fingerprint
+    /// identically, which is what lets the persistent kernel store
+    /// ([`crate::store`]) recognize work across sessions.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::hash::KeyHasher::new("task")
+            .u64(self.id as u64)
+            .str(&self.name)
+            .u64(self.category.index() as u64)
+            .u64(self.difficulty.level() as u64);
+        for s in &self.shapes {
+            h = h.f64(s.flops).f64(s.bytes).f64(s.working_set);
+        }
+        // the latent optimum drives every simulated measurement: a
+        // regenerated suite with retuned latents must never be served
+        // stale cached results
+        let l = &self.latent;
+        h = h
+            .u64(l.best_loop_order as u64)
+            .u64(l.best_layout as u64)
+            .u64(l.max_fusion as u64)
+            .f64(l.fusion_saving)
+            .u64(l.best_vector as u64)
+            .u64(l.tile_bias as u64)
+            .f64(l.sensitivity[0])
+            .f64(l.sensitivity[1])
+            .f64(l.sensitivity[2])
+            .f64(l.sensitivity[3])
+            .f64(l.sensitivity[4])
+            .f64(l.sensitivity[5]);
+        h.finish()
+    }
 }
 
 /// A generated benchmark suite.

@@ -1,0 +1,256 @@
+//! Property sweeps for the persistent store: random traces round-trip
+//! through the JSONL log bit-exactly, replay reconstructs identical
+//! bandit/cluster warm-start state, and the caches survive
+//! serialization. Same discipline as `prop_coordinator.rs`: hand-rolled
+//! randomized cases over the crate's splittable RNG, failing seeds
+//! printed via the case index.
+
+use kernelband::bandit::ArmStats;
+use kernelband::kernel::{Counters, KernelConfig, Measurement};
+use kernelband::llm::{GenOutcome, Proposal};
+use kernelband::rng::Rng;
+use kernelband::store::cache;
+use kernelband::store::log::{
+    replay_text, to_jsonl, StepRecord, TaskRecord, TraceRecord,
+};
+use kernelband::store::warm::WarmIndex;
+use kernelband::strategy::Strategy;
+use kernelband::util::json;
+
+const CASES: u64 = 150;
+
+fn arbitrary_counters(rng: &mut Rng) -> Counters {
+    Counters {
+        regs_per_thread: rng.uniform_in(0.0, 255.0),
+        smem_per_block: rng.uniform_in(0.0, 2e5),
+        block_dim: rng.uniform_in(32.0, 1024.0),
+        occupancy: rng.uniform(),
+        sm_pct: rng.uniform_in(0.0, 100.0),
+        dram_pct: rng.uniform_in(0.0, 100.0),
+        l2_pct: rng.uniform_in(0.0, 100.0),
+    }
+}
+
+fn arbitrary_task(rng: &mut Rng, task: &str) -> TaskRecord {
+    TaskRecord {
+        cell: format!("cell-{}", rng.below(4)),
+        device: "H20".into(),
+        llm: "DeepSeek-V3.2".into(),
+        seed: rng.next_u64(),
+        task_id: rng.below(200) as usize,
+        task: task.to_string(),
+        difficulty: 1 + rng.below(5) as usize,
+        naive_latency_s: 10f64.powf(rng.uniform_in(-6.0, -1.0)),
+    }
+}
+
+fn arbitrary_step(rng: &mut Rng, task: &str, t: usize) -> StepRecord {
+    let accepted = rng.chance(0.6);
+    StepRecord {
+        cell: format!("cell-{}", rng.below(4)),
+        device: ["H20", "RTX 4090", "A100"][rng.below(3) as usize].to_string(),
+        llm: "DeepSeek-V3.2".into(),
+        task: task.to_string(),
+        t,
+        cluster: rng.below(5) as usize,
+        strategy: if rng.chance(0.85) {
+            Some(Strategy::from_index(rng.below(6) as usize))
+        } else {
+            None
+        },
+        parent: rng.below(30) as usize,
+        parent_hash: rng.next_u64(),
+        child_hash: accepted.then(|| rng.next_u64()),
+        call_ok: accepted || rng.chance(0.5),
+        exec_ok: accepted,
+        reward: rng.uniform(),
+        cost_usd: rng.uniform_in(0.0, 0.5),
+        runtime_s: accepted.then(|| 10f64.powf(rng.uniform_in(-6.0, -1.0))),
+        best_speedup: rng.uniform_in(1.0, 8.0),
+        counters: accepted.then(|| arbitrary_counters(rng)),
+    }
+}
+
+fn arbitrary_trace(rng: &mut Rng) -> Vec<TraceRecord> {
+    let n_tasks = 1 + rng.below(4) as usize;
+    let mut records = Vec::new();
+    for ti in 0..n_tasks {
+        let name = format!("task_{ti}");
+        records.push(TraceRecord::Task(arbitrary_task(rng, &name)));
+        let steps = 1 + rng.below(30) as usize;
+        for t in 1..=steps {
+            records.push(TraceRecord::Step(arbitrary_step(rng, &name, t)));
+        }
+    }
+    records
+}
+
+#[test]
+fn prop_trace_records_roundtrip_exactly() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("trace-rt", 0);
+        let records = arbitrary_trace(&mut rng);
+        let text = to_jsonl(&records);
+        let summary = replay_text(&text);
+        assert_eq!(summary.corrupt_lines, 0, "case {case}");
+        assert_eq!(summary.skipped_versions, 0, "case {case}");
+        assert_eq!(summary.records, records, "case {case}");
+        // serialize(replay(serialize(x))) == serialize(x), byte for byte
+        assert_eq!(to_jsonl(&summary.records), text, "case {case}");
+    }
+}
+
+#[test]
+fn prop_truncation_loses_only_the_torn_record() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("trunc", 0);
+        let records = arbitrary_trace(&mut rng);
+        let text = to_jsonl(&records);
+        // cut strictly inside the final record's JSON (never after its
+        // closing brace, which would leave a complete parseable line)
+        let last_line_start = text[..text.len() - 1].rfind('\n').map(|i| i + 1)
+            .unwrap_or(0);
+        let cut_at = last_line_start
+            + 1
+            + rng.below((text.len() - last_line_start - 2) as u64) as usize;
+        let summary = replay_text(&text[..cut_at]);
+        assert_eq!(summary.corrupt_lines, 1, "case {case}");
+        assert_eq!(summary.records.len(), records.len() - 1, "case {case}");
+        assert_eq!(
+            summary.records,
+            records[..records.len() - 1],
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_replay_reconstructs_identical_warm_state() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("warm-id", 0);
+        let records = arbitrary_trace(&mut rng);
+        let clusters = 1 + rng.below(4) as usize;
+        // write → replay → index must equal the index of the original
+        let replayed = replay_text(&to_jsonl(&records)).records;
+        let a = WarmIndex::from_records(&records, clusters);
+        let b = WarmIndex::from_records(&replayed, clusters);
+        assert_eq!(a.len(), b.len(), "case {case}");
+        for key in a.keys() {
+            let (device, llm, task) = key;
+            let wa = a.get(device, llm, task).unwrap();
+            let wb = b.get(device, llm, task).unwrap();
+            assert_eq!(wa, wb, "case {case} key {key:?}");
+            // centroid bits are exactly reproduced (φ from roundtripped
+            // counters and runtimes)
+            for (ca, cb) in wa.centroids.iter().zip(&wb.centroids) {
+                for (x, y) in ca.iter().zip(cb) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "case {case}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_replayed_rewards_rebuild_identical_arm_stats() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("arms", 0);
+        let records = arbitrary_trace(&mut rng);
+        let replayed = replay_text(&to_jsonl(&records)).records;
+        let index_a = WarmIndex::from_records(&records, 3);
+        let index_b = WarmIndex::from_records(&replayed, 3);
+        for key in index_a.keys() {
+            let (device, llm, task) = key;
+            let apply = |w: &kernelband::store::warm::TaskWarmStart| {
+                let mut stats = ArmStats::new(1);
+                for &(s, r) in &w.rewards {
+                    stats.update(0, s, r);
+                }
+                stats
+            };
+            let sa = apply(index_a.get(device, llm, task).unwrap());
+            let sb = apply(index_b.get(device, llm, task).unwrap());
+            assert_eq!(sa.n, sb.n, "case {case}");
+            let bits =
+                |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&sa.mu), bits(&sb.mu), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_measurement_cache_records_roundtrip_bit_exactly() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("meas-rt", 0);
+        let m = Measurement {
+            total_latency_s: 10f64.powf(rng.uniform_in(-9.0, 2.0)),
+            per_shape_s: (0..rng.below(12))
+                .map(|_| 10f64.powf(rng.uniform_in(-9.0, 2.0)))
+                .collect(),
+            counters: arbitrary_counters(&mut rng),
+        };
+        let key = rng.next_u64();
+        let line = cache::measurement_record(key, &m).dump();
+        let (k2, m2) =
+            cache::measurement_from_record(&json::parse(&line).unwrap())
+                .unwrap();
+        assert_eq!(k2, key, "case {case}");
+        assert_eq!(
+            m2.total_latency_s.to_bits(),
+            m.total_latency_s.to_bits(),
+            "case {case}"
+        );
+        assert_eq!(m2.per_shape_s.len(), m.per_shape_s.len());
+        for (a, b) in m2.per_shape_s.iter().zip(&m.per_shape_s) {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case}");
+        }
+        assert_eq!(
+            m2.counters.occupancy.to_bits(),
+            m.counters.occupancy.to_bits(),
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_proposal_cache_records_roundtrip_exactly() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("prop-rt", 0);
+        let p = Proposal {
+            outcome: match rng.below(3) {
+                0 => GenOutcome::Ok,
+                1 => GenOutcome::CompileError,
+                _ => GenOutcome::WrongOutput,
+            },
+            config: KernelConfig {
+                tile_m: rng.below(6) as u8,
+                tile_n: rng.below(6) as u8,
+                tile_k: rng.below(6) as u8,
+                vector: rng.below(4) as u8,
+                fusion: rng.below(4) as u8,
+                pipeline: rng.below(4) as u8,
+                loop_order: rng.below(6) as u8,
+                layout: rng.below(4) as u8,
+            },
+            tokens_in: rng.below(1 << 20),
+            tokens_out: rng.below(1 << 20),
+            cost_usd: rng.uniform_in(0.0, 2.0),
+            latency_s: rng.uniform_in(1.0, 2000.0),
+        };
+        let key = rng.next_u64();
+        let line = cache::proposal_record(key, &p).dump();
+        let (k2, p2) =
+            cache::proposal_from_record(&json::parse(&line).unwrap()).unwrap();
+        assert_eq!(k2, key, "case {case}");
+        assert_eq!(p2.outcome, p.outcome, "case {case}");
+        assert_eq!(p2.config, p.config, "case {case}");
+        assert_eq!(p2.tokens_in, p.tokens_in, "case {case}");
+        assert_eq!(p2.tokens_out, p.tokens_out, "case {case}");
+        assert_eq!(p2.cost_usd.to_bits(), p.cost_usd.to_bits(), "case {case}");
+        assert_eq!(
+            p2.latency_s.to_bits(),
+            p.latency_s.to_bits(),
+            "case {case}"
+        );
+    }
+}

@@ -1,0 +1,129 @@
+//! Regression tests for `BatchedLlmGateway` shutdown semantics.
+//!
+//! The original gateway could strand submitters forever: a thread
+//! blocked on a full ingress queue (backpressure wait) or waiting for a
+//! queued request's completion would hang if the gateway shut down
+//! underneath it. Shutdown is now drain-and-error — every pending or
+//! newly-arriving request completes with `GatewayClosed` — and these
+//! tests hold the liveness bar with watchdog deadlines instead of
+//! scoped joins, so a regression fails fast rather than wedging CI.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kernelband::service::{BatchedLlmGateway, GatewayClosed, GatewayConfig};
+
+/// Poll until `done` reaches `target` or the deadline passes. Returns
+/// whether the target was reached. Detached submitter threads mean a
+/// regression fails the assertion instead of hanging the test binary.
+fn wait_for(done: &AtomicUsize, target: usize, deadline: Duration) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if done.load(Ordering::Acquire) >= target {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    done.load(Ordering::Acquire) >= target
+}
+
+/// A gateway that will never complete a batch on its own (huge window):
+/// shutdown must error the queued request out instead of hanging it.
+#[test]
+fn shutdown_unblocks_waiter_on_queued_request() {
+    let gw: Arc<BatchedLlmGateway<usize>> =
+        Arc::new(BatchedLlmGateway::spawn(GatewayConfig {
+            max_batch: 64,
+            window_s: 1e7,
+            call_latency_s: 1e7,
+            queue_depth: 64,
+        }));
+    let done = Arc::new(AtomicUsize::new(0));
+    let errored = Arc::new(AtomicUsize::new(0));
+    let (g, d, e) = (gw.clone(), done.clone(), errored.clone());
+    std::thread::spawn(move || {
+        let out = g.call(7);
+        if out == Err(GatewayClosed(7)) {
+            e.fetch_add(1, Ordering::Release);
+        }
+        d.fetch_add(1, Ordering::Release);
+    });
+    // let the request enqueue, then shut down
+    std::thread::sleep(Duration::from_millis(30));
+    gw.shutdown();
+    assert!(
+        wait_for(&done, 1, Duration::from_secs(10)),
+        "submitter still blocked after shutdown — drain-and-error regressed"
+    );
+    assert_eq!(errored.load(Ordering::Acquire), 1);
+}
+
+/// Submitters blocked on a *full ingress queue* (the backpressure wait)
+/// must also drain with an error on shutdown — this was the original
+/// hang: the queue could never empty once the batcher stopped.
+#[test]
+fn shutdown_unblocks_submitters_stuck_on_full_queue() {
+    let gw: Arc<BatchedLlmGateway<usize>> =
+        Arc::new(BatchedLlmGateway::spawn(GatewayConfig {
+            max_batch: 64,
+            window_s: 1e7,
+            call_latency_s: 1e7,
+            queue_depth: 2, // tiny: most submitters block at ingress
+        }));
+    let done = Arc::new(AtomicUsize::new(0));
+    const SUBMITTERS: usize = 12;
+    for i in 0..SUBMITTERS {
+        let (g, d) = (gw.clone(), done.clone());
+        std::thread::spawn(move || {
+            // whichever way it resolves, it must resolve
+            let _ = g.call(i);
+            d.fetch_add(1, Ordering::Release);
+        });
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    gw.shutdown();
+    assert!(
+        wait_for(&done, SUBMITTERS, Duration::from_secs(10)),
+        "only {}/{SUBMITTERS} submitters returned after shutdown",
+        done.load(Ordering::Acquire)
+    );
+    // with a dead batcher and a huge window nothing was actually served
+    assert_eq!(gw.requests(), 0);
+}
+
+/// Calls after shutdown fail fast with the payload handed back.
+#[test]
+fn post_shutdown_calls_fail_fast() {
+    let gw: BatchedLlmGateway<&'static str> =
+        BatchedLlmGateway::spawn(GatewayConfig::default());
+    gw.shutdown();
+    let t0 = Instant::now();
+    assert_eq!(gw.call("x"), Err(GatewayClosed("x")));
+    assert!(t0.elapsed() < Duration::from_secs(1));
+    // shutdown is idempotent (and Drop will call it again)
+    gw.shutdown();
+}
+
+/// Normal completion still works end-to-end after the rework.
+#[test]
+fn requests_complete_normally_while_gateway_lives() {
+    let gw: Arc<BatchedLlmGateway<usize>> =
+        Arc::new(BatchedLlmGateway::spawn(GatewayConfig {
+            max_batch: 8,
+            window_s: 2.0,
+            call_latency_s: 5.0,
+            queue_depth: 16,
+        }));
+    let results: Vec<usize> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let g = gw.clone();
+                scope.spawn(move || g.call(i).expect("gateway alive"))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(results, (0..8).collect::<Vec<_>>());
+    assert_eq!(gw.requests(), 8);
+}

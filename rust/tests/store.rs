@@ -1,0 +1,146 @@
+//! Integration tests for the persistent trace store: cold-run byte
+//! identity, warm-run work elision (the PR's acceptance criteria), and
+//! cross-session trace accumulation.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use kernelband::eval::{self, RunOpts};
+use kernelband::store::{log, TraceStore};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("kb_store_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn run_table3(iters: usize, threads: usize,
+              session: Option<Arc<TraceStore>>) -> String {
+    let opts = RunOpts { threads, session };
+    eval::report_opts("table3", Some(iters), &opts)
+        .expect("table3 exists")
+        .json
+        .pretty()
+}
+
+/// Cold-run artifacts are byte-identical with and without a store, for
+/// multiple thread counts — attaching the cache changes no observable
+/// output, only the work performed.
+#[test]
+fn cold_run_with_store_is_byte_identical_to_storeless() {
+    let baseline = run_table3(2, 2, None);
+    let store = Arc::new(TraceStore::in_memory());
+    let with_store = run_table3(2, 2, Some(store.clone()));
+    assert_eq!(baseline, with_store);
+    // and across thread counts while cached (mixed hit/miss patterns)
+    let threads1 = run_table3(2, 1, Some(store.clone()));
+    let threads8 = run_table3(2, 8, Some(store));
+    assert_eq!(baseline, threads1);
+    assert_eq!(baseline, threads8);
+}
+
+/// Acceptance criterion: a warm-started run over the same grid performs
+/// strictly fewer simulated LLM calls and compile/exec steps than the
+/// cold run — here, *zero* — with byte-identical artifacts.
+#[test]
+fn warm_run_elides_all_simulated_work() {
+    let dir = tmp_dir("warm");
+
+    // session 1: cold — populates the cache, persists to disk
+    let cold_store = Arc::new(TraceStore::open(&dir).unwrap());
+    let cold_json = run_table3(2, 2, Some(cold_store.clone()));
+    cold_store.persist().unwrap();
+    let cold_measure_sims =
+        cold_store.stats.measure_sims.load(Ordering::Relaxed);
+    let cold_llm_sims = cold_store.stats.llm_sims.load(Ordering::Relaxed);
+    assert!(cold_measure_sims > 0);
+    assert!(cold_llm_sims > 0);
+    assert_eq!(cold_store.stats.measure_hits.load(Ordering::Relaxed), 0);
+    assert_eq!(cold_store.stats.llm_hits.load(Ordering::Relaxed), 0);
+
+    // session 2: a fresh process-equivalent reopens the store
+    let warm_store = Arc::new(TraceStore::open(&dir).unwrap());
+    assert_eq!(warm_store.loaded.kernels as u64, cold_measure_sims);
+    assert_eq!(warm_store.loaded.proposals as u64, cold_llm_sims);
+    let warm_json = run_table3(2, 2, Some(warm_store.clone()));
+
+    // byte-identical artifact…
+    assert_eq!(cold_json, warm_json);
+    // …with strictly fewer (zero) simulated steps and full hit coverage
+    let warm_measure_sims =
+        warm_store.stats.measure_sims.load(Ordering::Relaxed);
+    let warm_llm_sims = warm_store.stats.llm_sims.load(Ordering::Relaxed);
+    assert!(warm_measure_sims < cold_measure_sims);
+    assert!(warm_llm_sims < cold_llm_sims);
+    assert_eq!(warm_measure_sims, 0);
+    assert_eq!(warm_llm_sims, 0);
+    assert_eq!(
+        warm_store.stats.measure_hits.load(Ordering::Relaxed),
+        cold_measure_sims
+    );
+    assert_eq!(
+        warm_store.stats.llm_hits.load(Ordering::Relaxed),
+        cold_llm_sims
+    );
+    // the bypassed LLM spend is accounted
+    assert!(warm_store.stats.saved_cost_usd() > 0.0);
+    assert!(warm_store.stats.saved_serial_llm_s() > 0.0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The runner's trace emission is thread-count-invariant and replayable
+/// into warm-start state for every task of the grid.
+#[test]
+fn emitted_trace_log_is_deterministic_and_replayable() {
+    let dir1 = tmp_dir("log1");
+    let dir8 = tmp_dir("log8");
+    for (dir, threads) in [(&dir1, 1usize), (&dir8, 8usize)] {
+        let store = Arc::new(TraceStore::open(dir).unwrap());
+        let _ = run_table3(2, threads, Some(store.clone()));
+        store.persist().unwrap();
+    }
+    let text1 =
+        std::fs::read_to_string(dir1.join("trace.jsonl")).unwrap();
+    let text8 =
+        std::fs::read_to_string(dir8.join("trace.jsonl")).unwrap();
+    assert!(!text1.is_empty());
+    assert_eq!(text1, text8, "trace log must not depend on --threads");
+
+    let summary = log::replay_text(&text1);
+    assert_eq!(summary.corrupt_lines, 0);
+    assert_eq!(summary.tasks(), 50); // table3: the 50-kernel subset
+    assert_eq!(summary.steps(), 50 * 2);
+    let index =
+        kernelband::store::warm::WarmIndex::from_records(&summary.records, 3);
+    assert_eq!(index.len(), 50);
+
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir8);
+}
+
+/// Warm-start priors flow end-to-end: a run with warm state attached
+/// still completes with well-formed, deterministic results.
+#[test]
+fn warm_start_session_end_to_end() {
+    let dir = tmp_dir("ws_e2e");
+    {
+        let store = Arc::new(TraceStore::open(&dir).unwrap());
+        let _ = run_table3(3, 4, Some(store.clone()));
+        store.persist().unwrap();
+    }
+    // new session: warm-start from the accumulated trace
+    let mut store = TraceStore::open(&dir).unwrap();
+    let trace_path = store.trace_path().unwrap();
+    let summary = store.load_warm(&trace_path, 3).unwrap();
+    assert!(summary.steps() > 0);
+    assert_eq!(store.warm_index().unwrap().len(), 50);
+    let store = Arc::new(store);
+    // warm-started runs are deterministic (same priors, same caches)
+    let a = run_table3(3, 2, Some(store.clone()));
+    let b = run_table3(3, 2, Some(store.clone()));
+    assert_eq!(a, b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
