@@ -1,0 +1,331 @@
+//! Policy hot-loop benchmark (§Perf): steady-state inner-loop
+//! iterations/sec on a large synthetic frontier — the legacy
+//! rebuild-everything-per-iteration path vs the incremental SoA path
+//! shipped in `policy::frontier` — plus re-clustering cold vs
+//! warm-seeded and the end-to-end `KernelBand::optimize` amortized cost.
+//!
+//! The legacy closure below is a faithful transcription of the per-
+//! iteration work the pre-§Perf policy did: recount `cluster_size`,
+//! re-allocate the `nonempty`/`mask` arm vectors, materialize the
+//! selected cluster's member list, recompute every member's
+//! `HardwareSignature::from_counters`, and softmax through two more
+//! fresh allocations. The incremental closure runs the exact state the
+//! policy now keeps. Both are checked to produce identical picks before
+//! timing. Prints the speedup (target: ≥ 3×) and writes
+//! `PERF_policy.json` for the CI perf-smoke artifact.
+
+use kernelband::bandit::{softmax_kernel_pick, softmax_kernel_pick_in_place,
+                         ArmStats, MaskedUcb};
+use kernelband::cluster::{ClusterBackend, Clustering, RustKmeans};
+use kernelband::engine::SimEngine;
+use kernelband::eval;
+use kernelband::features::{Phi, PHI_DIM};
+use kernelband::gpu_model::Device;
+use kernelband::kernel::{Counters, Measurement};
+use kernelband::llm::{LlmProfile, SurrogateLlm};
+use kernelband::policy::frontier::{ClusterState, Frontier};
+use kernelband::policy::{KernelBand, PolicyConfig};
+use kernelband::profiler::{HardwareSignature, THETA_SAT};
+use kernelband::rng::Rng;
+use kernelband::strategy::{Strategy, ALL_STRATEGIES, NUM_STRATEGIES};
+use kernelband::util::bench::{perf_json, write_perf_artifact, BenchSuite,
+                              PerfEntry};
+use kernelband::util::json::Json;
+use kernelband::workload::Suite;
+
+/// Candidates on the synthetic frontier (acceptance floor is ≥ 200; a
+/// late-stage serve-path frontier is this large, and the legacy path's
+/// O(frontier) rebuilds are what the incremental state removes).
+const FRONTIER: usize = 1000;
+/// Clusters (the paper's K = 3 default).
+const K: usize = 3;
+/// Iterations per timed sample.
+const ITERS: usize = 200;
+const PRUNE_FACTOR: f64 = 1.5;
+
+struct Synth {
+    phis: Vec<Phi>,
+    counters: Vec<Counters>,
+    latencies: Vec<f64>,
+    clustering: Clustering,
+    cluster_sigs: Vec<Option<HardwareSignature>>,
+    frontier: Frontier,
+    state: ClusterState,
+    best_id: usize,
+}
+
+/// A synthetic steady-state frontier: latencies spread enough that
+/// pruning bites, signatures spread across the saturation threshold so
+/// masks and headrooms are non-trivial.
+fn synth_frontier(n: usize) -> Synth {
+    let mut rng = Rng::new(2026).split("synth", 0);
+    let mut phis = Vec::with_capacity(n);
+    let mut counters = Vec::with_capacity(n);
+    let mut latencies = Vec::with_capacity(n);
+    let mut frontier = Frontier::new();
+    for i in 0..n {
+        let mut p = [0.0; PHI_DIM];
+        for v in p.iter_mut() {
+            *v = rng.uniform();
+        }
+        let c = Counters {
+            regs_per_thread: rng.uniform_in(30.0, 200.0),
+            smem_per_block: rng.uniform_in(1024.0, 96.0 * 1024.0),
+            block_dim: rng.uniform_in(64.0, 1024.0),
+            occupancy: rng.uniform(),
+            sm_pct: rng.uniform_in(5.0, 95.0),
+            dram_pct: rng.uniform_in(5.0, 95.0),
+            l2_pct: rng.uniform_in(5.0, 95.0),
+        };
+        // wide spread: most of a mature frontier is pruned-out slow
+        // kernels (the paper's "filtering low-value candidates early")
+        let t = rng.uniform_in(1.0e-3, 8.0e-3);
+        let m = Measurement {
+            total_latency_s: t,
+            per_shape_s: vec![t],
+            counters: c,
+        };
+        frontier.push(p, &m, i);
+        phis.push(p);
+        counters.push(c);
+        latencies.push(t);
+    }
+    let clustering =
+        RustKmeans::default().cluster(&phis, K, &mut Rng::new(7));
+    let mut cluster_sigs: Vec<Option<HardwareSignature>> =
+        vec![None; clustering.centroids.len()];
+    for (ci, &rep) in clustering.representatives.iter().enumerate() {
+        if rep != usize::MAX {
+            cluster_sigs[ci] =
+                Some(HardwareSignature::from_counters(&counters[rep]));
+        }
+    }
+    let mut state = ClusterState::new(THETA_SAT);
+    state.rebuild(&clustering, cluster_sigs.clone());
+    let best_id = latencies
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.total_cmp(b))
+        .map(|(i, _)| i)
+        .unwrap();
+    Synth {
+        phis,
+        counters,
+        latencies,
+        clustering,
+        cluster_sigs,
+        frontier,
+        state,
+        best_id,
+    }
+}
+
+/// One pre-§Perf policy iteration: every piece of selection state
+/// rebuilt from scratch (the old per-iteration body, verbatim shape).
+fn legacy_iteration(s: &Synth, stats: &ArmStats, ucb: &MaskedUcb, t: usize,
+                    rng: &mut Rng) -> usize {
+    let k = s.clustering.centroids.len();
+    let mut cluster_size = vec![0usize; k];
+    for &a in &s.clustering.assign {
+        cluster_size[a] += 1;
+    }
+    let nonempty: Vec<bool> = (0..k * NUM_STRATEGIES)
+        .map(|i| cluster_size[i / NUM_STRATEGIES] > 0)
+        .collect();
+    let mut mask = nonempty.clone();
+    for ci in 0..k {
+        if let Some(sig) = s.cluster_sigs[ci] {
+            for &st in &ALL_STRATEGIES {
+                mask[ci * NUM_STRATEGIES + st.index()] &=
+                    sig.strategy_valid(st, THETA_SAT);
+            }
+        }
+    }
+    let (cluster_id, strat) = ucb
+        .select(stats, t, &mask)
+        .or_else(|| ucb.select(stats, t, &nonempty))
+        .expect("non-empty frontier");
+    let mut members: Vec<usize> = s
+        .clustering
+        .assign
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c == cluster_id)
+        .map(|(j, _)| j)
+        .collect();
+    let best_t = s.latencies[s.best_id];
+    let promising: Vec<usize> = members
+        .iter()
+        .copied()
+        .filter(|&m| s.latencies[m] <= PRUNE_FACTOR * best_t)
+        .collect();
+    if !promising.is_empty() {
+        members = promising;
+    }
+    let headrooms: Vec<f64> = members
+        .iter()
+        .map(|&m| {
+            HardwareSignature::from_counters(&s.counters[m])
+                .headroom(strat, THETA_SAT)
+        })
+        .collect();
+    members[softmax_kernel_pick(&headrooms, rng)]
+}
+
+/// One §Perf policy iteration: cached masks, incremental member lists,
+/// memoized signatures, reusable scratch buffers.
+fn incremental_iteration(s: &Synth, stats: &ArmStats, ucb: &MaskedUcb,
+                         t: usize, pick_pool: &mut Vec<usize>,
+                         pick_w: &mut Vec<f64>, rng: &mut Rng) -> usize {
+    let (cluster_id, strat) = ucb
+        .select(stats, t, s.state.mask())
+        .or_else(|| ucb.select(stats, t, s.state.nonempty()))
+        .expect("non-empty frontier");
+    let members = s.state.members(cluster_id);
+    let best_t = s.frontier.latencies[s.best_id];
+    pick_pool.clear();
+    pick_pool.extend(
+        members
+            .iter()
+            .copied()
+            .filter(|&m| s.frontier.latencies[m] <= PRUNE_FACTOR * best_t),
+    );
+    let pool: &[usize] = if pick_pool.is_empty() { members } else { pick_pool };
+    pick_w.clear();
+    pick_w.extend(
+        pool.iter()
+            .map(|&m| s.frontier.sigs[m].headroom(strat, THETA_SAT)),
+    );
+    pool[softmax_kernel_pick_in_place(pick_w, rng)]
+}
+
+fn main() {
+    let bs = BenchSuite::new("policy");
+    let mut entries: Vec<PerfEntry> = Vec::new();
+    let synth = synth_frontier(FRONTIER);
+    let ucb = MaskedUcb::default();
+    let mut stats = ArmStats::new(synth.clustering.centroids.len());
+    // non-uniform arms so selection is realistic
+    let mut arm_rng = Rng::new(11);
+    for _ in 0..64 {
+        let c = arm_rng.below(K as u64) as usize;
+        let st = Strategy::from_index(
+            arm_rng.below(NUM_STRATEGIES as u64) as usize,
+        );
+        stats.update(c, st, arm_rng.uniform());
+    }
+
+    // equivalence gate: both paths must pick identical parents
+    {
+        let mut pool = Vec::new();
+        let mut w = Vec::new();
+        for t in 1..=ITERS {
+            let mut ra = Rng::new(99).split("pick", t as u64);
+            let mut rb = Rng::new(99).split("pick", t as u64);
+            let a = legacy_iteration(&synth, &stats, &ucb, t, &mut ra);
+            let b = incremental_iteration(
+                &synth, &stats, &ucb, t, &mut pool, &mut w, &mut rb,
+            );
+            assert_eq!(a, b, "paths diverged at t={t}");
+        }
+        println!(
+            "equivalence: legacy and incremental picks identical over {ITERS} \
+             iterations on a {FRONTIER}-candidate frontier"
+        );
+    }
+
+    // --- steady-state inner loop: legacy (per-iteration rebuild) ---
+    let legacy = bs.bench_throughput(
+        &format!("steady_state_legacy_n{FRONTIER}"),
+        ITERS as f64,
+        || {
+            let mut rng = Rng::new(3);
+            for t in 1..=ITERS {
+                let p = legacy_iteration(&synth, &stats, &ucb, t, &mut rng);
+                std::hint::black_box(p);
+            }
+        },
+    );
+    entries.push(PerfEntry::with_items(
+        "steady_state_legacy",
+        legacy,
+        ITERS as f64,
+    ));
+
+    // --- steady-state inner loop: incremental SoA ---
+    let mut pool = Vec::new();
+    let mut w = Vec::new();
+    let incremental = bs.bench_throughput(
+        &format!("steady_state_incremental_n{FRONTIER}"),
+        ITERS as f64,
+        || {
+            let mut rng = Rng::new(3);
+            for t in 1..=ITERS {
+                let p = incremental_iteration(
+                    &synth, &stats, &ucb, t, &mut pool, &mut w, &mut rng,
+                );
+                std::hint::black_box(p);
+            }
+        },
+    );
+    entries.push(PerfEntry::with_items(
+        "steady_state_incremental",
+        incremental,
+        ITERS as f64,
+    ));
+
+    // --- re-clustering: cold k-means++ vs warm-seeded + early exit ---
+    let km = RustKmeans::default();
+    let cold = bs.bench_throughput("recluster_cold_kmeanspp", 1.0, || {
+        let c = km.cluster(&synth.phis, K, &mut Rng::new(7));
+        std::hint::black_box(c.assign.len());
+    });
+    entries.push(PerfEntry::with_items("recluster_cold", cold, 1.0));
+    let seeds = synth.clustering.centroids.clone();
+    let warm = bs.bench_throughput("recluster_warm_seeded", 1.0, || {
+        let c = km.cluster_seeded(&synth.phis, &seeds);
+        std::hint::black_box(c.assign.len());
+    });
+    entries.push(PerfEntry::with_items("recluster_warm_seeded", warm, 1.0));
+
+    // --- end-to-end policy run, amortized per iteration ---
+    let suite = Suite::full(eval::EXPERIMENT_SEED);
+    let task = &suite.tasks[0];
+    let engine = SimEngine::new(Device::H20);
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    let e2e = bs.bench_throughput("optimize_t40_amortized", 40.0, || {
+        let mut cfg = PolicyConfig::default();
+        cfg.iterations = 40;
+        let tr = KernelBand::new(cfg).optimize(task, &engine, &llm,
+                                               &Rng::new(3));
+        std::hint::black_box(tr.best_id);
+    });
+    entries.push(PerfEntry::with_items("optimize_t40_amortized", e2e, 40.0));
+
+    let ratio = |slow: f64, fast: f64| slow / fast.max(1e-12);
+    let steady = ratio(
+        legacy.median.as_secs_f64(),
+        incremental.median.as_secs_f64(),
+    );
+    let recluster = ratio(cold.median.as_secs_f64(), warm.median.as_secs_f64());
+    println!();
+    println!(
+        "speedup: steady-state inner loop (n={FRONTIER})  {steady:>8.1}x  \
+         (target >= 3x)"
+    );
+    println!("speedup: recluster cold -> warm-seeded        {recluster:>8.1}x");
+
+    let json = perf_json(
+        "policy",
+        &entries,
+        vec![
+            ("frontier_candidates", Json::num(FRONTIER as f64)),
+            ("steady_state_speedup", Json::num(steady)),
+            ("recluster_speedup", Json::num(recluster)),
+        ],
+    );
+    match write_perf_artifact("policy", &json) {
+        Ok(path) => println!("perf artifact: {}", path.display()),
+        Err(e) => eprintln!("perf artifact not written: {e}"),
+    }
+}

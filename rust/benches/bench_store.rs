@@ -20,7 +20,9 @@ use kernelband::store::cache::measurement_key;
 use kernelband::store::wrap::{CachedEngine, CachedLlm};
 use kernelband::store::TraceStore;
 use kernelband::strategy::Strategy;
-use kernelband::util::bench::BenchSuite;
+use kernelband::util::bench::{perf_json, write_perf_artifact, BenchSuite,
+                              PerfEntry};
+use kernelband::util::json::Json;
 use kernelband::workload::Suite;
 
 fn main() {
@@ -81,6 +83,14 @@ fn main() {
         });
 
     let ratio = |slow: f64, fast: f64| slow / fast.max(1e-12);
+    let hit_speedup = ratio(
+        sim_stats.median.as_secs_f64(),
+        hit_stats.median.as_secs_f64(),
+    );
+    let llm_speedup = ratio(
+        llm_sim_stats.median.as_secs_f64(),
+        llm_hit_stats.median.as_secs_f64(),
+    );
     println!();
     println!(
         "speedup: compile+exec -> key hash          {:>10.1}x",
@@ -90,17 +100,29 @@ fn main() {
         )
     );
     println!(
-        "speedup: compile+exec -> cached-engine hit {:>10.1}x",
-        ratio(
-            sim_stats.median.as_secs_f64(),
-            hit_stats.median.as_secs_f64()
-        )
+        "speedup: compile+exec -> cached-engine hit {hit_speedup:>10.1}x"
     );
     println!(
-        "speedup: llm propose  -> cached-llm hit    {:>10.1}x",
-        ratio(
-            llm_sim_stats.median.as_secs_f64(),
-            llm_hit_stats.median.as_secs_f64()
-        )
+        "speedup: llm propose  -> cached-llm hit    {llm_speedup:>10.1}x"
     );
+
+    let entries = vec![
+        PerfEntry::with_items("simulated_compile_exec", sim_stats, 1.0),
+        PerfEntry::with_items("measurement_key_hash", hash_stats, 1.0),
+        PerfEntry::with_items("cached_engine_hit", hit_stats, 1.0),
+        PerfEntry::with_items("simulated_llm_propose", llm_sim_stats, 1.0),
+        PerfEntry::with_items("cached_llm_hit", llm_hit_stats, 1.0),
+    ];
+    let json = perf_json(
+        "store",
+        &entries,
+        vec![
+            ("cached_engine_hit_speedup", Json::num(hit_speedup)),
+            ("cached_llm_hit_speedup", Json::num(llm_speedup)),
+        ],
+    );
+    match write_perf_artifact("store", &json) {
+        Ok(path) => println!("perf artifact: {}", path.display()),
+        Err(e) => eprintln!("perf artifact not written: {e}"),
+    }
 }

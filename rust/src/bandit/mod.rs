@@ -140,6 +140,12 @@ impl MaskedUcb {
     }
 }
 
+/// Headroom-to-score temperature divisor: 20 points of headroom
+/// difference is decisive but not degenerate. Shared by
+/// [`softmax_kernel_pick`] and [`softmax_kernel_pick_in_place`] so the
+/// allocating and scratch-buffer paths stay draw-for-draw identical.
+pub const SOFTMAX_HEADROOM_SCALE: f64 = 15.0;
+
 /// Within-cluster kernel pick (paper §3.4): softmax over the remaining
 /// hardware headroom `V_hw(k, s) = θ_sat − h(k)[Target(s)]`.
 ///
@@ -147,10 +153,22 @@ impl MaskedUcb {
 /// position of the sampled member.
 pub fn softmax_kernel_pick(headrooms: &[f64], rng: &mut Rng) -> usize {
     debug_assert!(!headrooms.is_empty());
-    // scores are in percent; scale to a temperature where 20 points of
-    // headroom difference is decisive but not degenerate
-    let scaled: Vec<f64> = headrooms.iter().map(|h| h / 15.0).collect();
+    // scores are in percent; scale to temperature
+    let scaled: Vec<f64> =
+        headrooms.iter().map(|h| h / SOFTMAX_HEADROOM_SCALE).collect();
     rng.softmax(&scaled)
+}
+
+/// Allocation-free [`softmax_kernel_pick`] for the policy's reusable
+/// scratch buffer: scales `headrooms` into softmax weights in place and
+/// draws. Identical weights, identical RNG consumption.
+pub fn softmax_kernel_pick_in_place(headrooms: &mut [f64], rng: &mut Rng)
+                                    -> usize {
+    debug_assert!(!headrooms.is_empty());
+    for h in headrooms.iter_mut() {
+        *h /= SOFTMAX_HEADROOM_SCALE;
+    }
+    rng.softmax_in_place(headrooms)
 }
 
 #[cfg(test)]
@@ -266,6 +284,21 @@ mod tests {
             }
         }
         assert!(hits > 900, "hits={hits}");
+    }
+
+    #[test]
+    fn in_place_pick_matches_allocating_pick() {
+        let headrooms = [5.0, 65.0, 30.0, -10.0];
+        for seed in 0..50 {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let mut buf = headrooms;
+            assert_eq!(
+                softmax_kernel_pick(&headrooms, &mut a),
+                softmax_kernel_pick_in_place(&mut buf, &mut b)
+            );
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -18,6 +18,23 @@
 //! Both use the same semantics as the L1 kernel: masked points, argmin
 //! assignment with lowest-index tie-break, and empty clusters keeping
 //! their previous centroid.
+//!
+//! § Perf — incremental re-clustering. Lloyd early-exits as soon as two
+//! consecutive steps produce identical assignments: at that point the
+//! centroids are a fixed point, so the remaining iterations (and the
+//! final snapshot assignment) are provably no-ops — the result is
+//! bit-identical to running all `iters` steps (property-tested in
+//! `rust/tests/prop_cluster.rs`). On top of that, [`RustKmeans::cluster_seeded`]
+//! lets callers warm-start Lloyd from previously converged centroids —
+//! cross-session (the trace store's replayed seeds) or intra-run (the
+//! policy re-seeds each re-clustering from the previous one). Seeding is
+//! RNG-free and deterministic, but it *is* a different initialization
+//! than k-means++, so the converged partition may legitimately differ
+//! from the from-scratch path; the equivalence contract is: (a) at a
+//! fixed point, seeded re-clustering is the identity, and (b) downstream
+//! `BENCH_*.json` artifacts remain byte-identical for any `--threads N`
+//! and across cold/warm store runs (asserted in
+//! `rust/tests/runner_artifacts.rs` and the CI smoke).
 
 use crate::features::{phi_distance, Phi, PHI_DIM};
 use crate::rng::Rng;
@@ -34,14 +51,19 @@ pub struct Clustering {
 }
 
 impl Clustering {
-    /// Members of cluster `i`.
-    pub fn members(&self, i: usize) -> Vec<usize> {
+    /// Members of cluster `i`, lazily (ascending point index).
+    ///
+    /// The policy hot loop no longer calls this — it maintains member
+    /// lists incrementally in [`crate::policy::frontier::ClusterState`] —
+    /// so the O(n)-per-call scan is now diagnostics-only and returns an
+    /// iterator instead of allocating a fresh `Vec` per call. Empty
+    /// clusters (stale centroids) yield nothing and stay unselectable.
+    pub fn members(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
         self.assign
             .iter()
             .enumerate()
-            .filter(|(_, &c)| c == i)
+            .filter(move |(_, &c)| c == i)
             .map(|(j, _)| j)
-            .collect()
     }
 
     /// Maximum intra-cluster diameter (the Theorem-1 approximation term
@@ -50,7 +72,7 @@ impl Clustering {
         let k = self.centroids.len();
         let mut max_d = 0.0f64;
         for i in 0..k {
-            let members = self.members(i);
+            let members: Vec<usize> = self.members(i).collect();
             for (ai, &a) in members.iter().enumerate() {
                 for &b in &members[ai + 1..] {
                     max_d = max_d.max(phi_distance(&points[a], &points[b]));
@@ -174,10 +196,23 @@ impl RustKmeans {
     /// Shared tail of both clustering entry points: Lloyd-iterate the
     /// given centroids, take the final assignment against the converged
     /// centroids, and pick representatives.
+    ///
+    /// Early-exit (§Perf): once two consecutive steps yield the same
+    /// assignment, the centroid update is a fixed point — every further
+    /// step (and the final snapshot assignment) would reproduce exactly
+    /// the same state, so returning immediately is lossless. Verified
+    /// bit-for-bit against the full-iteration reference in
+    /// `rust/tests/prop_cluster.rs`.
     fn lloyd_finish(&self, points: &[Phi], mut centroids: Vec<Phi>)
                     -> Clustering {
+        let mut prev_assign: Option<Vec<usize>> = None;
         for _ in 0..self.iters {
-            lloyd_step(points, &mut centroids);
+            let assign = lloyd_step(points, &mut centroids);
+            if prev_assign.as_ref() == Some(&assign) {
+                let reps = representatives(points, &assign, &centroids);
+                return Clustering { assign, centroids, representatives: reps };
+            }
+            prev_assign = Some(assign);
         }
         // final assignment against the converged centroids
         let assign = {
@@ -189,12 +224,22 @@ impl RustKmeans {
     }
 
     /// Lloyd iterations from *given* initial centroids instead of
-    /// k-means++ seeding — the warm-start path: a prior session's
-    /// converged centroids (replayed from the trace store) seed the
-    /// first re-clustering, so the frontier partition starts where the
-    /// previous run ended rather than from scratch. `init` is truncated
-    /// to the point count; semantics otherwise match
-    /// [`ClusterBackend::cluster`].
+    /// k-means++ seeding — the warm-start path, used two ways:
+    ///
+    /// * **cross-session**: a prior session's converged centroids
+    ///   (replayed from the trace store) seed the first re-clustering,
+    ///   so the frontier partition starts where the previous run ended;
+    /// * **intra-run** (§Perf): the policy seeds every subsequent
+    ///   re-clustering from the previous one's converged centroids, so
+    ///   Lloyd resumes near a fixed point and the convergence early-exit
+    ///   usually fires within a step or two.
+    ///
+    /// Consumes no RNG. `init` is truncated to the point count;
+    /// semantics otherwise match [`ClusterBackend::cluster`]. At a
+    /// fixed point, seeding is the identity (property-tested); away
+    /// from one it may converge to a different — equally valid —
+    /// partition than the k-means++ path, which is the documented
+    /// divergence contract (see module docs).
     pub fn cluster_seeded(&self, points: &[Phi], init: &[Phi]) -> Clustering {
         assert!(!points.is_empty() && !init.is_empty());
         let k = init.len().min(points.len());
@@ -340,6 +385,47 @@ mod tests {
         let c = RustKmeans::default().cluster_seeded(&pts, &init);
         assert_eq!(c.centroids.len(), 2);
         assert!(c.assign.iter().all(|&a| a < 2));
+    }
+
+    #[test]
+    fn members_iterates_in_ascending_order() {
+        let pts = two_blobs();
+        let c = RustKmeans::default().cluster(&pts, 2, &mut Rng::new(1));
+        for ci in 0..2 {
+            let members: Vec<usize> = c.members(ci).collect();
+            assert!(!members.is_empty());
+            for w in members.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(members.iter().all(|&m| c.assign[m] == ci));
+        }
+        let total: usize = (0..2).map(|ci| c.members(ci).count()).sum();
+        assert_eq!(total, pts.len());
+    }
+
+    #[test]
+    fn empty_cluster_has_no_members_and_no_representative() {
+        // all points coincide → the far stale centroid captures nothing
+        let pts = vec![[0.0; PHI_DIM]; 4];
+        let init = vec![[0.0; PHI_DIM], [5.0; PHI_DIM]];
+        let c = RustKmeans::default().cluster_seeded(&pts, &init);
+        assert_eq!(c.members(1).next(), None);
+        assert_eq!(c.members(0).count(), 4);
+        // stale centroid is kept but unselectable: no representative
+        assert_eq!(c.representatives[1], usize::MAX);
+        assert_eq!(c.centroids[1], [5.0; PHI_DIM]);
+    }
+
+    #[test]
+    fn early_exit_preserves_converged_results() {
+        // a generously-iterated run and the default 8-iteration run both
+        // early-exit at the same fixed point on separated blobs
+        let pts = two_blobs();
+        let a = RustKmeans { iters: 8 }.cluster(&pts, 2, &mut Rng::new(5));
+        let b = RustKmeans { iters: 100 }.cluster(&pts, 2, &mut Rng::new(5));
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.representatives, b.representatives);
     }
 
     #[test]

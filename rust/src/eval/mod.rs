@@ -681,14 +681,19 @@ pub fn table9(iterations: usize) -> String {
 
 /// Fallback-mode geomean best-speedup curve across iterations for a set
 /// of traces (all with the same T).
+///
+/// Each trace's curve is materialized once up front — the old
+/// `tr.speedup_curve()[i]` inner call re-allocated every trace's full
+/// curve per iteration, turning a T-point reduction into O(|traces|·T²)
+/// allocations on the runner's artifact path. Identical output bytes:
+/// same values summed in the same order.
 pub fn scaling_curve(traces: &[Trace]) -> Vec<f64> {
     let t = traces.iter().map(|tr| tr.records.len()).min().unwrap_or(0);
+    let curves: Vec<Vec<f64>> =
+        traces.iter().map(|tr| tr.speedup_curve()).collect();
     (0..t)
         .map(|i| {
-            let log_sum: f64 = traces
-                .iter()
-                .map(|tr| tr.speedup_curve()[i].ln())
-                .sum();
+            let log_sum: f64 = curves.iter().map(|c| c[i].ln()).sum();
             (log_sum / traces.len() as f64).exp()
         })
         .collect()

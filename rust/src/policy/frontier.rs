@@ -1,0 +1,333 @@
+//! SoA frontier and incremental (cluster × strategy) selection state —
+//! the steady-state hot path of [`KernelBand::optimize_warm`].
+//!
+//! Before this module existed the policy rebuilt all of its selection
+//! state from scratch every iteration: `cluster_size` by scanning the
+//! full assignment vector, the `nonempty`/`mask` arm vectors as fresh
+//! allocations, the selected cluster's member list as a fresh `Vec`, and
+//! one `HardwareSignature::from_counters` per member per iteration for
+//! the headroom softmax. All of that state changes only at two events —
+//! a candidate insertion and a re-clustering — so the hot loop now keeps
+//! it materialized and updates it at those events:
+//!
+//! * [`Frontier`] mirrors the per-candidate fields the inner loop scans
+//!   (φ, latency, birth iteration, NCU signature) as parallel arrays.
+//!   The signature is computed **once at birth**; counters are immutable
+//!   after measurement, so the memo can never go stale.
+//! * [`ClusterState`] owns the per-cluster member lists and the
+//!   UCB masks. [`ClusterState::rebuild`] runs after a re-clustering;
+//!   [`ClusterState::insert`] appends a newcomer and, when it fills a
+//!   previously-empty cluster, re-opens exactly that cluster's arms.
+//!
+//! Determinism contract: the incremental state is a pure function of
+//! (assignments, representative signatures, insertion order), consumes
+//! no RNG, and member lists stay in ascending candidate-id order — the
+//! same order the old per-iteration `Clustering::members` scan produced
+//! — so softmax draws see identical weight vectors in identical order.
+
+use crate::cluster::Clustering;
+use crate::features::{Phi, PHI_DIM};
+use crate::kernel::Measurement;
+use crate::profiler::HardwareSignature;
+use crate::strategy::{ALL_STRATEGIES, NUM_STRATEGIES};
+
+/// Structure-of-arrays mirror of the candidate frontier: the fields the
+/// inner loop touches every iteration, stored densely so pruning and
+/// headroom scans are tight loops over flat arrays.
+#[derive(Debug, Clone, Default)]
+pub struct Frontier {
+    /// Behavioral features φ(k), aligned with candidate ids.
+    pub phis: Vec<Phi>,
+    /// Total measured latency per candidate (seconds).
+    pub latencies: Vec<f64>,
+    /// Iteration at which each candidate was born (0 = initial).
+    pub born_at: Vec<usize>,
+    /// Memoized NCU signature, computed once at candidate birth.
+    pub sigs: Vec<HardwareSignature>,
+}
+
+impl Frontier {
+    pub fn new() -> Frontier {
+        Frontier::default()
+    }
+
+    /// Append one measured candidate's hot-path view.
+    pub fn push(&mut self, phi: Phi, m: &Measurement, born_at: usize) {
+        self.phis.push(phi);
+        self.latencies.push(m.total_latency_s);
+        self.born_at.push(born_at);
+        self.sigs.push(HardwareSignature::from_counters(&m.counters));
+    }
+
+    pub fn len(&self) -> usize {
+        self.phis.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phis.is_empty()
+    }
+}
+
+/// Index of the centroid nearest to `p` (lowest index wins ties —
+/// identical to the Lloyd assignment rule and to the old
+/// `min_by(total_cmp)` scan; squared distances, same ordering as the
+/// sqrt'd metric).
+pub fn nearest_centroid(p: &Phi, centroids: &[Phi]) -> usize {
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for (ci, c) in centroids.iter().enumerate() {
+        let mut d = 0.0;
+        for j in 0..PHI_DIM {
+            let diff = p[j] - c[j];
+            d += diff * diff;
+        }
+        if d < best_d {
+            best_d = d;
+            best = ci;
+        }
+    }
+    best
+}
+
+/// Incrementally-maintained cluster membership and (cluster × strategy)
+/// arm masks. Semantics match the old per-iteration rebuild exactly:
+///
+/// * `nonempty[c·S + s]` — cluster `c` currently has ≥ 1 member (empty
+///   clusters keep stale centroids and stay unselectable);
+/// * `mask[c·S + s]` — `nonempty` AND the cluster representative's
+///   signature does not saturate strategy `s`'s target resource
+///   (clusters without a profiled representative are unconstrained).
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    /// Per-cluster member candidate ids, each ascending.
+    members: Vec<Vec<usize>>,
+    /// Representative signatures (None = empty or unprofiled cluster).
+    sigs: Vec<Option<HardwareSignature>>,
+    mask: Vec<bool>,
+    nonempty: Vec<bool>,
+    theta_sat: f64,
+}
+
+impl ClusterState {
+    /// Empty state; call [`ClusterState::rebuild`] before use.
+    pub fn new(theta_sat: f64) -> ClusterState {
+        ClusterState {
+            members: Vec::new(),
+            sigs: Vec::new(),
+            mask: Vec::new(),
+            nonempty: Vec::new(),
+            theta_sat,
+        }
+    }
+
+    pub fn clusters(&self) -> usize {
+        self.sigs.len()
+    }
+
+    /// Members of cluster `c`, ascending candidate ids.
+    pub fn members(&self, c: usize) -> &[usize] {
+        &self.members[c]
+    }
+
+    /// Hardware mask M[cluster × strategy], row-major.
+    pub fn mask(&self) -> &[bool] {
+        &self.mask
+    }
+
+    /// Nonempty-only mask (the all-saturated UCB fallback).
+    pub fn nonempty(&self) -> &[bool] {
+        &self.nonempty
+    }
+
+    /// Rebuild all state after a re-clustering. `sigs` holds the freshly
+    /// profiled representative signature per cluster (None for empty or
+    /// unprofiled clusters — e.g. the `NoProfiling` ablation).
+    pub fn rebuild(&mut self, clustering: &Clustering,
+                   sigs: Vec<Option<HardwareSignature>>) {
+        let k = clustering.centroids.len();
+        debug_assert_eq!(sigs.len(), k);
+        for m in &mut self.members {
+            m.clear();
+        }
+        while self.members.len() < k {
+            self.members.push(Vec::new());
+        }
+        self.members.truncate(k);
+        for (id, &c) in clustering.assign.iter().enumerate() {
+            self.members[c].push(id);
+        }
+        self.sigs = sigs;
+        self.mask.clear();
+        self.mask.resize(k * NUM_STRATEGIES, false);
+        self.nonempty.clear();
+        self.nonempty.resize(k * NUM_STRATEGIES, false);
+        for ci in 0..k {
+            if !self.members[ci].is_empty() {
+                self.open_arms(ci);
+            }
+        }
+    }
+
+    /// Register freshly-inserted candidate `id` in cluster `cluster`.
+    /// O(1) except when the cluster was empty, in which case its arms
+    /// re-open (matching the old per-iteration `cluster_size` recount).
+    pub fn insert(&mut self, id: usize, cluster: usize) {
+        let was_empty = self.members[cluster].is_empty();
+        self.members[cluster].push(id);
+        if was_empty {
+            self.open_arms(cluster);
+        }
+    }
+
+    /// Set `nonempty` for all of `cluster`'s arms and `mask` according
+    /// to its representative signature (unconstrained when None).
+    fn open_arms(&mut self, cluster: usize) {
+        let sig = self.sigs[cluster];
+        for &s in &ALL_STRATEGIES {
+            let i = cluster * NUM_STRATEGIES + s.index();
+            self.nonempty[i] = true;
+            self.mask[i] = match sig {
+                Some(sig) => sig.strategy_valid(s, self.theta_sat),
+                None => true,
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Counters;
+    use crate::profiler::THETA_SAT;
+    use crate::strategy::Strategy;
+
+    fn sig(sm: f64, dram: f64, l2: f64) -> HardwareSignature {
+        HardwareSignature { sm_pct: sm, dram_pct: dram, l2_pct: l2 }
+    }
+
+    fn meas(t: f64) -> Measurement {
+        Measurement {
+            total_latency_s: t,
+            per_shape_s: vec![t],
+            counters: Counters {
+                sm_pct: 10.0 * t,
+                dram_pct: 20.0 * t,
+                l2_pct: 5.0 * t,
+                ..Default::default()
+            },
+        }
+    }
+
+    fn clustering(assign: Vec<usize>, k: usize) -> Clustering {
+        Clustering {
+            assign,
+            centroids: vec![[0.0; PHI_DIM]; k],
+            representatives: vec![0; k],
+        }
+    }
+
+    #[test]
+    fn frontier_memoizes_signature_at_birth() {
+        let mut f = Frontier::new();
+        let m = meas(2.0);
+        f.push([0.1; PHI_DIM], &m, 3);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.latencies[0], 2.0);
+        assert_eq!(f.born_at[0], 3);
+        assert_eq!(f.sigs[0], HardwareSignature::from_counters(&m.counters));
+    }
+
+    #[test]
+    fn rebuild_matches_from_scratch_semantics() {
+        // 5 candidates over 3 clusters, cluster 2 empty (stale centroid)
+        let c = clustering(vec![0, 1, 0, 1, 1], 3);
+        let mut st = ClusterState::new(THETA_SAT);
+        st.rebuild(&c, vec![None, Some(sig(90.0, 10.0, 10.0)), None]);
+        assert_eq!(st.clusters(), 3);
+        assert_eq!(st.members(0), &[0, 2]);
+        assert_eq!(st.members(1), &[1, 3, 4]);
+        assert!(st.members(2).is_empty());
+        // cluster 0: unprofiled, all arms open
+        for &s in &ALL_STRATEGIES {
+            assert!(st.mask()[s.index()]);
+            assert!(st.nonempty()[s.index()]);
+        }
+        // cluster 1: SM saturated at 90% — Tiling (targets SM) masked,
+        // but still nonempty (all-saturated fallback can select it)
+        let i_tiling = NUM_STRATEGIES + Strategy::Tiling.index();
+        assert!(!st.mask()[i_tiling]);
+        assert!(st.nonempty()[i_tiling]);
+        let i_vec = NUM_STRATEGIES + Strategy::Vectorization.index();
+        assert!(st.mask()[i_vec]);
+        // cluster 2: empty — fully unselectable either way
+        for &s in &ALL_STRATEGIES {
+            let i = 2 * NUM_STRATEGIES + s.index();
+            assert!(!st.mask()[i]);
+            assert!(!st.nonempty()[i]);
+        }
+    }
+
+    #[test]
+    fn insert_appends_in_ascending_order() {
+        let c = clustering(vec![0, 1], 2);
+        let mut st = ClusterState::new(THETA_SAT);
+        st.rebuild(&c, vec![None, None]);
+        st.insert(2, 1);
+        st.insert(3, 0);
+        assert_eq!(st.members(0), &[0, 3]);
+        assert_eq!(st.members(1), &[1, 2]);
+    }
+
+    #[test]
+    fn insert_into_empty_cluster_reopens_arms() {
+        let c = clustering(vec![0, 0], 2);
+        let mut st = ClusterState::new(THETA_SAT);
+        st.rebuild(&c, vec![None, None]);
+        let i0 = NUM_STRATEGIES; // cluster 1, Tiling
+        assert!(!st.nonempty()[i0] && !st.mask()[i0]);
+        st.insert(2, 1);
+        for &s in &ALL_STRATEGIES {
+            let i = NUM_STRATEGIES + s.index();
+            assert!(st.nonempty()[i] && st.mask()[i]);
+        }
+    }
+
+    #[test]
+    fn insert_equivalent_to_rebuild_of_grown_assignment() {
+        // property: rebuild(assign ++ inserts) == rebuild(assign) + inserts
+        let base = vec![0, 2, 1, 0];
+        let grown = vec![0, 2, 1, 0, 1, 2, 0];
+        let sigs =
+            vec![Some(sig(80.0, 10.0, 10.0)), None, Some(sig(10.0, 80.0, 10.0))];
+        let mut incremental = ClusterState::new(THETA_SAT);
+        incremental.rebuild(&clustering(base, 3), sigs.clone());
+        incremental.insert(4, 1);
+        incremental.insert(5, 2);
+        incremental.insert(6, 0);
+        let mut scratch = ClusterState::new(THETA_SAT);
+        scratch.rebuild(&clustering(grown, 3), sigs);
+        for c in 0..3 {
+            assert_eq!(incremental.members(c), scratch.members(c));
+        }
+        assert_eq!(incremental.mask(), scratch.mask());
+        assert_eq!(incremental.nonempty(), scratch.nonempty());
+    }
+
+    #[test]
+    fn nearest_centroid_lowest_index_tie_break() {
+        let cents = vec![[0.5; PHI_DIM], [0.5; PHI_DIM], [0.0; PHI_DIM]];
+        assert_eq!(nearest_centroid(&[0.5; PHI_DIM], &cents), 0);
+        assert_eq!(nearest_centroid(&[0.1; PHI_DIM], &cents), 2);
+    }
+
+    #[test]
+    fn rebuild_shrinks_and_grows_cluster_count() {
+        let mut st = ClusterState::new(THETA_SAT);
+        st.rebuild(&clustering(vec![0, 1, 2], 3), vec![None; 3]);
+        assert_eq!(st.clusters(), 3);
+        st.rebuild(&clustering(vec![0, 0, 0], 1), vec![None; 1]);
+        assert_eq!(st.clusters(), 1);
+        assert_eq!(st.members(0), &[0, 1, 2]);
+        assert_eq!(st.mask().len(), NUM_STRATEGIES);
+    }
+}

@@ -70,6 +70,14 @@ impl HardwareSignature {
 }
 
 /// Code-hash-keyed profile cache with cost accounting.
+///
+/// This models the *cost* of NCU profiling (representatives only,
+/// cached by code hash). The per-candidate signatures the hot loop
+/// reads every iteration are memoized separately at candidate birth in
+/// [`crate::policy::frontier::Frontier`] — `from_counters` is free in
+/// this simulation, so the frontier memo carries no cost accounting,
+/// while `Profiler` keeps charging the 10 s per *new* representative
+/// profile that the Fig. 3 breakdown needs.
 #[derive(Debug, Default, Clone)]
 pub struct Profiler {
     cache: HashMap<u64, HardwareSignature>,
@@ -100,6 +108,9 @@ impl Profiler {
         sig
     }
 
+    /// Cost-free lookup of an already-profiled signature (the hook for
+    /// persisting representative profiles in the trace store — see
+    /// ROADMAP "Profiler cache ↔ store integration").
     pub fn cached(&self, code_hash: u64) -> Option<HardwareSignature> {
         self.cache.get(&code_hash).copied()
     }

@@ -138,6 +138,18 @@ impl Rng {
         self.weighted(&w)
     }
 
+    /// Allocation-free [`Rng::softmax`]: overwrites `scores` with the
+    /// unnormalized weights and draws. Draw-for-draw identical to
+    /// `softmax` on the same scores (same weights, same consumption),
+    /// for the policy hot loop's reusable scratch buffer.
+    pub fn softmax_in_place(&mut self, scores: &mut [f64]) -> usize {
+        let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+        }
+        self.weighted(scores)
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -259,6 +271,21 @@ mod tests {
             }
         }
         assert!(hits > 950);
+    }
+
+    #[test]
+    fn softmax_in_place_matches_softmax_draw_for_draw() {
+        let scores = [0.3, -1.2, 4.0, 0.0, 2.5];
+        for seed in 0..50 {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let mut buf = scores;
+            let ia = a.softmax(&scores);
+            let ib = b.softmax_in_place(&mut buf);
+            assert_eq!(ia, ib);
+            // identical stream positions afterwards
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -27,9 +27,16 @@ use crate::util::hash::KeyHasher;
 use crate::util::json::{parse_lines_lossy, Json};
 use crate::workload::TaskSpec;
 
-/// Cache-record schema version (bumped on layout changes; unknown
-/// versions are skipped at load, mirroring the trace log).
-pub const CACHE_VERSION: f64 = 1.0;
+/// Cache-record schema version (bumped on layout changes *and* on
+/// simulator-semantics changes; unknown versions are skipped at load,
+/// mirroring the trace log).
+///
+/// v2: `GpuSim::evaluate` dropped the algebraically-cancelled `/ t * t`
+/// counter time-weighting, which shifts sm/dram/l2 percentages by ulps.
+/// Measurements recorded under v1 would replay old-bit counters next to
+/// fresh new-bit ones and silently break the cold/warm byte-identity
+/// invariant, so v1 entries are invalidated wholesale.
+pub const CACHE_VERSION: f64 = 2.0;
 
 /// Content address of one measurement.
 pub fn measurement_key(task: &TaskSpec, cfg: &KernelConfig, device_fp: u64,

@@ -5,8 +5,16 @@
 //! experiment tables they regenerate. Measurement discipline follows
 //! `triton.testing.do_bench`: warmup iterations, then timed samples with
 //! median/percentile reporting.
+//!
+//! Benches that feed the CI perf-smoke job additionally collect
+//! [`PerfEntry`] records and write a machine-readable `PERF_<suite>.json`
+//! artifact via [`write_perf_artifact`] (destination `$KERNELBAND_PERF_DIR`,
+//! default `perf/`), so the perf trajectory accumulates across runs.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Statistics of one benchmark.
 #[derive(Debug, Clone, Copy)]
@@ -114,9 +122,91 @@ impl BenchSuite {
     }
 }
 
+/// One recorded bench result destined for the perf artifact.
+#[derive(Debug, Clone)]
+pub struct PerfEntry {
+    pub name: String,
+    pub stats: BenchStats,
+    /// Items processed per call (throughput annotation), if any.
+    pub items: Option<f64>,
+}
+
+impl PerfEntry {
+    pub fn new(name: &str, stats: BenchStats) -> PerfEntry {
+        PerfEntry { name: name.to_string(), stats, items: None }
+    }
+
+    pub fn with_items(name: &str, stats: BenchStats, items: f64) -> PerfEntry {
+        PerfEntry { name: name.to_string(), stats, items: Some(items) }
+    }
+
+    fn to_json(&self) -> Json {
+        let median_s = self.stats.median.as_secs_f64();
+        let mut fields = vec![
+            ("name", Json::str(self.name.clone())),
+            ("samples", Json::num(self.stats.samples as f64)),
+            ("min_ns", Json::num(self.stats.min.as_nanos() as f64)),
+            ("median_ns", Json::num(self.stats.median.as_nanos() as f64)),
+            ("p95_ns", Json::num(self.stats.p95.as_nanos() as f64)),
+        ];
+        if let Some(items) = self.items {
+            fields.push(("items_per_call", Json::num(items)));
+            fields.push((
+                "items_per_sec",
+                Json::num(items / median_s.max(1e-12)),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Assemble the `PERF_<suite>.json` root object. `extra` carries
+/// bench-specific derived metrics (e.g. before/after speedup ratios).
+pub fn perf_json(suite: &str, entries: &[PerfEntry],
+                 extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = vec![
+        ("schema_version", Json::num(1.0)),
+        ("suite", Json::str(suite)),
+        (
+            "entries",
+            Json::Arr(entries.iter().map(PerfEntry::to_json).collect()),
+        ),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// Write `PERF_<suite>.json` under `$KERNELBAND_PERF_DIR` (default
+/// `perf/`); returns the path written. Timing artifacts are environment-
+/// dependent by nature and deliberately live outside the deterministic
+/// `BENCH_*.json` namespace.
+pub fn write_perf_artifact(suite: &str, json: &Json)
+                           -> std::io::Result<PathBuf> {
+    let dir = std::env::var("KERNELBAND_PERF_DIR")
+        .unwrap_or_else(|_| "perf".to_string());
+    let dir = Path::new(&dir);
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("PERF_{suite}.json"));
+    std::fs::write(&path, json.pretty() + "\n")?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn perf_entry_json_has_throughput_fields() {
+        let stats = measure(|| {}, 0, 3, Duration::from_millis(0));
+        let e = PerfEntry::with_items("inner_loop", stats, 500.0);
+        let j = e.to_json();
+        assert_eq!(j.str_field("name").unwrap(), "inner_loop");
+        assert!(j.get("items_per_sec").is_some());
+        let root = perf_json("policy", &[e], vec![("speedup", Json::num(3.5))]);
+        assert_eq!(root.str_field("suite").unwrap(), "policy");
+        assert_eq!(root.f64_field("speedup"), 3.5);
+        assert_eq!(root.get("entries").unwrap().as_arr().unwrap().len(), 1);
+    }
 
     #[test]
     fn measure_counts_samples() {

@@ -1,0 +1,191 @@
+//! Property tests for the §Perf clustering changes: the Lloyd
+//! convergence early-exit must be bit-lossless against the full-
+//! iteration reference, and warm-seeded re-clustering must honor its
+//! equivalence contract — identity at a fixed point; where seeding
+//! legitimately diverges from the k-means++ path, determinism and the
+//! downstream `BENCH_*.json` byte-identity (asserted in
+//! `runner_artifacts.rs` and the CI smoke) are the contract instead.
+
+use kernelband::cluster::{kmeanspp_init, lloyd_step, representatives,
+                          ClusterBackend, Clustering, RustKmeans};
+use kernelband::features::{Phi, PHI_DIM};
+use kernelband::rng::Rng;
+
+/// Random points in the unit φ-box, with occasional duplicates to
+/// exercise degenerate weight vectors in k-means++.
+fn random_points(seed: u64, n: usize) -> Vec<Phi> {
+    let mut rng = Rng::new(seed).split("pts", 0);
+    let mut pts = Vec::with_capacity(n);
+    for i in 0..n {
+        if i > 0 && rng.chance(0.15) {
+            let j = rng.below(i as u64) as usize;
+            let dup = pts[j];
+            pts.push(dup);
+            continue;
+        }
+        let mut p = [0.0; PHI_DIM];
+        for v in p.iter_mut() {
+            *v = rng.uniform();
+        }
+        pts.push(p);
+    }
+    pts
+}
+
+/// Two well-separated blobs (fast Lloyd convergence, non-trivial K).
+fn blobs(seed: u64, per_blob: usize) -> Vec<Phi> {
+    let mut rng = Rng::new(seed).split("blobs", 0);
+    let mut pts = Vec::new();
+    for center in [0.15, 0.85] {
+        for _ in 0..per_blob {
+            let mut p = [0.0; PHI_DIM];
+            for v in p.iter_mut() {
+                *v = center + 0.03 * rng.normal();
+            }
+            pts.push(p);
+        }
+    }
+    pts
+}
+
+/// The pre-§Perf `lloyd_finish`, verbatim: a fixed number of Lloyd
+/// steps with no convergence early-exit, then a snapshot assignment
+/// against the converged centroids.
+fn reference_cluster(points: &[Phi], k: usize, rng: &mut Rng,
+                     iters: usize) -> Clustering {
+    let k = k.max(1).min(points.len().max(1));
+    let mut centroids = kmeanspp_init(points, k, rng);
+    for _ in 0..iters {
+        lloyd_step(points, &mut centroids);
+    }
+    let assign = {
+        let mut snapshot = centroids.clone();
+        lloyd_step(points, &mut snapshot)
+    };
+    let reps = representatives(points, &assign, &centroids);
+    Clustering { assign, centroids, representatives: reps }
+}
+
+fn assert_same(a: &Clustering, b: &Clustering) {
+    assert_eq!(a.assign, b.assign);
+    assert_eq!(a.representatives, b.representatives);
+    assert_eq!(a.centroids.len(), b.centroids.len());
+    for (ca, cb) in a.centroids.iter().zip(&b.centroids) {
+        for j in 0..PHI_DIM {
+            assert_eq!(ca[j].to_bits(), cb[j].to_bits(), "centroid bits");
+        }
+    }
+}
+
+/// Early-exit is lossless: `RustKmeans::cluster` must be bit-identical
+/// to the no-early-exit reference on arbitrary inputs, and must leave
+/// the RNG at exactly the same stream position (it consumes draws only
+/// in k-means++ seeding, never in the exit check).
+#[test]
+fn early_exit_cluster_matches_reference_bitwise() {
+    let km = RustKmeans::default();
+    for seed in 0..30u64 {
+        let n = 1 + (seed as usize * 7) % 80;
+        let k = 1 + (seed as usize) % 6;
+        let pts = random_points(seed, n);
+        let mut rng_a = Rng::new(1000 + seed).split("cl", 0);
+        let mut rng_b = Rng::new(1000 + seed).split("cl", 0);
+        let got = km.cluster(&pts, k, &mut rng_a);
+        let want = reference_cluster(&pts, k, &mut rng_b, km.iters);
+        assert_same(&got, &want);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG positions differ");
+    }
+}
+
+/// At a Lloyd fixed point, warm-seeded re-clustering is the identity:
+/// re-seeding from converged centroids reproduces the same assignments,
+/// centroids and representatives bit-for-bit. (This is the intra-run
+/// seeding path the policy takes every re-clustering after the first.)
+#[test]
+fn seeded_recluster_is_identity_at_fixed_point() {
+    // generous iteration budget so the cold pass converges (early-exits)
+    let km = RustKmeans { iters: 200 };
+    for seed in 0..20u64 {
+        let pts = blobs(seed, 12 + (seed as usize % 10));
+        for k in [1usize, 2, 3] {
+            let cold = km.cluster(&pts, k, &mut Rng::new(seed).split("s", k as u64));
+            // verify convergence (precondition of the identity contract):
+            // one more Lloyd step must move neither the assignment nor
+            // the centroids (bitwise) — i.e. `cold` is a true fixed point
+            let mut snapshot = cold.centroids.clone();
+            let again = lloyd_step(&pts, &mut snapshot);
+            if again != cold.assign || snapshot != cold.centroids {
+                continue; // not converged — contract does not apply
+            }
+            let warm = km.cluster_seeded(&pts, &cold.centroids);
+            assert_same(&warm, &cold);
+            // and idempotent once more
+            let warm2 = km.cluster_seeded(&pts, &warm.centroids);
+            assert_same(&warm2, &warm);
+        }
+    }
+}
+
+/// Away from a fixed point, seeding may legitimately diverge from the
+/// k-means++ path — but it must stay deterministic (no RNG at all) and
+/// structurally valid: every assignment in range, representatives
+/// members of their clusters, empty clusters unselectable.
+#[test]
+fn seeded_recluster_diverges_only_deterministically() {
+    let km = RustKmeans::default();
+    for seed in 0..20u64 {
+        let pts = random_points(seed, 40 + (seed as usize % 30));
+        // arbitrary (non-converged) seeds
+        let mut srng = Rng::new(seed).split("seed", 1);
+        let init: Vec<Phi> = (0..3)
+            .map(|_| {
+                let mut p = [0.0; PHI_DIM];
+                for v in p.iter_mut() {
+                    *v = srng.uniform();
+                }
+                p
+            })
+            .collect();
+        let a = km.cluster_seeded(&pts, &init);
+        let b = km.cluster_seeded(&pts, &init);
+        assert_same(&a, &b);
+        let k = a.centroids.len();
+        assert!(a.assign.iter().all(|&c| c < k));
+        for (ci, &rep) in a.representatives.iter().enumerate() {
+            if rep == usize::MAX {
+                // empty cluster: stale centroid, no members, unselectable
+                assert_eq!(a.members(ci).next(), None);
+            } else {
+                assert_eq!(a.assign[rep], ci);
+                assert!(a.members(ci).any(|m| m == rep));
+            }
+        }
+    }
+}
+
+/// The iterator form of `Clustering::members` partitions the point set:
+/// every point appears in exactly one cluster's member stream, in
+/// ascending order.
+#[test]
+fn members_iterator_partitions_points() {
+    let km = RustKmeans::default();
+    for seed in 0..10u64 {
+        let pts = random_points(seed, 50);
+        let c = km.cluster(&pts, 4, &mut Rng::new(seed).split("m", 2));
+        let k = c.centroids.len();
+        let mut seen = vec![false; pts.len()];
+        for ci in 0..k {
+            let mut prev: Option<usize> = None;
+            for m in c.members(ci) {
+                assert!(!seen[m], "point {m} in two clusters");
+                seen[m] = true;
+                assert_eq!(c.assign[m], ci);
+                if let Some(p) = prev {
+                    assert!(p < m, "not ascending");
+                }
+                prev = Some(m);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "point missing from all clusters");
+    }
+}
