@@ -21,12 +21,13 @@ use kernelband::engine::SimEngine;
 use kernelband::eval;
 use kernelband::features::{Phi, PHI_DIM};
 use kernelband::gpu_model::Device;
-use kernelband::kernel::{Counters, Measurement};
+use kernelband::kernel::{Counters, KernelConfig, Measurement};
 use kernelband::llm::{LlmProfile, SurrogateLlm};
 use kernelband::policy::frontier::{ClusterState, Frontier};
 use kernelband::policy::{KernelBand, PolicyConfig};
 use kernelband::profiler::{HardwareSignature, THETA_SAT};
 use kernelband::rng::Rng;
+use kernelband::sched::SchedContext;
 use kernelband::strategy::{Strategy, ALL_STRATEGIES, NUM_STRATEGIES};
 use kernelband::util::bench::{perf_json, write_perf_artifact, BenchSuite,
                               PerfEntry};
@@ -178,8 +179,8 @@ fn incremental_iteration(s: &Synth, stats: &ArmStats, ucb: &MaskedUcb,
                          t: usize, pick_pool: &mut Vec<usize>,
                          pick_w: &mut Vec<f64>, rng: &mut Rng) -> usize {
     let (cluster_id, strat) = ucb
-        .select(stats, t, s.state.mask())
-        .or_else(|| ucb.select(stats, t, s.state.nonempty()))
+        .select_masked_reduce(stats, t, s.state.mask())
+        .or_else(|| ucb.select_masked_reduce(stats, t, s.state.nonempty()))
         .expect("non-empty frontier");
     let members = s.state.members(cluster_id);
     let best_t = s.frontier.latencies[s.best_id];
@@ -302,18 +303,118 @@ fn main() {
     });
     entries.push(PerfEntry::with_items("optimize_t40_amortized", e2e, 40.0));
 
+    // --- batched measurement: serial per-candidate loop vs one fused
+    // engine call over the same candidate set. Both timed bodies
+    // process the identical BATCH candidates, so "iterations/sec" of
+    // the fused path >= the serial path is exactly the batch>1 vs
+    // batch=1 steady-state measurement claim.
+    const BATCH: usize = 8;
+    let mut bcfgs: Vec<KernelConfig> = Vec::new();
+    {
+        let mut c = task.naive_config();
+        for i in 0..BATCH {
+            c.tile_m = (1 + (i % 5)) as u8;
+            c.vector = (i % 4) as u8;
+            c.fusion = (i % 3) as u8;
+            bcfgs.push(c.clamped());
+        }
+    }
+    // equivalence gate: the fused path must be bit-identical before
+    // its timings mean anything
+    {
+        let mut rngs: Vec<Rng> = (0..BATCH as u64)
+            .map(|i| Rng::new(7).split("m", i))
+            .collect();
+        let fused = engine.sim.evaluate_batch(task, &bcfgs, &mut rngs);
+        for (i, cfg) in bcfgs.iter().enumerate() {
+            let solo = engine.sim.evaluate(
+                task, cfg, &mut Rng::new(7).split("m", i as u64),
+            );
+            assert_eq!(
+                fused[i].total_latency_s.to_bits(),
+                solo.total_latency_s.to_bits(),
+                "fused/serial divergence at candidate {i}"
+            );
+        }
+        println!(
+            "equivalence: fused evaluate_batch bit-identical to {BATCH} \
+             serial evaluates"
+        );
+    }
+    let serial_measure = bs.bench_throughput(
+        &format!("steady_state_measure_serial_{BATCH}x1"),
+        BATCH as f64,
+        || {
+            for (i, cfg) in bcfgs.iter().enumerate() {
+                let m = engine.sim.evaluate(
+                    task, cfg, &mut Rng::new(7).split("m", i as u64),
+                );
+                std::hint::black_box(m.total_latency_s);
+            }
+        },
+    );
+    entries.push(PerfEntry::with_items(
+        "steady_state_measure_serial",
+        serial_measure,
+        BATCH as f64,
+    ));
+    let fused_measure = bs.bench_throughput(
+        &format!("steady_state_measure_fused_1x{BATCH}"),
+        BATCH as f64,
+        || {
+            let mut rngs: Vec<Rng> = (0..BATCH as u64)
+                .map(|i| Rng::new(7).split("m", i))
+                .collect();
+            let out = engine.sim.evaluate_batch(task, &bcfgs, &mut rngs);
+            std::hint::black_box(out.len());
+        },
+    );
+    entries.push(PerfEntry::with_items(
+        "steady_state_measure_fused",
+        fused_measure,
+        BATCH as f64,
+    ));
+
+    // --- end-to-end batched optimize (4 proposals/iteration) ---
+    let e2e_b4 = bs.bench_throughput("optimize_t40_batch4_amortized", 40.0, || {
+        let mut cfg = PolicyConfig::default();
+        cfg.iterations = 40;
+        let tr = KernelBand::new(cfg).optimize_sched(
+            task,
+            &engine,
+            &llm,
+            &Rng::new(3),
+            None,
+            &SchedContext::with_batch(4),
+        );
+        std::hint::black_box(tr.candidates.len());
+    });
+    entries.push(PerfEntry::with_items(
+        "optimize_t40_batch4_amortized",
+        e2e_b4,
+        40.0,
+    ));
+
     let ratio = |slow: f64, fast: f64| slow / fast.max(1e-12);
     let steady = ratio(
         legacy.median.as_secs_f64(),
         incremental.median.as_secs_f64(),
     );
     let recluster = ratio(cold.median.as_secs_f64(), warm.median.as_secs_f64());
+    let batch_measure = ratio(
+        serial_measure.median.as_secs_f64(),
+        fused_measure.median.as_secs_f64(),
+    );
     println!();
     println!(
         "speedup: steady-state inner loop (n={FRONTIER})  {steady:>8.1}x  \
          (target >= 3x)"
     );
     println!("speedup: recluster cold -> warm-seeded        {recluster:>8.1}x");
+    println!(
+        "speedup: fused batched measurement (b={BATCH})    \
+         {batch_measure:>8.2}x  (target >= 1x)"
+    );
 
     let json = perf_json(
         "policy",
@@ -322,6 +423,8 @@ fn main() {
             ("frontier_candidates", Json::num(FRONTIER as f64)),
             ("steady_state_speedup", Json::num(steady)),
             ("recluster_speedup", Json::num(recluster)),
+            ("batch_width", Json::num(BATCH as f64)),
+            ("batch_measure_speedup", Json::num(batch_measure)),
         ],
     );
     match write_perf_artifact("policy", &json) {

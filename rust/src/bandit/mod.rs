@@ -138,6 +138,47 @@ impl MaskedUcb {
         let mask = vec![true; stats.n.len()];
         self.select(stats, t, &mask).expect("non-empty arms")
     }
+
+    /// Flattened masked max-reduce form of [`MaskedUcb::select`] — the
+    /// hot-path selector.
+    ///
+    /// The branchy reference skips masked arms and recomputes `ln t`
+    /// per arm; this form hoists `ln t` once, computes every arm's
+    /// index unconditionally (a tight scan over the `mu`/`n` parallel
+    /// arrays the optimizer can keep in registers/SIMD lanes), and
+    /// folds the mask in as a `-∞` sentinel before a single
+    /// first-max reduce. Selection is **bit-identical** to `select`:
+    /// the per-arm arithmetic is the same expression (hoisting `ln t`
+    /// reuses the identical value), a real arm's index is always
+    /// finite (μ̂ ∈ [0, 1], bonus ≥ 0) so the sentinel can never tie a
+    /// valid arm, and `>` keeps the first maximum exactly like the
+    /// reference's `score <= best` skip. Equivalence is pinned by a
+    /// property test on 1000-arm frontiers in
+    /// `rust/tests/prop_sched.rs`.
+    pub fn select_masked_reduce(&self, stats: &ArmStats, t: usize,
+                                mask: &[bool])
+                                -> Option<(usize, Strategy)> {
+        debug_assert_eq!(mask.len(), stats.n.len());
+        let lnt = (t as f64).max(1.0).ln();
+        let mut best_i = usize::MAX;
+        let mut best = f64::NEG_INFINITY;
+        for i in 0..mask.len() {
+            let score = stats.mu[i]
+                + self.c * (lnt / stats.n[i].max(1.0)).sqrt();
+            let score = if mask[i] { score } else { f64::NEG_INFINITY };
+            if score > best {
+                best = score;
+                best_i = i;
+            }
+        }
+        if best_i == usize::MAX {
+            return None;
+        }
+        Some((
+            best_i / NUM_STRATEGIES,
+            Strategy::from_index(best_i % NUM_STRATEGIES),
+        ))
+    }
 }
 
 /// Headroom-to-score temperature divisor: 20 points of headroom
@@ -237,6 +278,35 @@ mod tests {
         let ucb = MaskedUcb::default();
         let mask = vec![false; 2 * NUM_STRATEGIES];
         assert_eq!(ucb.select(&s, 5, &mask), None);
+    }
+
+    #[test]
+    fn masked_reduce_matches_branchy_select() {
+        let mut rng = Rng::new(31);
+        let ucb = MaskedUcb::default();
+        for trial in 0..200 {
+            let k = 1 + (trial % 7);
+            let mut stats = ArmStats::new(k);
+            for _ in 0..(trial % 40) {
+                let c = rng.below(k as u64) as usize;
+                let s = Strategy::from_index(
+                    rng.below(NUM_STRATEGIES as u64) as usize,
+                );
+                stats.update(c, s, rng.uniform());
+            }
+            let mask: Vec<bool> =
+                (0..k * NUM_STRATEGIES).map(|_| rng.chance(0.7)).collect();
+            let t = 1 + (trial * 13) % 500;
+            assert_eq!(
+                ucb.select(&stats, t, &mask),
+                ucb.select_masked_reduce(&stats, t, &mask),
+                "trial {trial}"
+            );
+        }
+        // all-masked → None on both paths
+        let stats = ArmStats::new(2);
+        let mask = vec![false; 2 * NUM_STRATEGIES];
+        assert_eq!(ucb.select_masked_reduce(&stats, 5, &mask), None);
     }
 
     #[test]

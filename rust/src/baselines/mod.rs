@@ -105,6 +105,8 @@ impl BestOfN {
                 cost_usd: proposal.cost_usd,
                 llm_serial_s: proposal.latency_s,
                 best_speedup_so_far,
+                batch_accepted: Vec::new(),
+                batch_pruned: 0,
             });
         }
         Trace {
@@ -223,6 +225,8 @@ impl Geak {
                 cost_usd: proposal.cost_usd,
                 llm_serial_s: proposal.latency_s,
                 best_speedup_so_far,
+                batch_accepted: Vec::new(),
+                batch_pruned: 0,
             });
         }
         Trace {

@@ -22,6 +22,22 @@ pub trait EvalEngine {
     /// Benchmark a schedule on a task (all shapes, noise keyed by `rng`).
     fn measure(&self, task: &TaskSpec, cfg: &KernelConfig, rng: &mut Rng)
                -> Measurement;
+
+    /// Benchmark a *batch* of schedules through one engine call
+    /// (`rngs[i]` keys candidate `i`'s noise, exactly as a standalone
+    /// [`EvalEngine::measure`] would). The default loops `measure`;
+    /// engines with a fused path (the simulator's shape loop, a cache
+    /// that can batch its lookups) override it. Contract: element `i`
+    /// of the result is bit-identical to `measure(task, &cfgs[i],
+    /// &mut rngs[i])`.
+    fn measure_batch(&self, task: &TaskSpec, cfgs: &[KernelConfig],
+                     rngs: &mut [Rng]) -> Vec<Measurement> {
+        debug_assert_eq!(cfgs.len(), rngs.len());
+        cfgs.iter()
+            .zip(rngs.iter_mut())
+            .map(|(cfg, rng)| self.measure(task, cfg, rng))
+            .collect()
+    }
 }
 
 /// The simulator-backed engine.
@@ -49,6 +65,12 @@ impl EvalEngine for SimEngine {
                -> Measurement {
         self.sim.evaluate(task, cfg, rng)
     }
+
+    fn measure_batch(&self, task: &TaskSpec, cfgs: &[KernelConfig],
+                     rngs: &mut [Rng]) -> Vec<Measurement> {
+        // fused: one shape sweep for the whole batch
+        self.sim.evaluate_batch(task, cfgs, rngs)
+    }
 }
 
 #[cfg(test)]
@@ -67,5 +89,27 @@ mod tests {
         );
         assert!(m.total_latency_s > 0.0);
         assert_eq!(engine.gpu().profile.device, Device::A100);
+    }
+
+    #[test]
+    fn measure_batch_matches_serial_measures() {
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let task = &suite.tasks[2];
+        let cfgs = [KernelConfig::naive(), {
+            let mut c = KernelConfig::naive();
+            c.tile_m = 3;
+            c
+        }];
+        let mut rngs: Vec<Rng> =
+            (0..2).map(|i| Rng::new(9).split("m", i)).collect();
+        let fused = engine.measure_batch(task, &cfgs, &mut rngs);
+        for (i, cfg) in cfgs.iter().enumerate() {
+            let solo = engine.measure(
+                task, cfg, &mut Rng::new(9).split("m", i as u64),
+            );
+            assert_eq!(fused[i].total_latency_s.to_bits(),
+                       solo.total_latency_s.to_bits());
+        }
     }
 }

@@ -33,6 +33,7 @@ use crate::llm::{LlmBackend, LlmProfile, SurrogateLlm, ALL_LLMS};
 use crate::metrics::{stratified, Aggregate, TaskOutcome};
 use crate::policy::{KernelBand, PolicyConfig, PolicyMode, Trace};
 use crate::rng::Rng;
+use crate::sched::SchedContext;
 use crate::service::{BreakdownRow, TimeModel};
 use crate::store::warm::TaskWarmStart;
 use crate::store::TraceStore;
@@ -100,6 +101,25 @@ impl Method {
         root: &Rng,
         warm: Option<&TaskWarmStart>,
     ) -> Trace {
+        self.run_task_sched(task, engine, llm, iterations, root, warm,
+                            &SchedContext::default())
+    }
+
+    /// [`Method::run_task_warm`] with a scheduling context
+    /// ([`crate::sched`]): KernelBand runs the batched loop with the
+    /// shared re-clustering / profile caches; the baselines ignore the
+    /// context (they have no clusters to batch over or profile). The
+    /// default context is bit-identical to `run_task_warm`.
+    pub fn run_task_sched<E: EvalEngine, L: LlmBackend>(
+        self,
+        task: &TaskSpec,
+        engine: &E,
+        llm: &L,
+        iterations: usize,
+        root: &Rng,
+        warm: Option<&TaskWarmStart>,
+        ctx: &SchedContext,
+    ) -> Trace {
         match self {
             Method::KernelBand(mode, k) => {
                 let mut cfg = PolicyConfig::with_mode(mode);
@@ -107,7 +127,8 @@ impl Method {
                 if mode != PolicyMode::NoClustering {
                     cfg.clusters = k;
                 }
-                KernelBand::new(cfg).optimize_warm(task, engine, llm, root, warm)
+                KernelBand::new(cfg)
+                    .optimize_sched(task, engine, llm, root, warm, ctx)
             }
             Method::BoN => {
                 BestOfN::new(iterations).optimize(task, engine, llm, root)
@@ -156,20 +177,33 @@ pub fn outcomes(traces: &[Trace]) -> Vec<TaskOutcome> {
 /// the pre-store behavior (all cores, no session).
 #[derive(Debug, Clone, Default)]
 pub struct RunOpts {
-    /// Worker threads (0 = available parallelism).
+    /// Worker threads (0 = available parallelism). Results are
+    /// invariant to this value.
     pub threads: usize,
     /// Store session shared by every cell of the experiment: caches,
     /// warm-start, trace emission.
     pub session: Option<Arc<TraceStore>>,
+    /// Candidates proposed per KernelBand iteration (0 and 1 both mean
+    /// the legacy single-candidate loop; `--batch 1` artifacts are
+    /// byte-identical to the pre-batch path).
+    pub batch: usize,
 }
 
 impl RunOpts {
     pub fn threads(threads: usize) -> RunOpts {
-        RunOpts { threads, session: None }
+        RunOpts { threads, session: None, batch: 0 }
+    }
+
+    /// Set the per-iteration candidate batch width.
+    pub fn with_batch(mut self, batch: usize) -> RunOpts {
+        self.batch = batch;
+        self
     }
 
     fn runner(&self) -> ExperimentRunner {
-        ExperimentRunner::new(self.threads).with_session(self.session.clone())
+        ExperimentRunner::new(self.threads)
+            .with_session(self.session.clone())
+            .with_batch(self.batch)
     }
 }
 

@@ -29,6 +29,7 @@ use crate::llm::{LlmProfile, SurrogateLlm};
 use crate::metrics::{aggregate, stratified, Aggregate};
 use crate::policy::Trace;
 use crate::rng::Rng;
+use crate::sched::SchedContext;
 use crate::store::log::records_for_trace;
 use crate::store::wrap::{CachedEngine, CachedLlm};
 use crate::store::TraceStore;
@@ -148,11 +149,16 @@ pub struct ExperimentRunner {
     /// ([`crate::store::wrap`]), warm-start state is applied per task,
     /// and the run's traces are queued on the store's append-only log.
     pub session: Option<Arc<TraceStore>>,
+    /// Candidates proposed per KernelBand iteration (0/1 = the legacy
+    /// single-candidate loop). Results are invariant to `threads` for
+    /// any batch width, and `batch <= 1` is byte-identical to the
+    /// pre-batch runner.
+    pub batch: usize,
 }
 
 impl ExperimentRunner {
     pub fn new(threads: usize) -> ExperimentRunner {
-        ExperimentRunner { threads, session: None }
+        ExperimentRunner { threads, session: None, batch: 0 }
     }
 
     /// Attach (or detach) a store session.
@@ -160,6 +166,27 @@ impl ExperimentRunner {
                         -> ExperimentRunner {
         self.session = session;
         self
+    }
+
+    /// Set the per-iteration candidate batch width.
+    pub fn with_batch(mut self, batch: usize) -> ExperimentRunner {
+        self.batch = batch;
+        self
+    }
+
+    /// The scheduling context every work item shares: the batch width
+    /// plus — with a store session — the session's re-clustering memo
+    /// and persisted profile cache. Both caches are pure memos, so the
+    /// context never perturbs results (see [`crate::sched`]).
+    fn sched_context(&self) -> SchedContext {
+        match &self.session {
+            Some(store) => SchedContext {
+                batch: self.batch,
+                centroids: Some(store.session_centroids()),
+                profiles: Some(store.profiles()),
+            },
+            None => SchedContext::with_batch(self.batch),
+        }
     }
 
     /// Run every cell of the grid over every task of `suite`.
@@ -179,6 +206,7 @@ impl ExperimentRunner {
         let items: Vec<(usize, usize)> = (0..cells.len())
             .flat_map(|c| (0..suite.len()).map(move |t| (c, t)))
             .collect();
+        let ctx = self.sched_context();
         // each item reports whether it performed any *new* simulated
         // work (false = fully replayed from cache)
         let traces = parallel_map(&items, self.threads, |_, &(c, t)| {
@@ -189,8 +217,9 @@ impl ExperimentRunner {
                 None => {
                     let engine = SimEngine::new(spec.device);
                     let llm = SurrogateLlm::new(spec.llm);
-                    let trace = spec.method.run_task(
+                    let trace = spec.method.run_task_sched(
                         task, &engine, &llm, spec.iterations, &root,
+                        None, &ctx,
                     );
                     (trace, true)
                 }
@@ -203,7 +232,7 @@ impl ExperimentRunner {
                         SurrogateLlm::new(spec.llm),
                         store.clone(),
                     );
-                    let trace = spec.method.run_task_warm(
+                    let trace = spec.method.run_task_sched(
                         task,
                         &engine,
                         &llm,
@@ -214,6 +243,7 @@ impl ExperimentRunner {
                             spec.llm.spec().name,
                             &task.name,
                         ),
+                        &ctx,
                     );
                     let new_work =
                         engine.local_sims() + llm.local_sims() > 0;
@@ -341,6 +371,52 @@ mod tests {
         .with_label("w/o Profiling");
         assert_eq!(cell.label, "w/o Profiling");
         assert_eq!(cell.method, Method::KernelBand(PolicyMode::NoProfiling, 3));
+    }
+
+    #[test]
+    fn batch_one_artifacts_match_default_runner() {
+        let suite = tiny_suite();
+        let cells = vec![CellSpec::new(
+            Method::KernelBand(PolicyMode::Full, 3),
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            6,
+            3,
+        )];
+        let base = ExperimentRunner::new(2).run(&suite, &cells);
+        let b1 =
+            ExperimentRunner::new(2).with_batch(1).run(&suite, &cells);
+        assert_eq!(
+            experiment_json("unit", 6, 3, &base).dump(),
+            experiment_json("unit", 6, 3, &b1).dump()
+        );
+    }
+
+    #[test]
+    fn batched_runner_is_thread_invariant() {
+        let suite = tiny_suite();
+        let cells = vec![
+            CellSpec::new(
+                Method::KernelBand(PolicyMode::Full, 3),
+                Device::H20,
+                LlmProfile::DeepSeekV32,
+                8,
+                3,
+            ),
+            CellSpec::new(
+                Method::BoN,
+                Device::A100,
+                LlmProfile::DeepSeekV32,
+                8,
+                3,
+            ),
+        ];
+        let t1 = ExperimentRunner::new(1).with_batch(3).run(&suite, &cells);
+        let t4 = ExperimentRunner::new(4).with_batch(3).run(&suite, &cells);
+        assert_eq!(
+            experiment_json("unit", 8, 3, &t1).dump(),
+            experiment_json("unit", 8, 3, &t4).dump()
+        );
     }
 
     #[test]

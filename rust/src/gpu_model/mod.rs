@@ -363,6 +363,92 @@ impl GpuSim {
         Measurement { total_latency_s: total, per_shape_s: per_shape, counters }
     }
 
+    /// Fused multi-candidate evaluation: loop the task's shapes **once
+    /// per batch** instead of once per candidate, amortizing the
+    /// per-shape spill/traffic terms and shape-data traversal across
+    /// the whole batch (the batched-measurement hot path,
+    /// [`crate::sched`]).
+    ///
+    /// Per candidate the arithmetic is *identical* to
+    /// [`GpuSim::evaluate`] — independent accumulators, shapes visited
+    /// in the same order, the noise stream split from that candidate's
+    /// RNG by the same `("noise", code_hash)` lineage — so every
+    /// returned [`Measurement`] is bit-identical to a standalone
+    /// `evaluate` call (property-tested in `rust/tests/prop_sched.rs`).
+    pub fn evaluate_batch(&self, task: &TaskSpec, cfgs: &[KernelConfig],
+                          rngs: &mut [Rng]) -> Vec<Measurement> {
+        debug_assert_eq!(cfgs.len(), rngs.len());
+        let n = cfgs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let p = &self.profile;
+        let peak_flops = p.peak_tflops * 1.0e12;
+        let dram_bw = p.dram_gbps * 1.0e9;
+        let l2_bw = dram_bw * p.l2_bw_factor;
+        let launch_s = p.launch_us * 1.0e-6;
+        let effs: Vec<Efficiency> =
+            cfgs.iter().map(|c| self.efficiency(task, c)).collect();
+        let mut noise: Vec<Option<Rng>> = cfgs
+            .iter()
+            .zip(rngs.iter_mut())
+            .map(|(c, r)| {
+                if self.noise_sigma > 0.0 {
+                    Some(r.split("noise", c.code_hash()))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let shapes = task.shapes.len();
+        let mut per_shape: Vec<Vec<f64>> =
+            (0..n).map(|_| Vec::with_capacity(shapes)).collect();
+        let mut total = vec![0.0f64; n];
+        let mut sm_acc = vec![0.0f64; n];
+        let mut dram_acc = vec![0.0f64; n];
+        let mut l2_acc = vec![0.0f64; n];
+        for shape in task.shapes.iter() {
+            // candidate-independent per-shape terms, loaded once
+            let spill = (shape.working_set / (p.l2_mb * 1.0e6)).min(2.0);
+            let sm_pts = 100.0 * (shape.flops / peak_flops);
+            for i in 0..n {
+                let eff = &effs[i];
+                let bytes_eff = shape.bytes * eff.traffic_factor;
+                let l2_bytes = bytes_eff
+                    * (1.1 + 0.5 * (1.0 - eff.l2) + 0.25 * spill);
+                let t_comp = shape.flops / (peak_flops * eff.compute);
+                let t_dram = bytes_eff / (dram_bw * eff.memory);
+                let t_l2 = l2_bytes / (l2_bw * eff.l2);
+                let ideal = t_comp.max(t_dram).max(t_l2) + launch_s;
+                let noise_f = match noise[i].as_mut() {
+                    Some(nr) => nr.lognormal_noise(self.noise_sigma),
+                    None => 1.0,
+                };
+                let t = ideal * noise_f;
+                per_shape[i].push(t);
+                total[i] += t;
+                sm_acc[i] += sm_pts;
+                dram_acc[i] += 100.0 * (bytes_eff / dram_bw);
+                l2_acc[i] += 100.0 * (l2_bytes / l2_bw);
+            }
+        }
+        (0..n)
+            .map(|i| Measurement {
+                total_latency_s: total[i],
+                per_shape_s: std::mem::take(&mut per_shape[i]),
+                counters: Counters {
+                    regs_per_thread: effs[i].occ.regs_per_thread,
+                    smem_per_block: effs[i].occ.smem_per_block,
+                    block_dim: effs[i].occ.threads_per_block,
+                    occupancy: effs[i].occ.occupancy,
+                    sm_pct: (sm_acc[i] / total[i]).min(100.0),
+                    dram_pct: (dram_acc[i] / total[i]).min(100.0),
+                    l2_pct: (l2_acc[i] / total[i]).min(100.0),
+                },
+            })
+            .collect()
+    }
+
     /// Latency of the best reachable schedule (latent optimum) — used by
     /// tests and the Theorem-1 regret diagnostics, not by the search.
     pub fn oracle_config(&self, task: &TaskSpec) -> KernelConfig {
@@ -584,6 +670,41 @@ mod tests {
         assert_eq!(m.counters.regs_per_thread, eff.occ.regs_per_thread);
         assert_eq!(m.counters.smem_per_block, eff.occ.smem_per_block);
         assert_eq!(m.counters.block_dim, eff.occ.threads_per_block);
+    }
+
+    #[test]
+    fn evaluate_batch_is_bitwise_equal_to_serial_evaluates() {
+        let suite = Suite::full(1);
+        let task = &suite.tasks[4];
+        let sim = GpuSim::new(Device::H20);
+        let cfgs = [
+            task.naive_config(),
+            sim.oracle_config(task),
+            KernelConfig { fusion: 2, vector: 2, ..task.naive_config() },
+        ];
+        let mut batch_rngs: Vec<Rng> = (0..cfgs.len())
+            .map(|b| Rng::new(5).split("m", b as u64))
+            .collect();
+        let fused = sim.evaluate_batch(task, &cfgs, &mut batch_rngs);
+        assert_eq!(fused.len(), cfgs.len());
+        for (i, cfg) in cfgs.iter().enumerate() {
+            let solo = sim.evaluate(
+                task, cfg, &mut Rng::new(5).split("m", i as u64),
+            );
+            assert_eq!(fused[i].total_latency_s.to_bits(),
+                       solo.total_latency_s.to_bits());
+            assert_eq!(fused[i].per_shape_s, solo.per_shape_s);
+            assert_eq!(fused[i].counters.sm_pct.to_bits(),
+                       solo.counters.sm_pct.to_bits());
+            assert_eq!(fused[i].counters.dram_pct.to_bits(),
+                       solo.counters.dram_pct.to_bits());
+            assert_eq!(fused[i].counters.l2_pct.to_bits(),
+                       solo.counters.l2_pct.to_bits());
+            assert_eq!(fused[i].counters.occupancy.to_bits(),
+                       solo.counters.occupancy.to_bits());
+        }
+        // empty batch is a no-op
+        assert!(sim.evaluate_batch(task, &[], &mut []).is_empty());
     }
 
     #[test]

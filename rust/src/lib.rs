@@ -41,7 +41,8 @@
 //! | [`metrics`] | Correct / Fast@1 / geomean (standard & fallback) / strata |
 //! | [`engine`] | `EvalEngine` trait: simulated vs PJRT-real measurement |
 //! | [`runtime`] | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
-//! | [`service`] | optimization service: batched LLM scheduler (Fig. 3) |
+//! | [`sched`] | batched-measurement scheduling: slot lineages, profiling-bound admission, shared recluster/profile memos |
+//! | [`service`] | optimization service: batched LLM gateway + shared recluster scheduler (Fig. 3) |
 //! | [`store`] | persistent trace store: content-addressed kernel cache, append-only trace log, cross-session warm-start |
 //! | [`eval`] | experiment harnesses regenerating every paper table/figure; [`eval::ExperimentRunner`] fans the grid out in parallel and emits `BENCH_*.json` artifacts |
 
@@ -59,6 +60,7 @@ pub mod policy;
 pub mod profiler;
 pub mod rng;
 pub mod runtime;
+pub mod sched;
 pub mod service;
 pub mod store;
 pub mod strategy;

@@ -2,14 +2,15 @@
 //!
 //! ```text
 //! kernelband repro <table1|table2|table3|table4|table9|table10|fig2|fig3|fig4|regret|all>
-//!            [--iterations N] [--threads N] [--out DIR]
+//!            [--iterations N] [--threads N] [--batch N] [--out DIR]
 //!            [--store DIR] [--warm-start TRACE]
 //! kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
 //!            [--llm deepseek|gpt5|claude|gemini] [--mode full|no-clustering|
 //!            no-profiling|llm-select|raw-profiling|no-strategy]
 //!            [--iterations N] [--seed S]
 //! kernelband pjrt [--artifacts DIR] [--budget N]
-//! kernelband serve [--jobs N] [--iterations N] [--out DIR] [--store DIR]
+//! kernelband serve [--jobs N] [--iterations N] [--batch N] [--out DIR]
+//!            [--store DIR]
 //! kernelband trace <record|replay|stats> …
 //! kernelband list [--subset]
 //! ```
@@ -58,8 +59,8 @@ const USAGE: &str = "\
 kernelband — hardware-aware MAB for LLM kernel optimization (reproduction)
 
 USAGE:
-  kernelband repro <EXPERIMENT> [--iterations N] [--threads N] [--out DIR]
-                   [--store DIR] [--warm-start TRACE]
+  kernelband repro <EXPERIMENT> [--iterations N] [--threads N] [--batch N]
+                   [--out DIR] [--store DIR] [--warm-start TRACE]
       EXPERIMENT: table1 table2 table3 table4 table9 table10
                   fig2 fig3 fig4 regret all
       --threads 0 (default) uses every core; results are identical
@@ -70,14 +71,23 @@ USAGE:
       run's bandit traces under DIR (a repeated run is pure lookups,
       byte-identical artifacts); --warm-start TRACE replays a prior
       trace log into bandit priors and cluster seeds.
+      --batch N proposes N candidates per bandit iteration, prunes
+      them against the hardware profiling bounds, and measures the
+      survivors through one fused engine call; --batch 1 (default)
+      is byte-identical to the pre-batch path for any --threads.
   kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
       [--llm deepseek|gpt5|claude|gemini]
       [--mode full|no-clustering|no-profiling|llm-select|raw-profiling|no-strategy]
       [--iterations N] [--seed S]
   kernelband pjrt [--artifacts DIR] [--budget N]
-  kernelband serve [--jobs N] [--iterations N] [--out DIR] [--store DIR]
+  kernelband serve [--jobs N] [--iterations N] [--batch N] [--out DIR]
+      [--store DIR]
       --store DIR records completed job iterations; a repeated run
       skips their LLM gateway round-trips entirely (cache-hit fast path).
+      --batch N measures N candidates per iteration through the fused
+      batched-measurement model; jobs share one re-clustering
+      scheduler that interleaves re-clustering across jobs and reuses
+      warm centroids between matching task fingerprints.
   kernelband trace record --store DIR [--task SUBSTR] [--device D]
       [--llm L] [--iterations N] [--seed S]
       run one optimization through the store and append its trace.
@@ -224,10 +234,11 @@ fn open_session(store_dir: Option<&str>, warm: Option<&str>)
     Ok(Some(Arc::new(store)))
 }
 
-fn repro(exp: &str, iterations: Option<usize>, threads: usize, out: &str,
-         store_dir: Option<&str>, warm: Option<&str>) -> Result<()> {
+fn repro(exp: &str, iterations: Option<usize>, threads: usize,
+         batch: usize, out: &str, store_dir: Option<&str>,
+         warm: Option<&str>) -> Result<()> {
     let session = open_session(store_dir, warm)?;
-    let opts = RunOpts { threads, session: session.clone() };
+    let opts = RunOpts { threads, session: session.clone(), batch };
     let run_one = |name: &str| -> Result<()> {
         let report = eval::report_opts(name, iterations, &opts)
             .ok_or_else(|| anyhow!("unknown experiment {name:?}\n{USAGE}"))?;
@@ -329,10 +340,12 @@ fn pjrt(artifacts: &str, budget: usize) -> Result<()> {
     Ok(())
 }
 
-fn serve(jobs: usize, iterations: usize, out: Option<&str>,
+fn serve(jobs: usize, iterations: usize, batch: usize, out: Option<&str>,
          store_dir: Option<&str>) -> Result<()> {
     let session = open_session(store_dir, None)?;
-    let report = OptimizationService::default().run_with_store(
+    let mut service = OptimizationService::default();
+    service.batch = batch.max(1);
+    let report = service.run_with_store(
         jobs,
         iterations,
         session.as_deref(),
@@ -351,6 +364,15 @@ fn serve(jobs: usize, iterations: usize, out: Option<&str>,
         report.gateway_requests, report.gateway_batches,
         report.gateway_max_batch
     );
+    outln!(
+        "scheduler: {} recluster requests in {} rounds  warm_hits={} \
+         dedup_shares={} saved {:.1}s (modeled)",
+        report.sched_requests,
+        report.sched_rounds,
+        report.sched_warm_hits,
+        report.sched_dedup_shares,
+        report.sched_saved_model_s
+    );
     if session.is_some() {
         outln!("gateway_bypassed={}", report.gateway_bypassed);
     }
@@ -360,12 +382,24 @@ fn serve(jobs: usize, iterations: usize, out: Option<&str>,
             ("experiment", Json::str("serve")),
             ("jobs", Json::num(jobs as f64)),
             ("iterations", Json::num(iterations as f64)),
+            ("batch", Json::num(service.batch as f64)),
             ("wall_model_s", Json::num(report.wall_model_s)),
             ("serial_equivalent_s", Json::num(report.serial_equivalent_s)),
             ("batching_speedup", Json::num(report.batching_speedup())),
             ("gateway_requests", Json::num(report.gateway_requests as f64)),
             ("gateway_batches", Json::num(report.gateway_batches as f64)),
             ("gateway_max_batch", Json::num(report.gateway_max_batch as f64)),
+            ("sched_requests", Json::num(report.sched_requests as f64)),
+            ("sched_rounds", Json::num(report.sched_rounds as f64)),
+            ("sched_warm_hits", Json::num(report.sched_warm_hits as f64)),
+            (
+                "sched_dedup_shares",
+                Json::num(report.sched_dedup_shares as f64),
+            ),
+            (
+                "sched_saved_model_s",
+                Json::num(report.sched_saved_model_s),
+            ),
         ]);
         // only present with a store, so storeless artifacts keep their
         // pre-store byte layout
@@ -500,10 +534,12 @@ fn trace_stats(path_str: &str) -> Result<()> {
         let store = TraceStore::open(path)
             .with_context(|| format!("opening store {path_str:?}"))?;
         outln!(
-            "store {}: kernels={} proposals={} service={} skipped_lines={}",
+            "store {}: kernels={} proposals={} profiles={} service={} \
+             skipped_lines={}",
             path_str,
             store.loaded.kernels,
             store.loaded.proposals,
+            store.loaded.profiles,
             store.loaded.service,
             store.loaded.skipped,
         );
@@ -614,6 +650,7 @@ fn main() -> Result<()> {
                 exp,
                 iters,
                 args.get_usize("threads", 0)?,
+                args.get_usize("batch", 1)?,
                 args.get("out").unwrap_or("out"),
                 args.get("store"),
                 args.get("warm-start"),
@@ -642,6 +679,7 @@ fn main() -> Result<()> {
             serve(
                 args.get_usize("jobs", 16)?,
                 args.get_usize("iterations", 3)?,
+                args.get_usize("batch", 1)?,
                 args.get("out"),
                 args.get("store"),
             )

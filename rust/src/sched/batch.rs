@@ -1,0 +1,137 @@
+//! Batch-slot RNG lineages and the profiling-bound admission test.
+//!
+//! ## Pinned RNG consumption order
+//!
+//! A batched iteration plans its slots in ascending slot order against
+//! the iteration-entry frontier; every stochastic step of slot `b`
+//! draws from a stream derived by [`slot_rng`]. Slot 0's streams are
+//! *exactly* the pre-batch `(label, t)` lineages, so a batch-1 run is
+//! bit-identical to the legacy loop — including every content-address
+//! the persistent store derives from the measurement stream, which is
+//! why warm stores recorded before batching still hit. Speculative
+//! slots (`b ≥ 1`) fold the slot index into the high bits of the split
+//! index; iteration counters are far below 2³², so speculative streams
+//! can never collide with any legacy `(label, t)` stream.
+//!
+//! ## Profiling-bound pruning
+//!
+//! The paper's bounding function B(k, s) (Assumption 1) lower-bounds
+//! the latency any child of kernel `k` under strategy `s` can reach:
+//! the strategy relieves its target resource, so the child can at best
+//! shrink the parent's latency by the factor the target's measured
+//! utilization leaves on the table. Speculative slots whose bound
+//! cannot beat `prune_factor ×` the current best are dropped *before*
+//! the fused measurement — cheap signature arithmetic instead of a
+//! full shape sweep. Slot 0 is always admitted (it is the legacy
+//! candidate), so pruning can only ever skip work the pre-batch loop
+//! never did.
+
+use crate::profiler::HardwareSignature;
+use crate::rng::Rng;
+use crate::strategy::Strategy;
+
+/// Stream for batch slot `slot` of iteration `t` under `label`.
+/// Slot 0 ≡ `root.split(label, t)` — the legacy lineage.
+pub fn slot_rng(root: &Rng, label: &str, t: usize, slot: usize) -> Rng {
+    root.split(label, ((slot as u64) << 32) | t as u64)
+}
+
+/// Floor on the bound ratio: even a perfect transformation cannot
+/// shrink latency below 5% of the parent (launch overhead, the other
+/// roofline terms). Keeps the bound sane when a counter reads ~0%.
+const BOUND_FLOOR: f64 = 0.05;
+
+/// Assumption-1-style optimistic child latency for expanding `parent`
+/// (latency `parent_latency_s`, signature `sig`) via `strategy`
+/// (`None` = free-form: relief bounded by the dominant bottleneck).
+///
+/// The target resource currently runs at `h`% of peak; lifting it to
+/// 100% shrinks the roofline term it gates by at most `h / 100`, so no
+/// child can beat `parent_latency_s · h / 100`. RNG-free and
+/// deterministic — admission never shifts any stochastic stream.
+pub fn latency_bound(parent_latency_s: f64, sig: &HardwareSignature,
+                     strategy: Option<Strategy>) -> f64 {
+    let pct = match strategy {
+        Some(s) => sig.get(s.target()),
+        None => sig.get(sig.bottleneck()),
+    };
+    parent_latency_s * (pct / 100.0).clamp(BOUND_FLOOR, 1.0)
+}
+
+/// Admission test for a speculative slot: can a child of this parent
+/// plausibly land inside the promising frontier?
+pub fn admit(parent_latency_s: f64, sig: &HardwareSignature,
+             strategy: Option<Strategy>, prune_factor: f64,
+             best_latency_s: f64) -> bool {
+    latency_bound(parent_latency_s, sig, strategy)
+        <= prune_factor * best_latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(sm: f64, dram: f64, l2: f64) -> HardwareSignature {
+        HardwareSignature { sm_pct: sm, dram_pct: dram, l2_pct: l2 }
+    }
+
+    #[test]
+    fn slot_zero_is_the_legacy_lineage() {
+        let root = Rng::new(7);
+        for t in [1usize, 5, 19, 40] {
+            let mut legacy = root.split("pick", t as u64);
+            let mut slot0 = slot_rng(&root, "pick", t, 0);
+            assert_eq!(legacy.fingerprint(), slot0.fingerprint());
+            assert_eq!(legacy.next_u64(), slot0.next_u64());
+        }
+    }
+
+    #[test]
+    fn speculative_slots_get_distinct_streams() {
+        let root = Rng::new(7);
+        let mut fps = std::collections::HashSet::new();
+        for t in 1..=40usize {
+            for b in 0..4usize {
+                assert!(fps.insert(slot_rng(&root, "gen", t, b).fingerprint()));
+            }
+        }
+        // and they never collide with legacy (label, t) streams of other
+        // iterations within any realistic horizon
+        for t in 1..=10_000u64 {
+            assert!(!fps.contains(&root.split("gen", t).fingerprint())
+                    || t <= 40);
+        }
+    }
+
+    #[test]
+    fn bound_scales_with_target_utilization() {
+        // DRAM at 40%: a Vectorization child can reach at best 0.4×
+        let s = sig(70.0, 40.0, 20.0);
+        let b = latency_bound(1.0, &s, Some(Strategy::Vectorization));
+        assert!((b - 0.40).abs() < 1e-12);
+        // SM-gated strategy reads the SM counter
+        let b2 = latency_bound(1.0, &s, Some(Strategy::Tiling));
+        assert!((b2 - 0.70).abs() < 1e-12);
+        // free-form: dominant bottleneck (SM at 70%)
+        let b3 = latency_bound(1.0, &s, None);
+        assert!((b3 - 0.70).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_is_floored_and_capped() {
+        let s = sig(0.0, 150.0, 0.0);
+        assert_eq!(latency_bound(2.0, &s, Some(Strategy::Tiling)),
+                   2.0 * 0.05);
+        assert_eq!(latency_bound(2.0, &s, Some(Strategy::Fusion)), 2.0);
+    }
+
+    #[test]
+    fn admission_compares_against_pruned_frontier() {
+        let s = sig(90.0, 10.0, 10.0);
+        // parent 1.0s, SM at 90% → bound 0.9; best 0.5, factor 1.5 →
+        // 0.9 <= 0.75 is false → pruned
+        assert!(!admit(1.0, &s, Some(Strategy::Tiling), 1.5, 0.5));
+        // DRAM at 10% → bound 0.1 <= 0.75 → admitted
+        assert!(admit(1.0, &s, Some(Strategy::Vectorization), 1.5, 0.5));
+    }
+}

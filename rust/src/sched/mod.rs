@@ -1,0 +1,86 @@
+//! Batched-measurement scheduling: shared state and helpers behind the
+//! batch-per-iteration policy loop and the service-side scheduler.
+//!
+//! KernelBand's hot loop historically measured exactly one accepted
+//! candidate per iteration. The paper's hardware-aware pruning only pays
+//! off when many proposals are scored cheaply against profiling bounds
+//! *before* the expensive measurement step — the batched-evaluation
+//! shape this module provides:
+//!
+//! * [`batch`] — slot RNG-lineage derivation (slot 0 is bit-identical
+//!   to the pre-batch stream layout, so `--batch 1` reproduces the
+//!   legacy path byte for byte) and the Assumption-1-style latency
+//!   bound that admits or prunes speculative slots before measurement;
+//! * [`centroids`] — a sound cross-job re-clustering memo: keys hash
+//!   everything that determines Lloyd's output bit for bit, so two jobs
+//!   with matching fingerprints share converged centroids without any
+//!   run's results depending on which job computed them first;
+//! * [`profiles`] — the shared NCU-signature cache the trace store
+//!   persists (`profiles.jsonl`), letting a warm session skip
+//!   representative-profiling recomputation entirely;
+//! * [`scheduler`] — the service-side [`scheduler::ReclusterScheduler`]:
+//!   one worker interleaves the remaining super-O(members) step
+//!   (re-clustering) across concurrent jobs, paying each distinct task
+//!   fingerprint once per round and resuming warm for fingerprints seen
+//!   before.
+//!
+//! ## Determinism contract
+//!
+//! Everything here is either RNG-free or a pure memo whose key pins the
+//! value bit-exactly, so attaching a [`SchedContext`] (any batch size,
+//! any shared caches, any thread count or job interleaving) never
+//! changes what a given `(seed, method, task, device, llm)` run
+//! computes — only how much work it repeats. `BENCH_*.json` byte
+//! identity for any `--threads`/`--batch 1`/cold/warm combination is
+//! asserted in `rust/tests/prop_sched.rs` and the CI smoke.
+
+pub mod batch;
+pub mod centroids;
+pub mod profiles;
+pub mod scheduler;
+
+use std::sync::Arc;
+
+use self::centroids::CentroidCache;
+use self::profiles::SharedProfiles;
+
+/// Per-run scheduling context handed to
+/// [`crate::policy::KernelBand::optimize_sched`]. The default context
+/// (`batch = 1`, no shared caches) reproduces the pre-batch behavior
+/// bit for bit.
+#[derive(Debug, Clone, Default)]
+pub struct SchedContext {
+    /// Candidates proposed per iteration (0 and 1 both mean the legacy
+    /// single-candidate loop).
+    pub batch: usize,
+    /// Shared re-clustering memo (session-scoped, in-memory).
+    pub centroids: Option<Arc<CentroidCache>>,
+    /// Shared NCU-signature cache (persisted by the trace store).
+    pub profiles: Option<Arc<SharedProfiles>>,
+}
+
+impl SchedContext {
+    pub fn with_batch(batch: usize) -> SchedContext {
+        SchedContext { batch, ..SchedContext::default() }
+    }
+
+    /// Effective batch width (≥ 1).
+    pub fn batch_width(&self) -> usize {
+        self.batch.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_context_is_legacy_single_candidate() {
+        let ctx = SchedContext::default();
+        assert_eq!(ctx.batch_width(), 1);
+        assert!(ctx.centroids.is_none());
+        assert!(ctx.profiles.is_none());
+        assert_eq!(SchedContext::with_batch(0).batch_width(), 1);
+        assert_eq!(SchedContext::with_batch(4).batch_width(), 4);
+    }
+}

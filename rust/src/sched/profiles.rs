@@ -1,0 +1,139 @@
+//! Shared NCU-signature cache — the profiler-cache ↔ store bridge.
+//!
+//! [`crate::profiler::Profiler`] memoizes representative signatures per
+//! *run*; this cache makes those memos durable. The trace store loads
+//! `profiles.jsonl` into a [`SharedProfiles`] at open and appends the
+//! new entries at persist, so a warm session replays representative
+//! profiling as pure lookups: zero recomputation, zero simulated NCU
+//! cost (`Trace::profile_runs == 0` — asserted in
+//! `rust/tests/prop_sched.rs`).
+//!
+//! ## Keying — why the *run* fingerprint is part of the address
+//!
+//! Within a run, `Profiler` returns the **first** signature profiled
+//! for a code hash and serves every later request for that hash from
+//! cache. Which measurement happens to be "first" is a deterministic
+//! function of the whole run lineage (seed, method, task, device, LLM,
+//! policy knobs, batch width) — but *not* of the code hash alone: two
+//! different runs can first-profile the same schedule from different
+//! measurements. A cache keyed only by `(device, code_hash)` would
+//! therefore serve whichever run inserted first — making results
+//! depend on scheduling order. Folding the run fingerprint into the
+//! key ([`profile_key`]) restores the pure-memo property: an entry is
+//! only ever read by a bit-identical replay of the run that wrote it,
+//! which is exactly the warm-session scenario this cache exists for.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::profiler::HardwareSignature;
+use crate::util::hash::KeyHasher;
+
+/// Content address of one persisted representative signature.
+pub fn profile_key(run_fp: u64, code_hash: u64) -> u64 {
+    KeyHasher::new("profile").u64(run_fp).u64(code_hash).finish()
+}
+
+/// Thread-safe signature cache with append-only persistence
+/// bookkeeping (mirrors [`crate::store::cache::ContentCache`]).
+#[derive(Debug, Default)]
+pub struct SharedProfiles {
+    map: Mutex<HashMap<u64, HardwareSignature>>,
+    dirty: Mutex<Vec<u64>>,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl SharedProfiles {
+    pub fn new() -> SharedProfiles {
+        SharedProfiles::default()
+    }
+
+    pub fn get(&self, key: u64) -> Option<HardwareSignature> {
+        let found = self.map.lock().unwrap().get(&key).copied();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    pub fn insert(&self, key: u64, sig: HardwareSignature) {
+        let mut map = self.map.lock().unwrap();
+        if let std::collections::hash_map::Entry::Vacant(e) = map.entry(key)
+        {
+            e.insert(sig);
+            self.dirty.lock().unwrap().push(key);
+        }
+    }
+
+    /// Insert at load time (not marked dirty).
+    pub fn insert_loaded(&self, key: u64, sig: HardwareSignature) {
+        self.map.lock().unwrap().insert(key, sig);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain new entries sorted by key (deterministic append bytes
+    /// regardless of worker scheduling).
+    pub fn take_dirty(&self) -> Vec<(u64, HardwareSignature)> {
+        let mut keys = std::mem::take(&mut *self.dirty.lock().unwrap());
+        keys.sort_unstable();
+        keys.dedup();
+        let map = self.map.lock().unwrap();
+        keys.into_iter()
+            .filter_map(|k| map.get(&k).map(|s| (k, *s)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(x: f64) -> HardwareSignature {
+        HardwareSignature { sm_pct: x, dram_pct: 2.0 * x, l2_pct: 3.0 * x }
+    }
+
+    #[test]
+    fn keys_separate_runs_and_kernels() {
+        let k = profile_key(1, 100);
+        assert_eq!(k, profile_key(1, 100));
+        assert_ne!(k, profile_key(2, 100));
+        assert_ne!(k, profile_key(1, 101));
+    }
+
+    #[test]
+    fn get_insert_counts_hits_and_misses() {
+        let sp = SharedProfiles::new();
+        assert!(sp.get(7).is_none());
+        sp.insert(7, sig(10.0));
+        assert_eq!(sp.get(7), Some(sig(10.0)));
+        assert_eq!(sp.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(sp.misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn dirty_tracking_is_sorted_and_excludes_loaded() {
+        let sp = SharedProfiles::new();
+        sp.insert(9, sig(1.0));
+        sp.insert(3, sig(2.0));
+        sp.insert(9, sig(5.0)); // duplicate key: not re-marked dirty
+        sp.insert_loaded(1, sig(3.0));
+        let dirty = sp.take_dirty();
+        assert_eq!(dirty.iter().map(|&(k, _)| k).collect::<Vec<_>>(),
+                   vec![3, 9]);
+        assert!(sp.take_dirty().is_empty());
+        assert_eq!(sp.len(), 3);
+        // duplicate insert kept the first value (pure-memo contract:
+        // identical keys always carry identical values in practice)
+        assert_eq!(sp.get(9), Some(sig(1.0)));
+    }
+}

@@ -1,0 +1,382 @@
+//! Service-side shared re-clustering scheduler.
+//!
+//! `serve` fans jobs out, but before this module each job ran its
+//! bandit loop fully independently — including re-clustering, the only
+//! remaining super-O(members) step. The [`ReclusterScheduler`] gives
+//! the whole service one worker that *interleaves* that step across
+//! jobs:
+//!
+//! * concurrent recluster requests coalesce into **rounds** (window- or
+//!   size-triggered, like the LLM gateway's batching);
+//! * within a round, each distinct task fingerprint is re-clustered
+//!   **once** — jobs refining the same kernel share the work;
+//! * a fingerprint seen in any earlier round resumes **warm** (Lloyd
+//!   from cached converged centroids: the modeled cheap early-exit
+//!   path) instead of paying a cold k-means++ run.
+//!
+//! Like the rest of [`crate::service`], latencies here are *modeled*
+//! (scaled by [`TIME_SCALE`]): the scheduler measures the pipeline's
+//! shape — coalescing, dedup, warm reuse — not real Lloyd time. The
+//! real-math counterpart is [`crate::sched::centroids::CentroidCache`],
+//! whose pure-memo keying is what makes cross-job sharing safe; this
+//! worker models the wall-clock the sharing saves. Shutdown is
+//! drain-and-error: queued and newly-arriving requests complete with
+//! [`SchedulerClosed`] instead of hanging their submitters.
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::service::{scaled_sleep, TIME_SCALE};
+
+/// Scheduler knobs (modeled seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Cold re-clustering: k-means++ seeding + a full Lloyd run.
+    pub cold_recluster_s: f64,
+    /// Warm resume from cached centroids (early-exit after a step or
+    /// two).
+    pub warm_recluster_s: f64,
+    /// Max requests coalesced into one round.
+    pub max_round: usize,
+    /// Round window (modeled seconds): a partial round is flushed
+    /// after this long.
+    pub window_s: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            cold_recluster_s: 18.0,
+            warm_recluster_s: 2.5,
+            max_round: 64,
+            window_s: 2.0,
+        }
+    }
+}
+
+/// Error returned when the scheduler shuts down before a request is
+/// served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulerClosed;
+
+impl std::fmt::Display for SchedulerClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("recluster scheduler shut down before the request \
+                     completed")
+    }
+}
+
+/// What a served request learns about its round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReclusterGrant {
+    /// This fingerprint's centroids were already cached (warm resume).
+    pub warm: bool,
+    /// Requests coalesced into the round that served this one.
+    pub round_size: usize,
+}
+
+/// Scheduler runtime statistics.
+#[derive(Debug, Default)]
+pub struct SchedulerStats {
+    pub requests: AtomicU64,
+    pub rounds: AtomicU64,
+    /// Requests whose fingerprint resumed from warm centroids.
+    pub warm_hits: AtomicU64,
+    /// Requests that shared a round-mate's identical re-clustering.
+    pub dedup_shares: AtomicU64,
+    pub max_round_seen: AtomicU64,
+    /// Modeled microseconds saved vs every request paying a solo cold
+    /// re-clustering (micro units so a plain atomic suffices).
+    pub saved_model_us: AtomicU64,
+}
+
+struct Pending {
+    fingerprint: u64,
+    done: Arc<(Mutex<Option<Result<ReclusterGrant, SchedulerClosed>>>,
+               Condvar)>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Pending>>,
+    ingress: Condvar,
+    shutdown: AtomicBool,
+    config: SchedulerConfig,
+    stats: SchedulerStats,
+    /// Fingerprints whose converged centroids are cached.
+    warm: Mutex<HashSet<u64>>,
+}
+
+/// The shared scheduler (one worker OS thread).
+pub struct ReclusterScheduler {
+    shared: Arc<Shared>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ReclusterScheduler {
+    pub fn spawn(config: SchedulerConfig) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            ingress: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            config,
+            stats: SchedulerStats::default(),
+            warm: Mutex::new(HashSet::new()),
+        });
+        let s = shared.clone();
+        let worker = std::thread::spawn(move || Self::worker_loop(&s));
+        ReclusterScheduler { shared, worker: Mutex::new(Some(worker)) }
+    }
+
+    fn drain_and_error(s: &Shared) {
+        let drained: Vec<Pending> =
+            s.queue.lock().unwrap().drain(..).collect();
+        for p in drained {
+            let (slot, cv) = &*p.done;
+            *slot.lock().unwrap() = Some(Err(SchedulerClosed));
+            cv.notify_one();
+        }
+        s.ingress.notify_all();
+    }
+
+    fn worker_loop(s: &Shared) {
+        loop {
+            // wait for the head of the next round
+            let mut q = s.queue.lock().unwrap();
+            while q.is_empty() {
+                if s.shutdown.load(Ordering::Acquire) {
+                    drop(q);
+                    Self::drain_and_error(s);
+                    return;
+                }
+                let (guard, _timeout) = s
+                    .ingress
+                    .wait_timeout(q, Duration::from_millis(5))
+                    .unwrap();
+                q = guard;
+            }
+            drop(q);
+            // window: let the round fill (shutdown mid-window drains)
+            let window =
+                Duration::from_secs_f64(s.config.window_s * TIME_SCALE);
+            let deadline = Instant::now() + window;
+            loop {
+                if s.shutdown.load(Ordering::Acquire) {
+                    Self::drain_and_error(s);
+                    return;
+                }
+                let filled =
+                    s.queue.lock().unwrap().len() >= s.config.max_round;
+                if filled || Instant::now() >= deadline {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            // take the round
+            let mut round = Vec::new();
+            {
+                let mut q = s.queue.lock().unwrap();
+                while round.len() < s.config.max_round {
+                    match q.pop_front() {
+                        Some(p) => round.push(p),
+                        None => break,
+                    }
+                }
+            }
+            s.ingress.notify_all();
+            if round.is_empty() {
+                continue;
+            }
+            // interleave: one pass over the round, paying each distinct
+            // fingerprint once (warm when its centroids were already
+            // cached *at round start* — round-mates of a first-time
+            // fingerprint are dedup shares, not warm resumes)
+            let mut grants: Vec<bool> = Vec::with_capacity(round.len());
+            let mut seen_in_round: HashSet<u64> = HashSet::new();
+            let mut cost_s = 0.0;
+            let mut warm_hits = 0u64;
+            let mut dedup = 0u64;
+            {
+                let mut warm = s.warm.lock().unwrap();
+                for p in &round {
+                    // classified against the round-start cache state;
+                    // insertions happen after the pass
+                    let was_warm = warm.contains(&p.fingerprint);
+                    if was_warm {
+                        warm_hits += 1;
+                    }
+                    if seen_in_round.insert(p.fingerprint) {
+                        cost_s += if was_warm {
+                            s.config.warm_recluster_s
+                        } else {
+                            s.config.cold_recluster_s
+                        };
+                    } else {
+                        dedup += 1;
+                    }
+                    grants.push(was_warm);
+                }
+                warm.extend(seen_in_round.iter().copied());
+            }
+            scaled_sleep(cost_s);
+            let n = round.len() as u64;
+            let st = &s.stats;
+            st.requests.fetch_add(n, Ordering::Relaxed);
+            st.rounds.fetch_add(1, Ordering::Relaxed);
+            st.warm_hits.fetch_add(warm_hits, Ordering::Relaxed);
+            st.dedup_shares.fetch_add(dedup, Ordering::Relaxed);
+            st.max_round_seen.fetch_max(n, Ordering::Relaxed);
+            let solo_cost = n as f64 * s.config.cold_recluster_s;
+            let saved_us = ((solo_cost - cost_s) * 1e6).max(0.0) as u64;
+            st.saved_model_us.fetch_add(saved_us, Ordering::Relaxed);
+            let round_size = round.len();
+            for (p, warm) in round.into_iter().zip(grants) {
+                let (slot, cv) = &*p.done;
+                *slot.lock().unwrap() =
+                    Some(Ok(ReclusterGrant { warm, round_size }));
+                cv.notify_one();
+            }
+        }
+    }
+
+    /// Submit a recluster request for `fingerprint` and block until
+    /// the round that serves it completes. Never blocks across
+    /// shutdown.
+    pub fn recluster(&self, fingerprint: u64)
+                     -> Result<ReclusterGrant, SchedulerClosed> {
+        let done = Arc::new((Mutex::new(None), Condvar::new()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            // checked under the queue lock: serialized against the
+            // worker's final drain (see `drain_and_error`)
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                return Err(SchedulerClosed);
+            }
+            q.push_back(Pending { fingerprint, done: done.clone() });
+        }
+        self.shared.ingress.notify_all();
+        let (slot, cv) = &*done;
+        let mut guard = slot.lock().unwrap();
+        while guard.is_none() {
+            guard = cv.wait(guard).unwrap();
+        }
+        guard.take().unwrap()
+    }
+
+    /// Initiate shutdown and join the worker. Idempotent; called by
+    /// `Drop`.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.ingress.notify_all();
+        let handle = self.worker.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        Self::drain_and_error(&self.shared);
+    }
+
+    pub fn stats(&self) -> &SchedulerStats {
+        &self.shared.stats
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.shared.stats.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.shared.stats.rounds.load(Ordering::Relaxed)
+    }
+
+    pub fn warm_hits(&self) -> u64 {
+        self.shared.stats.warm_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn dedup_shares(&self) -> u64 {
+        self.shared.stats.dedup_shares.load(Ordering::Relaxed)
+    }
+
+    pub fn max_round_seen(&self) -> u64 {
+        self.shared.stats.max_round_seen.load(Ordering::Relaxed)
+    }
+
+    pub fn saved_model_s(&self) -> f64 {
+        self.shared.stats.saved_model_us.load(Ordering::Relaxed) as f64
+            * 1e-6
+    }
+}
+
+impl Drop for ReclusterScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            cold_recluster_s: 10.0,
+            warm_recluster_s: 1.0,
+            max_round: 32,
+            window_s: 5.0,
+        }
+    }
+
+    #[test]
+    fn round_dedups_matching_fingerprints() {
+        let sched = Arc::new(ReclusterScheduler::spawn(cfg()));
+        // 8 jobs, only 2 distinct task fingerprints, submitted together
+        let grants: Vec<ReclusterGrant> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let s = sched.clone();
+                    scope.spawn(move || s.recluster(100 + (i % 2)).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(grants.len(), 8);
+        assert_eq!(sched.requests(), 8);
+        // coalescing should need very few rounds; the first round pays
+        // at most 2 cold reclusters for 8 requests
+        assert!(sched.rounds() <= 4, "rounds = {}", sched.rounds());
+        // with 2 distinct fingerprints only 2 requests ever pay cold:
+        // every other request is a round-share or a warm resume
+        assert!(sched.warm_hits() + sched.dedup_shares() >= 6,
+                "warm = {} dedup = {}",
+                sched.warm_hits(), sched.dedup_shares());
+        assert!(sched.saved_model_s() > 0.0);
+    }
+
+    #[test]
+    fn repeated_fingerprint_resumes_warm() {
+        let sched = ReclusterScheduler::spawn(cfg());
+        let first = sched.recluster(42).unwrap();
+        assert!(!first.warm);
+        let second = sched.recluster(42).unwrap();
+        assert!(second.warm);
+        let other = sched.recluster(43).unwrap();
+        assert!(!other.warm);
+        assert_eq!(sched.warm_hits(), 1);
+    }
+
+    #[test]
+    fn shutdown_errors_pending_and_new_requests() {
+        let slow = SchedulerConfig {
+            // enormous window: nothing completes on its own
+            window_s: 1e6,
+            cold_recluster_s: 1e6,
+            ..cfg()
+        };
+        let sched = Arc::new(ReclusterScheduler::spawn(slow));
+        let s2 = sched.clone();
+        let submitter = std::thread::spawn(move || s2.recluster(1));
+        std::thread::sleep(Duration::from_millis(20));
+        sched.shutdown();
+        assert_eq!(submitter.join().unwrap(), Err(SchedulerClosed));
+        assert_eq!(sched.recluster(2), Err(SchedulerClosed));
+    }
+}

@@ -18,7 +18,24 @@
 //!   newly-arriving requests complete with [`GatewayClosed`] instead of
 //!   blocking forever, so no submitter ever hangs on a dying gateway;
 //! * [`OptimizationService`] — drives N concurrent kernel-optimization
-//!   jobs through the gateway.
+//!   jobs through the gateway, a shared re-clustering scheduler, and
+//!   the batched measurement model.
+//!
+//! ## Shared scheduler & batched measurement
+//!
+//! Jobs no longer run fully independent loops: every τ iterations each
+//! job submits its re-clustering — the one remaining super-O(members)
+//! step — to one service-wide
+//! [`crate::sched::scheduler::ReclusterScheduler`], which coalesces
+//! concurrent requests into rounds, pays each distinct task
+//! fingerprint once per round, and resumes warm (cached centroids)
+//! for fingerprints seen before. [`ServiceReport`] carries the
+//! scheduler's round/dedup/warm statistics. The measurement slice uses
+//! [`TimeModel::fused_measure_s`]: a candidate batch measured through
+//! one fused engine call costs the first candidate plus a marginal
+//! slice per extra candidate, mirroring the policy-side
+//! [`crate::engine::EvalEngine::measure_batch`] path
+//! (`serve --batch N`).
 //!
 //! ## Cache-hit fast path
 //!
@@ -37,6 +54,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::sched::scheduler::{ReclusterScheduler, SchedulerConfig};
 use crate::store::TraceStore;
 use crate::util::hash::KeyHasher;
 
@@ -129,9 +147,27 @@ impl TimeModel {
     pub fn batched_breakdown(&self) -> Vec<BreakdownRow> {
         self.rows(self.llm_batched_s, self.batched_iteration_s())
     }
+
+    /// Marginal cost fraction of each extra candidate in a fused
+    /// measurement batch: the batch shares one shape sweep and launch
+    /// discipline, so candidates 2..N pay only the per-candidate slice
+    /// of compile + execute.
+    pub const BATCH_MARGINAL: f64 = 0.35;
+
+    /// Compile + execute wall-clock for `batch` candidates measured
+    /// through one fused engine call. `batch <= 1` is exactly the
+    /// serial `compile_s + exec_s` slice, so the pre-batch service
+    /// timing is unchanged at the default width.
+    pub fn fused_measure_s(&self, batch: usize) -> f64 {
+        let extra = batch.saturating_sub(1) as f64;
+        (self.compile_s + self.exec_s)
+            * (1.0 + Self::BATCH_MARGINAL * extra)
+    }
 }
 
-fn scaled_sleep(model_seconds: f64) {
+/// Sleep for `model_seconds` of modeled time (shared with the
+/// recluster scheduler so the scaling rule lives in one place).
+pub(crate) fn scaled_sleep(model_seconds: f64) {
     std::thread::sleep(Duration::from_secs_f64(
         (model_seconds * TIME_SCALE).max(0.0),
     ));
@@ -390,8 +426,20 @@ pub struct ServiceReport {
     /// store had already recorded their completion (cache-hit fast
     /// path; 0 without a store).
     pub gateway_bypassed: u64,
+    /// Re-clustering requests jobs submitted to the shared scheduler.
+    pub sched_requests: u64,
+    /// Scheduling rounds the requests coalesced into.
+    pub sched_rounds: u64,
+    /// Requests that resumed from warm (previously cached) centroids.
+    pub sched_warm_hits: u64,
+    /// Requests that shared a round-mate's identical re-clustering.
+    pub sched_dedup_shares: u64,
+    /// Modeled seconds the scheduler saved vs every request paying a
+    /// solo cold re-clustering.
+    pub sched_saved_model_s: f64,
     /// Serial-equivalent modeled time (sum over jobs × iterations of the
-    /// serial iteration model).
+    /// serial iteration model, plus the serial compile+exec slice of
+    /// every extra batched candidate).
     pub serial_equivalent_s: f64,
 }
 
@@ -401,10 +449,22 @@ impl ServiceReport {
     }
 }
 
-/// Drives N concurrent optimization jobs through a batched gateway.
+/// Drives N concurrent optimization jobs through a batched gateway and
+/// a shared re-clustering scheduler.
 pub struct OptimizationService {
     pub time_model: TimeModel,
     pub gateway_config: GatewayConfig,
+    pub sched_config: SchedulerConfig,
+    /// Re-clustering period τ: each job submits to the shared
+    /// scheduler when `it > 0 && it % recluster_every == 0`.
+    pub recluster_every: usize,
+    /// Distinct task fingerprints across the job population (models
+    /// many users resubmitting the same hot kernels; jobs map onto
+    /// fingerprints round-robin).
+    pub task_variety: usize,
+    /// Candidates measured per iteration through one fused engine call
+    /// ([`TimeModel::fused_measure_s`]); 1 = the pre-batch service.
+    pub batch: usize,
 }
 
 impl Default for OptimizationService {
@@ -412,6 +472,10 @@ impl Default for OptimizationService {
         OptimizationService {
             time_model: TimeModel::default(),
             gateway_config: GatewayConfig::default(),
+            sched_config: SchedulerConfig::default(),
+            recluster_every: 2,
+            task_variety: 4,
+            batch: 1,
         }
     }
 }
@@ -442,14 +506,31 @@ impl OptimizationService {
                           store: Option<&TraceStore>) -> ServiceReport {
         let gateway: BatchedLlmGateway<usize> =
             BatchedLlmGateway::spawn(self.gateway_config);
+        let scheduler = ReclusterScheduler::spawn(self.sched_config);
         let bypassed = AtomicU64::new(0);
         let tm = self.time_model;
+        let batch = self.batch.max(1);
+        let variety = self.task_variety.max(1);
+        let recluster_every = self.recluster_every.max(1);
         let t0 = Instant::now();
         let job_ids: Vec<usize> = (0..jobs).collect();
         let reports: Vec<JobReport> =
             crate::util::par::spawn_map(&job_ids, |_, &job_id| {
                 let j0 = Instant::now();
+                // the job's task fingerprint: jobs map onto the
+                // service's hot-kernel population round-robin, so
+                // matching fingerprints share scheduler work
+                let task_fp = KeyHasher::new("serve-task")
+                    .u64((job_id % variety) as u64)
+                    .finish();
                 for it in 0..iterations {
+                    // every τ iterations: the super-O(members) step
+                    // goes through the shared scheduler instead of
+                    // running (and paying) per job. A shutdown error
+                    // only means the service is tearing down.
+                    if it > 0 && it % recluster_every == 0 {
+                        let _ = scheduler.recluster(task_fp);
+                    }
                     // keyed by the iteration's content identity alone —
                     // not the grid shape — so a re-run with different
                     // --jobs/--iterations still reuses overlapping work
@@ -474,9 +555,10 @@ impl OptimizationService {
                             }
                         }
                     }
-                    // compile + execute + amortized profiling
+                    // fused batched measurement + amortized profiling
                     scaled_sleep(
-                        tm.compile_s + tm.exec_s + tm.profile_amortized_s,
+                        tm.fused_measure_s(batch)
+                            + tm.profile_amortized_s,
                     );
                 }
                 JobReport {
@@ -493,9 +575,16 @@ impl OptimizationService {
             gateway_batches: gateway.batches(),
             gateway_max_batch: gateway.max_batch_seen(),
             gateway_bypassed: bypassed.load(Ordering::Relaxed),
+            sched_requests: scheduler.requests(),
+            sched_rounds: scheduler.rounds(),
+            sched_warm_hits: scheduler.warm_hits(),
+            sched_dedup_shares: scheduler.dedup_shares(),
+            sched_saved_model_s: scheduler.saved_model_s(),
             serial_equivalent_s: jobs as f64
                 * iterations as f64
-                * tm.serial_iteration_s(),
+                * (tm.serial_iteration_s()
+                    + (batch as f64 - 1.0)
+                        * (tm.compile_s + tm.exec_s)),
         }
     }
 }
@@ -532,6 +621,88 @@ mod tests {
             let sum: f64 = rows.iter().map(|r| r.percent).sum();
             assert!((sum - 100.0).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn breakdown_rows_carry_components_in_canonical_order() {
+        // the Fig.-3 renderers index rows positionally, so the
+        // component order is a contract, not a display detail
+        let tm = TimeModel::default();
+        let expected =
+            ["LLM inference", "Compilation", "Execution", "Profiling"];
+        for rows in [tm.serial_breakdown(), tm.batched_breakdown()] {
+            assert_eq!(rows.len(), expected.len());
+            for (row, name) in rows.iter().zip(expected) {
+                assert_eq!(row.component, name);
+                assert!(row.seconds > 0.0);
+                assert!(row.percent > 0.0);
+            }
+            // non-LLM slices are shared between the two pipelines
+            assert_eq!(rows[1].seconds, tm.compile_s);
+            assert_eq!(rows[2].seconds, tm.exec_s);
+            assert_eq!(rows[3].seconds, tm.profile_amortized_s);
+        }
+        // the LLM slice is the only one that differs
+        assert_eq!(tm.serial_breakdown()[0].seconds,
+                   tm.llm_call_s * tm.calls_per_iter);
+        assert_eq!(tm.batched_breakdown()[0].seconds, tm.llm_batched_s);
+        // each row's percent is consistent with its own total
+        for (rows, total) in [
+            (tm.serial_breakdown(), tm.serial_iteration_s()),
+            (tm.batched_breakdown(), tm.batched_iteration_s()),
+        ] {
+            for row in rows {
+                assert!((row.percent - 100.0 * row.seconds / total).abs()
+                    < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_measure_is_serial_at_one_and_sublinear_after() {
+        let tm = TimeModel::default();
+        let serial = tm.compile_s + tm.exec_s;
+        assert_eq!(tm.fused_measure_s(0), serial);
+        assert_eq!(tm.fused_measure_s(1), serial);
+        for b in 2..=8usize {
+            let fused = tm.fused_measure_s(b);
+            let prev = tm.fused_measure_s(b - 1);
+            assert!(fused > prev, "monotone at {b}");
+            assert!(fused < serial * b as f64, "sublinear at {b}");
+        }
+    }
+
+    #[test]
+    fn shared_scheduler_interleaves_and_dedups_reclusters() {
+        let mut svc = OptimizationService::default();
+        svc.recluster_every = 1; // recluster on every it > 0
+        svc.task_variety = 2;
+        let report = svc.run(6, 3);
+        // it = 1, 2 for each of 6 jobs
+        assert_eq!(report.sched_requests, 12);
+        assert!(report.sched_rounds >= 1);
+        // only the first-ever request per fingerprint pays cold: every
+        // other request is a round-share or a warm resume
+        assert!(
+            report.sched_warm_hits + report.sched_dedup_shares >= 10,
+            "warm = {} dedup = {}",
+            report.sched_warm_hits,
+            report.sched_dedup_shares
+        );
+        assert!(report.sched_saved_model_s > 0.0);
+    }
+
+    #[test]
+    fn batched_service_amortizes_measurement() {
+        let mut fast = OptimizationService::default();
+        fast.batch = 4;
+        let report = fast.run(2, 2);
+        // 4 candidates per iteration: serial equivalent grows by the
+        // extra candidates' compile+exec, wall only by the marginal
+        // fused slice — so batching speedup improves over batch=1
+        let solo = OptimizationService::default().run(2, 2);
+        assert!(report.serial_equivalent_s > solo.serial_equivalent_s);
+        assert_eq!(report.gateway_requests, solo.gateway_requests);
     }
 
     #[test]

@@ -37,12 +37,23 @@
 //! ```text
 //! DIR/kernels.jsonl    measurement cache (append-only, content-addressed)
 //! DIR/proposals.jsonl  LLM-proposal cache (append-only, content-addressed)
+//! DIR/profiles.jsonl   representative NCU signatures (profiler memo)
 //! DIR/service.jsonl    service-job completions (gateway bypass keys)
 //! DIR/trace.jsonl      the trace log (append-only, versioned records)
 //! ```
 //!
-//! All four files tolerate truncated tails and unknown record versions
+//! All five files tolerate truncated tails and unknown record versions
 //! on load ([`crate::util::json::parse_lines_lossy`]).
+//!
+//! `profiles.jsonl` persists the policy's memoized representative
+//! NCU signatures ([`crate::sched::profiles::SharedProfiles`], keyed
+//! by run fingerprint + code hash), so a warm session replays
+//! representative profiling as pure lookups — zero recomputation,
+//! zero simulated NCU cost. The store also owns a session-scoped
+//! in-memory re-clustering memo
+//! ([`crate::sched::centroids::CentroidCache`]); centroids are *not*
+//! persisted (cross-session centroid reuse rides the trace log's
+//! warm-start seeds instead).
 
 pub mod cache;
 pub mod log;
@@ -52,10 +63,13 @@ pub mod wrap;
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::kernel::Measurement;
 use crate::llm::Proposal;
+use crate::profiler::HardwareSignature;
+use crate::sched::centroids::CentroidCache;
+use crate::sched::profiles::SharedProfiles;
 use crate::util::json::{parse_lines_lossy, Json};
 
 use self::cache::ContentCache;
@@ -64,8 +78,37 @@ use self::warm::{TaskWarmStart, WarmIndex};
 
 const KERNELS_FILE: &str = "kernels.jsonl";
 const PROPOSALS_FILE: &str = "proposals.jsonl";
+const PROFILES_FILE: &str = "profiles.jsonl";
 const SERVICE_FILE: &str = "service.jsonl";
 const TRACE_FILE: &str = "trace.jsonl";
+
+/// Serialize one persisted NCU signature as a JSONL value.
+pub(crate) fn profile_record(key: u64, sig: &HardwareSignature) -> Json {
+    Json::obj(vec![
+        ("v", Json::num(cache::CACHE_VERSION)),
+        ("key", hex_u64(key)),
+        ("sm_pct", Json::num(sig.sm_pct)),
+        ("dram_pct", Json::num(sig.dram_pct)),
+        ("l2_pct", Json::num(sig.l2_pct)),
+    ])
+}
+
+/// Decode one persisted NCU signature.
+pub(crate) fn profile_from_record(j: &Json)
+                                  -> Option<(u64, HardwareSignature)> {
+    if j.get("v").and_then(Json::as_f64) != Some(cache::CACHE_VERSION) {
+        return None;
+    }
+    let key = parse_hex_u64(j.get("key"))?;
+    Some((
+        key,
+        HardwareSignature {
+            sm_pct: j.get("sm_pct")?.as_f64()?,
+            dram_pct: j.get("dram_pct")?.as_f64()?,
+            l2_pct: j.get("l2_pct")?.as_f64()?,
+        },
+    ))
+}
 
 /// u64 → zero-padded hex JSON string. Hashes and seeds span the full
 /// u64 range, which exceeds what a JSON number (f64) represents
@@ -141,6 +184,8 @@ impl StoreStats {
 pub struct LoadSummary {
     pub kernels: usize,
     pub proposals: usize,
+    /// Persisted representative NCU signatures.
+    pub profiles: usize,
     pub service: usize,
     /// Cache/service lines skipped (corrupt or unknown version).
     pub skipped: usize,
@@ -154,6 +199,11 @@ pub struct TraceStore {
     kernels: Mutex<ContentCache<Measurement>>,
     proposals: Mutex<ContentCache<Proposal>>,
     service: Mutex<ServiceCache>,
+    /// Representative NCU signatures (persisted; shared with the
+    /// policy through [`crate::sched::SchedContext`]).
+    profiles: Arc<SharedProfiles>,
+    /// Session-scoped re-clustering memo (in-memory only).
+    centroids: Arc<CentroidCache>,
     /// Records appended this session, flushed by [`TraceStore::persist`].
     pending_log: Mutex<Vec<TraceRecord>>,
     warm: Option<WarmIndex>,
@@ -176,6 +226,8 @@ impl TraceStore {
             kernels: Mutex::new(ContentCache::default()),
             proposals: Mutex::new(ContentCache::default()),
             service: Mutex::new(ServiceCache::default()),
+            profiles: Arc::new(SharedProfiles::new()),
+            centroids: Arc::new(CentroidCache::new()),
             pending_log: Mutex::new(Vec::new()),
             warm: None,
             stats: StoreStats::default(),
@@ -225,6 +277,17 @@ impl TraceStore {
                 proposals.insert_loaded(k, v);
             }
             summary.proposals = proposals.len();
+        }
+        {
+            let (entries, skipped) = cache::load_entries(
+                &read(PROFILES_FILE)?,
+                profile_from_record,
+            );
+            summary.skipped += skipped;
+            for (k, sig) in entries {
+                store.profiles.insert_loaded(k, sig);
+            }
+            summary.profiles = store.profiles.len();
         }
         {
             let (values, corrupt) = parse_lines_lossy(&read(SERVICE_FILE)?);
@@ -326,6 +389,21 @@ impl TraceStore {
         self.proposals.lock().unwrap().len()
     }
 
+    pub fn profile_count(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// The persisted NCU-signature cache, shareable with the policy
+    /// through [`crate::sched::SchedContext`].
+    pub fn profiles(&self) -> Arc<SharedProfiles> {
+        self.profiles.clone()
+    }
+
+    /// The session-scoped re-clustering memo (in-memory only).
+    pub fn session_centroids(&self) -> Arc<CentroidCache> {
+        self.centroids.clone()
+    }
+
     // --- persistence ----------------------------------------------------
 
     /// Flush pending trace records and new cache entries, appending to
@@ -372,6 +450,13 @@ impl TraceStore {
         }
         append(PROPOSALS_FILE, proposals_text)?;
 
+        let mut profiles_text = String::new();
+        for (k, sig) in self.profiles.take_dirty() {
+            profiles_text.push_str(&profile_record(k, &sig).dump());
+            profiles_text.push('\n');
+        }
+        append(PROFILES_FILE, profiles_text)?;
+
         let mut service_text = String::new();
         {
             let mut s = self.service.lock().unwrap();
@@ -397,7 +482,7 @@ impl TraceStore {
         format!(
             "measure_sim={} measure_hit={} llm_sim={} llm_hit={} \
              cost_saved_usd={:.4} serial_llm_s_saved={:.1} \
-             kernels={} proposals={}",
+             kernels={} proposals={} profiles={} profile_hit={}",
             s.measure_sims.load(Ordering::Relaxed),
             s.measure_hits.load(Ordering::Relaxed),
             s.llm_sims.load(Ordering::Relaxed),
@@ -406,6 +491,10 @@ impl TraceStore {
             s.saved_serial_llm_s(),
             self.kernel_count(),
             self.proposal_count(),
+            self.profile_count(),
+            self.profiles
+                .hits
+                .load(std::sync::atomic::Ordering::Relaxed),
         )
     }
 }
@@ -467,6 +556,40 @@ mod tests {
         }
         let text =
             std::fs::read_to_string(dir.join(KERNELS_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn profiles_roundtrip_bit_exact_and_reload() {
+        let sig = HardwareSignature {
+            sm_pct: 33.33333333333333,
+            dram_pct: 81.0,
+            l2_pct: 12.5,
+        };
+        let rec = profile_record(0xfeed_face_0000_0001, &sig);
+        let parsed = crate::util::json::parse(&rec.dump()).unwrap();
+        let (key, back) = profile_from_record(&parsed).unwrap();
+        assert_eq!(key, 0xfeed_face_0000_0001);
+        assert_eq!(back.sm_pct.to_bits(), sig.sm_pct.to_bits());
+        assert_eq!(back.dram_pct.to_bits(), sig.dram_pct.to_bits());
+        assert_eq!(back.l2_pct.to_bits(), sig.l2_pct.to_bits());
+
+        let dir = tmp_dir("profiles");
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            store.profiles().insert(7, sig);
+            store.persist().unwrap();
+        }
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            assert_eq!(store.loaded.profiles, 1);
+            assert_eq!(store.profiles().get(7), Some(sig));
+            // reloaded entries are not re-appended
+            store.persist().unwrap();
+        }
+        let text =
+            std::fs::read_to_string(dir.join(PROFILES_FILE)).unwrap();
         assert_eq!(text.lines().count(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -67,6 +67,53 @@ impl<E: EvalEngine> EvalEngine for CachedEngine<E> {
         self.store.insert_measurement(key, &m);
         m
     }
+
+    /// Batch-aware cache path: all keys are probed first, and only the
+    /// misses go through the wrapped engine — in one fused
+    /// `measure_batch` call — so a warm run stays pure lookups even at
+    /// `--batch N` and a cold run still amortizes the shape loop
+    /// across its misses.
+    fn measure_batch(&self, task: &TaskSpec, cfgs: &[KernelConfig],
+                     rngs: &mut [Rng]) -> Vec<Measurement> {
+        debug_assert_eq!(cfgs.len(), rngs.len());
+        let keys: Vec<u64> = cfgs
+            .iter()
+            .zip(rngs.iter())
+            .map(|(cfg, rng)| {
+                measurement_key(task, cfg, self.device_fp, rng)
+            })
+            .collect();
+        let mut out: Vec<Option<Measurement>> =
+            keys.iter().map(|&k| self.store.lookup_measurement(k)).collect();
+        let hits = out.iter().filter(|m| m.is_some()).count() as u64;
+        if hits > 0 {
+            self.store.stats.measure_hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        let miss_idx: Vec<usize> = out
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        if !miss_idx.is_empty() {
+            let miss_cfgs: Vec<KernelConfig> =
+                miss_idx.iter().map(|&i| cfgs[i]).collect();
+            // `measure` only ever *splits* from the caller's stream, so
+            // cloning the miss streams preserves semantics exactly
+            let mut miss_rngs: Vec<Rng> =
+                miss_idx.iter().map(|&i| rngs[i].clone()).collect();
+            let measured =
+                self.inner.measure_batch(task, &miss_cfgs, &mut miss_rngs);
+            let n = miss_idx.len() as u64;
+            self.store.stats.measure_sims.fetch_add(n, Ordering::Relaxed);
+            self.local_sims.fetch_add(n, Ordering::Relaxed);
+            for (&i, m) in miss_idx.iter().zip(measured) {
+                self.store.insert_measurement(keys[i], &m);
+                out[i] = Some(m);
+            }
+        }
+        out.into_iter().map(|m| m.expect("filled above")).collect()
+    }
 }
 
 /// [`LlmBackend`] decorator: content-addressed proposal cache.
@@ -153,6 +200,54 @@ mod tests {
             engine.measure(&suite.tasks[0], &cfg, &mut Rng::new(1).split("m", 1));
         assert_eq!(store.stats.measure_sims.load(Ordering::Relaxed), 2);
         assert!(other.total_latency_s > 0.0);
+    }
+
+    #[test]
+    fn measure_batch_probes_cache_and_fuses_misses() {
+        let suite = Suite::full(1);
+        let store = Arc::new(TraceStore::in_memory());
+        let engine =
+            CachedEngine::new(SimEngine::new(Device::H20), store.clone());
+        let task = &suite.tasks[3];
+        let cfgs = [KernelConfig::naive(), {
+            let mut c = KernelConfig::naive();
+            c.fusion = 1;
+            c
+        }];
+        let mk_rngs = || -> Vec<Rng> {
+            (0..2u64).map(|i| Rng::new(4).split("m", i)).collect()
+        };
+        // cold: both slots simulated through one fused inner call
+        let cold = engine.measure_batch(task, &cfgs, &mut mk_rngs());
+        assert_eq!(store.stats.measure_sims.load(Ordering::Relaxed), 2);
+        assert_eq!(store.stats.measure_hits.load(Ordering::Relaxed), 0);
+        // warm: pure lookups, bit-identical results
+        let warm = engine.measure_batch(task, &cfgs, &mut mk_rngs());
+        assert_eq!(store.stats.measure_sims.load(Ordering::Relaxed), 2);
+        assert_eq!(store.stats.measure_hits.load(Ordering::Relaxed), 2);
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.total_latency_s.to_bits(),
+                       w.total_latency_s.to_bits());
+        }
+        // partial: one cached slot + one new slot → exactly one sim
+        let cfgs3 = [cfgs[0], cfgs[1], {
+            let mut c = KernelConfig::naive();
+            c.vector = 2;
+            c
+        }];
+        let mut rngs3: Vec<Rng> =
+            (0..3u64).map(|i| Rng::new(4).split("m", i)).collect();
+        let mixed = engine.measure_batch(task, &cfgs3, &mut rngs3);
+        assert_eq!(store.stats.measure_sims.load(Ordering::Relaxed), 3);
+        assert_eq!(store.stats.measure_hits.load(Ordering::Relaxed), 4);
+        assert_eq!(mixed[0].total_latency_s.to_bits(),
+                   cold[0].total_latency_s.to_bits());
+        // batch results match what standalone measure would produce
+        let solo = engine.measure(
+            task, &cfgs3[2], &mut Rng::new(4).split("m", 2),
+        );
+        assert_eq!(mixed[2].total_latency_s.to_bits(),
+                   solo.total_latency_s.to_bits());
     }
 
     #[test]

@@ -1,0 +1,706 @@
+//! Cross-layer determinism & regression suite for the batched
+//! measurement scheduler ([`kernelband::sched`]).
+//!
+//! The heart of this file is [`legacy_optimize_warm`]: a **frozen
+//! transcription of the pre-batch `KernelBand::optimize_warm` body**
+//! (the single-candidate loop as it shipped before `optimize_sched`
+//! existed — branchy UCB scan, per-candidate `measure`, no admission
+//! bounds, no shared caches). It is the executable reference for the
+//! batch-1 equivalence contract: `optimize_sched` with the default
+//! context must reproduce it **bit for bit** — every candidate
+//! measurement, every reward, every RNG-dependent pick — for every
+//! policy mode, with and without warm-start. Do not "modernize" this
+//! function; its whole value is that it does not move.
+//!
+//! On top of that the suite locks:
+//! * batch = N determinism across `--threads` and across store
+//!   cold/warm runs (batch-aware cache lookups bypass everything);
+//! * the shared re-clustering memo's interleaving-invariance (any job
+//!   order, any parallelism → bit-identical per-job traces);
+//! * zero representative-profiling recomputation on warm replay
+//!   (profiler cache ↔ store integration);
+//! * masked max-reduce UCB ≡ the branchy reference on 1000-candidate
+//!   frontiers.
+
+use std::sync::Arc;
+
+use kernelband::bandit::{softmax_kernel_pick_in_place, ArmStats,
+                         MaskedUcb, RewardRecord};
+use kernelband::cluster::{ClusterBackend, Clustering, RustKmeans};
+use kernelband::engine::{EvalEngine, SimEngine};
+use kernelband::eval::runner::experiment_json;
+use kernelband::eval::{CellSpec, ExperimentRunner, Method};
+use kernelband::features::{phi, Phi};
+use kernelband::gpu_model::Device;
+use kernelband::kernel::{Candidate, Origin};
+use kernelband::llm::{LlmBackend, LlmProfile, PromptMode,
+                      ProposalRequest, SurrogateLlm};
+use kernelband::policy::frontier::{nearest_centroid, ClusterState,
+                                   Frontier};
+use kernelband::policy::{IterationRecord, KernelBand, PolicyConfig,
+                         PolicyMode, Trace};
+use kernelband::profiler::{HardwareSignature, Profiler};
+use kernelband::rng::Rng;
+use kernelband::sched::centroids::CentroidCache;
+use kernelband::sched::SchedContext;
+use kernelband::store::warm::TaskWarmStart;
+use kernelband::store::TraceStore;
+use kernelband::strategy::{Strategy, NUM_STRATEGIES};
+use kernelband::util::par::spawn_map;
+use kernelband::verify::verify_outcome;
+use kernelband::workload::{Suite, TaskSpec};
+
+// ---------------------------------------------------------------------------
+// the frozen pre-batch reference loop
+// ---------------------------------------------------------------------------
+
+/// The pre-batch `KernelBand::optimize_warm` body, transcribed
+/// verbatim at the moment the batched scheduler landed (only
+/// `self.config/ucb/kmeans` became parameters, and the two
+/// later-added `IterationRecord` batch fields take their batch-1
+/// values). Frozen: this is what "bit-identical to the pre-batch
+/// path" *means*.
+#[allow(clippy::too_many_lines)]
+fn legacy_optimize_warm<E: EvalEngine, L: LlmBackend>(
+    cfg: &PolicyConfig,
+    ucb: &MaskedUcb,
+    kmeans: &RustKmeans,
+    task: &TaskSpec,
+    engine: &E,
+    llm: &L,
+    root: &Rng,
+    warm: Option<&TaskWarmStart>,
+) -> Trace {
+    let rng = root.split("kernelband", task.id as u64);
+    let freeform = matches!(
+        cfg.mode,
+        PolicyMode::NoStrategySet | PolicyMode::NoStrategyRawProfiling
+    );
+
+    // line 1: P ← {k0}
+    let naive_cfg = task.naive_config();
+    let naive_meas = engine.measure(task, &naive_cfg, &mut rng.split("m", 0));
+    let naive_latency_s = naive_meas.total_latency_s;
+    let mut front = Frontier::new();
+    front.push(phi(&naive_meas, naive_latency_s), &naive_meas, 0);
+    let mut candidates = vec![Candidate {
+        id: 0,
+        config: naive_cfg,
+        origin: Origin::Naive,
+        measurement: naive_meas,
+        born_at: 0,
+    }];
+
+    // lines 1–3: single initial cluster, optimistic arms, open masks
+    let mut clustering = Clustering {
+        assign: vec![0],
+        centroids: vec![front.phis[0]],
+        representatives: vec![0],
+    };
+    let mut state = ClusterState::new(cfg.theta_sat);
+    state.rebuild(&clustering, vec![None]);
+    let mut stats = ArmStats::new(1);
+    let mut history: Vec<RewardRecord> = Vec::new();
+    let mut profiler = Profiler::new();
+    let mut records: Vec<IterationRecord> = Vec::new();
+    let mut best_id = 0usize;
+    let mut pick_pool: Vec<usize> = Vec::new();
+    let mut pick_w: Vec<f64> = Vec::new();
+    let mut prev_centroids: Option<Vec<Phi>> = None;
+
+    let mut warm_centroids: Option<Vec<Phi>> = None;
+    if let Some(w) = warm {
+        if !freeform {
+            for &(s, r) in &w.rewards {
+                stats.update(0, s, r);
+                history.push(RewardRecord { kernel: 0, strategy: s, reward: r });
+            }
+            if w.centroids.len() == cfg.clusters {
+                warm_centroids = Some(w.centroids.clone());
+            }
+        }
+    }
+
+    for t in 1..=cfg.iterations {
+        let may_cluster = !freeform
+            && t % cfg.recluster_every == 0
+            && candidates.len() >= 2 * cfg.clusters;
+        if may_cluster {
+            let use_warm = warm_centroids
+                .as_ref()
+                .map_or(false, |init| init.len() <= front.len());
+            clustering = if use_warm {
+                let init = warm_centroids.take().expect("checked above");
+                kmeans.cluster_seeded(&front.phis, &init)
+            } else if let Some(init) = prev_centroids.take() {
+                kmeans.cluster_seeded(&front.phis, &init)
+            } else {
+                let mut crng = rng.split("cluster", t as u64);
+                kmeans.cluster(&front.phis, cfg.clusters, &mut crng)
+            };
+            prev_centroids = Some(clustering.centroids.clone());
+            let k = clustering.centroids.len();
+            stats = if cfg.reset_arms_on_recluster {
+                ArmStats::new(k)
+            } else {
+                ArmStats::reseed(k, &history, &clustering.assign)
+            };
+            let mut cluster_sigs: Vec<Option<HardwareSignature>> =
+                vec![None; k];
+            if cfg.mode != PolicyMode::NoProfiling {
+                for (ci, &rep) in
+                    clustering.representatives.iter().enumerate()
+                {
+                    if rep != usize::MAX {
+                        let cand = &candidates[rep];
+                        cluster_sigs[ci] = Some(profiler.profile(
+                            cand.config.code_hash(),
+                            &cand.measurement.counters,
+                        ));
+                    }
+                }
+            }
+            state.rebuild(&clustering, cluster_sigs);
+        }
+
+        let (cluster_id, strategy, prompt_mode) = match cfg.mode {
+            PolicyMode::Full
+            | PolicyMode::NoClustering
+            | PolicyMode::NoProfiling => {
+                let (ci, s) = ucb
+                    .select(&stats, t, state.mask())
+                    .or_else(|| ucb.select(&stats, t, state.nonempty()))
+                    .expect("frontier is non-empty");
+                (ci, Some(s), PromptMode::Strategy(s))
+            }
+            PolicyMode::LlmStrategySelection => {
+                let s =
+                    llm.select_strategy(task, &mut rng.split("sel", t as u64));
+                pick_pool.clear();
+                pick_pool.extend(
+                    (0..state.clusters())
+                        .filter(|&ci| !state.members(ci).is_empty()),
+                );
+                let pick = rng.split("cl", t as u64)
+                    .below(pick_pool.len() as u64) as usize;
+                (pick_pool[pick], Some(s), PromptMode::Strategy(s))
+            }
+            PolicyMode::NoStrategySet => (0, None, PromptMode::FreeForm),
+            PolicyMode::NoStrategyRawProfiling => {
+                (0, None, PromptMode::RawProfiling(front.sigs[best_id]))
+            }
+        };
+
+        let parent_idx = if freeform {
+            best_id
+        } else {
+            let members = state.members(cluster_id);
+            debug_assert!(!members.is_empty());
+            let best_t = front.latencies[best_id];
+            pick_pool.clear();
+            pick_pool.extend(members.iter().copied().filter(|&m| {
+                front.latencies[m] <= cfg.prune_factor * best_t
+            }));
+            let pool: &[usize] =
+                if pick_pool.is_empty() { members } else { &pick_pool };
+            if cfg.mode == PolicyMode::NoProfiling {
+                *pool.iter().max_by_key(|&&m| front.born_at[m]).unwrap()
+            } else {
+                let s = strategy.expect("strategy modes only");
+                pick_w.clear();
+                pick_w.extend(pool.iter().map(|&m| {
+                    front.sigs[m].headroom(s, cfg.theta_sat)
+                }));
+                let pick = softmax_kernel_pick_in_place(
+                    &mut pick_w,
+                    &mut rng.split("pick", t as u64),
+                );
+                pool[pick]
+            }
+        };
+
+        let parent_cfg = candidates[parent_idx].config;
+        let req = ProposalRequest {
+            task,
+            parent: &parent_cfg,
+            mode: prompt_mode,
+            sim: engine.gpu(),
+            iterative: true,
+        };
+        let proposal = llm.propose(&req, &mut rng.split("gen", t as u64));
+        let verdict = verify_outcome(proposal.outcome);
+
+        let mut reward = 0.0;
+        let mut accepted = None;
+        if verdict.passed() {
+            let meas = engine.measure(
+                task,
+                &proposal.config,
+                &mut rng.split("m", t as u64),
+            );
+            let parent_t = front.latencies[parent_idx];
+            reward = ((parent_t - meas.total_latency_s) / parent_t)
+                .clamp(0.0, 1.0);
+            let id = candidates.len();
+            let p = phi(&meas, naive_latency_s);
+            let nearest = nearest_centroid(&p, &clustering.centroids);
+            front.push(p, &meas, t);
+            clustering.assign.push(nearest);
+            state.insert(id, nearest);
+            if meas.total_latency_s < front.latencies[best_id] {
+                best_id = id;
+            }
+            accepted = Some(id);
+            candidates.push(Candidate {
+                id,
+                config: proposal.config,
+                origin: Origin::Llm {
+                    parent: parent_idx,
+                    strategy: strategy.unwrap_or(Strategy::Reordering),
+                },
+                measurement: meas,
+                born_at: t,
+            });
+        }
+
+        if let Some(s) = strategy {
+            stats.update(cluster_id, s, reward);
+            history.push(RewardRecord {
+                kernel: parent_idx,
+                strategy: s,
+                reward,
+            });
+        }
+
+        let best_speedup_so_far = if candidates.len() > 1 {
+            naive_latency_s
+                / candidates[best_id].measurement.total_latency_s
+        } else {
+            0.0
+        };
+        records.push(IterationRecord {
+            t,
+            cluster: cluster_id,
+            strategy,
+            parent: parent_idx,
+            verdict,
+            reward,
+            accepted,
+            cost_usd: proposal.cost_usd,
+            llm_serial_s: proposal.latency_s,
+            best_speedup_so_far,
+            batch_accepted: Vec::new(),
+            batch_pruned: 0,
+        });
+    }
+
+    Trace {
+        task_id: task.id,
+        task_name: task.name.clone(),
+        difficulty: task.difficulty,
+        candidates,
+        records,
+        best_id,
+        naive_latency_s,
+        profile_cost_s: profiler.total_cost_s,
+        profile_runs: profiler.misses,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn assert_traces_bit_equal(a: &Trace, b: &Trace, ctx: &str) {
+    assert_eq!(a.task_id, b.task_id, "{ctx}: task_id");
+    assert_eq!(a.best_id, b.best_id, "{ctx}: best_id");
+    assert_eq!(a.naive_latency_s.to_bits(), b.naive_latency_s.to_bits(),
+               "{ctx}: naive latency");
+    assert_eq!(a.profile_runs, b.profile_runs, "{ctx}: profile_runs");
+    assert_eq!(a.profile_cost_s.to_bits(), b.profile_cost_s.to_bits(),
+               "{ctx}: profile cost");
+    assert_eq!(a.candidates.len(), b.candidates.len(),
+               "{ctx}: candidate count");
+    for (i, (ca, cb)) in a.candidates.iter().zip(&b.candidates).enumerate()
+    {
+        assert_eq!(ca.config, cb.config, "{ctx}: candidate {i} config");
+        assert_eq!(ca.origin, cb.origin, "{ctx}: candidate {i} origin");
+        assert_eq!(ca.born_at, cb.born_at, "{ctx}: candidate {i} born_at");
+        assert_eq!(
+            ca.measurement.total_latency_s.to_bits(),
+            cb.measurement.total_latency_s.to_bits(),
+            "{ctx}: candidate {i} latency"
+        );
+        assert_eq!(ca.measurement.per_shape_s, cb.measurement.per_shape_s,
+                   "{ctx}: candidate {i} shapes");
+        assert_eq!(
+            ca.measurement.counters.sm_pct.to_bits(),
+            cb.measurement.counters.sm_pct.to_bits(),
+            "{ctx}: candidate {i} sm"
+        );
+        assert_eq!(
+            ca.measurement.counters.dram_pct.to_bits(),
+            cb.measurement.counters.dram_pct.to_bits(),
+            "{ctx}: candidate {i} dram"
+        );
+        assert_eq!(
+            ca.measurement.counters.l2_pct.to_bits(),
+            cb.measurement.counters.l2_pct.to_bits(),
+            "{ctx}: candidate {i} l2"
+        );
+    }
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(ra.t, rb.t, "{ctx}: record {i} t");
+        assert_eq!(ra.cluster, rb.cluster, "{ctx}: record {i} cluster");
+        assert_eq!(ra.strategy, rb.strategy, "{ctx}: record {i} strategy");
+        assert_eq!(ra.parent, rb.parent, "{ctx}: record {i} parent");
+        assert_eq!(ra.verdict, rb.verdict, "{ctx}: record {i} verdict");
+        assert_eq!(ra.accepted, rb.accepted, "{ctx}: record {i} accepted");
+        assert_eq!(ra.reward.to_bits(), rb.reward.to_bits(),
+                   "{ctx}: record {i} reward");
+        assert_eq!(ra.cost_usd.to_bits(), rb.cost_usd.to_bits(),
+                   "{ctx}: record {i} cost");
+        assert_eq!(ra.llm_serial_s.to_bits(), rb.llm_serial_s.to_bits(),
+                   "{ctx}: record {i} llm latency");
+        assert_eq!(
+            ra.best_speedup_so_far.to_bits(),
+            rb.best_speedup_so_far.to_bits(),
+            "{ctx}: record {i} best speedup"
+        );
+        assert_eq!(ra.batch_accepted, rb.batch_accepted,
+                   "{ctx}: record {i} batch_accepted");
+        assert_eq!(ra.batch_pruned, rb.batch_pruned,
+                   "{ctx}: record {i} batch_pruned");
+    }
+}
+
+fn tiny_suite() -> Suite {
+    let full = Suite::full(kernelband::eval::EXPERIMENT_SEED);
+    Suite { tasks: full.tasks.into_iter().step_by(31).collect() }
+}
+
+// ---------------------------------------------------------------------------
+// batch = 1 ≡ the frozen legacy loop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batch1_is_bit_identical_to_the_frozen_legacy_loop() {
+    let suite = Suite::full(1);
+    let engine = SimEngine::new(Device::H20);
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    let modes = [
+        (PolicyMode::Full, 40usize),
+        (PolicyMode::Full, 25),
+        (PolicyMode::NoClustering, 25),
+        (PolicyMode::NoProfiling, 40),
+        (PolicyMode::LlmStrategySelection, 25),
+        (PolicyMode::NoStrategySet, 20),
+        (PolicyMode::NoStrategyRawProfiling, 20),
+    ];
+    for (mi, &(mode, iters)) in modes.iter().enumerate() {
+        for (ti, task) in suite.tasks.iter().step_by(47).enumerate() {
+            let mut cfg = PolicyConfig::with_mode(mode);
+            cfg.iterations = iters;
+            let root = Rng::new(1000 + mi as u64 * 31 + ti as u64);
+            let band = KernelBand::new(cfg.clone());
+            let legacy = legacy_optimize_warm(
+                &cfg, &band.ucb, &band.kmeans, task, &engine, &llm,
+                &root, None,
+            );
+            let batched = band.optimize_sched(
+                task, &engine, &llm, &root, None,
+                &SchedContext::default(),
+            );
+            assert_traces_bit_equal(
+                &legacy, &batched,
+                &format!("{mode:?} task {}", task.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn batch1_matches_legacy_under_warm_start() {
+    let suite = Suite::full(1);
+    let engine = SimEngine::new(Device::H20);
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    let task = &suite.tasks[4];
+    // a warm state with both reward priors and fitted centroid seeds
+    let mut rewards = Vec::new();
+    let mut r = Rng::new(77);
+    for i in 0..40 {
+        rewards.push((
+            Strategy::from_index(i % NUM_STRATEGIES),
+            r.uniform(),
+        ));
+    }
+    let centroid = |x: f64| -> Phi { [x; 5] };
+    let warm = TaskWarmStart {
+        rewards,
+        centroids: vec![centroid(0.2), centroid(0.5), centroid(0.8)],
+        best_runtime_s: 1.0e-3,
+        steps: 40,
+    };
+    let mut cfg = PolicyConfig::default();
+    cfg.iterations = 40;
+    let band = KernelBand::new(cfg.clone());
+    let root = Rng::new(9);
+    let legacy = legacy_optimize_warm(
+        &cfg, &band.ucb, &band.kmeans, task, &engine, &llm, &root,
+        Some(&warm),
+    );
+    let batched = band.optimize_sched(
+        task, &engine, &llm, &root, Some(&warm),
+        &SchedContext::default(),
+    );
+    assert_traces_bit_equal(&legacy, &batched, "warm-start");
+}
+
+// ---------------------------------------------------------------------------
+// batch = N: determinism across threads + store cold/warm bypass
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batch_n_artifacts_are_thread_invariant() {
+    let suite = tiny_suite();
+    let cells = vec![
+        CellSpec::new(
+            Method::KernelBand(PolicyMode::Full, 3),
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            12,
+            7,
+        ),
+        CellSpec::new(
+            Method::KernelBand(PolicyMode::Full, 2),
+            Device::A100,
+            LlmProfile::Gpt5,
+            12,
+            7,
+        ),
+    ];
+    let t1 = ExperimentRunner::new(1).with_batch(4).run(&suite, &cells);
+    let t8 = ExperimentRunner::new(8).with_batch(4).run(&suite, &cells);
+    assert_eq!(
+        experiment_json("prop", 12, 7, &t1).dump(),
+        experiment_json("prop", 12, 7, &t8).dump()
+    );
+}
+
+#[test]
+fn batch_n_warm_store_run_bypasses_everything_byte_identically() {
+    let suite = tiny_suite();
+    let store = Arc::new(TraceStore::in_memory());
+    let cells = vec![CellSpec::new(
+        Method::KernelBand(PolicyMode::Full, 3),
+        Device::H20,
+        LlmProfile::DeepSeekV32,
+        12,
+        5,
+    )];
+    let runner = ExperimentRunner::new(2)
+        .with_session(Some(store.clone()))
+        .with_batch(3);
+    let cold = runner.run(&suite, &cells);
+    let sims_after_cold = store
+        .stats
+        .measure_sims
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let llm_after_cold = store
+        .stats
+        .llm_sims
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(sims_after_cold > 0);
+    let warm = runner.run(&suite, &cells);
+    // warm: zero new simulated measurements, zero LLM round-trips —
+    // the batch-aware cache lookups bypass the fused path entirely
+    assert_eq!(
+        store.stats.measure_sims
+            .load(std::sync::atomic::Ordering::Relaxed),
+        sims_after_cold
+    );
+    assert_eq!(
+        store.stats.llm_sims.load(std::sync::atomic::Ordering::Relaxed),
+        llm_after_cold
+    );
+    assert_eq!(
+        experiment_json("prop", 12, 5, &cold).dump(),
+        experiment_json("prop", 12, 5, &warm).dump()
+    );
+    // and the store-attached batched run matches the storeless one
+    let plain = ExperimentRunner::new(2).with_batch(3).run(&suite, &cells);
+    assert_eq!(
+        experiment_json("prop", 12, 5, &plain).dump(),
+        experiment_json("prop", 12, 5, &cold).dump()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// shared-scheduler memo: job interleaving never changes job results
+// ---------------------------------------------------------------------------
+
+#[test]
+fn centroid_memo_is_interleaving_invariant() {
+    let suite = Suite::full(1);
+    let engine = SimEngine::new(Device::H20);
+    let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+    // a job mix with *matching fingerprints* (duplicated tasks), the
+    // case the shared memo exists for
+    let job_tasks = [4usize, 7, 4, 7, 4, 11];
+    let mut cfg = PolicyConfig::default();
+    cfg.iterations = 40;
+
+    let solo: Vec<Trace> = job_tasks
+        .iter()
+        .map(|&ti| {
+            KernelBand::new(cfg.clone()).optimize_sched(
+                &suite.tasks[ti],
+                &engine,
+                &llm,
+                &Rng::new(3),
+                None,
+                &SchedContext::default(),
+            )
+        })
+        .collect();
+
+    let run_with_cache = |order: &[usize]| -> Vec<(usize, Trace)> {
+        let cache = Arc::new(CentroidCache::new());
+        let ctx = SchedContext {
+            batch: 1,
+            centroids: Some(cache.clone()),
+            profiles: None,
+        };
+        let out: Vec<(usize, Trace)> = order
+            .iter()
+            .map(|&j| {
+                let tr = KernelBand::new(cfg.clone()).optimize_sched(
+                    &suite.tasks[job_tasks[j]],
+                    &engine,
+                    &llm,
+                    &Rng::new(3),
+                    None,
+                    &ctx,
+                );
+                (j, tr)
+            })
+            .collect();
+        // duplicated jobs actually exercise the memo
+        assert!(cache.hits() > 0, "memo never hit");
+        out
+    };
+
+    for order in [
+        vec![0usize, 1, 2, 3, 4, 5],
+        vec![5, 4, 3, 2, 1, 0],
+        vec![2, 0, 4, 1, 5, 3],
+    ] {
+        for (j, tr) in run_with_cache(&order) {
+            assert_traces_bit_equal(
+                &solo[j], &tr,
+                &format!("order {order:?} job {j}"),
+            );
+        }
+    }
+
+    // and under real parallel interleaving
+    let cache = Arc::new(CentroidCache::new());
+    let ctx = SchedContext {
+        batch: 1,
+        centroids: Some(cache),
+        profiles: None,
+    };
+    let jobs: Vec<usize> = (0..job_tasks.len()).collect();
+    let parallel: Vec<Trace> = spawn_map(&jobs, |_, &j| {
+        KernelBand::new(cfg.clone()).optimize_sched(
+            &suite.tasks[job_tasks[j]],
+            &engine,
+            &llm,
+            &Rng::new(3),
+            None,
+            &ctx,
+        )
+    });
+    for (j, tr) in parallel.iter().enumerate() {
+        assert_traces_bit_equal(&solo[j], tr, &format!("parallel job {j}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// profiler cache ↔ store: warm replay never re-profiles
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_session_skips_representative_profiling_entirely() {
+    let suite = tiny_suite();
+    let store = Arc::new(TraceStore::in_memory());
+    let cells = vec![CellSpec::new(
+        Method::KernelBand(PolicyMode::Full, 3),
+        Device::H20,
+        LlmProfile::DeepSeekV32,
+        40,
+        3,
+    )];
+    let runner =
+        ExperimentRunner::new(2).with_session(Some(store.clone()));
+    let cold = runner.run(&suite, &cells);
+    let cold_profiled: u64 =
+        cold[0].traces.iter().map(|t| t.profile_runs).sum();
+    assert!(cold_profiled > 0, "cold run never profiled — test inert");
+    assert!(store.profile_count() > 0);
+
+    let warm = runner.run(&suite, &cells);
+    let warm_profiled: u64 =
+        warm[0].traces.iter().map(|t| t.profile_runs).sum();
+    assert_eq!(warm_profiled, 0,
+               "warm replay recomputed representative profiles");
+    for t in &warm[0].traces {
+        assert_eq!(t.profile_cost_s, 0.0);
+    }
+    // identical results regardless
+    assert_eq!(
+        experiment_json("prop", 40, 3, &cold).dump(),
+        experiment_json("prop", 40, 3, &warm).dump()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// UCB masked max-reduce ≡ branchy reference at frontier scale
+// ---------------------------------------------------------------------------
+
+#[test]
+fn masked_reduce_matches_branchy_reference_on_1000_candidate_frontier() {
+    // K grows with frontier size: ~1000 candidates / 6 strategies →
+    // 170 clusters → 1020 arms, the regime the flattening targets
+    let k = 170usize;
+    let ucb = MaskedUcb::default();
+    let mut rng = Rng::new(2026);
+    for trial in 0..50 {
+        let mut stats = ArmStats::new(k);
+        for _ in 0..500 {
+            let c = rng.below(k as u64) as usize;
+            let s = Strategy::from_index(
+                rng.below(NUM_STRATEGIES as u64) as usize,
+            );
+            stats.update(c, s, rng.uniform());
+        }
+        let mask: Vec<bool> = (0..k * NUM_STRATEGIES)
+            .map(|_| rng.chance(0.8))
+            .collect();
+        let t = 1 + trial * 37;
+        assert_eq!(
+            ucb.select(&stats, t, &mask),
+            ucb.select_masked_reduce(&stats, t, &mask),
+            "trial {trial}"
+        );
+        // the all-open and all-closed extremes
+        let open = vec![true; k * NUM_STRATEGIES];
+        assert_eq!(
+            ucb.select(&stats, t, &open),
+            ucb.select_masked_reduce(&stats, t, &open)
+        );
+        let closed = vec![false; k * NUM_STRATEGIES];
+        assert_eq!(ucb.select_masked_reduce(&stats, t, &closed), None);
+    }
+}

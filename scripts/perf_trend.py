@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Diff fresh PERF_*.json bench artifacts against committed baselines.
+
+Usage: perf_trend.py BASELINE_DIR CURRENT_DIR [--threshold PCT]
+
+For every PERF_<suite>.json in CURRENT_DIR, looks up the committed
+snapshot of the same name in BASELINE_DIR and prints a Markdown
+regression table (entry, baseline items/sec, current items/sec, delta)
+plus the suites' derived speedup fields. Entries regressing more than
+--threshold percent (default 25) are flagged.
+
+Shared-runner timings are noisy, so this is a *trend* report, not a
+gate: the script always exits 0 and the CI step that runs it is
+non-blocking. A baseline file carrying "pending": true (no numbers
+captured yet) switches the suite to record mode: current numbers are
+printed with a refresh hint instead of a diff.
+
+Refreshing a baseline: download the `perf-json` artifact from a CI
+perf-smoke run on main and copy its PERF_<suite>.json over
+perf/baselines/PERF_<suite>.json (drop the "pending" flag if present).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+
+def entry_rates(doc):
+    """name -> items_per_sec for every entry that reports throughput."""
+    rates = {}
+    for e in doc.get("entries", []):
+        if "items_per_sec" in e:
+            rates[e["name"]] = float(e["items_per_sec"])
+    return rates
+
+
+def derived_fields(doc):
+    """Top-level numeric fields beyond the schema boilerplate."""
+    skip = {"schema_version", "entries", "suite", "pending", "note"}
+    return {
+        k: float(v)
+        for k, v in doc.items()
+        if k not in skip and isinstance(v, (int, float))
+    }
+
+
+def fmt_rate(v):
+    return f"{v:,.1f}"
+
+
+def report_suite(name, baseline, current, threshold):
+    print(f"### {name}")
+    if baseline is None:
+        print("_No committed baseline — recording current numbers._")
+        print()
+        record(current)
+        return
+    if baseline.get("pending"):
+        print(
+            "_Baseline pending (no snapshot captured yet). Current "
+            "numbers below; refresh `perf/baselines/` from this run's "
+            "`perf-json` artifact to arm the diff._"
+        )
+        print()
+        record(current)
+        return
+    base_rates = entry_rates(baseline)
+    cur_rates = entry_rates(current)
+    rows = []
+    flagged = 0
+    for entry, cur in sorted(cur_rates.items()):
+        base = base_rates.get(entry)
+        if base is None or base <= 0:
+            rows.append((entry, "—", fmt_rate(cur), "new", ""))
+            continue
+        delta = 100.0 * (cur - base) / base
+        flag = "⚠️ regression" if delta < -threshold else ""
+        if flag:
+            flagged += 1
+        rows.append(
+            (entry, fmt_rate(base), fmt_rate(cur), f"{delta:+.1f}%", flag)
+        )
+    print("| entry | baseline it/s | current it/s | delta | |")
+    print("|---|---:|---:|---:|---|")
+    for r in rows:
+        print("| " + " | ".join(r) + " |")
+    print()
+    base_d = derived_fields(baseline)
+    cur_d = derived_fields(current)
+    shared = sorted(set(base_d) & set(cur_d))
+    if shared:
+        print("| derived metric | baseline | current |")
+        print("|---|---:|---:|")
+        for k in shared:
+            print(f"| {k} | {base_d[k]:.2f} | {cur_d[k]:.2f} |")
+        print()
+    if flagged:
+        print(
+            f"**{flagged} entr{'y' if flagged == 1 else 'ies'} regressed "
+            f"more than {threshold:.0f}% vs the committed snapshot.**"
+        )
+        print()
+
+
+def record(current):
+    rates = entry_rates(current)
+    print("| entry | current it/s |")
+    print("|---|---:|")
+    for entry, cur in sorted(rates.items()):
+        print(f"| {entry} | {fmt_rate(cur)} |")
+    print()
+    derived = derived_fields(current)
+    for k in sorted(derived):
+        print(f"- {k}: {derived[k]:.2f}")
+    print()
+
+
+def main(argv):
+    args = []
+    threshold = 25.0
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a.startswith("--threshold"):
+            if "=" in a:
+                threshold = float(a.split("=", 1)[1])
+            elif i + 1 < len(argv):
+                i += 1
+                threshold = float(argv[i])
+            else:
+                print("--threshold needs a value")
+                return 0
+        else:
+            args.append(a)
+        i += 1
+    if len(args) != 2:
+        print(__doc__)
+        return 0
+    base_dir, cur_dir = Path(args[0]), Path(args[1])
+    found = sorted(cur_dir.glob("PERF_*.json"))
+    if not found:
+        print(f"_No PERF_*.json artifacts under {cur_dir}._")
+        return 0
+    for cur_path in found:
+        try:
+            current = json.loads(cur_path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"### {cur_path.name}\n_unreadable: {e}_\n")
+            continue
+        base_path = base_dir / cur_path.name
+        baseline = None
+        if base_path.exists():
+            try:
+                baseline = json.loads(base_path.read_text())
+            except (OSError, json.JSONDecodeError):
+                baseline = None
+        report_suite(cur_path.name, baseline, current, threshold)
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main(sys.argv[1:]))
+    except BrokenPipeError:
+        sys.exit(0)
