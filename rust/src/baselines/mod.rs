@@ -107,6 +107,7 @@ impl BestOfN {
                 best_speedup_so_far,
                 batch_accepted: Vec::new(),
                 batch_pruned: 0,
+                batch_width: 1,
             });
         }
         Trace {
@@ -227,6 +228,7 @@ impl Geak {
                 best_speedup_so_far,
                 batch_accepted: Vec::new(),
                 batch_pruned: 0,
+                batch_width: 1,
             });
         }
         Trace {

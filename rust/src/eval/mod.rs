@@ -33,7 +33,7 @@ use crate::llm::{LlmBackend, LlmProfile, SurrogateLlm, ALL_LLMS};
 use crate::metrics::{stratified, Aggregate, TaskOutcome};
 use crate::policy::{KernelBand, PolicyConfig, PolicyMode, Trace};
 use crate::rng::Rng;
-use crate::sched::SchedContext;
+use crate::sched::{BatchMode, SchedContext};
 use crate::service::{BreakdownRow, TimeModel};
 use crate::store::warm::TaskWarmStart;
 use crate::store::TraceStore;
@@ -183,19 +183,24 @@ pub struct RunOpts {
     /// Store session shared by every cell of the experiment: caches,
     /// warm-start, trace emission.
     pub session: Option<Arc<TraceStore>>,
-    /// Candidates proposed per KernelBand iteration (0 and 1 both mean
-    /// the legacy single-candidate loop; `--batch 1` artifacts are
-    /// byte-identical to the pre-batch path).
-    pub batch: usize,
+    /// Per-iteration candidate batch sizing. `Fixed(0)`/`Fixed(1)`
+    /// both mean the legacy single-candidate loop (byte-identical
+    /// artifacts to the pre-batch path); `Adaptive` is `--batch auto`.
+    pub batch: BatchMode,
 }
 
 impl RunOpts {
     pub fn threads(threads: usize) -> RunOpts {
-        RunOpts { threads, session: None, batch: 0 }
+        RunOpts { threads, session: None, batch: BatchMode::default() }
     }
 
-    /// Set the per-iteration candidate batch width.
-    pub fn with_batch(mut self, batch: usize) -> RunOpts {
+    /// Set a fixed per-iteration candidate batch width.
+    pub fn with_batch(self, batch: usize) -> RunOpts {
+        self.with_batch_mode(BatchMode::Fixed(batch))
+    }
+
+    /// Set the full batch sizing mode (`Fixed` or `Adaptive`).
+    pub fn with_batch_mode(mut self, batch: BatchMode) -> RunOpts {
         self.batch = batch;
         self
     }
@@ -203,7 +208,7 @@ impl RunOpts {
     fn runner(&self) -> ExperimentRunner {
         ExperimentRunner::new(self.threads)
             .with_session(self.session.clone())
-            .with_batch(self.batch)
+            .with_batch_mode(self.batch)
     }
 }
 

@@ -29,7 +29,7 @@ use crate::llm::{LlmProfile, SurrogateLlm};
 use crate::metrics::{aggregate, stratified, Aggregate};
 use crate::policy::Trace;
 use crate::rng::Rng;
-use crate::sched::SchedContext;
+use crate::sched::{BatchMode, SchedContext};
 use crate::store::log::records_for_trace;
 use crate::store::wrap::{CachedEngine, CachedLlm};
 use crate::store::TraceStore;
@@ -149,16 +149,21 @@ pub struct ExperimentRunner {
     /// ([`crate::store::wrap`]), warm-start state is applied per task,
     /// and the run's traces are queued on the store's append-only log.
     pub session: Option<Arc<TraceStore>>,
-    /// Candidates proposed per KernelBand iteration (0/1 = the legacy
-    /// single-candidate loop). Results are invariant to `threads` for
-    /// any batch width, and `batch <= 1` is byte-identical to the
-    /// pre-batch runner.
-    pub batch: usize,
+    /// Per-iteration candidate batch sizing. `Fixed(0)`/`Fixed(1)` are
+    /// the legacy single-candidate loop. Results are invariant to
+    /// `threads` for every mode — the `Adaptive` controller consumes
+    /// only per-job deterministic state — and `Fixed(n ≤ 1)` is
+    /// byte-identical to the pre-batch runner.
+    pub batch: BatchMode,
 }
 
 impl ExperimentRunner {
     pub fn new(threads: usize) -> ExperimentRunner {
-        ExperimentRunner { threads, session: None, batch: 0 }
+        ExperimentRunner {
+            threads,
+            session: None,
+            batch: BatchMode::default(),
+        }
     }
 
     /// Attach (or detach) a store session.
@@ -168,8 +173,14 @@ impl ExperimentRunner {
         self
     }
 
-    /// Set the per-iteration candidate batch width.
-    pub fn with_batch(mut self, batch: usize) -> ExperimentRunner {
+    /// Set a fixed per-iteration candidate batch width.
+    pub fn with_batch(self, batch: usize) -> ExperimentRunner {
+        self.with_batch_mode(BatchMode::Fixed(batch))
+    }
+
+    /// Set the full batch sizing mode (`Fixed` or `Adaptive`).
+    pub fn with_batch_mode(mut self, batch: BatchMode)
+                           -> ExperimentRunner {
         self.batch = batch;
         self
     }
@@ -181,11 +192,11 @@ impl ExperimentRunner {
     fn sched_context(&self) -> SchedContext {
         match &self.session {
             Some(store) => SchedContext {
-                batch: self.batch,
+                mode: self.batch,
                 centroids: Some(store.session_centroids()),
                 profiles: Some(store.profiles()),
             },
-            None => SchedContext::with_batch(self.batch),
+            None => SchedContext::with_mode(self.batch),
         }
     }
 

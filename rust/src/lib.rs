@@ -42,7 +42,8 @@
 //! | [`engine`] | `EvalEngine` trait: simulated vs PJRT-real measurement |
 //! | [`runtime`] | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
 //! | [`sched`] | batched-measurement scheduling: slot lineages, profiling-bound admission, shared recluster/profile memos |
-//! | [`service`] | optimization service: batched LLM gateway + shared recluster scheduler (Fig. 3) |
+//! | [`server`] | real-workload serving: multi-tenant job queue, worker pool over real `optimize_sched` runs, AIMD adaptive batch width |
+//! | [`service`] | modeled optimization service: batched LLM gateway + shared recluster scheduler (Fig. 3; `serve --modeled`) |
 //! | [`store`] | persistent trace store: content-addressed kernel cache, append-only trace log, cross-session warm-start |
 //! | [`eval`] | experiment harnesses regenerating every paper table/figure; [`eval::ExperimentRunner`] fans the grid out in parallel and emits `BENCH_*.json` artifacts |
 
@@ -61,6 +62,7 @@ pub mod profiler;
 pub mod rng;
 pub mod runtime;
 pub mod sched;
+pub mod server;
 pub mod service;
 pub mod store;
 pub mod strategy;

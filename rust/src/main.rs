@@ -9,8 +9,9 @@
 //!            no-profiling|llm-select|raw-profiling|no-strategy]
 //!            [--iterations N] [--seed S]
 //! kernelband pjrt [--artifacts DIR] [--budget N]
-//! kernelband serve [--jobs N] [--iterations N] [--batch N] [--out DIR]
-//!            [--store DIR]
+//! kernelband serve [--tenants N] [--jobs N] [--iterations N]
+//!            [--batch N|auto] [--workers N] [--out DIR] [--store DIR]
+//!            [--modeled]
 //! kernelband trace <record|replay|stats> …
 //! kernelband list [--subset]
 //! ```
@@ -48,6 +49,8 @@ use kernelband::llm::{LlmProfile, SurrogateLlm};
 use kernelband::policy::{KernelBand, PolicyConfig, PolicyMode};
 use kernelband::rng::Rng;
 use kernelband::runtime::Runtime;
+use kernelband::sched::BatchMode;
+use kernelband::server::{RealServe, RealServeConfig};
 use kernelband::service::OptimizationService;
 use kernelband::store::log::records_for_trace;
 use kernelband::store::wrap::{CachedEngine, CachedLlm};
@@ -75,19 +78,30 @@ USAGE:
       them against the hardware profiling bounds, and measures the
       survivors through one fused engine call; --batch 1 (default)
       is byte-identical to the pre-batch path for any --threads.
+      --batch auto sizes the batch adaptively (AIMD over the bound's
+      prune rate); the width sequence is deterministic, so artifacts
+      stay byte-identical across threads and store temperature.
   kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
       [--llm deepseek|gpt5|claude|gemini]
       [--mode full|no-clustering|no-profiling|llm-select|raw-profiling|no-strategy]
       [--iterations N] [--seed S]
   kernelband pjrt [--artifacts DIR] [--budget N]
-  kernelband serve [--jobs N] [--iterations N] [--batch N] [--out DIR]
-      [--store DIR]
-      --store DIR records completed job iterations; a repeated run
-      skips their LLM gateway round-trips entirely (cache-hit fast path).
-      --batch N measures N candidates per iteration through the fused
-      batched-measurement model; jobs share one re-clustering
-      scheduler that interleaves re-clustering across jobs and reuses
-      warm centroids between matching task fingerprints.
+  kernelband serve [--tenants N] [--jobs N] [--iterations N]
+      [--batch N|auto] [--workers N] [--variety N] [--seed S]
+      [--queue-cap N] [--quota N] [--device D] [--llm L]
+      [--out DIR] [--store DIR] [--modeled]
+      The default path is REAL: a multi-tenant job queue (admission
+      control + per-tenant fairness) drives actual KernelBand
+      optimization runs over suite tasks through a worker pool; all
+      tenants share the session caches, so matching job fingerprints
+      are paid once per round and resume warm afterwards. The ledger
+      reports measured wall-clock (no TIME_SCALE). --jobs is jobs per
+      tenant. --batch auto enables the AIMD adaptive batch width
+      (deterministic width sequence; artifacts byte-identical for any
+      --workers and cold/warm --store).
+      --modeled restores the TimeModel-based simulation (fast smoke:
+      batched LLM gateway + modeled recluster scheduler; --jobs is the
+      total job count there and --batch must be numeric).
   kernelband trace record --store DIR [--task SUBSTR] [--device D]
       [--llm L] [--iterations N] [--seed S]
       run one optimization through the store and append its trace.
@@ -205,6 +219,33 @@ fn parse_mode(s: &str) -> Result<PolicyMode> {
     }
 }
 
+/// `--batch` values: a fixed width ("3"), "auto" (AIMD-adapted width
+/// in [1, 8]), or "auto:MIN..MAX" with explicit bounds.
+fn parse_batch(s: &str) -> Result<BatchMode> {
+    if let Some(rest) = s.strip_prefix("auto") {
+        if rest.is_empty() {
+            return Ok(BatchMode::Adaptive { min: 1, max: 8 });
+        }
+        let spec = rest
+            .strip_prefix(':')
+            .ok_or_else(|| anyhow!("--batch: bad value {s:?}"))?;
+        let (lo, hi) = spec.split_once("..").ok_or_else(|| {
+            anyhow!("--batch auto:MIN..MAX: bad bounds {spec:?}")
+        })?;
+        let min: usize =
+            lo.parse().map_err(|_| anyhow!("--batch: bad MIN {lo:?}"))?;
+        let max: usize =
+            hi.parse().map_err(|_| anyhow!("--batch: bad MAX {hi:?}"))?;
+        if min == 0 || max < min {
+            bail!("--batch auto bounds need 1 <= MIN <= MAX");
+        }
+        return Ok(BatchMode::Adaptive { min, max });
+    }
+    let n: usize =
+        s.parse().map_err(|_| anyhow!("--batch: bad number {s:?}"))?;
+    Ok(BatchMode::Fixed(n))
+}
+
 /// Default cluster count K warm-start centroid seeds are fitted for
 /// (matches `PolicyConfig::default().clusters`).
 const WARM_CLUSTERS: usize = 3;
@@ -235,7 +276,7 @@ fn open_session(store_dir: Option<&str>, warm: Option<&str>)
 }
 
 fn repro(exp: &str, iterations: Option<usize>, threads: usize,
-         batch: usize, out: &str, store_dir: Option<&str>,
+         batch: BatchMode, out: &str, store_dir: Option<&str>,
          warm: Option<&str>) -> Result<()> {
     let session = open_session(store_dir, warm)?;
     let opts = RunOpts { threads, session: session.clone(), batch };
@@ -340,8 +381,96 @@ fn pjrt(artifacts: &str, budget: usize) -> Result<()> {
     Ok(())
 }
 
-fn serve(jobs: usize, iterations: usize, batch: usize, out: Option<&str>,
-         store_dir: Option<&str>) -> Result<()> {
+/// The real serving path (default): multi-tenant queue → worker pool →
+/// actual `optimize_sched` runs sharing the session store. Measured
+/// wall-clock only — no `TIME_SCALE` anywhere here.
+fn serve_real(config: RealServeConfig, out: Option<&str>,
+              store_dir: Option<&str>) -> Result<()> {
+    let store = Arc::new(match store_dir {
+        Some(dir) => TraceStore::open(Path::new(dir))
+            .with_context(|| format!("opening store {dir:?}"))?,
+        // storeless runs still share one in-memory session store
+        // across tenants (cross-tenant dedup needs it)
+        None => TraceStore::in_memory(),
+    });
+    let report = RealServe::new(config).run(&store);
+    let cfg = &report.config;
+    outln!(
+        "serve[real]: {} tenants x {} jobs x {} iters  batch {}  \
+         device {}  llm {}",
+        cfg.tenants,
+        cfg.jobs_per_tenant,
+        cfg.iterations,
+        cfg.batch.label(),
+        cfg.device.name(),
+        cfg.llm.spec().name,
+    );
+    outln!(
+        "queue: admitted={} rejected={}  rounds={} executions={} \
+         dedup_shares={}",
+        report.admitted,
+        report.rejected,
+        report.rounds,
+        report.executions,
+        report.dedup_shares,
+    );
+    outln!(
+        "wall: {:.4}s measured end-to-end  {:.4}s summed over executed \
+         jobs  centroid memo {} hits / {} misses",
+        report.wall_s,
+        report.job_wall_s(),
+        report.centroid_hits,
+        report.centroid_misses,
+    );
+    for t in &report.tenants {
+        outln!(
+            "tenant t{}: submitted={} admitted={} rejected={} \
+             completed={} shared={} profile_runs={} llm_round_trips={} \
+             measure_sims={} wall={:.4}s{}",
+            t.tenant,
+            t.submitted,
+            t.admitted,
+            t.rejected,
+            t.completed,
+            t.shared,
+            t.profile_runs,
+            t.llm_round_trips,
+            t.measure_sims,
+            t.wall_s,
+            if t.is_warm() { " [warm]" } else { "" },
+        );
+    }
+    outln!("[store] {}", store.stats_line());
+    if let Some(dir) = out {
+        // deterministic section rides the BENCH_<name>.json convention
+        // (byte-compared by CI); the full measured ledger is a separate
+        // uploaded artifact
+        let artifact = ReproReport {
+            name: "serve".into(),
+            text: String::new(),
+            json: report.deterministic_json(),
+        };
+        let path = artifact.write_artifact(Path::new(dir))?;
+        outln!("[artifact] {}", path.display());
+        let ledger_path = Path::new(dir).join("SERVE_LEDGER.json");
+        std::fs::write(&ledger_path, report.ledger_json().pretty() + "\n")
+            .with_context(|| {
+                format!("writing {}", ledger_path.display())
+            })?;
+        outln!("[ledger] {}", ledger_path.display());
+    }
+    if store_dir.is_some() {
+        store.persist().context("persisting store")?;
+        outln!("[store] tenant namespaces + traces persisted");
+    }
+    Ok(())
+}
+
+/// The modeled service (`--modeled`): TimeModel + scaled sleeps, kept
+/// for fast pipeline-shape smokes.
+fn serve_modeled(jobs: usize, iterations: usize, batch: usize,
+                 out: Option<&str>, store_dir: Option<&str>)
+                 -> Result<()> {
     let session = open_session(store_dir, None)?;
     let mut service = OptimizationService::default();
     service.batch = batch.max(1);
@@ -535,14 +664,24 @@ fn trace_stats(path_str: &str) -> Result<()> {
             .with_context(|| format!("opening store {path_str:?}"))?;
         outln!(
             "store {}: kernels={} proposals={} profiles={} service={} \
-             skipped_lines={}",
+             tenants={} skipped_lines={}",
             path_str,
             store.loaded.kernels,
             store.loaded.proposals,
             store.loaded.profiles,
             store.loaded.service,
+            store.loaded.tenants,
             store.loaded.skipped,
         );
+        // per-tenant namespace counters (multi-tenant serve history)
+        for (name, c) in store.tenant_totals() {
+            outln!(
+                "tenant {name}: jobs={} steps={} profile_runs={}",
+                c.jobs,
+                c.steps,
+                c.profile_runs,
+            );
+        }
         match store.trace_path() {
             Some(trace) if trace.exists() => {
                 let summary = trace_log::replay_file(&trace)?;
@@ -557,6 +696,12 @@ fn trace_stats(path_str: &str) -> Result<()> {
                     summary.skipped_versions,
                     summary.skipped_kinds,
                 );
+                for (name, tasks, steps) in summary.tenant_counts() {
+                    outln!(
+                        "  tenant {name}: trace_tasks={tasks} \
+                         trace_steps={steps}"
+                    );
+                }
             }
             _ => outln!("trace: none recorded yet"),
         }
@@ -575,6 +720,9 @@ fn trace_stats(path_str: &str) -> Result<()> {
         summary.skipped_versions,
         summary.skipped_kinds,
     );
+    for (name, tasks, steps) in summary.tenant_counts() {
+        outln!("  tenant {name}: trace_tasks={tasks} trace_steps={steps}");
+    }
     Ok(())
 }
 
@@ -650,7 +798,7 @@ fn main() -> Result<()> {
                 exp,
                 iters,
                 args.get_usize("threads", 0)?,
-                args.get_usize("batch", 1)?,
+                parse_batch(args.get("batch").unwrap_or("1"))?,
                 args.get("out").unwrap_or("out"),
                 args.get("store"),
                 args.get("warm-start"),
@@ -675,14 +823,44 @@ fn main() -> Result<()> {
             )
         }
         "serve" => {
-            let args = Args::parse(rest, &[])?;
-            serve(
-                args.get_usize("jobs", 16)?,
-                args.get_usize("iterations", 3)?,
-                args.get_usize("batch", 1)?,
-                args.get("out"),
-                args.get("store"),
-            )
+            let args = Args::parse(rest, &["modeled", "real"])?;
+            let batch = parse_batch(args.get("batch").unwrap_or("1"))?;
+            if args.has("modeled") {
+                let fixed = match batch {
+                    BatchMode::Fixed(n) => n.max(1),
+                    BatchMode::Adaptive { .. } => bail!(
+                        "--batch auto needs the real serve path \
+                         (drop --modeled)"
+                    ),
+                };
+                serve_modeled(
+                    args.get_usize("jobs", 16)?,
+                    args.get_usize("iterations", 3)?,
+                    fixed,
+                    args.get("out"),
+                    args.get("store"),
+                )
+            } else {
+                let config = RealServeConfig {
+                    tenants: args.get_usize("tenants", 2)?,
+                    jobs_per_tenant: args.get_usize("jobs", 3)?,
+                    iterations: args.get_usize("iterations", 12)?,
+                    batch,
+                    task_variety: args.get_usize("variety", 2)?,
+                    workers: args.get_usize("workers", 0)?,
+                    round_max: 0,
+                    queue_capacity: args
+                        .get_usize("queue-cap", usize::MAX)?,
+                    per_tenant_quota: args
+                        .get_usize("quota", usize::MAX)?,
+                    device: parse_device(
+                        args.get("device").unwrap_or("h20"),
+                    )?,
+                    llm: parse_llm(args.get("llm").unwrap_or("deepseek"))?,
+                    seed: args.get_u64("seed", 7)?,
+                };
+                serve_real(config, args.get("out"), args.get("store"))
+            }
         }
         "trace" => trace_cmd(rest),
         "list" => {

@@ -37,14 +37,21 @@
 //!
 //! § Batch — [`KernelBand::optimize_sched`] generalizes the loop to a
 //! per-cluster candidate *batch* per iteration: one arm pull plans
-//! `ctx.batch` proposals against the iteration-entry frontier, the
-//! hardware profiling bound ([`crate::sched::batch`]) prunes
-//! speculative slots before measurement, and the survivors are
+//! `ctx.mode`'s width in proposals against the iteration-entry
+//! frontier, the hardware profiling bound ([`crate::sched::batch`])
+//! prunes speculative slots before measurement, and the survivors are
 //! measured through one fused [`EvalEngine::measure_batch`] call. RNG
 //! consumption is pinned per slot (slot 0 keeps the legacy `(label, t)`
 //! lineages), so `batch = 1` stays bit-identical to the pre-batch
 //! loop — the equivalence contract `rust/tests/prop_sched.rs` locks
-//! against a frozen transcription of that loop.
+//! against a frozen transcription of that loop. Under
+//! [`crate::sched::BatchMode::Adaptive`] (`--batch auto`) the width is
+//! chosen per iteration by the AIMD controller
+//! ([`crate::sched::adaptive::AimdController`]) from the previous
+//! iteration's pinned slot-order outcome counts (wasted = bound-pruned
+//! or failed verification) — deterministic state only, so the width
+//! sequence and every artifact stay byte-identical for any
+//! `--threads N` and cold/warm store.
 
 pub mod frontier;
 
@@ -59,8 +66,9 @@ use crate::metrics::TaskOutcome;
 use crate::policy::frontier::{nearest_centroid, ClusterState, Frontier};
 use crate::profiler::{HardwareSignature, Profiler, THETA_SAT};
 use crate::rng::Rng;
+use crate::sched::adaptive::AimdController;
 use crate::sched::{batch as sched_batch, centroids as sched_centroids,
-                   profiles as sched_profiles, SchedContext};
+                   profiles as sched_profiles, BatchMode, SchedContext};
 use crate::store::warm::TaskWarmStart;
 use crate::strategy::{Strategy, NUM_STRATEGIES};
 use crate::util::hash::KeyHasher;
@@ -166,6 +174,9 @@ pub struct IterationRecord {
     pub batch_accepted: Vec<usize>,
     /// Speculative slots the profiling bound pruned before measurement.
     pub batch_pruned: usize,
+    /// Slots planned this iteration (1 in the legacy loop; the AIMD
+    /// controller's chosen width under `--batch auto`).
+    pub batch_width: usize,
 }
 
 /// Full optimization trace for one task.
@@ -211,6 +222,14 @@ impl Trace {
             cost_usd: self.total_cost_usd(),
             iterations: self.records.len(),
         }
+    }
+
+    /// Per-iteration planned batch widths — the adaptive controller's
+    /// decision trace (constant in `Fixed` mode). Byte-compared across
+    /// thread counts and store temperatures by the `--batch auto`
+    /// determinism property tests.
+    pub fn width_trace(&self) -> Vec<usize> {
+        self.records.iter().map(|r| r.batch_width).collect()
     }
 
     /// Fallback-mode best-speedup curve over iterations (Fig. 2/4).
@@ -325,7 +344,9 @@ impl KernelBand {
     ///
     /// ## Batched iterations (§Batch)
     ///
-    /// With `ctx.batch = N > 1` each iteration still pulls **one**
+    /// With a planned width `N > 1` (a fixed `ctx.mode` width, or the
+    /// AIMD controller's per-iteration choice under
+    /// [`BatchMode::Adaptive`]) each iteration still pulls **one**
     /// (cluster, strategy) arm, but plans `N` candidate proposals
     /// against the iteration-entry frontier: slot 0 is exactly the
     /// legacy candidate; speculative slots `1..N` draw from their own
@@ -361,7 +382,12 @@ impl KernelBand {
         ctx: &SchedContext,
     ) -> Trace {
         let cfg = &self.config;
-        let batch = ctx.batch_width();
+        // §Batch width: the controller is a pure state machine over the
+        // pinned slot-order prune counts — Fixed(n) never moves, and
+        // Adaptive widths are a deterministic function of (task, seed,
+        // bound outcomes), so artifacts stay byte-identical for any
+        // thread count and store temperature.
+        let mut width_ctl = AimdController::from_mode(ctx.mode);
         let rng = root.split("kernelband", task.id as u64);
         let freeform = matches!(
             cfg.mode,
@@ -383,8 +409,19 @@ impl KernelBand {
             .f64(cfg.ucb_c)
             .f64(cfg.prune_factor)
             .u64(cfg.reset_arms_on_recluster as u64)
-            .u64(cfg.mode as u64)
-            .u64(batch as u64);
+            .u64(cfg.mode as u64);
+        // batch sizing is part of the run identity: widths steer which
+        // measurements exist, hence which code hash first reaches the
+        // profiler. Fixed(n) hashes exactly the bytes the pre-adaptive
+        // `--batch n` did, so existing stores stay warm; Adaptive folds
+        // a marker no realistic fixed width can produce plus its bounds.
+        run_key = match ctx.mode {
+            BatchMode::Fixed(n) => run_key.u64(n.max(1) as u64),
+            BatchMode::Adaptive { min, max } => run_key
+                .u64(u64::MAX)
+                .u64(min.max(1) as u64)
+                .u64(max.max(min).max(1) as u64),
+        };
         // warm-start state steers arm selection, hence which
         // measurement first reaches the profiler for a code hash — so
         // it is part of the run identity too; omitting it would let a
@@ -469,6 +506,8 @@ impl KernelBand {
         }
 
         for t in 1..=cfg.iterations {
+            // the width this iteration plans (constant in Fixed mode)
+            let batch = width_ctl.width();
             // --- lines 6–10: periodic clustering & representative profiling
             let may_cluster = !freeform
                 && t % cfg.recluster_every == 0
@@ -826,6 +865,12 @@ impl KernelBand {
             } else {
                 0.0
             };
+            // feed the controller (no-op in Fixed mode): a speculative
+            // slot paid off only when it became a measured candidate —
+            // bound-pruned slots and failed generations alike are
+            // wasted speculation. Both are pinned slot-order
+            // deterministic state, never wall-clock.
+            let spec_wasted = (batch - 1) - batch_accepted.len();
             records.push(IterationRecord {
                 t,
                 cluster: cluster_id,
@@ -839,7 +884,9 @@ impl KernelBand {
                 best_speedup_so_far,
                 batch_accepted,
                 batch_pruned,
+                batch_width: batch,
             });
+            width_ctl.observe(batch - 1, spec_wasted);
         }
 
         Trace {
@@ -1058,6 +1105,67 @@ mod tests {
         // both runs share the same frontier state (t=1 always does)
         assert_eq!(a.records[0].parent, solo.records[0].parent);
         assert_eq!(a.records[0].strategy, solo.records[0].strategy);
+    }
+
+    fn run_mode(mode: BatchMode, t: usize, seed: u64) -> Trace {
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+        let mut cfg = PolicyConfig::default();
+        cfg.iterations = t;
+        KernelBand::new(cfg).optimize_sched(
+            &suite.tasks[4],
+            &engine,
+            &llm,
+            &Rng::new(seed),
+            None,
+            &crate::sched::SchedContext::with_mode(mode),
+        )
+    }
+
+    #[test]
+    fn adaptive_with_equal_bounds_is_bit_identical_to_fixed() {
+        let fixed = run_batched(3, 25, 9);
+        let auto =
+            run_mode(BatchMode::Adaptive { min: 3, max: 3 }, 25, 9);
+        assert_eq!(fixed.candidates.len(), auto.candidates.len());
+        assert_eq!(fixed.best_id, auto.best_id);
+        for (ra, rb) in fixed.records.iter().zip(&auto.records) {
+            assert_eq!(ra.batch_width, 3);
+            assert_eq!(rb.batch_width, 3);
+            assert_eq!(ra.reward.to_bits(), rb.reward.to_bits());
+            assert_eq!(ra.batch_accepted, rb.batch_accepted);
+            assert_eq!(ra.batch_pruned, rb.batch_pruned);
+        }
+    }
+
+    #[test]
+    fn adaptive_widths_stay_bounded_and_deterministic() {
+        let mode = BatchMode::Adaptive { min: 1, max: 6 };
+        let a = run_mode(mode, 30, 13);
+        let b = run_mode(mode, 30, 13);
+        assert_eq!(a.width_trace(), b.width_trace());
+        for (w, r) in a.width_trace().iter().zip(&a.records) {
+            assert!((1..=6).contains(w));
+            assert_eq!(*w, r.batch_width);
+            // pruning and acceptance never exceed the planned width
+            assert!(r.batch_pruned <= w - 1);
+            let n = r.accepted.iter().count() + r.batch_accepted.len();
+            assert!(n <= *w);
+        }
+        // the controller actually moves: a 30-iteration run with min=1
+        // must widen at least once (width 1 probes upward)
+        assert!(a.width_trace().iter().any(|&w| w > 1));
+        // and the trace is a pure replay of the AIMD rule over the
+        // recorded outcomes (wasted = planned speculation that never
+        // became a measured candidate)
+        let mut ctl = crate::sched::adaptive::AimdController::adaptive(1, 6);
+        for r in &a.records {
+            assert_eq!(ctl.width(), r.batch_width);
+            let wasted = (r.batch_width - 1) - r.batch_accepted.len();
+            assert!(r.batch_pruned <= wasted);
+            ctl.observe(r.batch_width - 1, wasted);
+        }
     }
 
     #[test]

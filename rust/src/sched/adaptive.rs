@@ -1,0 +1,200 @@
+//! AIMD adaptive batch-width controller (`--batch auto`).
+//!
+//! The Assumption-1 admission bound ([`crate::sched::batch::admit`])
+//! emits a live signal the static `--batch N` ignores: how much of the
+//! planned speculation actually turned into measured candidates. This
+//! controller turns that signal into a per-iteration width, TCP-style:
+//!
+//! * **additive increase** — every speculative slot paid off (became a
+//!   measured candidate): the hardware headroom estimates say
+//!   speculation is working, widen by 1 up to `max`;
+//! * **multiplicative decrease** — most speculative slots were wasted
+//!   (pruned by the bound *or* failed generation/verification — both
+//!   burn a proposal with nothing measured): halve down to `min`;
+//! * **hold** — partial waste: stay.
+//!
+//! Counting verification failures as waste matters: a
+//! generation-failure-heavy regime must shrink the batch (each slot
+//! still pays full proposal cost), not ratchet to `max` because the
+//! failures never even reached the bound.
+//!
+//! At width 1 there are no speculative slots to observe, so the
+//! controller probes upward — otherwise `Adaptive { min: 1, .. }`
+//! could never leave the legacy single-candidate loop.
+//!
+//! ## Determinism contract
+//!
+//! The controller's entire state is `(min, max, width)` and its only
+//! input is the previous iteration's `(speculative, wasted)` pair,
+//! which the policy computes in pinned slot order from the verdicts
+//! and the profiling bound — deterministic per (task, seed, warm
+//! state), never wall-clock, thread count, or store temperature. The
+//! width sequence is therefore a pure function of the run spec, which
+//! is what keeps `--batch auto` artifacts byte-identical across
+//! `--threads 1/4/8` and cold/warm store (locked in
+//! `rust/tests/prop_sched.rs`). `Fixed(n)` collapses
+//! `min == max == n`, making `observe` a no-op — bit-identical to the
+//! pre-adaptive static batch.
+
+use crate::sched::BatchMode;
+
+/// Deterministic AIMD width controller. One instance per optimization
+/// run; the policy reads [`AimdController::width`] at the top of every
+/// iteration and feeds the iteration's outcomes back through
+/// [`AimdController::observe`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AimdController {
+    min: usize,
+    max: usize,
+    width: usize,
+}
+
+impl AimdController {
+    /// A constant-width controller (`observe` never moves it).
+    pub fn fixed(n: usize) -> AimdController {
+        let n = n.max(1);
+        AimdController { min: n, max: n, width: n }
+    }
+
+    /// An adaptive controller starting at `min` (degenerate bounds
+    /// normalize: `min ≥ 1`, `max ≥ min`).
+    pub fn adaptive(min: usize, max: usize) -> AimdController {
+        let min = min.max(1);
+        let max = max.max(min);
+        AimdController { min, max, width: min }
+    }
+
+    pub fn from_mode(mode: BatchMode) -> AimdController {
+        match mode {
+            BatchMode::Fixed(n) => AimdController::fixed(n),
+            BatchMode::Adaptive { min, max } => {
+                AimdController::adaptive(min, max)
+            }
+        }
+    }
+
+    /// Width to plan for the next iteration (≥ 1).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Feed back one iteration's outcomes: `speculative` slots were
+    /// planned beyond slot 0, of which `wasted` produced no measured
+    /// candidate — pruned by the Assumption-1 bound or failed
+    /// generation/verification. Both counts come from the pinned
+    /// slot-order pipeline — deterministic state only.
+    pub fn observe(&mut self, speculative: usize, wasted: usize) {
+        if self.min == self.max {
+            return; // Fixed(n): static by construction
+        }
+        debug_assert!(wasted <= speculative);
+        if speculative == 0 {
+            // width 1: no signal yet — probe upward
+            self.width = (self.width + 1).min(self.max);
+        } else if wasted * 2 > speculative {
+            // mostly wasted: multiplicative decrease
+            self.width = (self.width / 2).max(self.min);
+        } else if wasted == 0 {
+            // every speculative slot became a candidate: additive
+            // increase
+            self.width = (self.width + 1).min(self.max);
+        }
+        // partially wasted (0 < wasted ≤ ½): hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_mode_never_moves() {
+        let mut c = AimdController::from_mode(BatchMode::Fixed(3));
+        assert_eq!(c.width(), 3);
+        c.observe(2, 2);
+        assert_eq!(c.width(), 3);
+        c.observe(2, 0);
+        assert_eq!(c.width(), 3);
+        // Fixed(0) normalizes to the legacy single-candidate loop
+        assert_eq!(AimdController::fixed(0).width(), 1);
+    }
+
+    #[test]
+    fn additive_increase_on_clean_payoff() {
+        let mut c = AimdController::adaptive(1, 8);
+        assert_eq!(c.width(), 1);
+        c.observe(0, 0); // width-1 probe
+        assert_eq!(c.width(), 2);
+        c.observe(1, 0);
+        assert_eq!(c.width(), 3);
+        c.observe(2, 0);
+        assert_eq!(c.width(), 4);
+        // capped at max
+        for _ in 0..10 {
+            let s = c.width() - 1;
+            c.observe(s, 0);
+        }
+        assert_eq!(c.width(), 8);
+    }
+
+    #[test]
+    fn multiplicative_decrease_on_heavy_waste() {
+        let mut c = AimdController::adaptive(1, 8);
+        for _ in 0..10 {
+            c.observe(c.width() - 1, 0);
+        }
+        assert_eq!(c.width(), 8);
+        c.observe(7, 6); // 6 of 7 wasted
+        assert_eq!(c.width(), 4);
+        c.observe(3, 3);
+        assert_eq!(c.width(), 2);
+        c.observe(1, 1);
+        assert_eq!(c.width(), 1); // floored at min
+        // at width 1 there is no speculation to observe: probe upward
+        c.observe(0, 0);
+        assert_eq!(c.width(), 2);
+    }
+
+    #[test]
+    fn partial_waste_holds() {
+        let mut c = AimdController::adaptive(2, 8);
+        assert_eq!(c.width(), 2);
+        c.observe(1, 0);
+        assert_eq!(c.width(), 3);
+        // 1 of 2 wasted: exactly half → hold (not > ½)
+        c.observe(2, 1);
+        assert_eq!(c.width(), 3);
+        // 1 of 3 wasted: hold
+        c.observe(3, 1);
+        assert_eq!(c.width(), 3);
+        // 2 of 3 wasted: shrink
+        c.observe(3, 2);
+        assert_eq!(c.width(), 2);
+    }
+
+    #[test]
+    fn width_sequence_is_a_pure_function_of_the_outcome_sequence() {
+        let outcomes = [(0usize, 0usize), (1, 0), (2, 0), (3, 3), (1, 0),
+                        (2, 1), (2, 0), (3, 0)];
+        let run = || {
+            let mut c = AimdController::adaptive(1, 6);
+            let mut widths = Vec::new();
+            for &(s, p) in &outcomes {
+                widths.push(c.width());
+                c.observe(s, p);
+            }
+            widths
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn degenerate_adaptive_bounds_are_fixed() {
+        let mut c = AimdController::adaptive(3, 3);
+        c.observe(2, 0);
+        assert_eq!(c.width(), 3);
+        // inverted bounds normalize to min
+        let c2 = AimdController::adaptive(5, 2);
+        assert_eq!(c2.width(), 5);
+    }
+}

@@ -34,6 +34,7 @@
 //! identity for any `--threads`/`--batch 1`/cold/warm combination is
 //! asserted in `rust/tests/prop_sched.rs` and the CI smoke.
 
+pub mod adaptive;
 pub mod batch;
 pub mod centroids;
 pub mod profiles;
@@ -44,15 +45,70 @@ use std::sync::Arc;
 use self::centroids::CentroidCache;
 use self::profiles::SharedProfiles;
 
+/// How the per-iteration candidate batch is sized.
+///
+/// `Fixed(n)` is the static width `--batch N` always had (0 and 1 both
+/// mean the legacy single-candidate loop). `Adaptive { min, max }` is
+/// `--batch auto`: an AIMD controller
+/// ([`adaptive::AimdController`]) widens the speculation batch while
+/// speculative slots keep turning into measured candidates and shrinks
+/// it when most are wasted (pruned by the Assumption-1 bound or failed
+/// verification). The controller's input is the previous iteration's
+/// pinned slot-order outcome counts — per-job deterministic state,
+/// never wall-clock — so the width sequence is a pure function of
+/// (task, seed, bound/verdict outcomes) and artifacts stay
+/// byte-identical for any `--threads N` and cold/warm store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Static per-iteration width (the pre-adaptive behavior).
+    Fixed(usize),
+    /// AIMD-controlled width in `[min, max]`, starting at `min`.
+    Adaptive { min: usize, max: usize },
+}
+
+impl Default for BatchMode {
+    fn default() -> Self {
+        BatchMode::Fixed(1)
+    }
+}
+
+impl BatchMode {
+    /// Width of the first iteration (`Fixed(0)` normalizes to 1, like
+    /// the legacy `--batch 0`).
+    pub fn initial_width(self) -> usize {
+        match self {
+            BatchMode::Fixed(n) => n.max(1),
+            BatchMode::Adaptive { min, .. } => min.max(1),
+        }
+    }
+
+    /// Largest width this mode can ever plan.
+    pub fn max_width(self) -> usize {
+        match self {
+            BatchMode::Fixed(n) => n.max(1),
+            BatchMode::Adaptive { min, max } => max.max(min).max(1),
+        }
+    }
+
+    /// Render for ledgers/artifacts ("3" / "auto(1..8)").
+    pub fn label(self) -> String {
+        match self {
+            BatchMode::Fixed(n) => format!("{}", n.max(1)),
+            BatchMode::Adaptive { min, max } => {
+                format!("auto({}..{})", min.max(1), max.max(min).max(1))
+            }
+        }
+    }
+}
+
 /// Per-run scheduling context handed to
 /// [`crate::policy::KernelBand::optimize_sched`]. The default context
-/// (`batch = 1`, no shared caches) reproduces the pre-batch behavior
+/// (`Fixed(1)`, no shared caches) reproduces the pre-batch behavior
 /// bit for bit.
 #[derive(Debug, Clone, Default)]
 pub struct SchedContext {
-    /// Candidates proposed per iteration (0 and 1 both mean the legacy
-    /// single-candidate loop).
-    pub batch: usize,
+    /// Per-iteration candidate batch sizing (see [`BatchMode`]).
+    pub mode: BatchMode,
     /// Shared re-clustering memo (session-scoped, in-memory).
     pub centroids: Option<Arc<CentroidCache>>,
     /// Shared NCU-signature cache (persisted by the trace store).
@@ -61,12 +117,14 @@ pub struct SchedContext {
 
 impl SchedContext {
     pub fn with_batch(batch: usize) -> SchedContext {
-        SchedContext { batch, ..SchedContext::default() }
+        SchedContext {
+            mode: BatchMode::Fixed(batch),
+            ..SchedContext::default()
+        }
     }
 
-    /// Effective batch width (≥ 1).
-    pub fn batch_width(&self) -> usize {
-        self.batch.max(1)
+    pub fn with_mode(mode: BatchMode) -> SchedContext {
+        SchedContext { mode, ..SchedContext::default() }
     }
 }
 
@@ -77,10 +135,30 @@ mod tests {
     #[test]
     fn default_context_is_legacy_single_candidate() {
         let ctx = SchedContext::default();
-        assert_eq!(ctx.batch_width(), 1);
+        assert_eq!(ctx.mode, BatchMode::Fixed(1));
+        assert_eq!(ctx.mode.initial_width(), 1);
         assert!(ctx.centroids.is_none());
         assert!(ctx.profiles.is_none());
-        assert_eq!(SchedContext::with_batch(0).batch_width(), 1);
-        assert_eq!(SchedContext::with_batch(4).batch_width(), 4);
+        assert_eq!(SchedContext::with_batch(0).mode.initial_width(), 1);
+        assert_eq!(SchedContext::with_batch(4).mode.initial_width(), 4);
+    }
+
+    #[test]
+    fn batch_mode_widths_and_labels() {
+        assert_eq!(BatchMode::Fixed(0).initial_width(), 1);
+        assert_eq!(BatchMode::Fixed(0).max_width(), 1);
+        assert_eq!(BatchMode::Fixed(3).initial_width(), 3);
+        assert_eq!(BatchMode::Fixed(3).max_width(), 3);
+        let auto = BatchMode::Adaptive { min: 1, max: 8 };
+        assert_eq!(auto.initial_width(), 1);
+        assert_eq!(auto.max_width(), 8);
+        assert_eq!(auto.label(), "auto(1..8)");
+        assert_eq!(BatchMode::Fixed(3).label(), "3");
+        // degenerate bounds normalize instead of panicking
+        let degen = BatchMode::Adaptive { min: 4, max: 2 };
+        assert_eq!(degen.initial_width(), 4);
+        assert_eq!(degen.max_width(), 4);
+        let ctx = SchedContext::with_mode(auto);
+        assert_eq!(ctx.mode, auto);
     }
 }

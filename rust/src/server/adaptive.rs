@@ -1,0 +1,11 @@
+//! Serving-facing surface of the adaptive batch-width controller.
+//!
+//! The AIMD controller itself lives in [`crate::sched::adaptive`] —
+//! it hooks into `optimize_sched`'s batch planning, so it belongs to
+//! the scheduling layer (the policy loop must not depend on the
+//! serving subsystem that orchestrates it). This module re-exports it
+//! as part of the server API because `--batch auto` is primarily a
+//! serving feature: the multi-tenant loop is where adaptive
+//! speculation width pays for itself across many concurrent runs.
+
+pub use crate::sched::adaptive::AimdController;

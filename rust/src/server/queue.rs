@@ -1,0 +1,229 @@
+//! Multi-tenant priority job queue with admission control and
+//! deterministic per-tenant fairness.
+//!
+//! The real serving loop separates *planning* from *execution*: every
+//! job is submitted (and admitted or rejected) before any worker runs,
+//! and rounds are popped from the queue on the planning thread only.
+//! That makes admission and dispatch order pure functions of the
+//! submitted job set — no wall-clock, no worker timing — which is what
+//! keeps the serve ledger's deterministic sections byte-stable across
+//! worker counts and store temperatures.
+//!
+//! ## Admission control
+//!
+//! Two bounds, both checked at submission: a global `capacity` (total
+//! admitted jobs) and a `per_tenant_quota` (admitted jobs per tenant,
+//! so one chatty tenant cannot starve the rest of the queue). Rejected
+//! jobs are counted per tenant in the ledger, never silently dropped.
+//!
+//! ## Fairness + priority
+//!
+//! [`JobQueue::pop_round`] drains jobs in deficit-round-robin order:
+//! each pop goes to the tenant with the fewest jobs dispatched so far
+//! (ties to the lower tenant id), and within a tenant to the highest
+//! `priority`, then lowest submission sequence. A round is just the
+//! next `max` pops, so round composition is deterministic too.
+
+/// One queued optimization job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Job {
+    /// Global submission sequence number (deterministic tie-break).
+    pub seq: usize,
+    /// Owning tenant (0-based).
+    pub tenant: usize,
+    /// Larger runs earlier within a tenant.
+    pub priority: i64,
+    /// Index into the serve task hot set.
+    pub task_idx: usize,
+    /// Content fingerprint of the job's run spec — jobs with equal
+    /// fingerprints perform identical work and can share results.
+    pub fingerprint: u64,
+}
+
+/// Why a submission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    /// Global queue capacity reached.
+    QueueFull,
+    /// The tenant's admission quota reached.
+    QuotaExceeded,
+}
+
+/// Deterministic multi-tenant queue (planning-thread only; execution
+/// parallelism lives in [`crate::server::worker`]).
+#[derive(Debug)]
+pub struct JobQueue {
+    capacity: usize,
+    per_tenant_quota: usize,
+    /// Pending jobs per tenant, in submission order.
+    pending: Vec<Vec<Job>>,
+    /// Jobs admitted per tenant (monotone; admission bookkeeping).
+    admitted: Vec<usize>,
+    /// Jobs dispatched per tenant (fairness deficit counter).
+    dispatched: Vec<usize>,
+    rejected: Vec<usize>,
+    admitted_total: usize,
+}
+
+impl JobQueue {
+    /// A capacity or quota of 0 is honored literally: every submission
+    /// is rejected (drain/lock-out semantics), not clamped up.
+    pub fn new(tenants: usize, capacity: usize, per_tenant_quota: usize)
+               -> JobQueue {
+        JobQueue {
+            capacity,
+            per_tenant_quota,
+            pending: vec![Vec::new(); tenants],
+            admitted: vec![0; tenants],
+            dispatched: vec![0; tenants],
+            rejected: vec![0; tenants],
+            admitted_total: 0,
+        }
+    }
+
+    /// Admit or reject a job. Decided entirely by the submission-time
+    /// queue state, so identical submission sequences always admit the
+    /// identical job set.
+    pub fn submit(&mut self, job: Job) -> Result<(), Rejection> {
+        let t = job.tenant;
+        if self.admitted_total >= self.capacity {
+            self.rejected[t] += 1;
+            return Err(Rejection::QueueFull);
+        }
+        if self.admitted[t] >= self.per_tenant_quota {
+            self.rejected[t] += 1;
+            return Err(Rejection::QuotaExceeded);
+        }
+        self.admitted[t] += 1;
+        self.admitted_total += 1;
+        self.pending[t].push(job);
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.iter().all(Vec::is_empty)
+    }
+
+    /// Pop the next round of up to `max` jobs in deficit-round-robin
+    /// order (see module docs). Deterministic.
+    pub fn pop_round(&mut self, max: usize) -> Vec<Job> {
+        let mut round = Vec::new();
+        while round.len() < max.max(1) {
+            // tenant with pending work and the smallest dispatch count
+            let Some(t) = (0..self.pending.len())
+                .filter(|&t| !self.pending[t].is_empty())
+                .min_by_key(|&t| (self.dispatched[t], t))
+            else {
+                break;
+            };
+            // best job of that tenant: highest priority, lowest seq
+            let bi = self.pending[t]
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, j)| (-j.priority, j.seq))
+                .map(|(i, _)| i)
+                .expect("tenant has pending jobs");
+            round.push(self.pending[t].remove(bi));
+            self.dispatched[t] += 1;
+        }
+        round
+    }
+
+    pub fn admitted(&self) -> usize {
+        self.admitted_total
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected.iter().sum()
+    }
+
+    pub fn rejected_for(&self, tenant: usize) -> usize {
+        self.rejected[tenant]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(seq: usize, tenant: usize, priority: i64) -> Job {
+        Job { seq, tenant, priority, task_idx: seq, fingerprint: seq as u64 }
+    }
+
+    #[test]
+    fn round_robin_interleaves_tenants() {
+        let mut q = JobQueue::new(3, 64, 64);
+        let mut seq = 0;
+        for t in 0..3 {
+            for _ in 0..3 {
+                q.submit(job(seq, t, 0)).unwrap();
+                seq += 1;
+            }
+        }
+        let round = q.pop_round(6);
+        let tenants: Vec<usize> = round.iter().map(|j| j.tenant).collect();
+        // deficit round-robin: each tenant appears twice before any
+        // appears a third time
+        assert_eq!(tenants, vec![0, 1, 2, 0, 1, 2]);
+        let rest = q.pop_round(16);
+        assert_eq!(rest.len(), 3);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn priority_orders_within_a_tenant() {
+        let mut q = JobQueue::new(1, 16, 16);
+        q.submit(job(0, 0, 0)).unwrap();
+        q.submit(job(1, 0, 5)).unwrap();
+        q.submit(job(2, 0, 5)).unwrap();
+        let round = q.pop_round(3);
+        // highest priority first; equal priorities by submission order
+        assert_eq!(round.iter().map(|j| j.seq).collect::<Vec<_>>(),
+                   vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn admission_enforces_capacity_and_quota() {
+        let mut q = JobQueue::new(2, 3, 2);
+        assert!(q.submit(job(0, 0, 0)).is_ok());
+        assert!(q.submit(job(1, 0, 0)).is_ok());
+        // tenant 0 hits its quota before the queue fills
+        assert_eq!(q.submit(job(2, 0, 0)), Err(Rejection::QuotaExceeded));
+        assert!(q.submit(job(3, 1, 0)).is_ok());
+        // global capacity now exhausted
+        assert_eq!(q.submit(job(4, 1, 0)), Err(Rejection::QueueFull));
+        assert_eq!(q.admitted(), 3);
+        assert_eq!(q.rejected(), 2);
+        assert_eq!(q.rejected_for(0), 1);
+        assert_eq!(q.rejected_for(1), 1);
+    }
+
+    #[test]
+    fn zero_capacity_or_quota_locks_tenants_out() {
+        let mut q = JobQueue::new(2, 0, 4);
+        assert_eq!(q.submit(job(0, 0, 0)), Err(Rejection::QueueFull));
+        assert_eq!(q.admitted(), 0);
+        let mut q2 = JobQueue::new(2, 8, 0);
+        assert_eq!(q2.submit(job(0, 1, 0)), Err(Rejection::QuotaExceeded));
+        assert_eq!(q2.rejected_for(1), 1);
+        assert!(q2.is_empty());
+    }
+
+    #[test]
+    fn pop_order_is_deterministic() {
+        let build = || {
+            let mut q = JobQueue::new(4, 64, 64);
+            let mut seq = 0;
+            for t in [2usize, 0, 3, 1, 2, 2, 0, 1] {
+                q.submit(job(seq, t, (seq % 3) as i64)).unwrap();
+                seq += 1;
+            }
+            let mut order = Vec::new();
+            while !q.is_empty() {
+                order.extend(q.pop_round(3).into_iter().map(|j| j.seq));
+            }
+            order
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -1,0 +1,81 @@
+//! Per-tenant accounting for the real serving loop.
+//!
+//! A [`TenantLedger`] aggregates what one tenant's jobs actually did —
+//! work performed vs work elided by the shared session caches — plus
+//! the measured wall-clock its executed jobs spent. The deterministic
+//! fields (submission/admission counts, completions, shares) go into
+//! the byte-compared artifact section; the measured and
+//! store-temperature-dependent fields (`wall_s`, `profile_runs`,
+//! `llm_round_trips`, `measure_sims`) live in the uploaded service
+//! ledger only, because they legitimately differ between a cold and a
+//! warm pass over the same store.
+
+/// Canonical tenant label used for store namespacing ("t0", "t1", …).
+pub fn tenant_label(tenant: usize) -> String {
+    format!("t{tenant}")
+}
+
+/// One tenant's aggregate ledger.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantLedger {
+    pub tenant: usize,
+    // --- deterministic section -------------------------------------
+    /// Jobs the tenant submitted.
+    pub submitted: usize,
+    /// Jobs admission control accepted.
+    pub admitted: usize,
+    /// Jobs rejected at admission (queue capacity or tenant quota).
+    pub rejected: usize,
+    /// Jobs that ran to completion (executed or shared).
+    pub completed: usize,
+    /// Completions served by sharing a round-mate's identical run.
+    pub shared: usize,
+    // --- measured / store-temperature-dependent section ------------
+    /// Representative NCU profilings actually recomputed. 0 for a
+    /// tenant whose jobs were all warm (shared-cache lookups).
+    pub profile_runs: u64,
+    /// LLM round-trips actually performed (proposal-cache misses).
+    /// 0 for a warm tenant — the real-path analogue of the modeled
+    /// gateway bypass.
+    pub llm_round_trips: u64,
+    /// Measurements actually simulated (kernel-cache misses).
+    pub measure_sims: u64,
+    /// Measured wall-clock seconds of the tenant's executed jobs.
+    pub wall_s: f64,
+}
+
+impl TenantLedger {
+    pub fn new(tenant: usize) -> TenantLedger {
+        TenantLedger { tenant, ..TenantLedger::default() }
+    }
+
+    /// True when every completed job was a pure lookup: nothing
+    /// simulated, nothing proposed, nothing re-profiled.
+    pub fn is_warm(&self) -> bool {
+        self.completed > 0
+            && self.profile_runs == 0
+            && self.llm_round_trips == 0
+            && self.measure_sims == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(tenant_label(0), "t0");
+        assert_eq!(tenant_label(12), "t12");
+    }
+
+    #[test]
+    fn warm_means_zero_new_work() {
+        let mut l = TenantLedger::new(1);
+        assert!(!l.is_warm()); // nothing completed yet
+        l.completed = 3;
+        assert!(l.is_warm());
+        l.llm_round_trips = 1;
+        assert!(!l.is_warm());
+    }
+}

@@ -1,0 +1,291 @@
+//! Worker pool: executes queued jobs as real `KernelBand` runs.
+//!
+//! A round (popped by [`crate::server::queue::JobQueue::pop_round`]) is
+//! executed in three deterministic phases:
+//!
+//! 1. **dedup** — jobs are grouped by run fingerprint; each distinct
+//!    fingerprint gets exactly one *representative* execution per
+//!    round, later duplicates become zero-cost shares (the real-work
+//!    analogue of the modeled scheduler's `dedup_shares`);
+//! 2. **execute** — representatives fan out over
+//!    [`crate::util::par::parallel_map`]; every execution is a full
+//!    [`KernelBand::optimize_sched`] run through the session's shared
+//!    [`crate::store::TraceStore`] caches (measurements, proposals),
+//!    [`crate::sched::centroids::CentroidCache`] and
+//!    [`crate::sched::profiles::SharedProfiles`], so a fingerprint
+//!    seen in any earlier round resumes warm — pure lookups, zero LLM
+//!    round-trips, zero re-profiling;
+//! 3. **fan-in** — results are assembled in round order and fresh
+//!    trace records are returned to the caller for appending in that
+//!    canonical order, so the trace log bytes never depend on worker
+//!    scheduling.
+//!
+//! Wall-clock here is *measured* (`Instant`), not modeled: no
+//! [`crate::service::TIME_SCALE`] anywhere on this path. Measured
+//! fields are kept out of the byte-compared artifact sections.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::engine::SimEngine;
+use crate::gpu_model::Device;
+use crate::llm::{LlmProfile, SurrogateLlm};
+use crate::policy::{KernelBand, PolicyConfig};
+use crate::rng::Rng;
+use crate::sched::{BatchMode, SchedContext};
+use crate::server::queue::Job;
+use crate::server::tenant::tenant_label;
+use crate::store::log::{records_for_trace_tenant, TraceRecord};
+use crate::store::wrap::{CachedEngine, CachedLlm};
+use crate::store::TraceStore;
+use crate::util::par::parallel_map;
+use crate::workload::TaskSpec;
+
+/// Everything an execution needs, shared across the round's workers.
+pub struct ExecEnv<'a> {
+    /// The serve hot set (jobs index into this).
+    pub tasks: &'a [TaskSpec],
+    /// Session store shared by every tenant (caches + trace log).
+    pub store: &'a Arc<TraceStore>,
+    pub mode: BatchMode,
+    pub iterations: usize,
+    pub device: Device,
+    pub llm: LlmProfile,
+    /// Root seed shared by all jobs: equal-fingerprint jobs are
+    /// bit-identical runs, which is what makes sharing sound.
+    pub seed: u64,
+    /// Worker threads per round (0 = available parallelism).
+    pub workers: usize,
+}
+
+/// Outcome of one job (executed or shared).
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub job: Job,
+    /// Round the job completed in.
+    pub round: usize,
+    /// Served by sharing a round-mate's identical execution.
+    pub shared: bool,
+    pub task_name: String,
+    pub correct: bool,
+    pub best_speedup: f64,
+    pub iterations: usize,
+    pub cost_usd: f64,
+    /// The adaptive controller's width decision trace (constant under
+    /// `Fixed`). Deterministic; byte-compared in the artifact.
+    pub width_trace: Vec<usize>,
+    // --- measured / store-temperature-dependent ---------------------
+    /// Representative NCU profilings recomputed (0 on warm replay).
+    pub profile_runs: u64,
+    /// LLM proposals actually simulated (0 on warm replay — the real
+    /// path's "zero gateway round-trips").
+    pub llm_round_trips: u64,
+    /// Measurements actually simulated (0 on warm replay).
+    pub measure_sims: u64,
+    /// Measured execution wall-clock (0 for shares).
+    pub wall_s: f64,
+}
+
+/// Execute one job for real. Returns the result plus the trace records
+/// to append when the run performed new simulated work (`None` for a
+/// pure replay, matching the experiment runner's guard against
+/// duplicate log records).
+fn execute(env: &ExecEnv<'_>, job: &Job, round: usize)
+           -> (JobResult, Option<Vec<TraceRecord>>) {
+    let t0 = Instant::now();
+    let task = &env.tasks[job.task_idx];
+    let engine = CachedEngine::new(
+        SimEngine::new(env.device),
+        env.store.clone(),
+    );
+    let llm = CachedLlm::new(
+        SurrogateLlm::new(env.llm),
+        env.store.clone(),
+    );
+    let ctx = SchedContext {
+        mode: env.mode,
+        centroids: Some(env.store.session_centroids()),
+        profiles: Some(env.store.profiles()),
+    };
+    let mut cfg = PolicyConfig::default();
+    cfg.iterations = env.iterations;
+    let trace = KernelBand::new(cfg).optimize_sched(
+        task,
+        &engine,
+        &llm,
+        &Rng::new(env.seed),
+        None,
+        &ctx,
+    );
+    let fresh = engine.local_sims() + llm.local_sims() > 0;
+    let records = fresh.then(|| {
+        records_for_trace_tenant(
+            "serve",
+            Some(&tenant_label(job.tenant)),
+            env.device.name(),
+            env.llm.spec().name,
+            env.seed,
+            &trace,
+        )
+    });
+    let result = JobResult {
+        job: *job,
+        round,
+        shared: false,
+        task_name: trace.task_name.clone(),
+        correct: trace.correct(),
+        best_speedup: trace.best_speedup(),
+        iterations: trace.records.len(),
+        cost_usd: trace.total_cost_usd(),
+        width_trace: trace.width_trace(),
+        profile_runs: trace.profile_runs,
+        llm_round_trips: llm.local_sims(),
+        measure_sims: engine.local_sims(),
+        wall_s: t0.elapsed().as_secs_f64(),
+    };
+    (result, records)
+}
+
+/// Run one round: dedup by fingerprint, execute representatives in
+/// parallel, fan results back in round order. The returned trace-record
+/// batches are in representative round order — append them as returned
+/// to keep the trace log bytes scheduling-invariant.
+pub fn run_round(env: &ExecEnv<'_>, round: &[Job], round_no: usize)
+                 -> (Vec<JobResult>, Vec<Vec<TraceRecord>>) {
+    // phase 1: dedup — first occurrence of a fingerprint executes
+    let mut rep_of: HashMap<u64, usize> = HashMap::new();
+    let mut reps: Vec<Job> = Vec::new();
+    // for each round position: (representative index, is_share)
+    let mut plan: Vec<(usize, bool)> = Vec::with_capacity(round.len());
+    for job in round {
+        match rep_of.get(&job.fingerprint) {
+            Some(&ri) => plan.push((ri, true)),
+            None => {
+                let ri = reps.len();
+                rep_of.insert(job.fingerprint, ri);
+                reps.push(*job);
+                plan.push((ri, false));
+            }
+        }
+    }
+
+    // phase 2: execute representatives in parallel (results are pure
+    // functions of the job spec, so scheduling never matters)
+    let executed: Vec<(JobResult, Option<Vec<TraceRecord>>)> =
+        parallel_map(&reps, env.workers, |_, job| {
+            execute(env, job, round_no)
+        });
+
+    // phase 3: fan-in in round order
+    let mut out = Vec::with_capacity(round.len());
+    for (job, &(ri, is_share)) in round.iter().zip(&plan) {
+        let rep = &executed[ri].0;
+        if is_share {
+            out.push(JobResult {
+                job: *job,
+                round: round_no,
+                shared: true,
+                task_name: rep.task_name.clone(),
+                correct: rep.correct,
+                best_speedup: rep.best_speedup,
+                iterations: rep.iterations,
+                cost_usd: rep.cost_usd,
+                width_trace: rep.width_trace.clone(),
+                // a share does no work and takes no measurable time
+                profile_runs: 0,
+                llm_round_trips: 0,
+                measure_sims: 0,
+                wall_s: 0.0,
+            });
+        } else {
+            out.push(rep.clone());
+        }
+    }
+    let records: Vec<Vec<TraceRecord>> = executed
+        .into_iter()
+        .filter_map(|(_, recs)| recs)
+        .collect();
+    (out, records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env<'a>(tasks: &'a [TaskSpec], store: &'a Arc<TraceStore>)
+               -> ExecEnv<'a> {
+        ExecEnv {
+            tasks,
+            store,
+            mode: BatchMode::Fixed(1),
+            iterations: 12,
+            device: Device::H20,
+            llm: LlmProfile::DeepSeekV32,
+            seed: 7,
+            workers: 2,
+        }
+    }
+
+    fn hot_tasks() -> Vec<TaskSpec> {
+        let suite = crate::workload::Suite::full(1);
+        suite.tasks.into_iter().step_by(41).take(2).collect()
+    }
+
+    fn job(seq: usize, tenant: usize, task_idx: usize, fp: u64) -> Job {
+        Job { seq, tenant, priority: 0, task_idx, fingerprint: fp }
+    }
+
+    #[test]
+    fn round_pays_each_fingerprint_once_and_shares_the_rest() {
+        let tasks = hot_tasks();
+        let store = Arc::new(TraceStore::in_memory());
+        let e = env(&tasks, &store);
+        let round = vec![
+            job(0, 0, 0, 100),
+            job(1, 1, 0, 100),
+            job(2, 2, 0, 100),
+            job(3, 0, 1, 200),
+        ];
+        let (results, records) = run_round(&e, &round, 0);
+        assert_eq!(results.len(), 4);
+        let executed: Vec<&JobResult> =
+            results.iter().filter(|r| !r.shared).collect();
+        assert_eq!(executed.len(), 2); // fingerprints 100 and 200
+        // shares mirror their representative's deterministic outcome
+        assert_eq!(results[1].best_speedup, results[0].best_speedup);
+        assert_eq!(results[1].width_trace, results[0].width_trace);
+        assert!(results[1].shared);
+        assert_eq!(results[1].llm_round_trips, 0);
+        assert_eq!(results[1].measure_sims, 0);
+        assert_eq!(results[1].wall_s, 0.0);
+        // representatives did real measured work
+        assert!(results[0].wall_s > 0.0);
+        assert!(results[0].measure_sims > 0);
+        assert!(results[0].llm_round_trips > 0);
+        // one fresh trace-record batch per execution
+        assert_eq!(records.len(), 2);
+    }
+
+    #[test]
+    fn warm_round_is_pure_lookups() {
+        let tasks = hot_tasks();
+        let store = Arc::new(TraceStore::in_memory());
+        let e = env(&tasks, &store);
+        let round = vec![job(0, 0, 0, 100)];
+        let (cold, _) = run_round(&e, &round, 0);
+        assert!(cold[0].measure_sims > 0);
+        // same fingerprint, later round: the shared session caches make
+        // it a replay — zero sims, zero LLM round-trips, zero profiling
+        let (warm, recs) = run_round(&e, &vec![job(1, 1, 0, 100)], 1);
+        assert_eq!(warm[0].measure_sims, 0);
+        assert_eq!(warm[0].llm_round_trips, 0);
+        assert_eq!(warm[0].profile_runs, 0);
+        assert!(!warm[0].shared); // executed, just fully cached
+        assert!(recs.is_empty()); // pure replay appends nothing
+        // and the result bits match the cold pass
+        assert_eq!(warm[0].best_speedup.to_bits(),
+                   cold[0].best_speedup.to_bits());
+        assert_eq!(warm[0].width_trace, cold[0].width_trace);
+    }
+}

@@ -1,5 +1,13 @@
-//! Optimization service: concurrent per-kernel optimization with a
-//! batched LLM gateway (paper §4.4.1, Figure 3).
+//! *Modeled* optimization service: concurrent per-kernel optimization
+//! with a batched LLM gateway (paper §4.4.1, Figure 3).
+//!
+//! **This module is the `serve --modeled` path.** Latencies here are
+//! synthesized through [`TIME_SCALE`] to measure the pipeline's
+//! *shape* (batching efficiency, overlap, backpressure) in
+//! milliseconds — useful as a fast smoke, but the ledger is a model.
+//! The default `serve` path is [`crate::server`]: a multi-tenant job
+//! queue driving **actual** `KernelBand::optimize_sched` runs whose
+//! ledger reports measured wall-clock with no `TIME_SCALE` anywhere.
 //!
 //! The paper's wall-clock win comes from batching: serially, one
 //! iteration costs ≈13.4 min, 87% of it LLM inference (the ~8 chained

@@ -43,6 +43,10 @@ pub struct TaskRecord {
     pub task: String,
     pub difficulty: usize,
     pub naive_latency_s: f64,
+    /// Tenant namespace ("t0", "t1", …) for multi-tenant serve runs;
+    /// `None` for single-tenant history. Serialized only when present,
+    /// so pre-tenant logs keep their exact byte layout.
+    pub tenant: Option<String>,
 }
 
 /// One bandit step `(parent, strategy) -> child` with its measurement.
@@ -78,6 +82,8 @@ pub struct StepRecord {
     pub best_speedup: f64,
     /// Child execution counters when accepted (feeds φ(k) on replay).
     pub counters: Option<Counters>,
+    /// Tenant namespace (see [`TaskRecord::tenant`]).
+    pub tenant: Option<String>,
 }
 
 /// A parsed trace-log record.
@@ -104,22 +110,32 @@ fn strategy_from_json(j: Option<&Json>) -> Option<Strategy> {
     ALL_STRATEGIES.iter().copied().find(|s| s.name() == name)
 }
 
+fn tenant_from_json(j: &Json) -> Option<String> {
+    j.get("tenant").and_then(Json::as_str).map(str::to_string)
+}
+
 impl TraceRecord {
     /// Serialize as one JSONL value (sorted keys, deterministic bytes).
     pub fn to_json(&self) -> Json {
         match self {
-            TraceRecord::Task(t) => Json::obj(vec![
-                ("v", Json::num(TRACE_VERSION)),
-                ("kind", Json::str("task")),
-                ("cell", Json::str(t.cell.clone())),
-                ("device", Json::str(t.device.clone())),
-                ("llm", Json::str(t.llm.clone())),
-                ("seed", hex(t.seed)),
-                ("task_id", Json::num(t.task_id as f64)),
-                ("task", Json::str(t.task.clone())),
-                ("difficulty", Json::num(t.difficulty as f64)),
-                ("naive_latency_s", Json::num(t.naive_latency_s)),
-            ]),
+            TraceRecord::Task(t) => {
+                let mut obj = Json::obj(vec![
+                    ("v", Json::num(TRACE_VERSION)),
+                    ("kind", Json::str("task")),
+                    ("cell", Json::str(t.cell.clone())),
+                    ("device", Json::str(t.device.clone())),
+                    ("llm", Json::str(t.llm.clone())),
+                    ("seed", hex(t.seed)),
+                    ("task_id", Json::num(t.task_id as f64)),
+                    ("task", Json::str(t.task.clone())),
+                    ("difficulty", Json::num(t.difficulty as f64)),
+                    ("naive_latency_s", Json::num(t.naive_latency_s)),
+                ]);
+                if let Some(tn) = &t.tenant {
+                    obj.insert("tenant", Json::str(tn.clone()));
+                }
+                obj
+            }
             TraceRecord::Step(s) => {
                 let mut obj = Json::obj(vec![
                     ("v", Json::num(TRACE_VERSION)),
@@ -148,6 +164,9 @@ impl TraceRecord {
                 if let Some(c) = &s.counters {
                     obj.insert("counters", counters_json(c));
                 }
+                if let Some(tn) = &s.tenant {
+                    obj.insert("tenant", Json::str(tn.clone()));
+                }
                 obj
             }
         }
@@ -166,6 +185,7 @@ impl TraceRecord {
                 task: j.str_field("task").ok()?.to_string(),
                 difficulty: j.f64_field("difficulty") as usize,
                 naive_latency_s: j.f64_field("naive_latency_s"),
+                tenant: tenant_from_json(j),
             })),
             "step" => Some(TraceRecord::Step(StepRecord {
                 cell: j.str_field("cell").ok()?.to_string(),
@@ -185,6 +205,7 @@ impl TraceRecord {
                 runtime_s: j.get("runtime_s").and_then(Json::as_f64),
                 best_speedup: j.f64_field("best_speedup"),
                 counters: j.get("counters").map(counters_from_json),
+                tenant: tenant_from_json(j),
             })),
             _ => None,
         }
@@ -225,6 +246,28 @@ impl ReplaySummary {
             .filter(|r| matches!(r, TraceRecord::Step(_)))
             .count()
     }
+
+    /// Per-tenant `(label, task records, step records)` counts, sorted
+    /// by tenant label. Records without a tenant namespace (the
+    /// single-tenant history) are not listed.
+    pub fn tenant_counts(&self) -> Vec<(String, usize, usize)> {
+        let mut map: std::collections::BTreeMap<String, (usize, usize)> =
+            std::collections::BTreeMap::new();
+        for r in &self.records {
+            let tenant = match r {
+                TraceRecord::Task(t) => t.tenant.as_ref(),
+                TraceRecord::Step(s) => s.tenant.as_ref(),
+            };
+            if let Some(name) = tenant {
+                let e = map.entry(name.clone()).or_insert((0, 0));
+                match r {
+                    TraceRecord::Task(_) => e.0 += 1,
+                    TraceRecord::Step(_) => e.1 += 1,
+                }
+            }
+        }
+        map.into_iter().map(|(k, (t, s))| (k, t, s)).collect()
+    }
 }
 
 /// Replay already-parsed JSONL values (see [`replay_text`]).
@@ -261,6 +304,17 @@ pub fn replay_file(path: &std::path::Path) -> std::io::Result<ReplaySummary> {
 /// followed by its steps in iteration order.
 pub fn records_for_trace(cell: &str, device: &str, llm: &str, seed: u64,
                          trace: &Trace) -> Vec<TraceRecord> {
+    records_for_trace_tenant(cell, None, device, llm, seed, trace)
+}
+
+/// [`records_for_trace`] under a tenant namespace: every record carries
+/// the tenant label, so `trace stats` can attribute a multi-tenant
+/// serve store's history per tenant. `tenant = None` is byte-identical
+/// to the pre-tenant encoding.
+pub fn records_for_trace_tenant(cell: &str, tenant: Option<&str>,
+                                device: &str, llm: &str, seed: u64,
+                                trace: &Trace) -> Vec<TraceRecord> {
+    let tenant = tenant.map(str::to_string);
     let mut out = Vec::with_capacity(1 + trace.records.len());
     out.push(TraceRecord::Task(TaskRecord {
         cell: cell.to_string(),
@@ -271,6 +325,7 @@ pub fn records_for_trace(cell: &str, device: &str, llm: &str, seed: u64,
         task: trace.task_name.clone(),
         difficulty: trace.difficulty.level(),
         naive_latency_s: trace.naive_latency_s,
+        tenant: tenant.clone(),
     }));
     for r in &trace.records {
         let child = r.accepted.map(|id| &trace.candidates[id]);
@@ -292,6 +347,7 @@ pub fn records_for_trace(cell: &str, device: &str, llm: &str, seed: u64,
             runtime_s: child.map(|c| c.measurement.total_latency_s),
             best_speedup: r.best_speedup_so_far,
             counters: child.map(|c| c.measurement.counters),
+            tenant: tenant.clone(),
         }));
     }
     out
@@ -339,6 +395,7 @@ mod tests {
                 dram_pct: 72.5,
                 l2_pct: 30.25,
             }),
+            tenant: None,
         }
     }
 
@@ -352,6 +409,7 @@ mod tests {
             task: "matmul_0".into(),
             difficulty: 4,
             naive_latency_s: 0.031,
+            tenant: None,
         }
     }
 
@@ -374,6 +432,35 @@ mod tests {
             let parsed = crate::util::json::parse(&line).unwrap();
             assert_eq!(TraceRecord::from_json(&parsed).unwrap(), rec);
         }
+    }
+
+    #[test]
+    fn tenant_namespace_roundtrips_and_counts() {
+        let mut task = sample_task();
+        task.tenant = Some("t1".into());
+        let mut step = sample_step();
+        step.tenant = Some("t1".into());
+        let mut step0 = sample_step();
+        step0.tenant = Some("t0".into());
+        let recs = vec![
+            TraceRecord::Task(task),
+            TraceRecord::Step(step),
+            TraceRecord::Step(step0),
+            TraceRecord::Step(sample_step()), // un-namespaced history
+        ];
+        for rec in &recs {
+            let line = rec.to_json().dump();
+            let parsed = crate::util::json::parse(&line).unwrap();
+            assert_eq!(&TraceRecord::from_json(&parsed).unwrap(), rec);
+        }
+        let summary = replay_text(&to_jsonl(&recs));
+        assert_eq!(
+            summary.tenant_counts(),
+            vec![("t0".to_string(), 0, 1), ("t1".to_string(), 1, 1)]
+        );
+        // a tenant-free record serializes the pre-tenant bytes exactly
+        let plain = TraceRecord::Step(sample_step()).to_json().dump();
+        assert!(!plain.contains("tenant"));
     }
 
     #[test]

@@ -40,9 +40,10 @@
 //! DIR/profiles.jsonl   representative NCU signatures (profiler memo)
 //! DIR/service.jsonl    service-job completions (gateway bypass keys)
 //! DIR/trace.jsonl      the trace log (append-only, versioned records)
+//! DIR/tenants.jsonl    per-tenant counters (multi-tenant serve deltas)
 //! ```
 //!
-//! All five files tolerate truncated tails and unknown record versions
+//! All six files tolerate truncated tails and unknown record versions
 //! on load ([`crate::util::json::parse_lines_lossy`]).
 //!
 //! `profiles.jsonl` persists the policy's memoized representative
@@ -81,6 +82,7 @@ const PROPOSALS_FILE: &str = "proposals.jsonl";
 const PROFILES_FILE: &str = "profiles.jsonl";
 const SERVICE_FILE: &str = "service.jsonl";
 const TRACE_FILE: &str = "trace.jsonl";
+const TENANTS_FILE: &str = "tenants.jsonl";
 
 /// Serialize one persisted NCU signature as a JSONL value.
 pub(crate) fn profile_record(key: u64, sig: &HardwareSignature) -> Json {
@@ -187,8 +189,56 @@ pub struct LoadSummary {
     /// Persisted representative NCU signatures.
     pub profiles: usize,
     pub service: usize,
+    /// Distinct tenant namespaces with persisted counters.
+    pub tenants: usize,
     /// Cache/service lines skipped (corrupt or unknown version).
     pub skipped: usize,
+}
+
+/// Accumulated per-tenant counters (`tenants.jsonl`): what a tenant's
+/// serve jobs contributed to this store across sessions. Appended as
+/// deltas per run and summed on load.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantCounts {
+    /// Jobs completed under the tenant's namespace.
+    pub jobs: u64,
+    /// Bandit steps the tenant's executed jobs recorded.
+    pub steps: u64,
+    /// Representative NCU profilings the tenant's jobs recomputed
+    /// (0 for tenants served entirely from the shared caches).
+    pub profile_runs: u64,
+}
+
+#[derive(Debug, Default)]
+struct TenantRegistry {
+    /// Totals including everything loaded from disk (sorted by label).
+    totals: std::collections::BTreeMap<String, TenantCounts>,
+    /// This session's deltas, flushed by [`TraceStore::persist`].
+    dirty: std::collections::BTreeMap<String, TenantCounts>,
+}
+
+fn tenant_record(name: &str, c: &TenantCounts) -> Json {
+    Json::obj(vec![
+        ("v", Json::num(cache::CACHE_VERSION)),
+        ("tenant", Json::str(name)),
+        ("jobs", Json::num(c.jobs as f64)),
+        ("steps", Json::num(c.steps as f64)),
+        ("profile_runs", Json::num(c.profile_runs as f64)),
+    ])
+}
+
+fn tenant_from_record(j: &Json) -> Option<(String, TenantCounts)> {
+    if j.get("v").and_then(Json::as_f64) != Some(cache::CACHE_VERSION) {
+        return None;
+    }
+    Some((
+        j.str_field("tenant").ok()?.to_string(),
+        TenantCounts {
+            jobs: j.f64_field("jobs") as u64,
+            steps: j.f64_field("steps") as u64,
+            profile_runs: j.f64_field("profile_runs") as u64,
+        },
+    ))
 }
 
 /// The persistent store. Thread-safe: the experiment runner's workers
@@ -199,6 +249,8 @@ pub struct TraceStore {
     kernels: Mutex<ContentCache<Measurement>>,
     proposals: Mutex<ContentCache<Proposal>>,
     service: Mutex<ServiceCache>,
+    /// Per-tenant counters (`tenants.jsonl`; multi-tenant serve).
+    tenants: Mutex<TenantRegistry>,
     /// Representative NCU signatures (persisted; shared with the
     /// policy through [`crate::sched::SchedContext`]).
     profiles: Arc<SharedProfiles>,
@@ -226,6 +278,7 @@ impl TraceStore {
             kernels: Mutex::new(ContentCache::default()),
             proposals: Mutex::new(ContentCache::default()),
             service: Mutex::new(ServiceCache::default()),
+            tenants: Mutex::new(TenantRegistry::default()),
             profiles: Arc::new(SharedProfiles::new()),
             centroids: Arc::new(CentroidCache::new()),
             pending_log: Mutex::new(Vec::new()),
@@ -309,6 +362,26 @@ impl TraceStore {
             }
             summary.service = service.keys.len();
         }
+        {
+            let (values, corrupt) = parse_lines_lossy(&read(TENANTS_FILE)?);
+            summary.skipped += corrupt;
+            let mut tenants = store.tenants.lock().unwrap();
+            for v in &values {
+                match tenant_from_record(v) {
+                    Some((name, c)) => {
+                        let e = tenants
+                            .totals
+                            .entry(name)
+                            .or_insert_with(TenantCounts::default);
+                        e.jobs += c.jobs;
+                        e.steps += c.steps;
+                        e.profile_runs += c.profile_runs;
+                    }
+                    None => summary.skipped += 1,
+                }
+            }
+            summary.tenants = tenants.totals.len();
+        }
         store.loaded = summary;
         Ok(store)
     }
@@ -379,6 +452,33 @@ impl TraceStore {
     /// Queue trace records for the next [`TraceStore::persist`].
     pub fn append_trace(&self, records: Vec<TraceRecord>) {
         self.pending_log.lock().unwrap().extend(records);
+    }
+
+    /// Credit per-tenant work to the tenant namespace (accumulated
+    /// across sessions through `tenants.jsonl`).
+    pub fn tenant_add(&self, tenant: &str, jobs: u64, steps: u64,
+                      profile_runs: u64) {
+        let mut guard = self.tenants.lock().unwrap();
+        let reg = &mut *guard; // split-borrow totals and dirty
+        for map in [&mut reg.totals, &mut reg.dirty] {
+            let e = map
+                .entry(tenant.to_string())
+                .or_insert_with(TenantCounts::default);
+            e.jobs += jobs;
+            e.steps += steps;
+            e.profile_runs += profile_runs;
+        }
+    }
+
+    /// Accumulated per-tenant counters, sorted by tenant label.
+    pub fn tenant_totals(&self) -> Vec<(String, TenantCounts)> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .totals
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
     }
 
     pub fn kernel_count(&self) -> usize {
@@ -473,6 +573,17 @@ impl TraceStore {
             }
         }
         append(SERVICE_FILE, service_text)?;
+
+        let mut tenants_text = String::new();
+        {
+            let mut reg = self.tenants.lock().unwrap();
+            // BTreeMap iteration: label-sorted, byte-deterministic
+            for (name, c) in std::mem::take(&mut reg.dirty) {
+                tenants_text.push_str(&tenant_record(&name, &c).dump());
+                tenants_text.push('\n');
+            }
+        }
+        append(TENANTS_FILE, tenants_text)?;
         Ok(())
     }
 
@@ -591,6 +702,48 @@ mod tests {
         let text =
             std::fs::read_to_string(dir.join(PROFILES_FILE)).unwrap();
         assert_eq!(text.lines().count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tenant_counters_accumulate_across_sessions() {
+        let dir = tmp_dir("tenants");
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            store.tenant_add("t0", 2, 24, 3);
+            store.tenant_add("t1", 1, 12, 0);
+            store.tenant_add("t0", 1, 12, 0); // same session, same tenant
+            store.persist().unwrap();
+        }
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            assert_eq!(store.loaded.tenants, 2);
+            let totals = store.tenant_totals();
+            assert_eq!(totals.len(), 2);
+            assert_eq!(totals[0].0, "t0");
+            assert_eq!(
+                totals[0].1,
+                TenantCounts { jobs: 3, steps: 36, profile_runs: 3 }
+            );
+            assert_eq!(totals[1].0, "t1");
+            assert_eq!(
+                totals[1].1,
+                TenantCounts { jobs: 1, steps: 12, profile_runs: 0 }
+            );
+            // a second serve session appends deltas that sum on reload
+            store.tenant_add("t1", 1, 12, 0);
+            store.persist().unwrap();
+        }
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            let totals = store.tenant_totals();
+            assert_eq!(totals[1].1.jobs, 2);
+            // reloaded totals are not re-appended
+            store.persist().unwrap();
+        }
+        let text =
+            std::fs::read_to_string(dir.join(TENANTS_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 3); // t0+t1, then t1 delta
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -41,7 +41,15 @@ fn arbitrary_task(rng: &mut Rng, task: &str) -> TaskRecord {
         task: task.to_string(),
         difficulty: 1 + rng.below(5) as usize,
         naive_latency_s: 10f64.powf(rng.uniform_in(-6.0, -1.0)),
+        tenant: arbitrary_tenant(rng),
     }
+}
+
+/// ~⅓ of records carry a tenant namespace (multi-tenant serve logs);
+/// the rest exercise the pre-tenant byte layout.
+fn arbitrary_tenant(rng: &mut Rng) -> Option<String> {
+    let pick = rng.below(6);
+    (pick < 2).then(|| format!("t{pick}"))
 }
 
 fn arbitrary_step(rng: &mut Rng, task: &str, t: usize) -> StepRecord {
@@ -68,6 +76,7 @@ fn arbitrary_step(rng: &mut Rng, task: &str, t: usize) -> StepRecord {
         runtime_s: accepted.then(|| 10f64.powf(rng.uniform_in(-6.0, -1.0))),
         best_speedup: rng.uniform_in(1.0, 8.0),
         counters: accepted.then(|| arbitrary_counters(rng)),
+        tenant: arbitrary_tenant(rng),
     }
 }
 
@@ -121,6 +130,28 @@ fn prop_truncation_loses_only_the_torn_record() {
             records[..records.len() - 1],
             "case {case}"
         );
+    }
+}
+
+#[test]
+fn prop_tenant_counts_survive_roundtrip() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case).split("tenant-rt", 0);
+        let records = arbitrary_trace(&mut rng);
+        let a = replay_text(&to_jsonl(&records));
+        let b = replay_text(&to_jsonl(&a.records));
+        assert_eq!(a.tenant_counts(), b.tenant_counts(), "case {case}");
+        // counts agree with a direct scan of the generated records
+        let direct: usize = records
+            .iter()
+            .filter(|r| match r {
+                TraceRecord::Task(t) => t.tenant.is_some(),
+                TraceRecord::Step(s) => s.tenant.is_some(),
+            })
+            .count();
+        let counted: usize =
+            a.tenant_counts().iter().map(|(_, t, s)| t + s).sum();
+        assert_eq!(direct, counted, "case {case}");
     }
 }
 

@@ -18,7 +18,7 @@ fn tmp_dir(tag: &str) -> PathBuf {
 
 fn run_table3(iters: usize, threads: usize,
               session: Option<Arc<TraceStore>>) -> String {
-    let opts = RunOpts { threads, session, batch: 0 };
+    let opts = RunOpts { threads, session, ..RunOpts::default() };
     eval::report_opts("table3", Some(iters), &opts)
         .expect("table3 exists")
         .json

@@ -10,14 +10,16 @@ plus the suites' derived speedup fields. Entries regressing more than
 --threshold percent (default 25) are flagged.
 
 Shared-runner timings are noisy, so this is a *trend* report, not a
-gate: the script always exits 0 and the CI step that runs it is
-non-blocking. A baseline file carrying "pending": true (no numbers
-captured yet) switches the suite to record mode: current numbers are
-printed with a refresh hint instead of a diff.
+gate: the CI step that runs it is non-blocking. A baseline file
+carrying "pending": true (no numbers captured yet) cannot be diffed —
+the script prints the current numbers in record mode, flags the suite
+LOUDLY, and exits 1 so the (step-level non-blocking) CI step shows
+red instead of silently recording forever.
 
-Refreshing a baseline: download the `perf-json` artifact from a CI
-perf-smoke run on main and copy its PERF_<suite>.json over
-perf/baselines/PERF_<suite>.json (drop the "pending" flag if present).
+Refreshing a baseline: download the `baselines-refresh` artifact from
+a CI perf-smoke run on main (built by scripts/refresh_baselines.py
+with "pending": false) and commit its PERF_<suite>.json files over
+perf/baselines/. Subsequent runs diff instead of recording.
 """
 
 import json
@@ -49,21 +51,26 @@ def fmt_rate(v):
 
 
 def report_suite(name, baseline, current, threshold):
+    """Print one suite's report; returns True when the committed
+    baseline is pending (diff impossible)."""
     print(f"### {name}")
     if baseline is None:
         print("_No committed baseline — recording current numbers._")
         print()
         record(current)
-        return
+        return False
     if baseline.get("pending"):
         print(
-            "_Baseline pending (no snapshot captured yet). Current "
-            "numbers below; refresh `perf/baselines/` from this run's "
-            "`perf-json` artifact to arm the diff._"
+            "⚠️ **PENDING BASELINE — no diff performed.** The committed "
+            f"`perf/baselines/{name}` still carries `\"pending\": true`, "
+            "so every run of this suite records instead of diffing and "
+            "regressions stay invisible. Commit this run's "
+            "`baselines-refresh` artifact over `perf/baselines/` to arm "
+            "the diff. Current numbers:"
         )
         print()
         record(current)
-        return
+        return True
     base_rates = entry_rates(baseline)
     cur_rates = entry_rates(current)
     rows = []
@@ -100,6 +107,7 @@ def report_suite(name, baseline, current, threshold):
             f"more than {threshold:.0f}% vs the committed snapshot.**"
         )
         print()
+    return False
 
 
 def record(current):
@@ -141,6 +149,7 @@ def main(argv):
     if not found:
         print(f"_No PERF_*.json artifacts under {cur_dir}._")
         return 0
+    pending = 0
     for cur_path in found:
         try:
             current = json.loads(cur_path.read_text())
@@ -154,7 +163,16 @@ def main(argv):
                 baseline = json.loads(base_path.read_text())
             except (OSError, json.JSONDecodeError):
                 baseline = None
-        report_suite(cur_path.name, baseline, current, threshold)
+        if report_suite(cur_path.name, baseline, current, threshold):
+            pending += 1
+    if pending:
+        print(
+            f"**{pending} suite{'' if pending == 1 else 's'} diffed "
+            "against a pending baseline — failing loudly (the CI step "
+            "is non-blocking). Refresh `perf/baselines/` from the "
+            "`baselines-refresh` artifact.**"
+        )
+        return 1
     return 0
 
 

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Build commit-ready perf baselines from fresh PERF_*.json artifacts.
+
+Usage: refresh_baselines.py CURRENT_DIR OUT_DIR
+
+For every PERF_<suite>.json under CURRENT_DIR (the bench output the CI
+perf-smoke job just produced), writes OUT_DIR/PERF_<suite>.json with
+"pending": false and a provenance note. CI uploads OUT_DIR as the
+`baselines-refresh` artifact; committing its files over
+`perf/baselines/` arms scripts/perf_trend.py's regression diff (which
+fails loudly while a committed baseline is still pending).
+
+Exits 1 when CURRENT_DIR holds no artifacts — an empty refresh
+artifact would silently keep the baselines pending forever.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+
+def refresh(doc):
+    out = dict(doc)
+    out["pending"] = False
+    out["note"] = (
+        "Refreshed from a CI perf-smoke `perf-json` artifact by "
+        "scripts/refresh_baselines.py. Commit over perf/baselines/ to "
+        "arm the trend diff; re-refresh from a newer run to re-baseline."
+    )
+    return out
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 1
+    cur_dir, out_dir = Path(argv[0]), Path(argv[1])
+    found = sorted(cur_dir.glob("PERF_*.json"))
+    if not found:
+        print(f"error: no PERF_*.json artifacts under {cur_dir}")
+        return 1
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for path in found:
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: unreadable {path}: {e}")
+            return 1
+        target = out_dir / path.name
+        target.write_text(
+            json.dumps(refresh(doc), indent=2, sort_keys=True) + "\n"
+        )
+        print(f"refreshed {target} (pending: false)")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main(sys.argv[1:]))
+    except BrokenPipeError:
+        sys.exit(0)
