@@ -118,7 +118,7 @@ impl KernelConfig {
 }
 
 /// Outcome of measuring one candidate on the evaluation engine.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Measurement {
     /// Total latency across the task's benchmark shapes (seconds).
     pub total_latency_s: f64,
@@ -129,7 +129,7 @@ pub struct Measurement {
 }
 
 /// The raw execution counters behind φ(k) and h(k).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Counters {
     /// Registers per thread (`cuFuncGetAttribute`).
     pub regs_per_thread: f64,
@@ -157,7 +157,7 @@ pub enum Origin {
 }
 
 /// A frontier member: schedule + verification status + measurements.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Candidate {
     /// Index in the frontier (stable; frontier is append-only).
     pub id: usize,

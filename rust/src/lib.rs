@@ -42,9 +42,9 @@
 //! | [`engine`] | `EvalEngine` trait: simulated vs PJRT-real measurement |
 //! | [`runtime`] | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
 //! | [`sched`] | batched-measurement scheduling: slot lineages, profiling-bound admission, shared recluster/profile memos |
-//! | [`server`] | real-workload serving: multi-tenant job queue, worker pool over real `optimize_sched` runs, AIMD adaptive batch width |
-//! | [`service`] | modeled optimization service: batched LLM gateway + shared recluster scheduler (Fig. 3; `serve --modeled`) |
-//! | [`store`] | persistent trace store: content-addressed kernel cache, append-only trace log, cross-session warm-start |
+//! | [`server`] | serving behind the `JobSpec`/`ServeBackend` API: multi-tenant job queue, in-process worker pool, sharded supervisor with leases / checkpoint crash-recovery / preemption, AIMD adaptive batch width |
+//! | [`service`] | modeled optimization service: batched LLM gateway + shared recluster scheduler (Fig. 3; `serve --backend modeled`) |
+//! | [`store`] | persistent trace store: content-addressed kernel cache, append-only trace log, per-iteration checkpoint journal, cross-session warm-start |
 //! | [`eval`] | experiment harnesses regenerating every paper table/figure; [`eval::ExperimentRunner`] fans the grid out in parallel and emits `BENCH_*.json` artifacts |
 
 pub mod bandit;

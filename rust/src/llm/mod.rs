@@ -144,7 +144,7 @@ pub enum GenOutcome {
 }
 
 /// The transition result plus accounting.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Proposal {
     pub outcome: GenOutcome,
     /// Proposed schedule (meaningful only when `outcome == Ok`; failed

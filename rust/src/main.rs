@@ -9,9 +9,10 @@
 //!            no-profiling|llm-select|raw-profiling|no-strategy]
 //!            [--iterations N] [--seed S]
 //! kernelband pjrt [--artifacts DIR] [--budget N]
-//! kernelband serve [--tenants N] [--jobs N] [--iterations N]
-//!            [--batch N|auto] [--workers N] [--out DIR] [--store DIR]
-//!            [--modeled]
+//! kernelband serve [--backend inprocess|sharded|modeled] [--tenants N]
+//!            [--jobs N] [--iterations N] [--batch N|auto] [--workers N]
+//!            [--fault kill-after=K,preempt=P,seed=S]
+//!            [--out DIR] [--store DIR]
 //! kernelband trace <record|replay|stats> …
 //! kernelband list [--subset]
 //! ```
@@ -50,12 +51,13 @@ use kernelband::policy::{KernelBand, PolicyConfig, PolicyMode};
 use kernelband::rng::Rng;
 use kernelband::runtime::Runtime;
 use kernelband::sched::BatchMode;
-use kernelband::server::{RealServe, RealServeConfig};
-use kernelband::service::OptimizationService;
+use kernelband::server::{
+    FaultPlan, InProcess, JobSpec, Modeled, ServeBackend, ServeRequest,
+    Sharded,
+};
 use kernelband::store::log::records_for_trace;
 use kernelband::store::wrap::{CachedEngine, CachedLlm};
 use kernelband::store::{log as trace_log, warm::WarmIndex, TraceStore};
-use kernelband::util::json::Json;
 use kernelband::workload::Suite;
 
 const USAGE: &str = "\
@@ -86,22 +88,35 @@ USAGE:
       [--mode full|no-clustering|no-profiling|llm-select|raw-profiling|no-strategy]
       [--iterations N] [--seed S]
   kernelband pjrt [--artifacts DIR] [--budget N]
-  kernelband serve [--tenants N] [--jobs N] [--iterations N]
-      [--batch N|auto] [--workers N] [--variety N] [--seed S]
-      [--queue-cap N] [--quota N] [--device D] [--llm L]
-      [--out DIR] [--store DIR] [--modeled]
-      The default path is REAL: a multi-tenant job queue (admission
-      control + per-tenant fairness) drives actual KernelBand
-      optimization runs over suite tasks through a worker pool; all
-      tenants share the session caches, so matching job fingerprints
-      are paid once per round and resume warm afterwards. The ledger
-      reports measured wall-clock (no TIME_SCALE). --jobs is jobs per
-      tenant. --batch auto enables the AIMD adaptive batch width
-      (deterministic width sequence; artifacts byte-identical for any
-      --workers and cold/warm --store).
-      --modeled restores the TimeModel-based simulation (fast smoke:
-      batched LLM gateway + modeled recluster scheduler; --jobs is the
-      total job count there and --batch must be numeric).
+  kernelband serve [--backend inprocess|sharded|modeled] [--tenants N]
+      [--jobs N] [--iterations N] [--batch N|auto] [--workers N]
+      [--variety N] [--seed S] [--queue-cap N] [--quota N]
+      [--device D] [--llm L] [--fault kill-after=K,preempt=P,seed=S]
+      [--out DIR] [--store DIR]
+      All backends run behind one job API (JobSpec → ServeRequest →
+      ServeBackend). The default backend is REAL and in-process: a
+      multi-tenant job queue (admission control + per-tenant fairness)
+      drives actual KernelBand optimization runs over suite tasks
+      through a worker pool; all tenants share the session caches, so
+      matching job fingerprints are paid once per round and resume
+      warm afterwards. The ledger reports measured wall-clock (no
+      TIME_SCALE). --jobs is jobs per tenant. --batch auto enables
+      the AIMD adaptive batch width (deterministic width sequence;
+      artifacts byte-identical for any --workers, any real backend
+      and cold/warm --store).
+      --backend sharded runs the same jobs under a lease-holding
+      supervisor: worker shards checkpoint every iteration into the
+      store journal, a killed shard's job RESUMES from its last
+      iteration boundary (never restarts), and preemption parks the
+      lease at a boundary. --fault kill-after=K,preempt=P,seed=S
+      injects deterministic faults (sharded only); recovered runs are
+      byte-identical to uninterrupted ones.
+      --backend modeled is the TimeModel-based simulation (fast
+      smoke: batched LLM gateway + modeled recluster scheduler;
+      --jobs is the total job count there and --batch must be
+      numeric).
+      Deprecated spellings (still honored): --modeled ==
+      --backend modeled; --real == --backend inprocess.
   kernelband trace record --store DIR [--task SUBSTR] [--device D]
       [--llm L] [--iterations N] [--seed S]
       run one optimization through the store and append its trace.
@@ -381,173 +396,108 @@ fn pjrt(artifacts: &str, budget: usize) -> Result<()> {
     Ok(())
 }
 
-/// The real serving path (default): multi-tenant queue → worker pool →
-/// actual `optimize_sched` runs sharing the session store. Measured
-/// wall-clock only — no `TIME_SCALE` anywhere here.
-fn serve_real(config: RealServeConfig, out: Option<&str>,
-              store_dir: Option<&str>) -> Result<()> {
-    let store = Arc::new(match store_dir {
+/// `--fault kill-after=K,preempt=P,seed=S` — comma-separated
+/// `key=value` parts, each optional. Only `--backend sharded` honors a
+/// non-empty plan (the other backends refuse it).
+fn parse_fault(s: &str) -> Result<FaultPlan> {
+    let mut plan = FaultPlan::default();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (key, value) = part.split_once('=').ok_or_else(|| {
+            anyhow!("--fault: expected key=value, got {part:?}")
+        })?;
+        match key {
+            "kill-after" => {
+                plan.kill_after = Some(value.parse().map_err(|_| {
+                    anyhow!("--fault kill-after: bad number {value:?}")
+                })?);
+            }
+            "preempt" => {
+                plan.preempt_prob = value.parse().map_err(|_| {
+                    anyhow!("--fault preempt: bad probability {value:?}")
+                })?;
+                if !(0.0..=1.0).contains(&plan.preempt_prob) {
+                    bail!("--fault preempt: need 0 <= P <= 1");
+                }
+            }
+            "seed" => {
+                plan.seed = value.parse().map_err(|_| {
+                    anyhow!("--fault seed: bad number {value:?}")
+                })?;
+            }
+            other => bail!(
+                "--fault: unknown key {other:?} \
+                 (expected kill-after, preempt, seed)"
+            ),
+        }
+    }
+    Ok(plan)
+}
+
+/// Session store for the real serve backends: they always need one
+/// (in-memory when `--store` is absent) so tenants share caches.
+fn open_serve_store(store_dir: Option<&str>) -> Result<Arc<TraceStore>> {
+    Ok(Arc::new(match store_dir {
         Some(dir) => TraceStore::open(Path::new(dir))
             .with_context(|| format!("opening store {dir:?}"))?,
-        // storeless runs still share one in-memory session store
-        // across tenants (cross-tenant dedup needs it)
         None => TraceStore::in_memory(),
-    });
-    let report = RealServe::new(config).run(&store);
-    let cfg = &report.config;
-    outln!(
-        "serve[real]: {} tenants x {} jobs x {} iters  batch {}  \
-         device {}  llm {}",
-        cfg.tenants,
-        cfg.jobs_per_tenant,
-        cfg.iterations,
-        cfg.batch.label(),
-        cfg.device.name(),
-        cfg.llm.spec().name,
-    );
-    outln!(
-        "queue: admitted={} rejected={}  rounds={} executions={} \
-         dedup_shares={}",
-        report.admitted,
-        report.rejected,
-        report.rounds,
-        report.executions,
-        report.dedup_shares,
-    );
-    outln!(
-        "wall: {:.4}s measured end-to-end  {:.4}s summed over executed \
-         jobs  centroid memo {} hits / {} misses",
-        report.wall_s,
-        report.job_wall_s(),
-        report.centroid_hits,
-        report.centroid_misses,
-    );
-    for t in &report.tenants {
-        outln!(
-            "tenant t{}: submitted={} admitted={} rejected={} \
-             completed={} shared={} profile_runs={} llm_round_trips={} \
-             measure_sims={} wall={:.4}s{}",
-            t.tenant,
-            t.submitted,
-            t.admitted,
-            t.rejected,
-            t.completed,
-            t.shared,
-            t.profile_runs,
-            t.llm_round_trips,
-            t.measure_sims,
-            t.wall_s,
-            if t.is_warm() { " [warm]" } else { "" },
-        );
+    }))
+}
+
+/// Run one serve request through the chosen backend and write the
+/// artifacts: BENCH_serve.json (deterministic, byte-compared by CI),
+/// SERVE_LEDGER.json (measured) and SUPERVISOR_LEDGER.json (sharded
+/// lease counters + event log).
+fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
+             out: Option<&str>, store_dir: Option<&str>) -> Result<()> {
+    let modeled = backend.name() == "modeled";
+    let store = if modeled {
+        // the modeled simulation runs storeless unless --store is given
+        open_session(store_dir, None)?
+    } else {
+        Some(open_serve_store(store_dir)?)
+    };
+    let outcome = backend.run(req, store.as_ref())?;
+    for line in &outcome.lines {
+        outln!("{line}");
     }
-    outln!("[store] {}", store.stats_line());
+    if !modeled {
+        if let Some(s) = &store {
+            outln!("[store] {}", s.stats_line());
+        }
+    }
     if let Some(dir) = out {
         // deterministic section rides the BENCH_<name>.json convention
-        // (byte-compared by CI); the full measured ledger is a separate
-        // uploaded artifact
+        // (byte-compared by CI); the measured ledgers are separate
+        // uploaded artifacts
         let artifact = ReproReport {
             name: "serve".into(),
             text: String::new(),
-            json: report.deterministic_json(),
+            json: outcome.deterministic,
         };
         let path = artifact.write_artifact(Path::new(dir))?;
         outln!("[artifact] {}", path.display());
-        let ledger_path = Path::new(dir).join("SERVE_LEDGER.json");
-        std::fs::write(&ledger_path, report.ledger_json().pretty() + "\n")
-            .with_context(|| {
-                format!("writing {}", ledger_path.display())
-            })?;
-        outln!("[ledger] {}", ledger_path.display());
+        if let Some(ledger) = &outcome.ledger {
+            let p = Path::new(dir).join("SERVE_LEDGER.json");
+            std::fs::write(&p, ledger.pretty() + "\n")
+                .with_context(|| format!("writing {}", p.display()))?;
+            outln!("[ledger] {}", p.display());
+        }
+        if let Some(sup) = &outcome.supervisor {
+            let p = Path::new(dir).join("SUPERVISOR_LEDGER.json");
+            std::fs::write(&p, sup.pretty() + "\n")
+                .with_context(|| format!("writing {}", p.display()))?;
+            outln!("[supervisor] {}", p.display());
+        }
     }
     if store_dir.is_some() {
-        store.persist().context("persisting store")?;
-        outln!("[store] tenant namespaces + traces persisted");
-    }
-    Ok(())
-}
-
-/// The modeled service (`--modeled`): TimeModel + scaled sleeps, kept
-/// for fast pipeline-shape smokes.
-fn serve_modeled(jobs: usize, iterations: usize, batch: usize,
-                 out: Option<&str>, store_dir: Option<&str>)
-                 -> Result<()> {
-    let session = open_session(store_dir, None)?;
-    let mut service = OptimizationService::default();
-    service.batch = batch.max(1);
-    let report = service.run_with_store(
-        jobs,
-        iterations,
-        session.as_deref(),
-    );
-    outln!(
-        "service: {} jobs x {} iterations  wall {:.1}s (modeled)  \
-         serial-equivalent {:.1}s  batching speedup {:.1}x",
-        jobs,
-        iterations,
-        report.wall_model_s,
-        report.serial_equivalent_s,
-        report.batching_speedup()
-    );
-    outln!(
-        "gateway: {} requests in {} batches (max batch {})",
-        report.gateway_requests, report.gateway_batches,
-        report.gateway_max_batch
-    );
-    outln!(
-        "scheduler: {} recluster requests in {} rounds  warm_hits={} \
-         dedup_shares={} saved {:.1}s (modeled)",
-        report.sched_requests,
-        report.sched_rounds,
-        report.sched_warm_hits,
-        report.sched_dedup_shares,
-        report.sched_saved_model_s
-    );
-    if session.is_some() {
-        outln!("gateway_bypassed={}", report.gateway_bypassed);
-    }
-    if let Some(dir) = out {
-        let mut json = Json::obj(vec![
-            ("schema_version", Json::num(1.0)),
-            ("experiment", Json::str("serve")),
-            ("jobs", Json::num(jobs as f64)),
-            ("iterations", Json::num(iterations as f64)),
-            ("batch", Json::num(service.batch as f64)),
-            ("wall_model_s", Json::num(report.wall_model_s)),
-            ("serial_equivalent_s", Json::num(report.serial_equivalent_s)),
-            ("batching_speedup", Json::num(report.batching_speedup())),
-            ("gateway_requests", Json::num(report.gateway_requests as f64)),
-            ("gateway_batches", Json::num(report.gateway_batches as f64)),
-            ("gateway_max_batch", Json::num(report.gateway_max_batch as f64)),
-            ("sched_requests", Json::num(report.sched_requests as f64)),
-            ("sched_rounds", Json::num(report.sched_rounds as f64)),
-            ("sched_warm_hits", Json::num(report.sched_warm_hits as f64)),
-            (
-                "sched_dedup_shares",
-                Json::num(report.sched_dedup_shares as f64),
-            ),
-            (
-                "sched_saved_model_s",
-                Json::num(report.sched_saved_model_s),
-            ),
-        ]);
-        // only present with a store, so storeless artifacts keep their
-        // pre-store byte layout
-        if session.is_some() {
-            json.insert(
-                "gateway_bypassed",
-                Json::num(report.gateway_bypassed as f64),
-            );
+        if let Some(s) = &store {
+            s.persist().context("persisting store")?;
+            if modeled {
+                outln!("[store] service jobs recorded; dir persisted");
+            } else {
+                outln!("[store] tenant namespaces + traces persisted");
+            }
         }
-        // reuse the repro artifact convention (BENCH_<name>.json,
-        // pretty + trailing newline) instead of duplicating it here
-        let artifact =
-            ReproReport { name: "serve".into(), text: String::new(), json };
-        let path = artifact.write_artifact(Path::new(dir))?;
-        outln!("[artifact] {}", path.display());
-    }
-    if let Some(store) = &session {
-        store.persist().context("persisting store")?;
-        outln!("[store] service jobs recorded; dir persisted");
     }
     Ok(())
 }
@@ -825,42 +775,77 @@ fn main() -> Result<()> {
         "serve" => {
             let args = Args::parse(rest, &["modeled", "real"])?;
             let batch = parse_batch(args.get("batch").unwrap_or("1"))?;
+            let mut backend_name =
+                args.get("backend").unwrap_or("inprocess").to_string();
+            // compat shims for the pre-backend spellings
             if args.has("modeled") {
-                let fixed = match batch {
-                    BatchMode::Fixed(n) => n.max(1),
-                    BatchMode::Adaptive { .. } => bail!(
-                        "--batch auto needs the real serve path \
-                         (drop --modeled)"
+                eprintln!(
+                    "[deprecated] --modeled is deprecated; \
+                     use --backend modeled"
+                );
+                backend_name = "modeled".to_string();
+            }
+            if args.has("real") {
+                eprintln!(
+                    "[deprecated] --real is deprecated; \
+                     --backend inprocess is the default"
+                );
+                backend_name = "inprocess".to_string();
+            }
+            let fault = match args.get("fault") {
+                Some(spec) => parse_fault(spec)?,
+                None => FaultPlan::default(),
+            };
+            let req = if backend_name == "modeled" {
+                // modeled: --jobs is the total job count, all tenant 0
+                let jobs = args.get_usize("jobs", 16)?;
+                let iterations = args.get_usize("iterations", 3)?;
+                ServeRequest {
+                    jobs: (0..jobs)
+                        .map(|_| {
+                            JobSpec::new(0, 0)
+                                .iterations(iterations)
+                                .batch(batch)
+                        })
+                        .collect(),
+                    fault,
+                    ..ServeRequest::default()
+                }
+            } else {
+                let mut req = ServeRequest::grid(
+                    args.get_usize("tenants", 2)?,
+                    args.get_usize("jobs", 3)?,
+                    args.get_usize("iterations", 12)?,
+                    batch,
+                    args.get_usize("variety", 2)?,
+                    parse_device(args.get("device").unwrap_or("h20"))?,
+                    parse_llm(args.get("llm").unwrap_or("deepseek"))?,
+                    args.get_u64("seed", 7)?,
+                );
+                req.workers = args.get_usize("workers", 0)?;
+                req.queue_capacity =
+                    args.get_usize("queue-cap", usize::MAX)?;
+                req.per_tenant_quota =
+                    args.get_usize("quota", usize::MAX)?;
+                req.fault = fault;
+                req
+            };
+            let backend: Box<dyn ServeBackend> =
+                match backend_name.as_str() {
+                    "inprocess" => Box::new(InProcess),
+                    "sharded" => Box::new(Sharded),
+                    "modeled" => Box::new(Modeled),
+                    other => bail!(
+                        "unknown backend {other:?} \
+                         (inprocess, sharded, modeled)\n{USAGE}"
                     ),
                 };
-                serve_modeled(
-                    args.get_usize("jobs", 16)?,
-                    args.get_usize("iterations", 3)?,
-                    fixed,
-                    args.get("out"),
-                    args.get("store"),
-                )
-            } else {
-                let config = RealServeConfig {
-                    tenants: args.get_usize("tenants", 2)?,
-                    jobs_per_tenant: args.get_usize("jobs", 3)?,
-                    iterations: args.get_usize("iterations", 12)?,
-                    batch,
-                    task_variety: args.get_usize("variety", 2)?,
-                    workers: args.get_usize("workers", 0)?,
-                    round_max: 0,
-                    queue_capacity: args
-                        .get_usize("queue-cap", usize::MAX)?,
-                    per_tenant_quota: args
-                        .get_usize("quota", usize::MAX)?,
-                    device: parse_device(
-                        args.get("device").unwrap_or("h20"),
-                    )?,
-                    llm: parse_llm(args.get("llm").unwrap_or("deepseek"))?,
-                    seed: args.get_u64("seed", 7)?,
-                };
-                serve_real(config, args.get("out"), args.get("store"))
-            }
+            serve_run(
+                backend.as_ref(),
+                &req,
+                args.get("out"),
+                args.get("store"),
+            )
         }
         "trace" => trace_cmd(rest),
         "list" => {

@@ -54,6 +54,7 @@
 //! `--threads N` and cold/warm store.
 
 pub mod frontier;
+pub mod resume;
 
 use crate::bandit::{softmax_kernel_pick_in_place, ArmStats, MaskedUcb,
                     RewardRecord};
@@ -64,6 +65,7 @@ use crate::kernel::{Candidate, KernelConfig, Measurement, Origin};
 use crate::llm::{LlmBackend, PromptMode, Proposal, ProposalRequest};
 use crate::metrics::TaskOutcome;
 use crate::policy::frontier::{nearest_centroid, ClusterState, Frontier};
+use crate::policy::resume::{Checkpoint, RunCtl, SchedRun, SlotCheckpoint};
 use crate::profiler::{HardwareSignature, Profiler, THETA_SAT};
 use crate::rng::Rng;
 use crate::sched::adaptive::AimdController;
@@ -146,7 +148,7 @@ impl PolicyConfig {
 }
 
 /// What happened at one iteration (the trace the eval harnesses mine).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct IterationRecord {
     pub t: usize,
     pub cluster: usize,
@@ -180,7 +182,7 @@ pub struct IterationRecord {
 }
 
 /// Full optimization trace for one task.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Trace {
     pub task_id: usize,
     pub task_name: String,
@@ -381,6 +383,49 @@ impl KernelBand {
         warm: Option<&TaskWarmStart>,
         ctx: &SchedContext,
     ) -> Trace {
+        self.optimize_ctl(task, engine, llm, root, warm, ctx,
+                          &mut RunCtl::default())
+            .trace
+    }
+
+    /// [`KernelBand::optimize_sched`] under external run control
+    /// ([`resume::RunCtl`]): a checkpoint prefix to replay, an optional
+    /// per-iteration checkpoint sink, and an optional interruption
+    /// probe. The default control reproduces `optimize_sched` bit for
+    /// bit (the frozen-legacy equivalence in `rust/tests/prop_sched.rs`
+    /// pins this transitively).
+    ///
+    /// ## Replay (§Resume)
+    ///
+    /// Iterations `1..=ctl.resume.len()` substitute the recorded
+    /// strategy pick (LLM-selection mode only), per-slot proposals and
+    /// per-slot measurements for the live LLM/engine calls; every
+    /// derived structure (frontier, clustering, arm statistics, AIMD
+    /// width state) is rebuilt by re-running the deterministic parts of
+    /// the loop. Replayed iterations consume **zero** engine or LLM
+    /// work, and because split-RNG streams are position-independent,
+    /// skipping their draws never shifts the live iterations that
+    /// follow — the resumed trace is bit-identical to an uninterrupted
+    /// run's.
+    ///
+    /// ## Interruption
+    ///
+    /// Before each *live* iteration, `ctl.interrupt` is probed with the
+    /// iteration index; `true` ends the run at that boundary with
+    /// `completed = false` and `next_t` pointing at the unexecuted
+    /// iteration. Combined with the sink's checkpoints this is the
+    /// serving layer's kill/preemption mechanism: park the checkpoints,
+    /// resume later from the exact boundary.
+    pub fn optimize_ctl<E: EvalEngine, L: LlmBackend>(
+        &self,
+        task: &TaskSpec,
+        engine: &E,
+        llm: &L,
+        root: &Rng,
+        warm: Option<&TaskWarmStart>,
+        ctx: &SchedContext,
+        ctl: &mut RunCtl<'_>,
+    ) -> SchedRun {
         let cfg = &self.config;
         // §Batch width: the controller is a pure state machine over the
         // pinned slot-order prune counts — Fixed(n) never moves, and
@@ -506,8 +551,39 @@ impl KernelBand {
         }
 
         for t in 1..=cfg.iterations {
-            // the width this iteration plans (constant in Fixed mode)
+            // §Resume: an iteration covered by the checkpoint prefix
+            // replays its recorded effects instead of calling the
+            // LLM/engine; only live iterations probe the interrupt.
+            let ck: Option<&Checkpoint> = ctl.resume.get(t - 1);
+            if ck.is_none() {
+                if let Some(stop) = ctl.interrupt {
+                    if stop(t) {
+                        return SchedRun {
+                            trace: Trace {
+                                task_id: task.id,
+                                task_name: task.name.clone(),
+                                difficulty: task.difficulty,
+                                candidates,
+                                records,
+                                best_id,
+                                naive_latency_s,
+                                profile_cost_s: profiler.total_cost_s,
+                                profile_runs: profiler.misses,
+                            },
+                            completed: false,
+                            next_t: t,
+                        };
+                    }
+                }
+            }
+            // the width this iteration plans (constant in Fixed mode);
+            // on replay the controller re-derives the recorded width
+            // from the replayed outcome counts
             let batch = width_ctl.width();
+            debug_assert!(
+                ck.map_or(true, |c| c.t == t && c.slots.len() == batch),
+                "checkpoint {t} does not match the re-derived width"
+            );
             // --- lines 6–10: periodic clustering & representative profiling
             let may_cluster = !freeform
                 && t % cfg.recluster_every == 0
@@ -653,8 +729,13 @@ impl KernelBand {
                     (ci, Some(s), PromptMode::Strategy(s))
                 }
                 PolicyMode::LlmStrategySelection => {
-                    let s = llm
-                        .select_strategy(task, &mut rng.split("sel", t as u64));
+                    // replay: the strategy came from an LLM round-trip,
+                    // so it is the checkpoint's to dictate
+                    let s = match ck.and_then(|c| c.strategy) {
+                        Some(s) => s,
+                        None => llm.select_strategy(
+                            task, &mut rng.split("sel", t as u64)),
+                    };
                     pick_pool.clear();
                     pick_pool.extend(
                         (0..state.clusters())
@@ -717,19 +798,25 @@ impl KernelBand {
                         pool[pick]
                     }
                 };
-                // generative transition (line 18)
+                // generative transition (line 18); on replay the
+                // recorded proposal stands in for the LLM call
                 let parent_cfg = candidates[parent_idx].config;
-                let req = ProposalRequest {
-                    task,
-                    parent: &parent_cfg,
-                    mode: prompt_mode,
-                    sim: engine.gpu(),
-                    iterative: true,
+                let proposal = match ck {
+                    Some(c) => c.slots[b].proposal.clone(),
+                    None => {
+                        let req = ProposalRequest {
+                            task,
+                            parent: &parent_cfg,
+                            mode: prompt_mode,
+                            sim: engine.gpu(),
+                            iterative: true,
+                        };
+                        llm.propose(
+                            &req,
+                            &mut sched_batch::slot_rng(&rng, "gen", t, b),
+                        )
+                    }
                 };
-                let proposal = llm.propose(
-                    &req,
-                    &mut sched_batch::slot_rng(&rng, "gen", t, b),
-                );
                 slot_verdict.push(verify_outcome(proposal.outcome));
                 slot_parent.push(parent_idx);
                 slot_proposal.push(proposal);
@@ -765,31 +852,68 @@ impl KernelBand {
             }
 
             // --- lines 19–20, fused: one engine call measures every
-            // admitted slot — the shape loop runs once per batch
-            m_cfgs.clear();
-            m_rngs.clear();
-            m_slot.clear();
-            for b in 0..batch {
-                if admitted[b] {
-                    m_cfgs.push(slot_proposal[b].config);
-                    m_rngs.push(sched_batch::slot_rng(&rng, "m", t, b));
-                    m_slot.push(b);
-                }
-            }
+            // admitted slot — the shape loop runs once per batch. On
+            // replay the checkpointed measurements stand in wholesale:
+            // admission was re-derived above and must agree with what
+            // the recording run measured (`measured` is `Some` iff the
+            // slot was admitted).
             slot_meas.clear();
             slot_meas.resize(batch, None);
-            if m_cfgs.len() == 1 {
-                // degenerate single-survivor batch (always the case at
-                // batch = 1): the direct `measure` call is bit-identical
-                // by the `measure_batch` contract and keeps the legacy
-                // single-candidate path's allocation profile
-                let m = engine.measure(task, &m_cfgs[0], &mut m_rngs[0]);
-                slot_meas[m_slot[0]] = Some(m);
-            } else if !m_cfgs.is_empty() {
-                let measured =
-                    engine.measure_batch(task, &m_cfgs, &mut m_rngs);
-                for (&b, m) in m_slot.iter().zip(measured) {
-                    slot_meas[b] = Some(m);
+            if let Some(c) = ck {
+                for b in 0..batch {
+                    debug_assert_eq!(
+                        admitted[b],
+                        c.slots[b].measured.is_some(),
+                        "replayed admission diverged at t={t} slot {b}"
+                    );
+                    slot_meas[b] = c.slots[b].measured.clone();
+                }
+            } else {
+                m_cfgs.clear();
+                m_rngs.clear();
+                m_slot.clear();
+                for b in 0..batch {
+                    if admitted[b] {
+                        m_cfgs.push(slot_proposal[b].config);
+                        m_rngs.push(sched_batch::slot_rng(&rng, "m", t, b));
+                        m_slot.push(b);
+                    }
+                }
+                if m_cfgs.len() == 1 {
+                    // degenerate single-survivor batch (always the case
+                    // at batch = 1): the direct `measure` call is
+                    // bit-identical by the `measure_batch` contract and
+                    // keeps the legacy single-candidate path's
+                    // allocation profile
+                    let m =
+                        engine.measure(task, &m_cfgs[0], &mut m_rngs[0]);
+                    slot_meas[m_slot[0]] = Some(m);
+                } else if !m_cfgs.is_empty() {
+                    let measured =
+                        engine.measure_batch(task, &m_cfgs, &mut m_rngs);
+                    for (&b, m) in m_slot.iter().zip(measured) {
+                        slot_meas[b] = Some(m);
+                    }
+                }
+            }
+
+            // §Resume capture: everything below this point is a pure
+            // function of (slot_proposal, slot_meas, loop state), so a
+            // checkpoint taken here fully describes the iteration
+            // (acceptance consumes slot_meas destructively).
+            if ck.is_none() {
+                if let Some(sink) = ctl.sink.as_mut() {
+                    let fresh = Checkpoint {
+                        t,
+                        strategy,
+                        slots: (0..batch)
+                            .map(|b| SlotCheckpoint {
+                                proposal: slot_proposal[b].clone(),
+                                measured: slot_meas[b].clone(),
+                            })
+                            .collect(),
+                    };
+                    sink(&fresh);
                 }
             }
 
@@ -889,16 +1013,20 @@ impl KernelBand {
             width_ctl.observe(batch - 1, spec_wasted);
         }
 
-        Trace {
-            task_id: task.id,
-            task_name: task.name.clone(),
-            difficulty: task.difficulty,
-            candidates,
-            records,
-            best_id,
-            naive_latency_s,
-            profile_cost_s: profiler.total_cost_s,
-            profile_runs: profiler.misses,
+        SchedRun {
+            trace: Trace {
+                task_id: task.id,
+                task_name: task.name.clone(),
+                difficulty: task.difficulty,
+                candidates,
+                records,
+                best_id,
+                naive_latency_s,
+                profile_cost_s: profiler.total_cost_s,
+                profile_runs: profiler.misses,
+            },
+            completed: true,
+            next_t: cfg.iterations + 1,
         }
     }
 }
@@ -1166,6 +1294,107 @@ mod tests {
             assert!(r.batch_pruned <= wasted);
             ctl.observe(r.batch_width - 1, wasted);
         }
+    }
+
+    #[test]
+    fn interrupted_runs_resume_bit_identically_at_every_boundary() {
+        // Uninterrupted reference run, collecting its checkpoints.
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+        let mk = || {
+            let mut cfg = PolicyConfig::default();
+            cfg.iterations = 12;
+            KernelBand::new(cfg)
+        };
+        let ctx = crate::sched::SchedContext::with_mode(
+            BatchMode::Adaptive { min: 1, max: 4 },
+        );
+        let task = &suite.tasks[4];
+        let full = mk().optimize_sched(
+            task, &engine, &llm, &Rng::new(9), None, &ctx,
+        );
+        // Kill at every boundary K (0 = before the first iteration),
+        // then resume from the checkpoints the killed attempt emitted.
+        for k in 0..=12usize {
+            let mut cks: Vec<Checkpoint> = Vec::new();
+            let stop = move |t: usize| t > k;
+            let run = {
+                let mut sink = |c: &Checkpoint| cks.push(c.clone());
+                let mut ctl = RunCtl {
+                    resume: &[],
+                    sink: Some(&mut sink),
+                    interrupt: Some(&stop),
+                };
+                mk().optimize_ctl(
+                    task, &engine, &llm, &Rng::new(9), None, &ctx,
+                    &mut ctl,
+                )
+            };
+            assert_eq!(cks.len(), k);
+            if k == 12 {
+                assert!(run.completed);
+                assert_eq!(run.trace, full);
+                continue;
+            }
+            assert!(!run.completed);
+            assert_eq!(run.next_t, k + 1);
+            assert_eq!(run.trace.records.len(), k);
+            // resume replays the prefix and finishes live — the trace
+            // must be bit-identical to the uninterrupted run's
+            let resumed = mk().optimize_ctl(
+                task, &engine, &llm, &Rng::new(9), None, &ctx,
+                &mut RunCtl::resuming(&cks),
+            );
+            assert!(resumed.completed);
+            assert_eq!(resumed.next_t, 13);
+            assert_eq!(resumed.trace, full);
+        }
+    }
+
+    #[test]
+    fn replayed_checkpoints_match_recapture() {
+        // A resume that also sinks must re-emit nothing for replayed
+        // iterations and exactly the live tail's checkpoints.
+        let suite = Suite::full(1);
+        let engine = SimEngine::new(Device::H20);
+        let llm = SurrogateLlm::new(LlmProfile::DeepSeekV32);
+        let mk = || {
+            let mut cfg = PolicyConfig::default();
+            cfg.iterations = 10;
+            KernelBand::new(cfg)
+        };
+        let ctx = crate::sched::SchedContext::with_batch(2);
+        let task = &suite.tasks[2];
+        let mut all: Vec<Checkpoint> = Vec::new();
+        {
+            let mut sink = |c: &Checkpoint| all.push(c.clone());
+            let mut ctl = RunCtl {
+                resume: &[],
+                sink: Some(&mut sink),
+                interrupt: None,
+            };
+            mk().optimize_ctl(
+                task, &engine, &llm, &Rng::new(21), None, &ctx,
+                &mut ctl,
+            );
+        }
+        assert_eq!(all.len(), 10);
+        let (head, tail) = all.split_at(6);
+        let mut re: Vec<Checkpoint> = Vec::new();
+        {
+            let mut sink = |c: &Checkpoint| re.push(c.clone());
+            let mut ctl = RunCtl {
+                resume: head,
+                sink: Some(&mut sink),
+                interrupt: None,
+            };
+            mk().optimize_ctl(
+                task, &engine, &llm, &Rng::new(21), None, &ctx,
+                &mut ctl,
+            );
+        }
+        assert_eq!(re.as_slice(), tail);
     }
 
     #[test]

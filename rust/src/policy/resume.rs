@@ -1,0 +1,92 @@
+//! Mid-run checkpoint/resume state for [`super::KernelBand::optimize_ctl`].
+//!
+//! The bandit loop is deterministic given its inputs *except* for three
+//! external effects per iteration: the LLM strategy pick (only in
+//! [`super::PolicyMode::LlmStrategySelection`]), the per-slot LLM
+//! proposals, and the per-slot engine measurements. A [`Checkpoint`]
+//! records exactly those three, captured at the iteration boundary
+//! *after* measurement and *before* acceptance. Replaying a prefix of
+//! checkpoints through `optimize_ctl` reconstructs every derived
+//! structure — frontier, clusters, arm statistics, AIMD width state,
+//! best-candidate chain — without a single engine or LLM call, because
+//! everything else the loop does is a pure function of (config, seed,
+//! recorded effects).
+//!
+//! Replay is sound because the split RNG ([`crate::rng::Rng`]) derives
+//! a fresh independent stream per `(label, t, slot)` lineage: skipping
+//! the `"sel"`/`"gen"`/`"m"` draws of a replayed iteration never shifts
+//! the position of any other stream, so the live iterations that follow
+//! resume on exactly the draws the uninterrupted run would have used.
+//! That is the contract behind the serving layer's crash-recovery
+//! guarantee: a killed worker's job, resumed from its checkpoints,
+//! produces a [`super::Trace`] bit-identical to an uninterrupted run.
+
+use crate::kernel::Measurement;
+use crate::llm::Proposal;
+use crate::policy::Trace;
+use crate::strategy::Strategy;
+
+/// One batch slot's externally-sourced effects: the proposal the LLM
+/// returned and, when the slot was admitted past the profiling bound,
+/// its measurement. `measured` is `Some` iff the slot was admitted —
+/// admission itself is re-derived on replay and cross-checked.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotCheckpoint {
+    pub proposal: Proposal,
+    pub measured: Option<Measurement>,
+}
+
+/// Everything iteration `t` consumed from outside the deterministic
+/// loop. A run interrupted after iteration `K` is fully described by
+/// its first `K` checkpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// 1-based iteration index (matches [`super::IterationRecord::t`]).
+    pub t: usize,
+    /// Strategy applied this iteration; replayed verbatim in
+    /// [`super::PolicyMode::LlmStrategySelection`] (where it came from
+    /// an LLM round-trip), re-derived and ignored in the UCB modes.
+    pub strategy: Option<Strategy>,
+    /// Per-slot effects, indexed by batch slot (len == planned width).
+    pub slots: Vec<SlotCheckpoint>,
+}
+
+/// Run control for [`super::KernelBand::optimize_ctl`]: a checkpoint
+/// prefix to replay, an optional per-iteration checkpoint sink, and an
+/// optional interruption probe. [`RunCtl::default`] (no resume state,
+/// no sink, no interrupts) makes `optimize_ctl` bit-identical to
+/// [`super::KernelBand::optimize_sched`].
+#[derive(Default)]
+pub struct RunCtl<'a> {
+    /// Checkpoints of iterations `1..=resume.len()`, replayed in order
+    /// before any live iteration runs.
+    pub resume: &'a [Checkpoint],
+    /// Called once per *live* iteration with that iteration's fresh
+    /// checkpoint (replayed iterations are not re-emitted).
+    pub sink: Option<&'a mut dyn FnMut(&Checkpoint)>,
+    /// Probed with the iteration index before each *live* iteration;
+    /// returning `true` stops the run at that boundary (the iteration
+    /// does not execute). Used for lease revocation (worker kill) and
+    /// preemption parking in the sharded serving supervisor.
+    pub interrupt: Option<&'a dyn Fn(usize) -> bool>,
+}
+
+impl<'a> RunCtl<'a> {
+    /// Resume from a checkpoint prefix (no sink, no interrupts).
+    pub fn resuming(resume: &'a [Checkpoint]) -> Self {
+        RunCtl { resume, ..RunCtl::default() }
+    }
+}
+
+/// Outcome of a controlled run: the trace so far, whether the full
+/// budget completed, and the next iteration a resume would execute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedRun {
+    pub trace: Trace,
+    /// `false` when the interrupt probe stopped the run early.
+    pub completed: bool,
+    /// First iteration not yet executed (`iterations + 1` when
+    /// completed); an interrupted run's checkpoints cover
+    /// `1..next_t`.
+    pub next_t: usize,
+}

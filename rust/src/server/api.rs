@@ -1,0 +1,449 @@
+//! The serve job API: typed job specs, serve requests and the backend
+//! trait every serving mode implements.
+//!
+//! Callers build a [`ServeRequest`] — a list of [`JobSpec`]s plus queue
+//! policy and an optional [`FaultPlan`] — and hand it to a
+//! [`ServeBackend`]:
+//!
+//! * [`InProcess`](crate::server::InProcess) — the single-supervisor
+//!   real path: queue → worker pool → real `optimize_sched` runs;
+//! * [`Sharded`](crate::server::supervisor::Sharded) — the same real
+//!   path behind a lease-holding supervisor with per-iteration
+//!   checkpointing, crash recovery and preemption;
+//! * [`Modeled`] — the TimeModel-based pipeline-shape simulation
+//!   (previously `--modeled`), kept for fast smokes.
+//!
+//! The deterministic sections of every backend's [`ServeOutcome`] are a
+//! pure function of the request: `InProcess` and `Sharded` produce
+//! byte-identical deterministic artifacts for the same request, with or
+//! without injected faults — that equivalence is what the recovery
+//! property tests and the CI crash-recovery smoke pin down.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::gpu_model::Device;
+use crate::llm::LlmProfile;
+use crate::sched::BatchMode;
+use crate::service::OptimizationService;
+use crate::store::TraceStore;
+use crate::util::json::Json;
+
+/// One optimization job, fully specified. Two specs that hash to the
+/// same [`crate::server::job_fingerprint`] perform bit-identical work
+/// and may share results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Owning tenant (0-based).
+    pub tenant: usize,
+    /// Larger runs earlier within a tenant; high-priority submissions
+    /// are what preempt running shards in the sharded backend.
+    pub priority: i64,
+    /// Index into the serve hot set (reduced mod the set size).
+    pub task_idx: usize,
+    pub device: Device,
+    pub llm: LlmProfile,
+    /// Root seed of the job's bandit run.
+    pub seed: u64,
+    /// Per-iteration candidate batch sizing.
+    pub batch: BatchMode,
+    /// Bandit budget T.
+    pub iterations: usize,
+    /// Last scheduling round the job may still run in; popped after
+    /// that it expires instead of executing. `None` = no deadline.
+    pub deadline_rounds: Option<usize>,
+}
+
+impl JobSpec {
+    pub fn new(tenant: usize, task_idx: usize) -> JobSpec {
+        JobSpec {
+            tenant,
+            priority: 0,
+            task_idx,
+            device: Device::H20,
+            llm: LlmProfile::DeepSeekV32,
+            seed: 7,
+            batch: BatchMode::Fixed(1),
+            iterations: 12,
+            deadline_rounds: None,
+        }
+    }
+
+    pub fn priority(mut self, priority: i64) -> JobSpec {
+        self.priority = priority;
+        self
+    }
+
+    pub fn device(mut self, device: Device) -> JobSpec {
+        self.device = device;
+        self
+    }
+
+    pub fn llm(mut self, llm: LlmProfile) -> JobSpec {
+        self.llm = llm;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> JobSpec {
+        self.seed = seed;
+        self
+    }
+
+    pub fn batch(mut self, batch: BatchMode) -> JobSpec {
+        self.batch = batch;
+        self
+    }
+
+    pub fn iterations(mut self, iterations: usize) -> JobSpec {
+        self.iterations = iterations;
+        self
+    }
+
+    pub fn deadline_rounds(mut self, rounds: usize) -> JobSpec {
+        self.deadline_rounds = Some(rounds);
+        self
+    }
+}
+
+impl Default for JobSpec {
+    fn default() -> JobSpec {
+        JobSpec::new(0, 0)
+    }
+}
+
+/// Deterministic fault injection for the sharded backend
+/// (`--fault kill-after=K,preempt=P,seed=S`). All draws come from a
+/// dedicated seed, so faulted schedules replay bit-for-bit and never
+/// perturb the jobs' own RNG streams.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Kill each fingerprint's worker once, after it has completed this
+    /// many iterations (the lease is revoked and the job resumed from
+    /// its checkpoints).
+    pub kill_after: Option<usize>,
+    /// Per-iteration-boundary probability of a preemption parking the
+    /// running lease.
+    pub preempt_prob: f64,
+    /// Seed of the preemption draws.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan { kill_after: None, preempt_prob: 0.0, seed: 0 }
+    }
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing.
+    pub fn is_none(&self) -> bool {
+        self.kill_after.is_none() && self.preempt_prob <= 0.0
+    }
+}
+
+/// One serve run: the submitted jobs (in submission order — a job's
+/// position is its sequence number) plus queue policy, worker sizing
+/// and fault injection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRequest {
+    pub jobs: Vec<JobSpec>,
+    /// Hot-set size the jobs' `task_idx` indexes into.
+    pub task_variety: usize,
+    /// Admission: total jobs the queue accepts.
+    pub queue_capacity: usize,
+    /// Admission: jobs accepted per tenant.
+    pub per_tenant_quota: usize,
+    /// Jobs drained per scheduling round (0 = auto: 2 × tenants).
+    pub round_max: usize,
+    /// Worker threads per round (0 = available parallelism). Never
+    /// affects deterministic bytes.
+    pub workers: usize,
+    pub fault: FaultPlan,
+}
+
+impl Default for ServeRequest {
+    fn default() -> ServeRequest {
+        ServeRequest {
+            jobs: Vec::new(),
+            task_variety: 2,
+            queue_capacity: usize::MAX,
+            per_tenant_quota: usize::MAX,
+            round_max: 0,
+            workers: 0,
+            fault: FaultPlan::default(),
+        }
+    }
+}
+
+impl ServeRequest {
+    /// The classic serve grid: every tenant submits the same
+    /// `jobs_per_tenant` hot-task jobs, interleaved tenant-by-tenant so
+    /// admission decisions are tenant-fair. Job `j` of every tenant
+    /// runs hot task `j % variety` (equal fingerprints across tenants
+    /// are what dedup sharing feeds on).
+    #[allow(clippy::too_many_arguments)]
+    pub fn grid(tenants: usize, jobs_per_tenant: usize,
+                iterations: usize, batch: BatchMode, variety: usize,
+                device: Device, llm: LlmProfile, seed: u64)
+                -> ServeRequest {
+        let variety = variety.max(1);
+        let mut jobs = Vec::with_capacity(tenants * jobs_per_tenant);
+        for j in 0..jobs_per_tenant {
+            for t in 0..tenants {
+                jobs.push(
+                    JobSpec::new(t, j % variety)
+                        .device(device)
+                        .llm(llm)
+                        .seed(seed)
+                        .batch(batch)
+                        .iterations(iterations),
+                );
+            }
+        }
+        ServeRequest {
+            jobs,
+            task_variety: variety,
+            ..ServeRequest::default()
+        }
+    }
+
+    /// Number of tenants the job list spans.
+    pub fn tenants(&self) -> usize {
+        self.jobs.iter().map(|j| j.tenant + 1).max().unwrap_or(0)
+    }
+
+    /// Largest per-tenant job count (the grid's `jobs_per_tenant`).
+    pub fn jobs_per_tenant(&self) -> usize {
+        let tenants = self.tenants();
+        (0..tenants)
+            .map(|t| self.jobs.iter().filter(|j| j.tenant == t).count())
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub(crate) fn effective_round_max(&self) -> usize {
+        if self.round_max > 0 {
+            self.round_max
+        } else {
+            (self.tenants() * 2).max(1)
+        }
+    }
+}
+
+/// What a backend hands back: the byte-compared deterministic artifact,
+/// the measured ledger (when the backend separates one), the supervisor
+/// ledger (sharded only) and the human-readable summary lines the CLI
+/// prints verbatim.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub deterministic: Json,
+    pub ledger: Option<Json>,
+    pub supervisor: Option<Json>,
+    pub lines: Vec<String>,
+}
+
+/// A serving mode. All three (`InProcess`, `Sharded`, `Modeled`) run
+/// behind this one entry point; the CLI picks one with `--backend`.
+pub trait ServeBackend {
+    fn name(&self) -> &'static str;
+    /// Run the request. `store` is the session store (`None` only for
+    /// storeless modeled smokes; the real backends always receive one —
+    /// in-memory when the CLI got no `--store`).
+    fn run(&self, req: &ServeRequest,
+           store: Option<&Arc<TraceStore>>) -> Result<ServeOutcome>;
+}
+
+/// The TimeModel-based service simulation (previously `--modeled`):
+/// batched LLM gateway + modeled recluster scheduler, scaled sleeps.
+/// Kept for fast pipeline-shape smokes; jobs all run under tenant 0 and
+/// only `len`, `iterations` and a fixed batch width are honored.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Modeled;
+
+impl ServeBackend for Modeled {
+    fn name(&self) -> &'static str {
+        "modeled"
+    }
+
+    fn run(&self, req: &ServeRequest,
+           store: Option<&Arc<TraceStore>>) -> Result<ServeOutcome> {
+        let jobs = req.jobs.len();
+        let iterations =
+            req.jobs.first().map_or(3, |j| j.iterations);
+        let batch = match req.jobs.first().map_or(
+            BatchMode::Fixed(1),
+            |j| j.batch,
+        ) {
+            BatchMode::Fixed(n) => n.max(1),
+            BatchMode::Adaptive { .. } => bail!(
+                "--batch auto needs a real serve backend \
+                 (inprocess or sharded)"
+            ),
+        };
+        if !req.fault.is_none() {
+            bail!("fault injection needs --backend sharded");
+        }
+        let mut service = OptimizationService::default();
+        service.batch = batch;
+        let report = service.run_with_store(
+            jobs,
+            iterations,
+            store.map(|s| s.as_ref()),
+        );
+        let mut lines = vec![
+            format!(
+                "service: {} jobs x {} iterations  wall {:.1}s (modeled)  \
+                 serial-equivalent {:.1}s  batching speedup {:.1}x",
+                jobs,
+                iterations,
+                report.wall_model_s,
+                report.serial_equivalent_s,
+                report.batching_speedup()
+            ),
+            format!(
+                "gateway: {} requests in {} batches (max batch {})",
+                report.gateway_requests,
+                report.gateway_batches,
+                report.gateway_max_batch
+            ),
+            format!(
+                "scheduler: {} recluster requests in {} rounds  \
+                 warm_hits={} dedup_shares={} saved {:.1}s (modeled)",
+                report.sched_requests,
+                report.sched_rounds,
+                report.sched_warm_hits,
+                report.sched_dedup_shares,
+                report.sched_saved_model_s
+            ),
+        ];
+        if store.is_some() {
+            lines.push(format!(
+                "gateway_bypassed={}",
+                report.gateway_bypassed
+            ));
+        }
+        let mut json = Json::obj(vec![
+            ("schema_version", Json::num(1.0)),
+            ("experiment", Json::str("serve")),
+            ("jobs", Json::num(jobs as f64)),
+            ("iterations", Json::num(iterations as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("wall_model_s", Json::num(report.wall_model_s)),
+            (
+                "serial_equivalent_s",
+                Json::num(report.serial_equivalent_s),
+            ),
+            ("batching_speedup", Json::num(report.batching_speedup())),
+            (
+                "gateway_requests",
+                Json::num(report.gateway_requests as f64),
+            ),
+            (
+                "gateway_batches",
+                Json::num(report.gateway_batches as f64),
+            ),
+            (
+                "gateway_max_batch",
+                Json::num(report.gateway_max_batch as f64),
+            ),
+            ("sched_requests", Json::num(report.sched_requests as f64)),
+            ("sched_rounds", Json::num(report.sched_rounds as f64)),
+            (
+                "sched_warm_hits",
+                Json::num(report.sched_warm_hits as f64),
+            ),
+            (
+                "sched_dedup_shares",
+                Json::num(report.sched_dedup_shares as f64),
+            ),
+            (
+                "sched_saved_model_s",
+                Json::num(report.sched_saved_model_s),
+            ),
+        ]);
+        // only present with a store, so storeless artifacts keep their
+        // pre-store byte layout
+        if store.is_some() {
+            json.insert(
+                "gateway_bypassed",
+                Json::num(report.gateway_bypassed as f64),
+            );
+        }
+        Ok(ServeOutcome {
+            deterministic: json,
+            ledger: None,
+            supervisor: None,
+            lines,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_interleaves_tenants_in_submission_order() {
+        let req = ServeRequest::grid(
+            2,
+            3,
+            12,
+            BatchMode::Fixed(1),
+            2,
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            7,
+        );
+        assert_eq!(req.jobs.len(), 6);
+        let tenants: Vec<usize> =
+            req.jobs.iter().map(|j| j.tenant).collect();
+        assert_eq!(tenants, vec![0, 1, 0, 1, 0, 1]);
+        let tasks: Vec<usize> =
+            req.jobs.iter().map(|j| j.task_idx).collect();
+        assert_eq!(tasks, vec![0, 0, 1, 1, 0, 0]);
+        assert_eq!(req.tenants(), 2);
+        assert_eq!(req.jobs_per_tenant(), 3);
+        assert_eq!(req.effective_round_max(), 4);
+    }
+
+    #[test]
+    fn builder_defaults_match_the_classic_config() {
+        let j = JobSpec::new(1, 0);
+        assert_eq!(j.tenant, 1);
+        assert_eq!(j.priority, 0);
+        assert_eq!(j.seed, 7);
+        assert_eq!(j.iterations, 12);
+        assert_eq!(j.batch, BatchMode::Fixed(1));
+        assert_eq!(j.deadline_rounds, None);
+        let j = j.priority(3).seed(9).iterations(5).deadline_rounds(1);
+        assert_eq!(
+            (j.priority, j.seed, j.iterations, j.deadline_rounds),
+            (3, 9, 5, Some(1))
+        );
+    }
+
+    #[test]
+    fn modeled_backend_matches_the_legacy_artifact_layout() {
+        let req = ServeRequest {
+            jobs: (0..4)
+                .map(|_| JobSpec::new(0, 0).iterations(2))
+                .collect(),
+            ..ServeRequest::default()
+        };
+        let out = Modeled.run(&req, None).expect("modeled run");
+        assert!(out.ledger.is_none());
+        assert!(out.supervisor.is_none());
+        let d = out.deterministic.dump();
+        assert!(d.contains("\"schema_version\":1"), "{d}");
+        assert!(!d.contains("gateway_bypassed"));
+        assert!(out
+            .lines
+            .iter()
+            .any(|l| l.contains("recluster requests")));
+        // adaptive batch is a real-path feature
+        let mut bad = req.clone();
+        bad.jobs[0].batch = BatchMode::Adaptive { min: 1, max: 4 };
+        assert!(Modeled.run(&bad, None).is_err());
+    }
+}

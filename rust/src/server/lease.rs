@@ -1,0 +1,275 @@
+//! Lease table: which worker shard owns which job fingerprint.
+//!
+//! The sharded supervisor ([`crate::server::supervisor`]) never hands a
+//! fingerprint to two shards at once. Every execution attempt is
+//! bracketed by a lease: granted before the shard starts, heartbeated
+//! while the shard reports progress, and closed in exactly one of three
+//! ways —
+//!
+//! * **complete** — the run finished its budget; the lease is retired;
+//! * **revoke** — the shard missed its heartbeat deadline (in the
+//!   deterministic harness: the fault plan killed it); the supervisor
+//!   reclaims the fingerprint and re-grants it later, resuming from the
+//!   checkpoint journal;
+//! * **park** — a higher-priority tick preempted the shard at an
+//!   iteration boundary; the lease survives in `Parked` state and only
+//!   its original fingerprint may resume it.
+//!
+//! Time here is logical: a stamp is `(round, tick)` from the
+//! supervisor's scheduling loop, so the whole table — grants, expiries,
+//! the event log — is a pure function of the job set and the fault
+//! plan, never of wall-clock.
+
+use std::collections::BTreeMap;
+
+/// Lifecycle of one lease.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseState {
+    /// A shard holds the fingerprint and is executing it.
+    Active,
+    /// Preempted at an iteration boundary; waiting to resume.
+    Parked,
+    /// Heartbeat deadline missed; fingerprint reclaimed.
+    Revoked,
+    /// Run finished; terminal.
+    Completed,
+}
+
+/// Logical timestamp: `(round, tick)` of the supervisor loop.
+pub type Stamp = (usize, usize);
+
+/// One fingerprint's current lease.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lease {
+    pub fingerprint: u64,
+    /// Worker shard holding (or last holding) the lease.
+    pub worker: usize,
+    pub state: LeaseState,
+    /// When the current grant happened.
+    pub granted: Stamp,
+    /// Last heartbeat (or state change).
+    pub beat: Stamp,
+}
+
+/// Why a grant was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseError {
+    /// The fingerprint has a live (`Active` or `Parked`) lease; granting
+    /// it again would double-execute the job.
+    AlreadyLeased,
+}
+
+/// One entry in the audit log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeaseEvent {
+    pub stamp: Stamp,
+    pub fingerprint: u64,
+    pub worker: usize,
+    pub what: &'static str,
+}
+
+/// The supervisor's lease ledger. `BTreeMap` keeps iteration order (and
+/// therefore any serialized view) deterministic.
+#[derive(Debug, Default)]
+pub struct LeaseTable {
+    leases: BTreeMap<u64, Lease>,
+    events: Vec<LeaseEvent>,
+    granted: u64,
+    resumed: u64,
+    revoked: u64,
+    parked: u64,
+    completed: u64,
+}
+
+impl LeaseTable {
+    pub fn new() -> LeaseTable {
+        LeaseTable::default()
+    }
+
+    fn log(&mut self, stamp: Stamp, fp: u64, worker: usize,
+           what: &'static str) {
+        self.events.push(LeaseEvent {
+            stamp,
+            fingerprint: fp,
+            worker,
+            what,
+        });
+    }
+
+    /// Grant `fp` to `worker`. Refused while a live lease exists — the
+    /// single-executor guarantee. A `Revoked` or `Completed` lease is
+    /// not live; re-granting after revocation is the recovery path and
+    /// is counted as a resume.
+    pub fn grant(&mut self, fp: u64, worker: usize, stamp: Stamp)
+                 -> Result<(), LeaseError> {
+        if let Some(l) = self.leases.get(&fp) {
+            if matches!(l.state, LeaseState::Active | LeaseState::Parked)
+            {
+                return Err(LeaseError::AlreadyLeased);
+            }
+            if l.state == LeaseState::Revoked {
+                self.resumed += 1;
+            }
+        }
+        self.leases.insert(fp, Lease {
+            fingerprint: fp,
+            worker,
+            state: LeaseState::Active,
+            granted: stamp,
+            beat: stamp,
+        });
+        self.granted += 1;
+        self.log(stamp, fp, worker, "grant");
+        Ok(())
+    }
+
+    /// Record a heartbeat from the holder. Ignored unless `Active`.
+    pub fn heartbeat(&mut self, fp: u64, stamp: Stamp) {
+        if let Some(l) = self.leases.get_mut(&fp) {
+            if l.state == LeaseState::Active {
+                l.beat = stamp;
+            }
+        }
+    }
+
+    /// True when an `Active` lease last beat at or before
+    /// `deadline` — the holder is presumed dead and should be revoked.
+    pub fn expired(&self, fp: u64, deadline: Stamp) -> bool {
+        self.leases.get(&fp).map_or(false, |l| {
+            l.state == LeaseState::Active && l.beat <= deadline
+        })
+    }
+
+    /// Reclaim an `Active` fingerprint whose holder vanished.
+    pub fn revoke(&mut self, fp: u64, stamp: Stamp) {
+        if let Some(l) = self.leases.get_mut(&fp) {
+            if l.state == LeaseState::Active {
+                l.state = LeaseState::Revoked;
+                l.beat = stamp;
+                self.revoked += 1;
+                let w = l.worker;
+                self.log(stamp, fp, w, "revoke");
+            }
+        }
+    }
+
+    /// Preempt an `Active` lease at an iteration boundary; it keeps its
+    /// identity and may only be resumed (not re-granted).
+    pub fn park(&mut self, fp: u64, stamp: Stamp) {
+        if let Some(l) = self.leases.get_mut(&fp) {
+            if l.state == LeaseState::Active {
+                l.state = LeaseState::Parked;
+                l.beat = stamp;
+                self.parked += 1;
+                let w = l.worker;
+                self.log(stamp, fp, w, "park");
+            }
+        }
+    }
+
+    /// Resume a `Parked` lease on `worker`. Counted as a resume.
+    pub fn resume(&mut self, fp: u64, worker: usize, stamp: Stamp)
+                  -> Result<(), LeaseError> {
+        match self.leases.get_mut(&fp) {
+            Some(l) if l.state == LeaseState::Parked => {
+                l.state = LeaseState::Active;
+                l.worker = worker;
+                l.granted = stamp;
+                l.beat = stamp;
+                self.resumed += 1;
+                self.log(stamp, fp, worker, "resume");
+                Ok(())
+            }
+            _ => Err(LeaseError::AlreadyLeased),
+        }
+    }
+
+    /// Retire a finished lease.
+    pub fn complete(&mut self, fp: u64, stamp: Stamp) {
+        if let Some(l) = self.leases.get_mut(&fp) {
+            if l.state == LeaseState::Active {
+                l.state = LeaseState::Completed;
+                l.beat = stamp;
+                self.completed += 1;
+                let w = l.worker;
+                self.log(stamp, fp, w, "complete");
+            }
+        }
+    }
+
+    pub fn state(&self, fp: u64) -> Option<LeaseState> {
+        self.leases.get(&fp).map(|l| l.state)
+    }
+
+    pub fn events(&self) -> &[LeaseEvent] {
+        &self.events
+    }
+
+    /// `(granted, resumed, revoked, parked, completed)` counters.
+    pub fn counters(&self) -> (u64, u64, u64, u64, u64) {
+        (self.granted, self.resumed, self.revoked, self.parked,
+         self.completed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn double_grant_is_refused_while_live() {
+        let mut t = LeaseTable::new();
+        t.grant(9, 0, (0, 0)).unwrap();
+        assert_eq!(t.grant(9, 1, (0, 0)), Err(LeaseError::AlreadyLeased));
+        t.park(9, (0, 1));
+        // parked is still live — only resume may reactivate it
+        assert_eq!(t.grant(9, 1, (0, 2)), Err(LeaseError::AlreadyLeased));
+        t.resume(9, 1, (0, 2)).unwrap();
+        assert_eq!(t.state(9), Some(LeaseState::Active));
+        t.complete(9, (0, 3));
+        assert_eq!(t.state(9), Some(LeaseState::Completed));
+    }
+
+    #[test]
+    fn revoked_fingerprints_regrant_as_resumes() {
+        let mut t = LeaseTable::new();
+        t.grant(4, 0, (0, 0)).unwrap();
+        assert!(t.expired(4, (0, 0)));
+        t.heartbeat(4, (0, 1));
+        assert!(!t.expired(4, (0, 0)));
+        t.revoke(4, (0, 2));
+        assert_eq!(t.state(4), Some(LeaseState::Revoked));
+        // recovery: the fingerprint is grantable again
+        t.grant(4, 2, (0, 3)).unwrap();
+        let (granted, resumed, revoked, parked, completed) = t.counters();
+        assert_eq!((granted, resumed, revoked, parked, completed),
+                   (2, 1, 1, 0, 0));
+    }
+
+    #[test]
+    fn event_log_is_ordered_and_complete() {
+        let mut t = LeaseTable::new();
+        t.grant(1, 0, (0, 0)).unwrap();
+        t.park(1, (0, 1));
+        t.resume(1, 1, (1, 0)).unwrap();
+        t.complete(1, (1, 1));
+        let whats: Vec<&str> =
+            t.events().iter().map(|e| e.what).collect();
+        assert_eq!(whats, vec!["grant", "park", "resume", "complete"]);
+        assert!(t.events().windows(2).all(|w| w[0].stamp <= w[1].stamp));
+    }
+
+    #[test]
+    fn lifecycle_guards_ignore_invalid_transitions() {
+        let mut t = LeaseTable::new();
+        t.revoke(7, (0, 0)); // unknown fp: no-op
+        t.park(7, (0, 0));
+        assert!(t.resume(7, 0, (0, 0)).is_err());
+        t.grant(7, 0, (0, 1)).unwrap();
+        t.complete(7, (0, 2));
+        t.revoke(7, (0, 3)); // completed: no-op
+        assert_eq!(t.state(7), Some(LeaseState::Completed));
+        let (_, _, revoked, parked, _) = t.counters();
+        assert_eq!((revoked, parked), (0, 0));
+    }
+}

@@ -1,23 +1,22 @@
 //! Real-workload serving subsystem: a multi-tenant job queue driving
-//! actual `KernelBand` optimization runs.
+//! actual `KernelBand` optimization runs, behind a typed job API.
 //!
-//! The modeled service ([`crate::service`], kept behind `--modeled`)
-//! measures the pipeline's *shape* with [`crate::service::TIME_SCALE`]d
-//! sleeps. This subsystem replaces that model with real work:
+//! Callers describe work with [`JobSpec`]s bundled into a
+//! [`ServeRequest`] and pick a [`ServeBackend`]:
 //!
 //! ```text
-//!  tenants ──submit──▶ JobQueue ──rounds──▶ worker pool
-//!                      (admission,          (dedup by fingerprint,
-//!                       fairness)            real optimize_sched runs)
-//!                                                │
-//!                          shared session state: │
-//!                    TraceStore caches · CentroidCache · SharedProfiles
-//!                                                │
-//!                                                ▼
-//!                               RealServeReport ledger
-//!                     (deterministic sections + measured wall-clock)
+//!  JobSpec builder ──▶ ServeRequest ──▶ ServeBackend::run
+//!                                           │
+//!              ┌────────────────────────────┼──────────────────┐
+//!              ▼                            ▼                  ▼
+//!         InProcess                     Sharded             Modeled
+//!      queue → workers          supervisor → leases →    TimeModel
+//!      (this module)            worker shards, ckpt      simulation
+//!                               recovery + preemption    (smokes)
 //! ```
 //!
+//! * [`api`] — [`JobSpec`], [`ServeRequest`], [`FaultPlan`], the
+//!   [`ServeBackend`] trait and the [`Modeled`] backend;
 //! * [`queue`] — priority queue with admission control (global
 //!   capacity + per-tenant quota) and deterministic deficit-round-robin
 //!   fairness;
@@ -28,6 +27,11 @@
 //!   [`crate::sched::profiles::SharedProfiles`] across tenants — a
 //!   fingerprint pays real work once per round (round-mates share) and
 //!   resumes warm in later rounds and later sessions (pure lookups);
+//! * [`supervisor`] / [`lease`] / [`recover`] — the [`Sharded`]
+//!   backend: leased worker shards, per-iteration checkpointing into
+//!   the store journal, crash recovery that *resumes* (never restarts)
+//!   a killed worker's job, and seeded preemption that parks a lease
+//!   at an iteration boundary;
 //! * [`tenant`] — per-tenant ledgers and the store namespacing labels;
 //! * [`adaptive`] — serving-facing re-export of the AIMD batch-width
 //!   controller behind `--batch auto` (it lives in
@@ -38,17 +42,22 @@
 //!
 //! Admission, round composition, dedup, per-job traces, adaptive width
 //! sequences, costs and speedups are pure functions of the
-//! [`RealServeConfig`] — independent of worker count, worker timing
-//! and store temperature — and live in the artifact's byte-compared
-//! sections ([`RealServeReport::deterministic_json`]). Measured
-//! wall-clock and cache-temperature counters (profile runs, LLM
-//! round-trips, simulated measurements) are real observations that
-//! legitimately vary; they live only in the uploaded service ledger
-//! ([`RealServeReport::ledger_json`]). No `TIME_SCALE` anywhere on
-//! this path.
+//! [`ServeRequest`] — independent of real-backend choice (`InProcess`
+//! vs `Sharded`), worker count, worker timing, injected faults and
+//! store temperature — and live in the artifact's byte-compared
+//! sections ([`ServeReport::deterministic_json`]). Measured wall-clock
+//! and cache-temperature counters (profile runs, LLM round-trips,
+//! simulated measurements) are real observations that legitimately
+//! vary; they live only in the uploaded service ledger
+//! ([`ServeReport::ledger_json`]). No `TIME_SCALE` anywhere on this
+//! path.
 
 pub mod adaptive;
+pub mod api;
+pub mod lease;
 pub mod queue;
+pub mod recover;
+pub mod supervisor;
 pub mod tenant;
 pub mod worker;
 
@@ -56,9 +65,12 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::Result;
+
 use crate::gpu_model::Device;
 use crate::llm::LlmProfile;
 use crate::sched::BatchMode;
+use crate::store::log::TraceRecord;
 use crate::store::TraceStore;
 use crate::util::hash::KeyHasher;
 use crate::util::json::Json;
@@ -68,69 +80,31 @@ use self::queue::{Job, JobQueue};
 use self::tenant::{tenant_label, TenantLedger};
 use self::worker::{run_round, ExecEnv, JobResult};
 
-/// Configuration of one real serve run.
+pub use self::api::{
+    FaultPlan, JobSpec, Modeled, ServeBackend, ServeOutcome,
+    ServeRequest,
+};
+pub use self::supervisor::Sharded;
+
+/// Header values of the deterministic artifact, derived from the
+/// request's job list (a [`ServeRequest::grid`] round-trips exactly).
 #[derive(Debug, Clone)]
-pub struct RealServeConfig {
-    /// Concurrent tenants (each submits `jobs_per_tenant` jobs).
+pub struct ServeHeader {
+    pub batch: BatchMode,
     pub tenants: usize,
     pub jobs_per_tenant: usize,
-    /// Bandit budget T of every job's optimization run.
     pub iterations: usize,
-    /// Per-iteration candidate batch sizing (`--batch N` / `auto`).
-    pub batch: BatchMode,
-    /// Hot-set size: job `j` of every tenant runs hot task `j % variety`
-    /// (models many users resubmitting the same hot kernels; equal
-    /// fingerprints across tenants are what sharing feeds on).
     pub task_variety: usize,
-    /// Worker threads per round (0 = available parallelism).
-    pub workers: usize,
-    /// Jobs drained per scheduling round (0 = auto: 2 × tenants).
-    pub round_max: usize,
-    /// Admission: total jobs the queue accepts.
-    pub queue_capacity: usize,
-    /// Admission: jobs accepted per tenant.
-    pub per_tenant_quota: usize,
+    pub seed: u64,
     pub device: Device,
     pub llm: LlmProfile,
-    /// Root seed shared by all jobs (equal-fingerprint jobs are
-    /// bit-identical runs).
-    pub seed: u64,
-}
-
-impl Default for RealServeConfig {
-    fn default() -> Self {
-        RealServeConfig {
-            tenants: 2,
-            jobs_per_tenant: 3,
-            iterations: 12,
-            batch: BatchMode::Fixed(1),
-            task_variety: 2,
-            workers: 0,
-            round_max: 0,
-            queue_capacity: usize::MAX,
-            per_tenant_quota: usize::MAX,
-            device: Device::H20,
-            llm: LlmProfile::DeepSeekV32,
-            seed: 7,
-        }
-    }
-}
-
-impl RealServeConfig {
-    fn effective_round_max(&self) -> usize {
-        if self.round_max > 0 {
-            self.round_max
-        } else {
-            (self.tenants * 2).max(1)
-        }
-    }
 }
 
 /// Outcome of a real serve run. See the module docs for which fields
 /// are deterministic and which are measured.
 #[derive(Debug, Clone)]
-pub struct RealServeReport {
-    pub config: RealServeConfig,
+pub struct ServeReport {
+    pub header: ServeHeader,
     pub jobs: Vec<JobResult>,
     pub tenants: Vec<TenantLedger>,
     /// Scheduling rounds the queue drained into.
@@ -142,6 +116,9 @@ pub struct RealServeReport {
     pub dedup_shares: usize,
     pub admitted: usize,
     pub rejected: usize,
+    /// Admitted jobs dropped at pop time because their deadline round
+    /// had already passed.
+    pub expired: usize,
     // --- measured / store-temperature-dependent ---------------------
     /// Measured end-to-end wall-clock of the run (seconds).
     pub wall_s: f64,
@@ -155,7 +132,7 @@ pub struct RealServeReport {
     pub store_llm_hits: u64,
 }
 
-impl RealServeReport {
+impl ServeReport {
     /// Total measured wall-clock across executed jobs (excludes queue
     /// orchestration; shares are free).
     pub fn job_wall_s(&self) -> f64 {
@@ -163,9 +140,10 @@ impl RealServeReport {
     }
 
     /// The byte-compared artifact section: every field here is a pure
-    /// function of [`RealServeConfig`] — re-running the same config
-    /// against any store temperature with any worker count must
-    /// reproduce these bytes exactly (CI `cmp`s them).
+    /// function of the [`ServeRequest`] — re-running the same request
+    /// against any store temperature with any worker count, any real
+    /// backend and any fault plan must reproduce these bytes exactly
+    /// (CI `cmp`s them).
     pub fn deterministic_json(&self) -> Json {
         let jobs = self
             .jobs
@@ -207,6 +185,7 @@ impl RealServeReport {
                     ("submitted", Json::num(t.submitted as f64)),
                     ("admitted", Json::num(t.admitted as f64)),
                     ("rejected", Json::num(t.rejected as f64)),
+                    ("expired", Json::num(t.expired as f64)),
                     ("completed", Json::num(t.completed as f64)),
                     ("shared", Json::num(t.shared as f64)),
                 ])
@@ -216,22 +195,26 @@ impl RealServeReport {
             ("schema_version", Json::num(2.0)),
             ("experiment", Json::str("serve")),
             ("mode", Json::str("real")),
-            ("batch", Json::str(self.config.batch.label())),
-            ("tenants", Json::num(self.config.tenants as f64)),
+            ("batch", Json::str(self.header.batch.label())),
+            ("tenants", Json::num(self.header.tenants as f64)),
             (
                 "jobs_per_tenant",
-                Json::num(self.config.jobs_per_tenant as f64),
+                Json::num(self.header.jobs_per_tenant as f64),
             ),
-            ("iterations", Json::num(self.config.iterations as f64)),
-            ("task_variety", Json::num(self.config.task_variety as f64)),
-            ("seed", Json::num(self.config.seed as f64)),
-            ("device", Json::str(self.config.device.name())),
-            ("llm", Json::str(self.config.llm.spec().name)),
+            ("iterations", Json::num(self.header.iterations as f64)),
+            (
+                "task_variety",
+                Json::num(self.header.task_variety as f64),
+            ),
+            ("seed", Json::num(self.header.seed as f64)),
+            ("device", Json::str(self.header.device.name())),
+            ("llm", Json::str(self.header.llm.spec().name)),
             ("rounds", Json::num(self.rounds as f64)),
             ("executions", Json::num(self.executions as f64)),
             ("dedup_shares", Json::num(self.dedup_shares as f64)),
             ("admitted", Json::num(self.admitted as f64)),
             ("rejected", Json::num(self.rejected as f64)),
+            ("expired", Json::num(self.expired as f64)),
             ("jobs", Json::Arr(jobs)),
             ("tenant_ledger", Json::Arr(tenants)),
         ])
@@ -285,6 +268,57 @@ impl RealServeReport {
         root.insert("tenant_measured", Json::Arr(tenant_measured));
         root
     }
+
+    /// The human-readable summary the CLI prints. Backends may append
+    /// their own lines (the sharded supervisor adds a lease summary).
+    pub fn summary_lines(&self) -> Vec<String> {
+        let h = &self.header;
+        let mut lines = vec![
+            format!(
+                "serve[real]: {} tenants x {} jobs x {} iters  batch {}  device {}  llm {}",
+                h.tenants,
+                h.jobs_per_tenant,
+                h.iterations,
+                h.batch.label(),
+                h.device.name(),
+                h.llm.spec().name,
+            ),
+            format!(
+                "queue: admitted={} rejected={} expired={}  rounds={} executions={} dedup_shares={}",
+                self.admitted,
+                self.rejected,
+                self.expired,
+                self.rounds,
+                self.executions,
+                self.dedup_shares,
+            ),
+            format!(
+                "wall: {:.4}s measured end-to-end  {:.4}s summed over executed jobs  centroid memo {} hits / {} misses",
+                self.wall_s,
+                self.job_wall_s(),
+                self.centroid_hits,
+                self.centroid_misses,
+            ),
+        ];
+        for t in &self.tenants {
+            lines.push(format!(
+                "tenant t{}: submitted={} admitted={} rejected={} expired={} completed={} shared={} profile_runs={} llm_round_trips={} measure_sims={} wall={:.4}s{}",
+                t.tenant,
+                t.submitted,
+                t.admitted,
+                t.rejected,
+                t.expired,
+                t.completed,
+                t.shared,
+                t.profile_runs,
+                t.llm_round_trips,
+                t.measure_sims,
+                t.wall_s,
+                if t.is_warm() { " [warm]" } else { "" },
+            ));
+        }
+        lines
+    }
 }
 
 /// Deterministic content fingerprint of a job's run spec: two jobs with
@@ -326,164 +360,229 @@ pub fn hot_set(suite: &Suite, variety: usize) -> Vec<TaskSpec> {
         .collect()
 }
 
-/// The real serving loop.
-pub struct RealServe {
-    pub config: RealServeConfig,
-}
+/// The shared serving skeleton both real backends run on: submit every
+/// job (all admission decided before any work), drain rounds through
+/// `exec_round`, append trace batches in canonical order, fan the
+/// ledgers in. Per-tenant trace/profile counters are recorded into the
+/// store's tenant namespace ([`TraceStore::tenant_add`]) for
+/// `kernelband trace stats`.
+pub(crate) fn run_serve(
+    req: &ServeRequest,
+    store: &Arc<TraceStore>,
+    exec_round: &mut dyn FnMut(&ExecEnv<'_>, &[Job], usize)
+        -> (Vec<JobResult>, Vec<Vec<TraceRecord>>),
+) -> ServeReport {
+    let suite = Suite::full(crate::eval::EXPERIMENT_SEED);
+    let hot = hot_set(&suite, req.task_variety);
+    let tenants_n = req.tenants();
+    let first = req.jobs.first();
+    let header = ServeHeader {
+        batch: first.map_or(BatchMode::Fixed(1), |j| j.batch),
+        tenants: tenants_n,
+        jobs_per_tenant: req.jobs_per_tenant(),
+        iterations: first.map_or(12, |j| j.iterations),
+        task_variety: req.task_variety,
+        seed: first.map_or(7, |j| j.seed),
+        device: first.map_or(Device::H20, |j| j.device),
+        llm: first.map_or(LlmProfile::DeepSeekV32, |j| j.llm),
+    };
 
-impl RealServe {
-    pub fn new(config: RealServeConfig) -> RealServe {
-        RealServe { config }
-    }
-
-    /// Run every tenant's jobs through the queue and worker pool,
-    /// sharing `store` (caches, centroid memo, profile cache, trace
-    /// log) across all of them. Per-tenant trace/profile counters are
-    /// recorded into the store's tenant namespace
-    /// ([`TraceStore::tenant_add`]) for `kernelband trace stats`.
-    pub fn run(&self, store: &Arc<TraceStore>) -> RealServeReport {
-        let cfg = &self.config;
-        let suite = Suite::full(crate::eval::EXPERIMENT_SEED);
-        let hot = hot_set(&suite, cfg.task_variety);
-
-        // --- submission phase: all admission decided before any work,
-        // in tenant-interleaved order, so rejections are deterministic
-        let mut queue = JobQueue::new(
-            cfg.tenants,
-            cfg.queue_capacity,
-            cfg.per_tenant_quota,
+    // --- submission phase: all admission decided before any work, in
+    // the request's submission order, so rejections are deterministic
+    let mut queue = JobQueue::new(
+        tenants_n,
+        req.queue_capacity,
+        req.per_tenant_quota,
+    );
+    let mut submitted = vec![0usize; tenants_n];
+    for (seq, spec) in req.jobs.iter().enumerate() {
+        let task_idx = spec.task_idx % hot.len();
+        let fingerprint = job_fingerprint(
+            &hot[task_idx],
+            spec.device,
+            spec.llm,
+            spec.iterations,
+            spec.batch,
+            spec.seed,
         );
-        let mut submitted = vec![0usize; cfg.tenants];
-        let mut seq = 0usize;
-        for j in 0..cfg.jobs_per_tenant {
-            for t in 0..cfg.tenants {
-                let task_idx = j % hot.len();
-                let fingerprint = job_fingerprint(
-                    &hot[task_idx],
-                    cfg.device,
-                    cfg.llm,
-                    cfg.iterations,
-                    cfg.batch,
-                    cfg.seed,
-                );
-                submitted[t] += 1;
-                let _ = queue.submit(Job {
-                    seq,
-                    tenant: t,
-                    priority: 0,
-                    task_idx,
-                    fingerprint,
-                });
-                seq += 1;
+        submitted[spec.tenant] += 1;
+        let _ = queue.submit(Job {
+            seq,
+            tenant: spec.tenant,
+            priority: spec.priority,
+            task_idx,
+            fingerprint,
+        });
+    }
+    let admitted_per_tenant: Vec<usize> = (0..tenants_n)
+        .map(|t| submitted[t] - queue.rejected_for(t))
+        .collect();
+
+    // --- execution phase: drain rounds; snapshot store counters
+    // around it so the report shows this run's observations even when
+    // the session store is shared with other work
+    let sims0 = store.stats.measure_sims.load(Ordering::Relaxed);
+    let mhits0 = store.stats.measure_hits.load(Ordering::Relaxed);
+    let llm0 = store.stats.llm_sims.load(Ordering::Relaxed);
+    let lhits0 = store.stats.llm_hits.load(Ordering::Relaxed);
+    let cent = store.session_centroids();
+    let chits0 = cent.hits();
+    let cmiss0 = cent.misses();
+    let env = ExecEnv {
+        tasks: &hot,
+        specs: &req.jobs,
+        store,
+        workers: req.workers,
+    };
+    let t0 = Instant::now();
+    let mut jobs: Vec<JobResult> = Vec::new();
+    let mut rounds = 0usize;
+    let mut expired_per_tenant = vec![0usize; tenants_n];
+    let round_max = req.effective_round_max();
+    while !queue.is_empty() {
+        let round = queue.pop_round(round_max);
+        // deadlines are enforced at pop time: an admitted job whose
+        // deadline round has passed expires instead of executing
+        let mut live = Vec::with_capacity(round.len());
+        for job in round {
+            let deadline = req.jobs[job.seq].deadline_rounds;
+            if deadline.map_or(false, |d| d < rounds) {
+                expired_per_tenant[job.tenant] += 1;
+            } else {
+                live.push(job);
             }
         }
-        let admitted_per_tenant: Vec<usize> = (0..cfg.tenants)
-            .map(|t| submitted[t] - queue.rejected_for(t))
-            .collect();
-
-        // --- execution phase: drain rounds; snapshot store counters
-        // around it so the report shows this run's observations even
-        // when the session store is shared with other work
-        let sims0 = store.stats.measure_sims.load(Ordering::Relaxed);
-        let mhits0 = store.stats.measure_hits.load(Ordering::Relaxed);
-        let llm0 = store.stats.llm_sims.load(Ordering::Relaxed);
-        let lhits0 = store.stats.llm_hits.load(Ordering::Relaxed);
-        let cent = store.session_centroids();
-        let chits0 = cent.hits();
-        let cmiss0 = cent.misses();
-        let env = ExecEnv {
-            tasks: &hot,
-            store,
-            mode: cfg.batch,
-            iterations: cfg.iterations,
-            device: cfg.device,
-            llm: cfg.llm,
-            seed: cfg.seed,
-            workers: cfg.workers,
-        };
-        let t0 = Instant::now();
-        let mut jobs: Vec<JobResult> = Vec::new();
-        let mut rounds = 0usize;
-        let round_max = cfg.effective_round_max();
-        while !queue.is_empty() {
-            let round = queue.pop_round(round_max);
+        if !live.is_empty() {
             let (mut results, record_batches) =
-                run_round(&env, &round, rounds);
+                exec_round(&env, &live, rounds);
             // canonical-order append: trace bytes never depend on
             // worker scheduling
             for records in record_batches {
                 store.append_trace(records);
             }
             jobs.append(&mut results);
-            rounds += 1;
         }
-        let wall_s = t0.elapsed().as_secs_f64();
+        rounds += 1;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
 
-        // --- ledger fan-in
-        let mut tenants: Vec<TenantLedger> = (0..cfg.tenants)
-            .map(|t| {
-                let mut l = TenantLedger::new(t);
-                l.submitted = submitted[t];
-                l.admitted = admitted_per_tenant[t];
-                l.rejected = queue.rejected_for(t);
-                l
-            })
-            .collect();
-        for j in &jobs {
-            let l = &mut tenants[j.job.tenant];
-            l.completed += 1;
-            if j.shared {
-                l.shared += 1;
-            }
-            l.profile_runs += j.profile_runs;
-            l.llm_round_trips += j.llm_round_trips;
-            l.measure_sims += j.measure_sims;
-            l.wall_s += j.wall_s;
+    // --- ledger fan-in
+    let mut tenants: Vec<TenantLedger> = (0..tenants_n)
+        .map(|t| {
+            let mut l = TenantLedger::new(t);
+            l.submitted = submitted[t];
+            l.admitted = admitted_per_tenant[t];
+            l.rejected = queue.rejected_for(t);
+            l.expired = expired_per_tenant[t];
+            l
+        })
+        .collect();
+    for j in &jobs {
+        let l = &mut tenants[j.job.tenant];
+        l.completed += 1;
+        if j.shared {
+            l.shared += 1;
         }
-        // per-tenant store namespace: jobs + bandit steps + profile
-        // recomputations this run contributed under each tenant label
-        for l in &tenants {
-            let steps: usize = jobs
-                .iter()
-                .filter(|j| j.job.tenant == l.tenant && !j.shared)
-                .map(|j| j.iterations)
-                .sum();
-            store.tenant_add(
-                &tenant_label(l.tenant),
-                l.completed as u64,
-                steps as u64,
-                l.profile_runs,
+        l.profile_runs += j.profile_runs;
+        l.llm_round_trips += j.llm_round_trips;
+        l.measure_sims += j.measure_sims;
+        l.wall_s += j.wall_s;
+    }
+    // per-tenant store namespace: jobs + bandit steps + profile
+    // recomputations this run contributed under each tenant label
+    for l in &tenants {
+        let steps: usize = jobs
+            .iter()
+            .filter(|j| j.job.tenant == l.tenant && !j.shared)
+            .map(|j| j.iterations)
+            .sum();
+        store.tenant_add(
+            &tenant_label(l.tenant),
+            l.completed as u64,
+            steps as u64,
+            l.profile_runs,
+        );
+    }
+    let executions = jobs.iter().filter(|j| !j.shared).count();
+    let dedup_shares = jobs.len() - executions;
+    let expired = expired_per_tenant.iter().sum();
+    ServeReport {
+        header,
+        executions,
+        dedup_shares,
+        admitted: queue.admitted(),
+        rejected: queue.rejected(),
+        expired,
+        jobs,
+        tenants,
+        rounds,
+        wall_s,
+        centroid_hits: cent.hits() - chits0,
+        centroid_misses: cent.misses() - cmiss0,
+        store_measure_sims: store
+            .stats
+            .measure_sims
+            .load(Ordering::Relaxed)
+            - sims0,
+        store_measure_hits: store
+            .stats
+            .measure_hits
+            .load(Ordering::Relaxed)
+            - mhits0,
+        store_llm_sims: store.stats.llm_sims.load(Ordering::Relaxed)
+            - llm0,
+        store_llm_hits: store.stats.llm_hits.load(Ordering::Relaxed)
+            - lhits0,
+    }
+}
+
+/// The single-supervisor real backend: queue → worker pool → real
+/// `optimize_sched` runs; no leases, no checkpointing, no faults.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InProcess;
+
+impl InProcess {
+    /// Run the request and return the raw typed report (tests and
+    /// embedders want the struct; [`ServeBackend::run`] wraps it into
+    /// a [`ServeOutcome`]).
+    pub fn run_report(&self, req: &ServeRequest,
+                      store: &Arc<TraceStore>) -> ServeReport {
+        run_serve(req, store, &mut |env, round, r| {
+            run_round(env, round, r)
+        })
+    }
+}
+
+impl ServeBackend for InProcess {
+    fn name(&self) -> &'static str {
+        "inprocess"
+    }
+
+    fn run(&self, req: &ServeRequest,
+           store: Option<&Arc<TraceStore>>) -> Result<ServeOutcome> {
+        if !req.fault.is_none() {
+            anyhow::bail!(
+                "fault injection needs --backend sharded \
+                 (the in-process backend has no leases to revoke)"
             );
         }
-        let executions = jobs.iter().filter(|j| !j.shared).count();
-        let dedup_shares = jobs.len() - executions;
-        RealServeReport {
-            config: cfg.clone(),
-            executions,
-            dedup_shares,
-            admitted: queue.admitted(),
-            rejected: queue.rejected(),
-            jobs,
-            tenants,
-            rounds,
-            wall_s,
-            centroid_hits: cent.hits() - chits0,
-            centroid_misses: cent.misses() - cmiss0,
-            store_measure_sims: store
-                .stats
-                .measure_sims
-                .load(Ordering::Relaxed)
-                - sims0,
-            store_measure_hits: store
-                .stats
-                .measure_hits
-                .load(Ordering::Relaxed)
-                - mhits0,
-            store_llm_sims: store.stats.llm_sims.load(Ordering::Relaxed)
-                - llm0,
-            store_llm_hits: store.stats.llm_hits.load(Ordering::Relaxed)
-                - lhits0,
-        }
+        let owned;
+        let store = match store {
+            Some(s) => s,
+            None => {
+                // storeless runs still share one in-memory session
+                // store across tenants (cross-tenant dedup needs it)
+                owned = Arc::new(TraceStore::in_memory());
+                &owned
+            }
+        };
+        let report = self.run_report(req, store);
+        Ok(ServeOutcome {
+            deterministic: report.deterministic_json(),
+            ledger: Some(report.ledger_json()),
+            supervisor: None,
+            lines: report.summary_lines(),
+        })
     }
 }
 
@@ -491,23 +590,27 @@ impl RealServe {
 mod tests {
     use super::*;
 
-    fn small_config() -> RealServeConfig {
-        RealServeConfig {
-            tenants: 3,
-            jobs_per_tenant: 3,
-            iterations: 10,
-            task_variety: 2,
-            workers: 2,
-            ..RealServeConfig::default()
-        }
+    fn small_req() -> ServeRequest {
+        let mut req = ServeRequest::grid(
+            3,
+            3,
+            10,
+            BatchMode::Fixed(1),
+            2,
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            7,
+        );
+        req.workers = 2;
+        req
     }
 
     #[test]
     fn deterministic_sections_are_byte_stable_across_workers_and_temp() {
         let run = |workers: usize, store: &Arc<TraceStore>| {
-            let mut cfg = small_config();
-            cfg.workers = workers;
-            RealServe::new(cfg).run(store)
+            let mut req = small_req();
+            req.workers = workers;
+            InProcess.run_report(&req, store)
         };
         let s1 = Arc::new(TraceStore::in_memory());
         let a = run(1, &s1);
@@ -532,9 +635,10 @@ mod tests {
     #[test]
     fn overlapping_fingerprints_are_paid_once_per_round() {
         let store = Arc::new(TraceStore::in_memory());
-        let report = RealServe::new(small_config()).run(&store);
+        let report = InProcess.run_report(&small_req(), &store);
         assert_eq!(report.admitted, 9);
         assert_eq!(report.rejected, 0);
+        assert_eq!(report.expired, 0);
         assert_eq!(report.jobs.len(), 9);
         // within every round, executed jobs carry distinct fingerprints
         for round in 0..report.rounds {
@@ -561,11 +665,11 @@ mod tests {
 
     #[test]
     fn admission_control_rejects_deterministically() {
-        let mut cfg = small_config();
-        cfg.queue_capacity = 5;
-        cfg.per_tenant_quota = 2;
+        let mut req = small_req();
+        req.queue_capacity = 5;
+        req.per_tenant_quota = 2;
         let store = Arc::new(TraceStore::in_memory());
-        let report = RealServe::new(cfg.clone()).run(&store);
+        let report = InProcess.run_report(&req, &store);
         // submission interleaves tenants: t0 j0, t1 j0, t2 j0, t0 j1,
         // t1 j1 — then the capacity of 5 is exhausted
         assert_eq!(report.admitted, 5);
@@ -577,11 +681,39 @@ mod tests {
         assert_eq!(t2.rejected, 2);
         // and the rejection pattern replays bit-for-bit
         let store2 = Arc::new(TraceStore::in_memory());
-        let again = RealServe::new(cfg).run(&store2);
+        let again = InProcess.run_report(&req, &store2);
         assert_eq!(
             report.deterministic_json().dump(),
             again.deterministic_json().dump()
         );
+    }
+
+    #[test]
+    fn deadlines_expire_at_pop_time() {
+        let mut req = small_req();
+        // 9 jobs, round_max 6: seqs 6..9 land in round 1. A deadline
+        // of round 0 on tenant 2's last job expires it there.
+        req.jobs[8].deadline_rounds = Some(0);
+        let store = Arc::new(TraceStore::in_memory());
+        let report = InProcess.run_report(&req, &store);
+        assert_eq!(report.expired, 1);
+        assert_eq!(report.jobs.len(), 8);
+        assert_eq!(report.tenants[2].expired, 1);
+        assert_eq!(report.tenants[2].completed, 2);
+        // expired jobs replay deterministically too
+        let store2 = Arc::new(TraceStore::in_memory());
+        let again = InProcess.run_report(&req, &store2);
+        assert_eq!(
+            report.deterministic_json().dump(),
+            again.deterministic_json().dump()
+        );
+        // a deadline the schedule meets changes nothing
+        let mut relaxed = small_req();
+        relaxed.jobs[8].deadline_rounds = Some(5);
+        let store3 = Arc::new(TraceStore::in_memory());
+        let met = InProcess.run_report(&relaxed, &store3);
+        assert_eq!(met.expired, 0);
+        assert_eq!(met.jobs.len(), 9);
     }
 
     #[test]

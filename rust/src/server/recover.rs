@@ -1,0 +1,111 @@
+//! Crash recovery: reconcile the checkpoint journal on session start.
+//!
+//! A sharded serve session that dies mid-job leaves its per-iteration
+//! checkpoints in the store's journal
+//! (`checkpoints.jsonl`, see [`crate::store`]): completed jobs retire
+//! their entries, so whatever survives a reopen is exactly the set of
+//! interrupted runs. [`reconcile`] scans that set so the supervisor can
+//! resume each one from its last iteration boundary instead of
+//! restarting it — the journal prefix feeds
+//! [`crate::policy::resume::RunCtl::resuming`], which replays the
+//! recorded effects without a single new engine or LLM call.
+
+use std::sync::Arc;
+
+use crate::store::TraceStore;
+
+/// One interrupted job found in the journal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PendingJob {
+    pub fingerprint: u64,
+    /// Iterations already banked; a resume starts at `checkpoints + 1`.
+    pub checkpoints: usize,
+}
+
+/// What a session-start scan of the checkpoint journal found.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoverySummary {
+    /// Interrupted jobs, in ascending fingerprint order.
+    pub pending: Vec<PendingJob>,
+}
+
+impl RecoverySummary {
+    pub fn is_clean(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Total banked iterations across all interrupted jobs.
+    pub fn banked_iterations(&self) -> usize {
+        self.pending.iter().map(|p| p.checkpoints).sum()
+    }
+}
+
+/// Scan the store's live checkpoint journal for jobs a previous session
+/// (or an earlier attempt in this one) left unfinished.
+pub fn reconcile(store: &Arc<TraceStore>) -> RecoverySummary {
+    let mut fps = store.ckpt_live();
+    fps.sort_unstable();
+    let pending = fps
+        .into_iter()
+        .map(|fp| PendingJob {
+            fingerprint: fp,
+            checkpoints: store.ckpt_prefix(fp).len(),
+        })
+        .collect();
+    RecoverySummary { pending }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::resume::Checkpoint;
+
+    fn ck(t: usize) -> Checkpoint {
+        Checkpoint { t, strategy: None, slots: Vec::new() }
+    }
+
+    #[test]
+    fn clean_store_reconciles_empty() {
+        let store = Arc::new(TraceStore::in_memory());
+        let s = reconcile(&store);
+        assert!(s.is_clean());
+        assert_eq!(s.banked_iterations(), 0);
+    }
+
+    #[test]
+    fn interrupted_jobs_surface_with_their_banked_prefix() {
+        let store = Arc::new(TraceStore::in_memory());
+        store.ckpt_append(40, &ck(1));
+        store.ckpt_append(40, &ck(2));
+        store.ckpt_append(7, &ck(1));
+        store.ckpt_append(99, &ck(1));
+        store.ckpt_retire(99); // completed: must not surface
+        let s = reconcile(&store);
+        assert_eq!(s.pending, vec![
+            PendingJob { fingerprint: 7, checkpoints: 1 },
+            PendingJob { fingerprint: 40, checkpoints: 2 },
+        ]);
+        assert_eq!(s.banked_iterations(), 3);
+    }
+
+    #[test]
+    fn recovery_survives_a_store_reopen() {
+        let dir = std::env::temp_dir().join(format!(
+            "kb-recover-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store =
+                Arc::new(TraceStore::open(&dir).expect("open store"));
+            store.ckpt_append(11, &ck(1));
+            store.persist().expect("persist");
+        }
+        let store =
+            Arc::new(TraceStore::open(&dir).expect("reopen store"));
+        let s = reconcile(&store);
+        assert_eq!(s.pending.len(), 1);
+        assert_eq!(s.pending[0].fingerprint, 11);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

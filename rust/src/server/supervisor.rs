@@ -1,0 +1,541 @@
+//! Sharded serving supervisor: leases, crash recovery, preemption.
+//!
+//! The [`Sharded`] backend runs the same queue → dedup → execute →
+//! fan-in loop as [`crate::server::InProcess`], but every
+//! representative execution happens under a lease
+//! ([`crate::server::lease`]) and checkpoints each iteration into the
+//! store's journal ([`crate::store`]):
+//!
+//! ```text
+//!  supervisor ──grant lease──▶ worker shard ──ckpt per iter──▶ store
+//!      │                            │
+//!      │◀── heartbeat (completion) ─┘
+//!      │
+//!      ├─ missed heartbeat → revoke lease, RESUME job from its
+//!      │  checkpoint prefix (next tick) — not restart
+//!      └─ preemption (a high-priority arrival claims the shard) →
+//!         park lease at the iteration boundary, resume it next tick
+//! ```
+//!
+//! Recovery is a *resume*, never a restart: the checkpoint journal
+//! records each iteration's external effects (strategy pick, proposals,
+//! measurements), and [`crate::policy::KernelBand::optimize_ctl`]
+//! replays them without a single new engine or LLM call, landing on the
+//! exact iteration boundary the dead worker reached. Because the split
+//! RNG derives independent streams per `(label, t, slot)`, the live
+//! iterations that follow consume exactly the draws an uninterrupted
+//! run would have — so a recovered run's deterministic artifact and
+//! trace bytes are byte-identical to an uninterrupted one, and no
+//! fingerprint's iteration is ever executed twice (the supervisor
+//! ledger counts `double_executed` and CI pins it at zero).
+//!
+//! Fault injection ([`FaultPlan`]) is fully seeded: `kill-after=K`
+//! kills each fingerprint's worker once after K completed iterations
+//! (modeling a missed heartbeat deadline); `preempt=P` parks a running
+//! lease at an iteration boundary with probability P per boundary
+//! (modeling a high-priority submission claiming the shard). Neither
+//! touches the jobs' own RNG streams, so faulted schedules replay
+//! bit-for-bit.
+
+use std::cell::Cell;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::SimEngine;
+use crate::llm::SurrogateLlm;
+use crate::policy::resume::{Checkpoint, RunCtl};
+use crate::policy::{KernelBand, PolicyConfig};
+use crate::rng::Rng;
+use crate::sched::SchedContext;
+use crate::server::api::{
+    FaultPlan, ServeBackend, ServeOutcome, ServeRequest,
+};
+use crate::server::lease::{LeaseState, LeaseTable};
+use crate::server::queue::Job;
+use crate::server::recover::reconcile;
+use crate::server::tenant::tenant_label;
+use crate::server::worker::{ExecEnv, JobResult};
+use crate::server::{run_serve, ServeReport};
+use crate::store::log::{records_for_trace_tenant, TraceRecord};
+use crate::store::wrap::{CachedEngine, CachedLlm};
+use crate::store::TraceStore;
+use crate::util::json::Json;
+use crate::util::par::parallel_map;
+
+/// The sharded serving backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Sharded;
+
+/// Why an attempt stopped early.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Interruption {
+    /// The fault plan killed the worker (missed heartbeat).
+    Killed,
+    /// A high-priority arrival preempted the shard.
+    Preempted,
+}
+
+/// One execution attempt's outcome.
+struct AttemptOut {
+    /// `Some` when the run completed its full budget.
+    result: Option<(JobResult, Option<Vec<TraceRecord>>)>,
+    interrupted: Option<Interruption>,
+    /// Iterations this attempt executed live (replayed ones excluded);
+    /// the double-execution ledger is built from these.
+    live_ts: Vec<usize>,
+}
+
+/// Supervisor state carried across rounds.
+struct SupState {
+    lease: LeaseTable,
+    /// Fingerprints whose worker the kill plan already claimed (each is
+    /// killed exactly once, so recovery is guaranteed to converge).
+    killed: Mutex<HashSet<u64>>,
+    /// `(fingerprint, t)` boundaries already preempted once (a retry
+    /// is never re-parked at the same boundary, so progress is
+    /// guaranteed).
+    parked: Mutex<HashSet<(u64, usize)>>,
+    /// Every iteration each fingerprint executed live, across all
+    /// attempts. A collision is a double execution.
+    executed_iters: HashMap<u64, HashSet<usize>>,
+    double_executed: u64,
+    ticks: usize,
+    recovered_jobs: usize,
+    recovered_iterations: usize,
+}
+
+/// Execute one leased attempt: resume from the store's checkpoint
+/// prefix, checkpoint every live iteration back into the store, stop at
+/// an iteration boundary if the fault plan fires.
+fn attempt(env: &ExecEnv<'_>, job: &Job, round: usize,
+           fault: &FaultPlan, killed: &Mutex<HashSet<u64>>,
+           parked: &Mutex<HashSet<(u64, usize)>>) -> AttemptOut {
+    let t0 = Instant::now();
+    let spec = &env.specs[job.seq];
+    let task = &env.tasks[job.task_idx];
+    let fp = job.fingerprint;
+    let engine =
+        CachedEngine::new(SimEngine::new(spec.device), env.store.clone());
+    let llm =
+        CachedLlm::new(SurrogateLlm::new(spec.llm), env.store.clone());
+    let ctx = SchedContext {
+        mode: spec.batch,
+        centroids: Some(env.store.session_centroids()),
+        profiles: Some(env.store.profiles()),
+    };
+    let mut cfg = PolicyConfig::default();
+    cfg.iterations = spec.iterations;
+    let prefix = env.store.ckpt_prefix(fp);
+    let mut live_ts: Vec<usize> = Vec::new();
+    let cause: Cell<Option<Interruption>> = Cell::new(None);
+    let stop = |t: usize| -> bool {
+        if let Some(k) = fault.kill_after {
+            let mut dead = killed.lock().unwrap();
+            if t > k && !dead.contains(&fp) {
+                dead.insert(fp);
+                cause.set(Some(Interruption::Killed));
+                return true;
+            }
+        }
+        if fault.preempt_prob > 0.0 {
+            let mut draw = Rng::new(fault.seed)
+                .split("preempt", fp)
+                .split("t", t as u64);
+            if draw.chance(fault.preempt_prob)
+                && parked.lock().unwrap().insert((fp, t))
+            {
+                cause.set(Some(Interruption::Preempted));
+                return true;
+            }
+        }
+        false
+    };
+    let run = {
+        let mut sink = |c: &Checkpoint| {
+            env.store.ckpt_append(fp, c);
+            live_ts.push(c.t);
+        };
+        let mut ctl = RunCtl {
+            resume: &prefix,
+            sink: Some(&mut sink),
+            interrupt: Some(&stop),
+        };
+        KernelBand::new(cfg).optimize_ctl(
+            task,
+            &engine,
+            &llm,
+            &Rng::new(spec.seed),
+            None,
+            &ctx,
+            &mut ctl,
+        )
+    };
+    if !run.completed {
+        return AttemptOut {
+            result: None,
+            interrupted: Some(
+                cause.get().unwrap_or(Interruption::Killed),
+            ),
+            live_ts,
+        };
+    }
+    env.store.ckpt_retire(fp);
+    let trace = run.trace;
+    // same pure-replay guard as the in-process worker: a run served
+    // entirely from cache appends no duplicate trace records
+    let fresh = engine.local_sims() + llm.local_sims() > 0;
+    let records = fresh.then(|| {
+        records_for_trace_tenant(
+            "serve",
+            Some(&tenant_label(job.tenant)),
+            spec.device.name(),
+            spec.llm.spec().name,
+            spec.seed,
+            &trace,
+        )
+    });
+    let result = JobResult {
+        job: *job,
+        round,
+        shared: false,
+        task_name: trace.task_name.clone(),
+        correct: trace.correct(),
+        best_speedup: trace.best_speedup(),
+        iterations: trace.records.len(),
+        cost_usd: trace.total_cost_usd(),
+        width_trace: trace.width_trace(),
+        profile_runs: trace.profile_runs,
+        llm_round_trips: llm.local_sims(),
+        measure_sims: engine.local_sims(),
+        wall_s: t0.elapsed().as_secs_f64(),
+    };
+    AttemptOut {
+        result: Some((result, records)),
+        interrupted: None,
+        live_ts,
+    }
+}
+
+/// One supervised round: dedup like the in-process worker, then run
+/// leased attempts in ticks until every representative completes.
+/// Interrupted attempts come back in the next tick and *resume* from
+/// their banked checkpoints.
+fn run_round_sharded(state: &mut SupState, env: &ExecEnv<'_>,
+                     round: &[Job], round_no: usize, fault: &FaultPlan)
+                     -> (Vec<JobResult>, Vec<Vec<TraceRecord>>) {
+    // phase 1: dedup — first occurrence of a fingerprint executes
+    let mut rep_of: HashMap<u64, usize> = HashMap::new();
+    let mut reps: Vec<Job> = Vec::new();
+    let mut plan: Vec<(usize, bool)> = Vec::with_capacity(round.len());
+    for job in round {
+        match rep_of.get(&job.fingerprint) {
+            Some(&ri) => plan.push((ri, true)),
+            None => {
+                let ri = reps.len();
+                rep_of.insert(job.fingerprint, ri);
+                reps.push(*job);
+                plan.push((ri, false));
+            }
+        }
+    }
+
+    // phase 2: leased execution in ticks
+    let shards = env.workers.max(1);
+    let mut done: HashMap<u64, (JobResult, Option<Vec<TraceRecord>>)> =
+        HashMap::new();
+    let mut pending: Vec<Job> = reps.clone();
+    let mut tick = 0usize;
+    while !pending.is_empty() {
+        let stamp = (round_no, tick);
+        for (i, job) in pending.iter().enumerate() {
+            let fp = job.fingerprint;
+            match state.lease.state(fp) {
+                Some(LeaseState::Parked) => {
+                    state
+                        .lease
+                        .resume(fp, i % shards, stamp)
+                        .expect("parked lease resumes");
+                }
+                _ => {
+                    state
+                        .lease
+                        .grant(fp, i % shards, stamp)
+                        .expect("no live lease: single-executor guard");
+                }
+            }
+        }
+        let outs: Vec<AttemptOut> =
+            parallel_map(&pending, env.workers, |_, job| {
+                attempt(env, job, round_no, fault, &state.killed,
+                        &state.parked)
+            });
+        let mut next = Vec::new();
+        for (job, out) in pending.iter().zip(outs) {
+            let fp = job.fingerprint;
+            let seen = state.executed_iters.entry(fp).or_default();
+            for t in out.live_ts {
+                if !seen.insert(t) {
+                    state.double_executed += 1;
+                }
+            }
+            match out.result {
+                Some((res, recs)) => {
+                    state.lease.heartbeat(fp, stamp);
+                    state.lease.complete(fp, stamp);
+                    done.insert(fp, (res, recs));
+                }
+                None => match out
+                    .interrupted
+                    .unwrap_or(Interruption::Killed)
+                {
+                    Interruption::Killed => {
+                        // no heartbeat since the grant: the lease is
+                        // past its deadline, reclaim it
+                        debug_assert!(state.lease.expired(fp, stamp));
+                        state.lease.revoke(fp, stamp);
+                        next.push(*job);
+                    }
+                    Interruption::Preempted => {
+                        state.lease.park(fp, stamp);
+                        next.push(*job);
+                    }
+                },
+            }
+        }
+        pending = next;
+        tick += 1;
+        state.ticks += 1;
+    }
+
+    // phase 3: fan-in in round order; trace-record batches in
+    // representative order (identical to the in-process worker, so
+    // trace bytes never depend on faults, ticks or shard scheduling)
+    let records: Vec<Vec<TraceRecord>> = reps
+        .iter()
+        .filter_map(|r| {
+            done.get_mut(&r.fingerprint)
+                .and_then(|(_, recs)| recs.take())
+        })
+        .collect();
+    let mut results = Vec::with_capacity(round.len());
+    for (job, &(ri, is_share)) in round.iter().zip(&plan) {
+        let rep = &done[&reps[ri].fingerprint].0;
+        if is_share {
+            results.push(JobResult {
+                job: *job,
+                round: round_no,
+                shared: true,
+                task_name: rep.task_name.clone(),
+                correct: rep.correct,
+                best_speedup: rep.best_speedup,
+                iterations: rep.iterations,
+                cost_usd: rep.cost_usd,
+                width_trace: rep.width_trace.clone(),
+                profile_runs: 0,
+                llm_round_trips: 0,
+                measure_sims: 0,
+                wall_s: 0.0,
+            });
+        } else {
+            results.push(rep.clone());
+        }
+    }
+    (results, records)
+}
+
+fn supervisor_ledger(state: &SupState, req: &ServeRequest) -> Json {
+    let (granted, resumed, revoked, parked, completed) =
+        state.lease.counters();
+    let events: Vec<Json> = state
+        .lease
+        .events()
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("round", Json::num(e.stamp.0 as f64)),
+                ("tick", Json::num(e.stamp.1 as f64)),
+                (
+                    "fingerprint",
+                    Json::str(format!("{:016x}", e.fingerprint)),
+                ),
+                ("worker", Json::num(e.worker as f64)),
+                ("what", Json::str(e.what)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("backend", Json::str("sharded")),
+        ("workers", Json::num(req.workers as f64)),
+        (
+            "kill_after",
+            req.fault
+                .kill_after
+                .map_or(Json::Null, |k| Json::num(k as f64)),
+        ),
+        ("preempt_prob", Json::num(req.fault.preempt_prob)),
+        ("fault_seed", Json::num(req.fault.seed as f64)),
+        ("recovered_jobs", Json::num(state.recovered_jobs as f64)),
+        (
+            "recovered_iterations",
+            Json::num(state.recovered_iterations as f64),
+        ),
+        ("leases", Json::num(granted as f64)),
+        ("resumed", Json::num(resumed as f64)),
+        ("revoked", Json::num(revoked as f64)),
+        ("parked", Json::num(parked as f64)),
+        ("completed", Json::num(completed as f64)),
+        ("ticks", Json::num(state.ticks as f64)),
+        (
+            "double_executed",
+            Json::num(state.double_executed as f64),
+        ),
+        ("events", Json::Arr(events)),
+    ])
+}
+
+impl Sharded {
+    /// Run the request and return the serve report plus the supervisor
+    /// ledger (lease counters + event log).
+    pub fn run_report(&self, req: &ServeRequest,
+                      store: &Arc<TraceStore>) -> (ServeReport, Json) {
+        // crash recovery: anything a previous session left in the
+        // checkpoint journal resumes instead of restarting
+        let rec = reconcile(store);
+        let mut state = SupState {
+            lease: LeaseTable::new(),
+            killed: Mutex::new(HashSet::new()),
+            parked: Mutex::new(HashSet::new()),
+            executed_iters: HashMap::new(),
+            double_executed: 0,
+            ticks: 0,
+            recovered_jobs: rec.pending.len(),
+            recovered_iterations: rec.banked_iterations(),
+        };
+        let fault = req.fault;
+        let report = run_serve(req, store, &mut |env, round, r| {
+            run_round_sharded(&mut state, env, round, r, &fault)
+        });
+        let ledger = supervisor_ledger(&state, req);
+        (report, ledger)
+    }
+}
+
+impl ServeBackend for Sharded {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn run(&self, req: &ServeRequest,
+           store: Option<&Arc<TraceStore>>) -> Result<ServeOutcome> {
+        let owned;
+        let store = match store {
+            Some(s) => s,
+            None => {
+                owned = Arc::new(TraceStore::in_memory());
+                &owned
+            }
+        };
+        let (report, sup) = self.run_report(req, store);
+        let mut lines = report.summary_lines();
+        lines.push(format!(
+            "supervisor: leases={} revoked={} parked={} resumed={} \
+             double_executed={} recovered={}",
+            sup.f64_field("leases") as u64,
+            sup.f64_field("revoked") as u64,
+            sup.f64_field("parked") as u64,
+            sup.f64_field("resumed") as u64,
+            sup.f64_field("double_executed") as u64,
+            sup.f64_field("recovered_jobs") as u64,
+        ));
+        Ok(ServeOutcome {
+            deterministic: report.deterministic_json(),
+            ledger: Some(report.ledger_json()),
+            supervisor: Some(sup),
+            lines,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_model::Device;
+    use crate::llm::LlmProfile;
+    use crate::sched::BatchMode;
+    use crate::server::InProcess;
+
+    fn small_req() -> ServeRequest {
+        let mut req = ServeRequest::grid(
+            2,
+            2,
+            6,
+            BatchMode::Fixed(1),
+            2,
+            Device::H20,
+            LlmProfile::DeepSeekV32,
+            7,
+        );
+        req.workers = 2;
+        req
+    }
+
+    #[test]
+    fn unfaulted_sharded_matches_inprocess_bytes() {
+        let req = small_req();
+        let s1 = Arc::new(TraceStore::in_memory());
+        let inproc = InProcess.run_report(&req, &s1);
+        let s2 = Arc::new(TraceStore::in_memory());
+        let (sharded, sup) = Sharded.run_report(&req, &s2);
+        assert_eq!(
+            inproc.deterministic_json().dump(),
+            sharded.deterministic_json().dump()
+        );
+        assert_eq!(sup.f64_field("revoked"), 0.0);
+        assert_eq!(sup.f64_field("parked"), 0.0);
+        assert_eq!(sup.f64_field("double_executed"), 0.0);
+        // every representative leased exactly once, all completed
+        assert_eq!(sup.f64_field("leases"), sup.f64_field("completed"));
+        // clean runs retire every checkpoint
+        assert!(s2.ckpt_live().is_empty());
+    }
+
+    #[test]
+    fn killed_workers_resume_to_identical_bytes() {
+        let mut faulted = small_req();
+        faulted.fault.kill_after = Some(2);
+        let s1 = Arc::new(TraceStore::in_memory());
+        let clean = InProcess.run_report(&small_req(), &s1);
+        let s2 = Arc::new(TraceStore::in_memory());
+        let (recovered, sup) = Sharded.run_report(&faulted, &s2);
+        assert_eq!(
+            clean.deterministic_json().dump(),
+            recovered.deterministic_json().dump()
+        );
+        assert!(sup.f64_field("revoked") > 0.0);
+        assert!(sup.f64_field("resumed") > 0.0);
+        assert_eq!(sup.f64_field("double_executed"), 0.0);
+        assert!(s2.ckpt_live().is_empty());
+    }
+
+    #[test]
+    fn preemption_parks_and_resumes_without_drift() {
+        let mut faulted = small_req();
+        faulted.fault.preempt_prob = 0.6;
+        faulted.fault.seed = 11;
+        let s1 = Arc::new(TraceStore::in_memory());
+        let clean = InProcess.run_report(&small_req(), &s1);
+        let s2 = Arc::new(TraceStore::in_memory());
+        let (preempted, sup) = Sharded.run_report(&faulted, &s2);
+        assert_eq!(
+            clean.deterministic_json().dump(),
+            preempted.deterministic_json().dump()
+        );
+        assert!(sup.f64_field("parked") > 0.0, "ledger: {}", sup.dump());
+        assert_eq!(sup.f64_field("parked"), sup.f64_field("resumed"));
+        assert_eq!(sup.f64_field("double_executed"), 0.0);
+    }
+}

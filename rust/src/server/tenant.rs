@@ -26,6 +26,9 @@ pub struct TenantLedger {
     pub admitted: usize,
     /// Jobs rejected at admission (queue capacity or tenant quota).
     pub rejected: usize,
+    /// Admitted jobs dropped unexecuted because their deadline round
+    /// had passed by the time the queue popped them.
+    pub expired: usize,
     /// Jobs that ran to completion (executed or shared).
     pub completed: usize,
     /// Completions served by sharing a round-mate's identical run.

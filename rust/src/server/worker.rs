@@ -9,9 +9,10 @@
 //!    analogue of the modeled scheduler's `dedup_shares`);
 //! 2. **execute** — representatives fan out over
 //!    [`crate::util::par::parallel_map`]; every execution is a full
-//!    [`KernelBand::optimize_sched`] run through the session's shared
-//!    [`crate::store::TraceStore`] caches (measurements, proposals),
-//!    [`crate::sched::centroids::CentroidCache`] and
+//!    [`KernelBand::optimize_sched`] run of its own [`JobSpec`]
+//!    (device, LLM, seed, batch mode, budget) through the session's
+//!    shared [`crate::store::TraceStore`] caches (measurements,
+//!    proposals), [`crate::sched::centroids::CentroidCache`] and
 //!    [`crate::sched::profiles::SharedProfiles`], so a fingerprint
 //!    seen in any earlier round resumes warm — pure lookups, zero LLM
 //!    round-trips, zero re-profiling;
@@ -29,11 +30,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::engine::SimEngine;
-use crate::gpu_model::Device;
-use crate::llm::{LlmProfile, SurrogateLlm};
+use crate::llm::SurrogateLlm;
 use crate::policy::{KernelBand, PolicyConfig};
 use crate::rng::Rng;
-use crate::sched::{BatchMode, SchedContext};
+use crate::sched::SchedContext;
+use crate::server::api::JobSpec;
 use crate::server::queue::Job;
 use crate::server::tenant::tenant_label;
 use crate::store::log::{records_for_trace_tenant, TraceRecord};
@@ -43,18 +44,15 @@ use crate::util::par::parallel_map;
 use crate::workload::TaskSpec;
 
 /// Everything an execution needs, shared across the round's workers.
+/// Per-job knobs (device, LLM, seed, batch, budget) live on each job's
+/// [`JobSpec`], indexed by the job's submission `seq`.
 pub struct ExecEnv<'a> {
-    /// The serve hot set (jobs index into this).
+    /// The serve hot set (jobs index into this via `task_idx`).
     pub tasks: &'a [TaskSpec],
+    /// The request's job specs (jobs index into this via `seq`).
+    pub specs: &'a [JobSpec],
     /// Session store shared by every tenant (caches + trace log).
     pub store: &'a Arc<TraceStore>,
-    pub mode: BatchMode,
-    pub iterations: usize,
-    pub device: Device,
-    pub llm: LlmProfile,
-    /// Root seed shared by all jobs: equal-fingerprint jobs are
-    /// bit-identical runs, which is what makes sharing sound.
-    pub seed: u64,
     /// Worker threads per round (0 = available parallelism).
     pub workers: usize,
 }
@@ -94,27 +92,28 @@ pub struct JobResult {
 fn execute(env: &ExecEnv<'_>, job: &Job, round: usize)
            -> (JobResult, Option<Vec<TraceRecord>>) {
     let t0 = Instant::now();
+    let spec = &env.specs[job.seq];
     let task = &env.tasks[job.task_idx];
     let engine = CachedEngine::new(
-        SimEngine::new(env.device),
+        SimEngine::new(spec.device),
         env.store.clone(),
     );
     let llm = CachedLlm::new(
-        SurrogateLlm::new(env.llm),
+        SurrogateLlm::new(spec.llm),
         env.store.clone(),
     );
     let ctx = SchedContext {
-        mode: env.mode,
+        mode: spec.batch,
         centroids: Some(env.store.session_centroids()),
         profiles: Some(env.store.profiles()),
     };
     let mut cfg = PolicyConfig::default();
-    cfg.iterations = env.iterations;
+    cfg.iterations = spec.iterations;
     let trace = KernelBand::new(cfg).optimize_sched(
         task,
         &engine,
         &llm,
-        &Rng::new(env.seed),
+        &Rng::new(spec.seed),
         None,
         &ctx,
     );
@@ -123,9 +122,9 @@ fn execute(env: &ExecEnv<'_>, job: &Job, round: usize)
         records_for_trace_tenant(
             "serve",
             Some(&tenant_label(job.tenant)),
-            env.device.name(),
-            env.llm.spec().name,
-            env.seed,
+            spec.device.name(),
+            spec.llm.spec().name,
+            spec.seed,
             &trace,
         )
     });
@@ -213,23 +212,20 @@ pub fn run_round(env: &ExecEnv<'_>, round: &[Job], round_no: usize)
 mod tests {
     use super::*;
 
-    fn env<'a>(tasks: &'a [TaskSpec], store: &'a Arc<TraceStore>)
-               -> ExecEnv<'a> {
-        ExecEnv {
-            tasks,
-            store,
-            mode: BatchMode::Fixed(1),
-            iterations: 12,
-            device: Device::H20,
-            llm: LlmProfile::DeepSeekV32,
-            seed: 7,
-            workers: 2,
-        }
+    fn env<'a>(tasks: &'a [TaskSpec], specs: &'a [JobSpec],
+               store: &'a Arc<TraceStore>) -> ExecEnv<'a> {
+        ExecEnv { tasks, specs, store, workers: 2 }
     }
 
     fn hot_tasks() -> Vec<TaskSpec> {
         let suite = crate::workload::Suite::full(1);
         suite.tasks.into_iter().step_by(41).take(2).collect()
+    }
+
+    // one identical-spec entry per seq: equal-fingerprint jobs must
+    // carry equal specs (run_serve derives the fingerprint from them)
+    fn specs(n: usize) -> Vec<JobSpec> {
+        (0..n).map(|_| JobSpec::new(0, 0).iterations(12)).collect()
     }
 
     fn job(seq: usize, tenant: usize, task_idx: usize, fp: u64) -> Job {
@@ -239,8 +235,9 @@ mod tests {
     #[test]
     fn round_pays_each_fingerprint_once_and_shares_the_rest() {
         let tasks = hot_tasks();
+        let specs = specs(4);
         let store = Arc::new(TraceStore::in_memory());
-        let e = env(&tasks, &store);
+        let e = env(&tasks, &specs, &store);
         let round = vec![
             job(0, 0, 0, 100),
             job(1, 1, 0, 100),
@@ -270,8 +267,9 @@ mod tests {
     #[test]
     fn warm_round_is_pure_lookups() {
         let tasks = hot_tasks();
+        let specs = specs(2);
         let store = Arc::new(TraceStore::in_memory());
-        let e = env(&tasks, &store);
+        let e = env(&tasks, &specs, &store);
         let round = vec![job(0, 0, 0, 100)];
         let (cold, _) = run_round(&e, &round, 0);
         assert!(cold[0].measure_sims > 0);

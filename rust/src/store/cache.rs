@@ -73,7 +73,7 @@ use super::{
     parse_hex_u64 as parse_hex,
 };
 
-fn config_to_arr(c: &KernelConfig) -> Json {
+pub(crate) fn config_to_arr(c: &KernelConfig) -> Json {
     Json::Arr(
         [c.tile_m, c.tile_n, c.tile_k, c.vector, c.fusion, c.pipeline,
          c.loop_order, c.layout]
@@ -83,7 +83,7 @@ fn config_to_arr(c: &KernelConfig) -> Json {
     )
 }
 
-fn config_from_arr(j: &Json) -> Option<KernelConfig> {
+pub(crate) fn config_from_arr(j: &Json) -> Option<KernelConfig> {
     let a = j.as_arr()?;
     if a.len() != 8 {
         return None;
@@ -194,7 +194,7 @@ pub fn measurement_from_record(j: &Json) -> Option<(u64, Measurement)> {
 
 // --- proposal serialization ------------------------------------------------
 
-fn outcome_str(o: GenOutcome) -> &'static str {
+pub(crate) fn outcome_str(o: GenOutcome) -> &'static str {
     match o {
         GenOutcome::Ok => "ok",
         GenOutcome::CompileError => "compile_error",
@@ -202,7 +202,7 @@ fn outcome_str(o: GenOutcome) -> &'static str {
     }
 }
 
-fn outcome_from_str(s: &str) -> Option<GenOutcome> {
+pub(crate) fn outcome_from_str(s: &str) -> Option<GenOutcome> {
     match s {
         "ok" => Some(GenOutcome::Ok),
         "compile_error" => Some(GenOutcome::CompileError),

@@ -1,0 +1,384 @@
+//! Mid-job checkpoint journal (`checkpoints.jsonl`).
+//!
+//! [`crate::store::warm`] replays *completed* traces into priors at
+//! session granularity; this journal extends durability to *mid-job*
+//! granularity. Each line is one of:
+//!
+//! * `{"kind":"ckpt", "fp":…, "t":…, …}` — one
+//!   [`Checkpoint`](crate::policy::resume::Checkpoint) of the job
+//!   addressed by its serve fingerprint: the iteration's strategy pick,
+//!   per-slot proposals and per-slot measurements, encoded with the
+//!   exact same codecs as the content caches (bit-exact roundtrip);
+//! * `{"kind":"done", "fp":…}` — a tombstone: the job completed and its
+//!   checkpoint prefix is dead.
+//!
+//! Replaying the file in order reconstructs, per fingerprint, the
+//! checkpoint prefix of every job that was in flight when the session
+//! ended — which is exactly what
+//! [`crate::server::recover`] hands the supervisor to resume a crashed
+//! job on the iteration boundary it died at, instead of restarting it.
+//!
+//! The journal is a cache, not the source of truth: losing it (torn
+//! tail, version bump) only costs re-execution, which the content
+//! caches absorb. Decoding is therefore lossy-tolerant like every
+//! other store file, and a fingerprint's prefix is truncated at the
+//! first gap in its iteration sequence.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::policy::resume::{Checkpoint, SlotCheckpoint};
+use crate::strategy::Strategy;
+use crate::util::json::Json;
+
+use super::cache::{
+    self, config_from_arr, config_to_arr, outcome_from_str, outcome_str,
+};
+use super::{
+    counters_from_json, counters_to_json, hex_u64, parse_hex_u64,
+};
+
+fn slot_to_json(s: &SlotCheckpoint) -> Json {
+    let p = &s.proposal;
+    let mut obj = Json::obj(vec![
+        ("outcome", Json::str(outcome_str(p.outcome))),
+        ("config", config_to_arr(&p.config)),
+        ("tokens_in", Json::num(p.tokens_in as f64)),
+        ("tokens_out", Json::num(p.tokens_out as f64)),
+        ("cost_usd", Json::num(p.cost_usd)),
+        ("latency_s", Json::num(p.latency_s)),
+    ]);
+    if let Some(m) = &s.measured {
+        obj.insert(
+            "measured",
+            Json::obj(vec![
+                ("total_s", Json::num(m.total_latency_s)),
+                (
+                    "shapes",
+                    Json::Arr(
+                        m.per_shape_s
+                            .iter()
+                            .map(|&v| Json::num(v))
+                            .collect(),
+                    ),
+                ),
+                ("counters", counters_to_json(&m.counters)),
+            ]),
+        );
+    }
+    obj
+}
+
+fn slot_from_json(j: &Json) -> Option<SlotCheckpoint> {
+    let proposal = crate::llm::Proposal {
+        outcome: outcome_from_str(j.str_field("outcome").ok()?)?,
+        config: config_from_arr(j.get("config")?)?,
+        tokens_in: j.f64_field("tokens_in") as u64,
+        tokens_out: j.f64_field("tokens_out") as u64,
+        cost_usd: j.get("cost_usd")?.as_f64()?,
+        latency_s: j.get("latency_s")?.as_f64()?,
+    };
+    let measured = match j.get("measured") {
+        None => None,
+        Some(m) => Some(crate::kernel::Measurement {
+            total_latency_s: m.get("total_s")?.as_f64()?,
+            per_shape_s: m
+                .get("shapes")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0))
+                .collect(),
+            counters: counters_from_json(m.get("counters")?),
+        }),
+    };
+    Some(SlotCheckpoint { proposal, measured })
+}
+
+/// Serialize one checkpoint of job `fp` as a JSONL value.
+pub(crate) fn ckpt_record(fp: u64, c: &Checkpoint) -> Json {
+    let mut obj = Json::obj(vec![
+        ("v", Json::num(cache::CACHE_VERSION)),
+        ("kind", Json::str("ckpt")),
+        ("fp", hex_u64(fp)),
+        ("t", Json::num(c.t as f64)),
+        (
+            "slots",
+            Json::Arr(c.slots.iter().map(slot_to_json).collect()),
+        ),
+    ]);
+    if let Some(s) = c.strategy {
+        obj.insert("strategy", Json::num(s.index() as f64));
+    }
+    obj
+}
+
+/// Serialize a completion tombstone for job `fp`.
+pub(crate) fn done_record(fp: u64) -> Json {
+    Json::obj(vec![
+        ("v", Json::num(cache::CACHE_VERSION)),
+        ("kind", Json::str("done")),
+        ("fp", hex_u64(fp)),
+    ])
+}
+
+/// One decoded journal line.
+pub(crate) enum JournalLine {
+    Ckpt(u64, Checkpoint),
+    Done(u64),
+}
+
+/// Decode one journal line; `None` on unknown version/kind/shape.
+pub(crate) fn journal_from_record(j: &Json) -> Option<JournalLine> {
+    if j.get("v").and_then(Json::as_f64) != Some(cache::CACHE_VERSION) {
+        return None;
+    }
+    let fp = parse_hex_u64(j.get("fp"))?;
+    match j.get("kind")?.as_str()? {
+        "done" => Some(JournalLine::Done(fp)),
+        "ckpt" => {
+            let strategy = match j.get("strategy") {
+                None => None,
+                Some(v) => {
+                    let i = v.as_f64()? as usize;
+                    if i >= crate::strategy::NUM_STRATEGIES {
+                        return None;
+                    }
+                    Some(Strategy::from_index(i))
+                }
+            };
+            let slots = j
+                .get("slots")?
+                .as_arr()?
+                .iter()
+                .map(slot_from_json)
+                .collect::<Option<Vec<_>>>()?;
+            Some(JournalLine::Ckpt(
+                fp,
+                Checkpoint {
+                    t: j.f64_field("t") as usize,
+                    strategy,
+                    slots,
+                },
+            ))
+        }
+        _ => None,
+    }
+}
+
+/// In-memory journal state: live checkpoint prefixes per fingerprint
+/// plus the lines pending the next flush.
+///
+/// ## Multi-writer append discipline
+///
+/// Worker shards checkpoint concurrently, so the pending line order
+/// interleaves fingerprints nondeterministically. That is sound
+/// because replay groups lines *per fingerprint* (each fingerprint's
+/// own lines stay in emission order under the registry mutex) — but it
+/// means `checkpoints.jsonl` is the one store file whose bytes are
+/// **not** compared across runs; the determinism contract covers the
+/// artifacts and `trace.jsonl`, never the journal.
+#[derive(Debug, Default)]
+pub(crate) struct CkptRegistry {
+    live: BTreeMap<u64, Vec<Checkpoint>>,
+    pending: Vec<(u64, Json)>,
+    /// Fingerprints with at least one line already flushed to disk —
+    /// their retirement must append a tombstone; a fingerprint retired
+    /// before any flush simply drops its pending lines.
+    flushed: HashSet<u64>,
+}
+
+impl CkptRegistry {
+    pub fn append(&mut self, fp: u64, c: &Checkpoint) {
+        self.pending.push((fp, ckpt_record(fp, c)));
+        self.live.entry(fp).or_default().push(c.clone());
+    }
+
+    /// Current checkpoint prefix for `fp` (empty when none).
+    pub fn prefix(&self, fp: u64) -> Vec<Checkpoint> {
+        self.live.get(&fp).cloned().unwrap_or_default()
+    }
+
+    /// The job completed: drop its prefix and tombstone it on disk if
+    /// any of its lines already landed there.
+    pub fn retire(&mut self, fp: u64) {
+        self.live.remove(&fp);
+        self.pending.retain(|(f, _)| *f != fp);
+        if self.flushed.contains(&fp) {
+            self.pending.push((fp, done_record(fp)));
+        }
+    }
+
+    /// Fingerprints with a live (non-empty) checkpoint prefix.
+    pub fn live_fingerprints(&self) -> Vec<u64> {
+        self.live
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(&k, _)| k)
+            .collect()
+    }
+
+    /// Drain pending lines as JSONL text for appending.
+    pub fn take_pending(&mut self) -> String {
+        let mut out = String::new();
+        for (fp, line) in std::mem::take(&mut self.pending) {
+            self.flushed.insert(fp);
+            out.push_str(&line.dump());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Rebuild from decoded journal lines (load path). Applies lines in
+    /// file order, then normalizes each fingerprint's prefix: sorted by
+    /// iteration, truncated at the first gap, so a torn tail can never
+    /// fabricate a resumable-looking but discontiguous prefix.
+    pub fn load(&mut self, lines: Vec<JournalLine>) -> usize {
+        for line in lines {
+            match line {
+                JournalLine::Ckpt(fp, c) => {
+                    self.flushed.insert(fp);
+                    self.live.entry(fp).or_default().push(c);
+                }
+                JournalLine::Done(fp) => {
+                    self.flushed.insert(fp);
+                    self.live.remove(&fp);
+                }
+            }
+        }
+        self.live.retain(|_, cks| {
+            cks.sort_by_key(|c| c.t);
+            cks.dedup_by_key(|c| c.t);
+            let mut keep = 0;
+            while keep < cks.len() && cks[keep].t == keep + 1 {
+                keep += 1;
+            }
+            cks.truncate(keep);
+            !cks.is_empty()
+        });
+        self.live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{Counters, KernelConfig, Measurement};
+    use crate::llm::{GenOutcome, Proposal};
+
+    fn sample_ckpt(t: usize) -> Checkpoint {
+        Checkpoint {
+            t,
+            strategy: Some(Strategy::Fusion),
+            slots: vec![
+                SlotCheckpoint {
+                    proposal: Proposal {
+                        outcome: GenOutcome::Ok,
+                        config: KernelConfig {
+                            tile_m: 3,
+                            tile_n: 4,
+                            tile_k: 2,
+                            vector: 1,
+                            fusion: 2,
+                            pipeline: 3,
+                            loop_order: 5,
+                            layout: 1,
+                        },
+                        tokens_in: 20_800,
+                        tokens_out: 11_200,
+                        cost_usd: 0.01234567,
+                        latency_s: 700.125,
+                    },
+                    measured: Some(Measurement {
+                        total_latency_s: 0.001234567890123,
+                        per_shape_s: vec![0.0004, 0.0008345678901234],
+                        counters: Counters {
+                            sm_pct: 33.33333333333333,
+                            ..Default::default()
+                        },
+                    }),
+                },
+                SlotCheckpoint {
+                    proposal: Proposal {
+                        outcome: GenOutcome::CompileError,
+                        config: KernelConfig::naive(),
+                        tokens_in: 1,
+                        tokens_out: 2,
+                        cost_usd: 0.5,
+                        latency_s: 1.5,
+                    },
+                    measured: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let ck = sample_ckpt(7);
+        let line = ckpt_record(0xfeed_0000_0000_beef, &ck).dump();
+        let parsed = crate::util::json::parse(&line).unwrap();
+        match journal_from_record(&parsed).unwrap() {
+            JournalLine::Ckpt(fp, back) => {
+                assert_eq!(fp, 0xfeed_0000_0000_beef);
+                assert_eq!(back, ck);
+            }
+            JournalLine::Done(_) => panic!("wrong kind"),
+        }
+        // a strategy-less (freeform) checkpoint omits the field
+        let mut no_strat = sample_ckpt(1);
+        no_strat.strategy = None;
+        let line = ckpt_record(1, &no_strat).dump();
+        assert!(!line.contains("strategy"));
+        let parsed = crate::util::json::parse(&line).unwrap();
+        match journal_from_record(&parsed).unwrap() {
+            JournalLine::Ckpt(_, back) => assert_eq!(back, no_strat),
+            JournalLine::Done(_) => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn registry_retire_before_flush_leaves_no_bytes() {
+        let mut reg = CkptRegistry::default();
+        reg.append(9, &sample_ckpt(1));
+        reg.append(9, &sample_ckpt(2));
+        assert_eq!(reg.prefix(9).len(), 2);
+        assert_eq!(reg.live_fingerprints(), vec![9]);
+        // completed before any flush: the journal never sees the job
+        reg.retire(9);
+        assert!(reg.prefix(9).is_empty());
+        assert!(reg.take_pending().is_empty());
+    }
+
+    #[test]
+    fn registry_tombstones_after_flush() {
+        let mut reg = CkptRegistry::default();
+        reg.append(9, &sample_ckpt(1));
+        let flushed = reg.take_pending();
+        assert_eq!(flushed.lines().count(), 1);
+        reg.retire(9);
+        let tomb = reg.take_pending();
+        assert!(tomb.contains("\"kind\":\"done\""));
+    }
+
+    #[test]
+    fn load_reconstructs_prefixes_and_applies_tombstones() {
+        let lines = vec![
+            JournalLine::Ckpt(1, sample_ckpt(1)),
+            JournalLine::Ckpt(2, sample_ckpt(1)),
+            JournalLine::Ckpt(1, sample_ckpt(2)),
+            JournalLine::Done(2),
+            // gap: t=4 without t=3 must truncate to the contiguous
+            // prefix [1, 2]
+            JournalLine::Ckpt(1, sample_ckpt(4)),
+        ];
+        let mut reg = CkptRegistry::default();
+        let live = reg.load(lines);
+        assert_eq!(live, 1);
+        assert_eq!(reg.live_fingerprints(), vec![1]);
+        let prefix = reg.prefix(1);
+        assert_eq!(
+            prefix.iter().map(|c| c.t).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        assert!(reg.prefix(2).is_empty());
+    }
+}

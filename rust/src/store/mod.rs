@@ -35,16 +35,40 @@
 //! ## On-disk layout (`--store DIR`)
 //!
 //! ```text
-//! DIR/kernels.jsonl    measurement cache (append-only, content-addressed)
-//! DIR/proposals.jsonl  LLM-proposal cache (append-only, content-addressed)
-//! DIR/profiles.jsonl   representative NCU signatures (profiler memo)
-//! DIR/service.jsonl    service-job completions (gateway bypass keys)
-//! DIR/trace.jsonl      the trace log (append-only, versioned records)
-//! DIR/tenants.jsonl    per-tenant counters (multi-tenant serve deltas)
+//! DIR/kernels.jsonl      measurement cache (append-only, content-addressed)
+//! DIR/proposals.jsonl    LLM-proposal cache (append-only, content-addressed)
+//! DIR/profiles.jsonl     representative NCU signatures (profiler memo)
+//! DIR/service.jsonl      service-job completions (gateway bypass keys)
+//! DIR/trace.jsonl        the trace log (append-only, versioned records)
+//! DIR/tenants.jsonl      per-tenant counters (multi-tenant serve deltas)
+//! DIR/checkpoints.jsonl  mid-job checkpoint journal (crash recovery)
 //! ```
 //!
-//! All six files tolerate truncated tails and unknown record versions
+//! All seven files tolerate truncated tails and unknown record versions
 //! on load ([`crate::util::json::parse_lines_lossy`]).
+//!
+//! ## Multi-writer append discipline
+//!
+//! Many worker threads (and, under sharded serving, many leased worker
+//! shards) write through one `TraceStore` concurrently. The discipline
+//! that keeps the files deterministic where it matters:
+//!
+//! * **Nothing is written at event time.** Every mutation lands in an
+//!   in-memory structure behind a mutex (caches mark dirty keys, trace
+//!   records queue in `pending_log`, checkpoints queue in the journal
+//!   registry); the *only* writer of file bytes is
+//!   [`TraceStore::persist`], called from the planning thread after
+//!   fan-in. Workers never race on a file descriptor.
+//! * **Deterministic sections sort before flushing.** Cache entries
+//!   append sorted by content key, tenant deltas in label order, and
+//!   trace records are queued in canonical round/job order by the
+//!   fan-in — so `kernels.jsonl`, `proposals.jsonl`, `profiles.jsonl`,
+//!   `service.jsonl`, `tenants.jsonl` and `trace.jsonl` bytes are
+//!   invariant to worker count and scheduling.
+//! * **The checkpoint journal is exempt.** Shards checkpoint mid-job,
+//!   so `checkpoints.jsonl` interleaves fingerprints in wall-clock
+//!   order; replay groups lines per fingerprint, which is sound, but
+//!   the file is never byte-compared (see [`ckpt`]).
 //!
 //! `profiles.jsonl` persists the policy's memoized representative
 //! NCU signatures ([`crate::sched::profiles::SharedProfiles`], keyed
@@ -57,6 +81,7 @@
 //! warm-start seeds instead).
 
 pub mod cache;
+pub(crate) mod ckpt;
 pub mod log;
 pub mod warm;
 pub mod wrap;
@@ -83,6 +108,7 @@ const PROFILES_FILE: &str = "profiles.jsonl";
 const SERVICE_FILE: &str = "service.jsonl";
 const TRACE_FILE: &str = "trace.jsonl";
 const TENANTS_FILE: &str = "tenants.jsonl";
+const CHECKPOINTS_FILE: &str = "checkpoints.jsonl";
 
 /// Serialize one persisted NCU signature as a JSONL value.
 pub(crate) fn profile_record(key: u64, sig: &HardwareSignature) -> Json {
@@ -191,6 +217,9 @@ pub struct LoadSummary {
     pub service: usize,
     /// Distinct tenant namespaces with persisted counters.
     pub tenants: usize,
+    /// Fingerprints with a live (untombstoned) mid-job checkpoint
+    /// prefix — jobs a previous session left in flight.
+    pub checkpoints: usize,
     /// Cache/service lines skipped (corrupt or unknown version).
     pub skipped: usize,
 }
@@ -258,6 +287,8 @@ pub struct TraceStore {
     centroids: Arc<CentroidCache>,
     /// Records appended this session, flushed by [`TraceStore::persist`].
     pending_log: Mutex<Vec<TraceRecord>>,
+    /// Mid-job checkpoint journal (`checkpoints.jsonl`; crash recovery).
+    ckpts: Mutex<ckpt::CkptRegistry>,
     warm: Option<WarmIndex>,
     pub stats: StoreStats,
     pub loaded: LoadSummary,
@@ -282,6 +313,7 @@ impl TraceStore {
             profiles: Arc::new(SharedProfiles::new()),
             centroids: Arc::new(CentroidCache::new()),
             pending_log: Mutex::new(Vec::new()),
+            ckpts: Mutex::new(ckpt::CkptRegistry::default()),
             warm: None,
             stats: StoreStats::default(),
             loaded: LoadSummary::default(),
@@ -382,6 +414,20 @@ impl TraceStore {
             }
             summary.tenants = tenants.totals.len();
         }
+        {
+            let (values, corrupt) =
+                parse_lines_lossy(&read(CHECKPOINTS_FILE)?);
+            summary.skipped += corrupt;
+            let mut lines = Vec::new();
+            for v in &values {
+                match ckpt::journal_from_record(v) {
+                    Some(l) => lines.push(l),
+                    None => summary.skipped += 1,
+                }
+            }
+            summary.checkpoints =
+                store.ckpts.lock().unwrap().load(lines);
+        }
         store.loaded = summary;
         Ok(store)
     }
@@ -452,6 +498,35 @@ impl TraceStore {
     /// Queue trace records for the next [`TraceStore::persist`].
     pub fn append_trace(&self, records: Vec<TraceRecord>) {
         self.pending_log.lock().unwrap().extend(records);
+    }
+
+    // --- mid-job checkpoint journal (crash recovery) --------------------
+
+    /// Journal one iteration checkpoint of the job addressed by `fp`
+    /// (the serve fingerprint). Extends the job's resumable prefix.
+    pub fn ckpt_append(&self, fp: u64,
+                       c: &crate::policy::resume::Checkpoint) {
+        self.ckpts.lock().unwrap().append(fp, c);
+    }
+
+    /// The job's current resumable checkpoint prefix (iterations
+    /// `1..=len`, contiguous; empty when the job has no live prefix).
+    pub fn ckpt_prefix(&self, fp: u64)
+                       -> Vec<crate::policy::resume::Checkpoint> {
+        self.ckpts.lock().unwrap().prefix(fp)
+    }
+
+    /// Mark the job complete: its prefix is dropped and, if any of it
+    /// already reached disk, tombstoned so a reload ignores it.
+    pub fn ckpt_retire(&self, fp: u64) {
+        self.ckpts.lock().unwrap().retire(fp);
+    }
+
+    /// Fingerprints with a live checkpoint prefix — in-flight jobs
+    /// this session, or crashed jobs a previous session left behind
+    /// (surface for [`crate::server::recover`]).
+    pub fn ckpt_live(&self) -> Vec<u64> {
+        self.ckpts.lock().unwrap().live_fingerprints()
     }
 
     /// Credit per-tenant work to the tenant namespace (accumulated
@@ -535,6 +610,13 @@ impl TraceStore {
 
         let pending = std::mem::take(&mut *self.pending_log.lock().unwrap());
         append(TRACE_FILE, log::to_jsonl(&pending))?;
+
+        // checkpoint journal right after the trace: losing it only
+        // costs re-execution (absorbed by the caches below), while a
+        // persisted prefix lets the next session resume a crashed job
+        // on its exact iteration boundary
+        let ckpt_text = self.ckpts.lock().unwrap().take_pending();
+        append(CHECKPOINTS_FILE, ckpt_text)?;
 
         let mut kernels_text = String::new();
         for (k, m) in self.kernels.lock().unwrap().take_dirty() {
@@ -744,6 +826,57 @@ mod tests {
         let text =
             std::fs::read_to_string(dir.join(TENANTS_FILE)).unwrap();
         assert_eq!(text.lines().count(), 3); // t0+t1, then t1 delta
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_journal_survives_reopen_until_retired() {
+        let dir = tmp_dir("ckpts");
+        let ck = crate::policy::resume::Checkpoint {
+            t: 1,
+            strategy: None,
+            slots: vec![crate::policy::resume::SlotCheckpoint {
+                proposal: crate::llm::Proposal {
+                    outcome: crate::llm::GenOutcome::Ok,
+                    config: crate::kernel::KernelConfig::naive(),
+                    tokens_in: 10,
+                    tokens_out: 20,
+                    cost_usd: 0.25,
+                    latency_s: 2.0,
+                },
+                measured: Some(meas(0.125)),
+            }],
+        };
+        {
+            // in-flight at persist time: the prefix reaches disk
+            let store = TraceStore::open(&dir).unwrap();
+            store.ckpt_append(5, &ck);
+            store.persist().unwrap();
+        }
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            assert_eq!(store.loaded.checkpoints, 1);
+            assert_eq!(store.ckpt_live(), vec![5]);
+            assert_eq!(store.ckpt_prefix(5), vec![ck.clone()]);
+            // the resumed job completes: tombstone on the next flush
+            store.ckpt_retire(5);
+            store.persist().unwrap();
+        }
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            assert_eq!(store.loaded.checkpoints, 0);
+            assert!(store.ckpt_live().is_empty());
+        }
+        // a job that completes within one session never hits the file
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            store.ckpt_append(6, &ck);
+            store.ckpt_retire(6);
+            store.persist().unwrap();
+        }
+        let text = std::fs::read_to_string(dir.join(CHECKPOINTS_FILE))
+            .unwrap();
+        assert!(!text.contains(&format!("{:016x}", 6u64)));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

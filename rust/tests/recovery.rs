@@ -1,0 +1,153 @@
+//! Crash-recovery property tests for the sharded serving backend
+//! ([`kernelband::server::Sharded`]): killed workers resume — never
+//! restart — from the store's checkpoint journal, preemption parks and
+//! resumes leases without RNG-stream drift, no fingerprint iteration is
+//! ever executed twice, and the deterministic artifact plus the on-disk
+//! trace log stay byte-identical to an uninterrupted run for every kill
+//! point, preemption schedule and worker count.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use kernelband::gpu_model::Device;
+use kernelband::llm::LlmProfile;
+use kernelband::sched::BatchMode;
+use kernelband::server::{InProcess, ServeRequest, Sharded};
+use kernelband::store::TraceStore;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("kb_recovery_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_request() -> ServeRequest {
+    let mut req = ServeRequest::grid(
+        2,
+        2,
+        8,
+        BatchMode::Fixed(1),
+        2,
+        Device::H20,
+        LlmProfile::DeepSeekV32,
+        7,
+    );
+    req.workers = 2;
+    req
+}
+
+/// Tentpole property (a): kill the worker after K iterations for every
+/// interesting K; the recovered run's deterministic artifact AND the
+/// persisted trace log must be byte-identical to an uninterrupted run.
+#[test]
+fn kill_at_every_boundary_recovers_to_identical_bytes() {
+    let clean_dir = tmp_dir("kill_clean");
+    let (clean_bytes, clean_trace) = {
+        let store = Arc::new(TraceStore::open(&clean_dir).unwrap());
+        let report = InProcess.run_report(&small_request(), &store);
+        store.persist().unwrap();
+        let trace = std::fs::read(store.trace_path().unwrap()).unwrap();
+        (report.deterministic_json().dump(), trace)
+    };
+    assert!(!clean_trace.is_empty());
+
+    for k in [0usize, 1, 3, 5, 7] {
+        let dir = tmp_dir(&format!("kill_{k}"));
+        let store = Arc::new(TraceStore::open(&dir).unwrap());
+        let mut req = small_request();
+        req.fault.kill_after = Some(k);
+        let (report, sup) = Sharded.run_report(&req, &store);
+        store.persist().unwrap();
+        assert_eq!(
+            report.deterministic_json().dump(),
+            clean_bytes,
+            "kill-after={k}: deterministic artifact drifted"
+        );
+        let trace = std::fs::read(store.trace_path().unwrap()).unwrap();
+        assert_eq!(trace, clean_trace,
+                   "kill-after={k}: trace log bytes drifted");
+        // every execution was actually interrupted once and resumed
+        assert!(sup.f64_field("revoked") > 0.0, "kill-after={k}");
+        assert!(sup.f64_field("resumed") >= sup.f64_field("revoked"));
+        assert_eq!(sup.f64_field("double_executed"), 0.0,
+                   "kill-after={k}: an iteration ran twice");
+        // completed runs retire their checkpoints
+        assert!(store.ckpt_live().is_empty(), "kill-after={k}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let _ = std::fs::remove_dir_all(&clean_dir);
+}
+
+/// Tentpole property (b): lease expiry never double-executes a
+/// fingerprint — the store ledger counts each simulated measurement and
+/// LLM call exactly once, faulted or not.
+#[test]
+fn recovery_never_double_pays_simulations() {
+    let s1 = Arc::new(TraceStore::in_memory());
+    let clean = InProcess.run_report(&small_request(), &s1);
+    assert!(clean.store_measure_sims > 0);
+    assert!(clean.store_llm_sims > 0);
+
+    let s2 = Arc::new(TraceStore::in_memory());
+    let mut req = small_request();
+    req.fault.kill_after = Some(3);
+    let (faulted, sup) = Sharded.run_report(&req, &s2);
+    // the kill → resume cycle replays banked iterations from the
+    // checkpoint journal (zero engine/LLM calls) and executes only the
+    // remainder live, so the totals match the uninterrupted run exactly
+    assert_eq!(faulted.store_measure_sims, clean.store_measure_sims);
+    assert_eq!(faulted.store_llm_sims, clean.store_llm_sims);
+    assert!(sup.f64_field("resumed") > 0.0);
+    assert_eq!(sup.f64_field("double_executed"), 0.0);
+}
+
+/// Tentpole property (c): preemption parks the lease at an iteration
+/// boundary and resumes it with zero RNG-stream drift — the
+/// deterministic artifact matches a preemption-free run byte-for-byte.
+#[test]
+fn preemption_parks_and_resumes_without_rng_drift() {
+    let s1 = Arc::new(TraceStore::in_memory());
+    let calm = InProcess.run_report(&small_request(), &s1);
+
+    let s2 = Arc::new(TraceStore::in_memory());
+    let mut req = small_request();
+    req.fault.preempt_prob = 0.7;
+    req.fault.seed = 5;
+    let (stormy, sup) = Sharded.run_report(&req, &s2);
+    assert_eq!(
+        calm.deterministic_json().dump(),
+        stormy.deterministic_json().dump()
+    );
+    assert!(sup.f64_field("parked") > 0.0, "ledger: {}", sup.dump());
+    // every parked lease resumed (and only parked leases resume here)
+    assert_eq!(sup.f64_field("parked"), sup.f64_field("resumed"));
+    assert_eq!(sup.f64_field("double_executed"), 0.0);
+    assert!(s2.ckpt_live().is_empty());
+}
+
+/// Tentpole property (d): mixed-tenant sharded runs are worker-count
+/// invariant under faults, and an unfaulted sharded run matches the
+/// in-process backend byte-for-byte.
+#[test]
+fn sharded_is_worker_invariant_and_matches_inprocess() {
+    let run = |workers: usize| {
+        let mut req = small_request();
+        req.workers = workers;
+        req.fault.kill_after = Some(2);
+        req.fault.preempt_prob = 0.4;
+        req.fault.seed = 9;
+        let store = Arc::new(TraceStore::in_memory());
+        let (report, sup) = Sharded.run_report(&req, &store);
+        assert_eq!(sup.f64_field("double_executed"), 0.0);
+        report.deterministic_json().dump()
+    };
+    let w1 = run(1);
+    let w4 = run(4);
+    assert_eq!(w1, w4, "worker count leaked into deterministic bytes");
+
+    // and the faulted sharded bytes equal the plain in-process bytes
+    let store = Arc::new(TraceStore::in_memory());
+    let inproc = InProcess.run_report(&small_request(), &store);
+    assert_eq!(inproc.deterministic_json().dump(), w1);
+}

@@ -1,15 +1,17 @@
 //! Integration coverage for the real serving subsystem
-//! ([`kernelband::server`]): the ledger contract (each distinct
-//! fingerprint paid once per round, warm tenants do zero new work,
-//! measured wall-clock present while deterministic sections stay
-//! byte-stable) and the mixed-tenant store regression for
-//! `trace stats`.
+//! ([`kernelband::server`]) through the `JobSpec`/`ServeBackend` API:
+//! the ledger contract (each distinct fingerprint paid once per round,
+//! warm tenants do zero new work, measured wall-clock present while
+//! deterministic sections stay byte-stable) and the mixed-tenant store
+//! regression for `trace stats`.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use kernelband::gpu_model::Device;
+use kernelband::llm::LlmProfile;
 use kernelband::sched::BatchMode;
-use kernelband::server::{RealServe, RealServeConfig};
+use kernelband::server::{InProcess, ServeRequest};
 use kernelband::store::{log as trace_log, TraceStore};
 
 fn tmp_dir(tag: &str) -> PathBuf {
@@ -19,15 +21,19 @@ fn tmp_dir(tag: &str) -> PathBuf {
     dir
 }
 
-fn three_tenant_config() -> RealServeConfig {
-    RealServeConfig {
-        tenants: 3,
-        jobs_per_tenant: 3,
-        iterations: 14,
-        task_variety: 2,
-        workers: 2,
-        ..RealServeConfig::default()
-    }
+fn three_tenant_request() -> ServeRequest {
+    let mut req = ServeRequest::grid(
+        3,
+        3,
+        14,
+        BatchMode::Fixed(1),
+        2,
+        Device::H20,
+        LlmProfile::DeepSeekV32,
+        7,
+    );
+    req.workers = 2;
+    req
 }
 
 /// The satellite's ledger contract: overlapping task fingerprints are
@@ -37,7 +43,7 @@ fn three_tenant_config() -> RealServeConfig {
 #[test]
 fn ledger_pays_fingerprints_once_per_round_and_warms_tenants() {
     let store = Arc::new(TraceStore::in_memory());
-    let report = RealServe::new(three_tenant_config()).run(&store);
+    let report = InProcess.run_report(&three_tenant_request(), &store);
     assert_eq!(report.jobs.len(), 9);
 
     // each round executes every distinct fingerprint exactly once
@@ -104,7 +110,7 @@ fn deterministic_sections_survive_cold_and_warm_store_passes() {
     let dir = tmp_dir("coldwarm");
     let cold = {
         let store = Arc::new(TraceStore::open(&dir).unwrap());
-        let report = RealServe::new(three_tenant_config()).run(&store);
+        let report = InProcess.run_report(&three_tenant_request(), &store);
         store.persist().unwrap();
         report
     };
@@ -112,7 +118,7 @@ fn deterministic_sections_survive_cold_and_warm_store_passes() {
     assert!(cold.store_llm_sims > 0);
     let warm = {
         let store = Arc::new(TraceStore::open(&dir).unwrap());
-        let report = RealServe::new(three_tenant_config()).run(&store);
+        let report = InProcess.run_report(&three_tenant_request(), &store);
         store.persist().unwrap();
         report
     };
@@ -137,11 +143,13 @@ fn deterministic_sections_survive_cold_and_warm_store_passes() {
 #[test]
 fn deterministic_sections_are_worker_invariant() {
     let run = |workers: usize| {
-        let mut cfg = three_tenant_config();
-        cfg.workers = workers;
-        cfg.batch = BatchMode::Adaptive { min: 1, max: 4 };
+        let mut req = three_tenant_request();
+        req.workers = workers;
+        for j in &mut req.jobs {
+            j.batch = BatchMode::Adaptive { min: 1, max: 4 };
+        }
         let store = Arc::new(TraceStore::in_memory());
-        RealServe::new(cfg).run(&store)
+        InProcess.run_report(&req, &store)
     };
     let w1 = run(1);
     let w4 = run(4);
@@ -165,7 +173,7 @@ fn mixed_tenant_store_reports_per_tenant_counts() {
     let dir = tmp_dir("mixed");
     for _pass in 0..2 {
         let store = Arc::new(TraceStore::open(&dir).unwrap());
-        let _ = RealServe::new(three_tenant_config()).run(&store);
+        let _ = InProcess.run_report(&three_tenant_request(), &store);
         store.persist().unwrap();
     }
     let store = TraceStore::open(&dir).unwrap();

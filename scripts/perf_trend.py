@@ -9,12 +9,17 @@ regression table (entry, baseline items/sec, current items/sec, delta)
 plus the suites' derived speedup fields. Entries regressing more than
 --threshold percent (default 25) are flagged.
 
-Shared-runner timings are noisy, so this is a *trend* report, not a
-gate: the CI step that runs it is non-blocking. A baseline file
-carrying "pending": true (no numbers captured yet) cannot be diffed —
-the script prints the current numbers in record mode, flags the suite
-LOUDLY, and exits 1 so the (step-level non-blocking) CI step shows
-red instead of silently recording forever.
+This is a *gate*: the CI step that runs it is blocking. The script
+exits 1 when any throughput entry regresses past the threshold, when
+any derived speedup ratio falls more than the threshold below its
+committed floor, or when a committed baseline still carries
+"pending": true (no numbers captured yet — diff impossible, so
+recording forever would hide regressions).
+
+Absolute entry throughput is machine-dependent, so the committed
+baselines may legitimately ship with empty "entries" and gate only on
+the derived ratios, which compare two paths measured by the same
+binary on the same machine and are therefore portable floors.
 
 Refreshing a baseline: download the `baselines-refresh` artifact from
 a CI perf-smoke run on main (built by scripts/refresh_baselines.py
@@ -51,14 +56,16 @@ def fmt_rate(v):
 
 
 def report_suite(name, baseline, current, threshold):
-    """Print one suite's report; returns True when the committed
-    baseline is pending (diff impossible)."""
+    """Print one suite's report; returns (pending, flagged) where
+    `pending` means the committed baseline cannot be diffed and
+    `flagged` counts entries/ratios that regressed past the
+    threshold."""
     print(f"### {name}")
     if baseline is None:
         print("_No committed baseline — recording current numbers._")
         print()
         record(current)
-        return False
+        return False, 0
     if baseline.get("pending"):
         print(
             "⚠️ **PENDING BASELINE — no diff performed.** The committed "
@@ -70,7 +77,7 @@ def report_suite(name, baseline, current, threshold):
         )
         print()
         record(current)
-        return True
+        return True, 0
     base_rates = entry_rates(baseline)
     cur_rates = entry_rates(current)
     rows = []
@@ -96,18 +103,22 @@ def report_suite(name, baseline, current, threshold):
     cur_d = derived_fields(current)
     shared = sorted(set(base_d) & set(cur_d))
     if shared:
-        print("| derived metric | baseline | current |")
-        print("|---|---:|---:|")
+        print("| derived metric | baseline floor | current | |")
+        print("|---|---:|---:|---|")
         for k in shared:
-            print(f"| {k} | {base_d[k]:.2f} | {cur_d[k]:.2f} |")
+            flag = ""
+            if cur_d[k] < base_d[k] * (1.0 - threshold / 100.0):
+                flag = "⚠️ below floor"
+                flagged += 1
+            print(f"| {k} | {base_d[k]:.2f} | {cur_d[k]:.2f} | {flag} |")
         print()
     if flagged:
         print(
-            f"**{flagged} entr{'y' if flagged == 1 else 'ies'} regressed "
+            f"**{flagged} metric{'' if flagged == 1 else 's'} regressed "
             f"more than {threshold:.0f}% vs the committed snapshot.**"
         )
         print()
-    return False
+    return False, flagged
 
 
 def record(current):
@@ -150,6 +161,7 @@ def main(argv):
         print(f"_No PERF_*.json artifacts under {cur_dir}._")
         return 0
     pending = 0
+    flagged = 0
     for cur_path in found:
         try:
             current = json.loads(cur_path.read_text())
@@ -163,14 +175,23 @@ def main(argv):
                 baseline = json.loads(base_path.read_text())
             except (OSError, json.JSONDecodeError):
                 baseline = None
-        if report_suite(cur_path.name, baseline, current, threshold):
-            pending += 1
+        was_pending, suite_flagged = report_suite(
+            cur_path.name, baseline, current, threshold
+        )
+        pending += int(was_pending)
+        flagged += suite_flagged
     if pending:
         print(
             f"**{pending} suite{'' if pending == 1 else 's'} diffed "
-            "against a pending baseline — failing loudly (the CI step "
-            "is non-blocking). Refresh `perf/baselines/` from the "
+            "against a pending baseline — failing the (blocking) CI "
+            "step. Refresh `perf/baselines/` from the "
             "`baselines-refresh` artifact.**"
+        )
+        return 1
+    if flagged:
+        print(
+            f"**{flagged} metric{'' if flagged == 1 else 's'} regressed "
+            "past the threshold — failing the (blocking) CI step.**"
         )
         return 1
     return 0
