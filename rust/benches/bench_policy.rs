@@ -395,6 +395,62 @@ fn main() {
         40.0,
     ));
 
+    // --- telemetry overhead: the identical end-to-end run with an
+    // enabled Recorder attached vs bare. PolicyHooks resolve handles
+    // once per run and each hook is one relaxed atomic op, so the
+    // instrumented loop must stay within 2% of bare (gated by CI
+    // perf-smoke against perf/baselines/obs/ at --threshold 2).
+    let obs_bare = bs.bench_throughput("optimize_t40_obs_bare", 40.0, || {
+        let mut cfg = PolicyConfig::default();
+        cfg.iterations = 40;
+        let tr = KernelBand::new(cfg).optimize_sched(
+            task,
+            &engine,
+            &llm,
+            &Rng::new(3),
+            None,
+            &SchedContext::with_batch(4),
+        );
+        std::hint::black_box(tr.candidates.len());
+    });
+    entries.push(PerfEntry::with_items(
+        "optimize_t40_obs_bare",
+        obs_bare,
+        40.0,
+    ));
+    let recorder = std::sync::Arc::new(kernelband::obs::Recorder::new());
+    let mut obs_ctx = SchedContext::with_batch(4);
+    obs_ctx.obs = Some(recorder.clone());
+    let obs_instr = bs.bench_throughput(
+        "optimize_t40_obs_instrumented",
+        40.0,
+        || {
+            let mut cfg = PolicyConfig::default();
+            cfg.iterations = 40;
+            let tr = KernelBand::new(cfg).optimize_sched(
+                task,
+                &engine,
+                &llm,
+                &Rng::new(3),
+                None,
+                &obs_ctx,
+            );
+            std::hint::black_box(tr.candidates.len());
+        },
+    );
+    entries.push(PerfEntry::with_items(
+        "optimize_t40_obs_instrumented",
+        obs_instr,
+        40.0,
+    ));
+    assert!(
+        recorder
+            .counter_values()
+            .iter()
+            .any(|(k, v)| k == "policy.arm_pulls" && *v > 0),
+        "instrumented run recorded nothing"
+    );
+
     let ratio = |slow: f64, fast: f64| slow / fast.max(1e-12);
     let steady = ratio(
         legacy.median.as_secs_f64(),
@@ -404,6 +460,11 @@ fn main() {
     let batch_measure = ratio(
         serial_measure.median.as_secs_f64(),
         fused_measure.median.as_secs_f64(),
+    );
+    // bare/instrumented: 1.0 = free, 0.98 = the 2% overhead ceiling
+    let obs_overhead = ratio(
+        obs_bare.median.as_secs_f64(),
+        obs_instr.median.as_secs_f64(),
     );
     println!();
     println!(
@@ -415,6 +476,10 @@ fn main() {
         "speedup: fused batched measurement (b={BATCH})    \
          {batch_measure:>8.2}x  (target >= 1x)"
     );
+    println!(
+        "overhead: telemetry on vs off (e2e)           \
+         {obs_overhead:>8.3}x  (gate >= 0.98x)"
+    );
 
     let json = perf_json(
         "policy",
@@ -425,6 +490,7 @@ fn main() {
             ("recluster_speedup", Json::num(recluster)),
             ("batch_width", Json::num(BATCH as f64)),
             ("batch_measure_speedup", Json::num(batch_measure)),
+            ("obs_overhead_ratio", Json::num(obs_overhead)),
         ],
     );
     match write_perf_artifact("policy", &json) {

@@ -195,6 +195,7 @@ impl ExperimentRunner {
                 mode: self.batch,
                 centroids: Some(store.session_centroids()),
                 profiles: Some(store.profiles()),
+                obs: store.recorder(),
             },
             None => SchedContext::with_mode(self.batch),
         }

@@ -42,6 +42,7 @@
 //! | [`engine`] | `EvalEngine` trait: simulated vs PJRT-real measurement |
 //! | [`runtime`] | PJRT client wrapper: load + execute `artifacts/*.hlo.txt` |
 //! | [`sched`] | batched-measurement scheduling: slot lineages, profiling-bound admission, shared recluster/profile memos |
+//! | [`obs`] | advisory telemetry bus: scoped spans, atomic counters, log-linear latency histograms → `METRICS.json` (never the deterministic artifacts) |
 //! | [`server`] | serving behind the `JobSpec`/`ServeBackend` API: multi-tenant job queue, in-process worker pool, sharded supervisor with leases / checkpoint crash-recovery / preemption, AIMD adaptive batch width |
 //! | [`service`] | modeled optimization service: batched LLM gateway + shared recluster scheduler (Fig. 3; `serve --backend modeled`) |
 //! | [`store`] | persistent trace store: content-addressed kernel cache, append-only trace log, per-iteration checkpoint journal, cross-session warm-start |
@@ -57,6 +58,7 @@ pub mod gpu_model;
 pub mod kernel;
 pub mod llm;
 pub mod metrics;
+pub mod obs;
 pub mod policy;
 pub mod profiler;
 pub mod rng;

@@ -12,8 +12,10 @@
 //! kernelband serve [--backend inprocess|sharded|modeled] [--tenants N]
 //!            [--jobs N] [--iterations N] [--batch N|auto] [--workers N]
 //!            [--fault kill-after=K,preempt=P,seed=S]
+//!            [--obs on|off|events] [--open-loop rate=R,duration=D]
 //!            [--out DIR] [--store DIR]
 //! kernelband trace <record|replay|stats> …
+//! kernelband metrics <summary|top|export> [PATH]
 //! kernelband list [--subset]
 //! ```
 //!
@@ -47,17 +49,19 @@ use kernelband::engine::SimEngine;
 use kernelband::eval;
 use kernelband::gpu_model::Device;
 use kernelband::llm::{LlmProfile, SurrogateLlm};
+use kernelband::obs::Recorder;
 use kernelband::policy::{KernelBand, PolicyConfig, PolicyMode};
 use kernelband::rng::Rng;
 use kernelband::runtime::Runtime;
 use kernelband::sched::BatchMode;
 use kernelband::server::{
-    FaultPlan, InProcess, JobSpec, Modeled, ServeBackend, ServeRequest,
-    Sharded,
+    FaultPlan, InProcess, JobSpec, Modeled, OpenLoopPlan, ServeBackend,
+    ServeRequest, Sharded,
 };
 use kernelband::store::log::records_for_trace;
 use kernelband::store::wrap::{CachedEngine, CachedLlm};
 use kernelband::store::{log as trace_log, warm::WarmIndex, TraceStore};
+use kernelband::util::json::{self as json, Json};
 use kernelband::workload::Suite;
 
 const USAGE: &str = "\
@@ -92,6 +96,7 @@ USAGE:
       [--jobs N] [--iterations N] [--batch N|auto] [--workers N]
       [--variety N] [--seed S] [--queue-cap N] [--quota N]
       [--device D] [--llm L] [--fault kill-after=K,preempt=P,seed=S]
+      [--obs on|off|events] [--open-loop rate=R,duration=D]
       [--out DIR] [--store DIR]
       All backends run behind one job API (JobSpec → ServeRequest →
       ServeBackend). The default backend is REAL and in-process: a
@@ -124,7 +129,24 @@ USAGE:
       replay a trace log into warm-start state and print it.
   kernelband trace stats <TRACE-or-STORE-DIR>
       record counts, versions skipped, corrupt lines, cache sizes.
+      For a store dir: checkpoint-journal health (live vs retired
+      entries) and per-tenant warm ratios.
+  kernelband metrics <summary|top|export> [PATH]
+      inspect a METRICS.json written by serve --obs (PATH is the file
+      or its directory; default out/). summary prints histograms with
+      percentiles plus every counter; top ranks counters by value;
+      export dumps the raw document.
   kernelband list [--subset]
+
+Telemetry: serve takes --obs on|off|events (default on). `on` writes
+advisory METRICS.json (counters + latency histograms) next to the
+artifacts; `events` additionally streams spans/lease events to
+events.jsonl; `off` disables the recorder entirely. Telemetry never
+changes BENCH_*.json or trace.jsonl bytes.
+Open-loop load: serve --open-loop rate=R,duration=D (real backends)
+arrives jobs at R per second over D seconds (job count = R*D, grid
+interleaved) and reports queue-wait / end-to-end latency percentiles
+in SERVE_LEDGER.json. Pacing never changes deterministic artifacts.
 ";
 
 /// Print to stdout, dying quietly when the pipe closes: Rust ignores
@@ -433,6 +455,60 @@ fn parse_fault(s: &str) -> Result<FaultPlan> {
     Ok(plan)
 }
 
+/// `--open-loop rate=R,duration=D` — target arrival rate (jobs per
+/// second, required > 0) and arrival-window length (seconds, default
+/// 1). Real backends only.
+fn parse_open_loop(s: &str) -> Result<OpenLoopPlan> {
+    let mut rate = 0.0f64;
+    let mut duration = 1.0f64;
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (key, value) = part.split_once('=').ok_or_else(|| {
+            anyhow!("--open-loop: expected key=value, got {part:?}")
+        })?;
+        match key {
+            "rate" => {
+                rate = value.parse().map_err(|_| {
+                    anyhow!("--open-loop rate: bad number {value:?}")
+                })?;
+            }
+            "duration" => {
+                duration = value.parse().map_err(|_| {
+                    anyhow!("--open-loop duration: bad number {value:?}")
+                })?;
+            }
+            other => bail!(
+                "--open-loop: unknown key {other:?} \
+                 (expected rate, duration)"
+            ),
+        }
+    }
+    if !(rate > 0.0) {
+        bail!("--open-loop needs rate=R with R > 0");
+    }
+    if !(duration > 0.0) {
+        bail!("--open-loop duration must be > 0");
+    }
+    Ok(OpenLoopPlan { rate, duration_s: duration })
+}
+
+/// `--obs` values: `on` (default; METRICS.json), `off` (no recorder at
+/// all) or `events` (METRICS.json + events.jsonl span/event stream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ObsMode {
+    On,
+    Off,
+    Events,
+}
+
+fn parse_obs(s: &str) -> Result<ObsMode> {
+    match s.to_ascii_lowercase().as_str() {
+        "on" => Ok(ObsMode::On),
+        "off" => Ok(ObsMode::Off),
+        "events" => Ok(ObsMode::Events),
+        _ => bail!("--obs: expected on, off or events, got {s:?}"),
+    }
+}
+
 /// Session store for the real serve backends: they always need one
 /// (in-memory when `--store` is absent) so tenants share caches.
 fn open_serve_store(store_dir: Option<&str>) -> Result<Arc<TraceStore>> {
@@ -448,7 +524,8 @@ fn open_serve_store(store_dir: Option<&str>) -> Result<Arc<TraceStore>> {
 /// SERVE_LEDGER.json (measured) and SUPERVISOR_LEDGER.json (sharded
 /// lease counters + event log).
 fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
-             out: Option<&str>, store_dir: Option<&str>) -> Result<()> {
+             out: Option<&str>, store_dir: Option<&str>, obs: ObsMode)
+             -> Result<()> {
     let modeled = backend.name() == "modeled";
     let store = if modeled {
         // the modeled simulation runs storeless unless --store is given
@@ -456,6 +533,17 @@ fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
     } else {
         Some(open_serve_store(store_dir)?)
     };
+    // advisory telemetry: attached to the store (the single handle
+    // every layer reaches through) and exported to METRICS.json only —
+    // never into the byte-compared artifacts
+    let recorder = match obs {
+        ObsMode::Off => None,
+        ObsMode::On => Some(Arc::new(Recorder::new())),
+        ObsMode::Events => Some(Arc::new(Recorder::with_events())),
+    };
+    if let (Some(rec), Some(s)) = (&recorder, &store) {
+        s.set_recorder(rec.clone());
+    }
     let outcome = backend.run(req, store.as_ref())?;
     for line in &outcome.lines {
         outln!("{line}");
@@ -487,6 +575,24 @@ fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
             std::fs::write(&p, sup.pretty() + "\n")
                 .with_context(|| format!("writing {}", p.display()))?;
             outln!("[supervisor] {}", p.display());
+        }
+        if let Some(rec) = &recorder {
+            // fold the store's gauge counters (cache sizes, bypass
+            // savings) in before snapshotting
+            if let Some(s) = &store {
+                s.obs_export();
+            }
+            let p = Path::new(dir).join("METRICS.json");
+            std::fs::write(&p, rec.metrics_json().pretty() + "\n")
+                .with_context(|| format!("writing {}", p.display()))?;
+            outln!("[metrics] {}", p.display());
+            let events = rec.events_jsonl();
+            if !events.is_empty() {
+                let p = Path::new(dir).join("events.jsonl");
+                std::fs::write(&p, events)
+                    .with_context(|| format!("writing {}", p.display()))?;
+                outln!("[events] {}", p.display());
+            }
         }
     }
     if store_dir.is_some() {
@@ -623,13 +729,33 @@ fn trace_stats(path_str: &str) -> Result<()> {
             store.loaded.tenants,
             store.loaded.skipped,
         );
+        // checkpoint-journal health: a growing retired/tombstone count
+        // with few live entries means compaction is keeping up
+        let h = store.ckpt_journal_health();
+        outln!(
+            "checkpoints: lines={} tombstones={} live_jobs={} \
+             live_entries={} retired_jobs={}",
+            h.ckpt_lines,
+            h.tombstones,
+            h.live_jobs,
+            h.live_entries,
+            h.retired_jobs,
+        );
         // per-tenant namespace counters (multi-tenant serve history)
         for (name, c) in store.tenant_totals() {
+            let warm_ratio = if c.jobs > 0 {
+                c.warm_jobs as f64 / c.jobs as f64
+            } else {
+                0.0
+            };
             outln!(
-                "tenant {name}: jobs={} steps={} profile_runs={}",
+                "tenant {name}: jobs={} steps={} profile_runs={} \
+                 warm_jobs={} warm_ratio={:.2}",
                 c.jobs,
                 c.steps,
                 c.profile_runs,
+                c.warm_jobs,
+                warm_ratio,
             );
         }
         match store.trace_path() {
@@ -708,6 +834,92 @@ fn trace_cmd(rest: &[String]) -> Result<()> {
         ),
         other => bail!("unknown trace subcommand {other:?}\n{USAGE}"),
     }
+}
+
+/// Resolve the `metrics` subcommand's PATH argument: a METRICS.json
+/// file, or a directory holding one (default `out/`).
+fn metrics_path(raw: &str) -> std::path::PathBuf {
+    let p = Path::new(raw);
+    if p.is_dir() {
+        p.join("METRICS.json")
+    } else {
+        p.to_path_buf()
+    }
+}
+
+fn metrics_counters(doc: &Json) -> Vec<(String, u64)> {
+    match doc.get("counters") {
+        Some(Json::Obj(m)) => m
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(0.0) as u64))
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+fn metrics_summary(doc: &Json) {
+    outln!(
+        "METRICS schema_version={} enabled={}",
+        doc.f64_field("schema_version") as u64,
+        matches!(doc.get("enabled"), Some(Json::Bool(true))),
+    );
+    if let Some(Json::Obj(hists)) = doc.get("histograms") {
+        for (name, h) in hists {
+            outln!(
+                "hist {name}: count={} mean={:.1} p50={} p90={} \
+                 p95={} p99={} max={}",
+                h.f64_field("count") as u64,
+                h.f64_field("mean"),
+                h.f64_field("p50") as u64,
+                h.f64_field("p90") as u64,
+                h.f64_field("p95") as u64,
+                h.f64_field("p99") as u64,
+                h.f64_field("max") as u64,
+            );
+        }
+    }
+    for (name, v) in metrics_counters(doc) {
+        outln!("counter {name} = {v}");
+    }
+}
+
+fn metrics_top(doc: &Json) {
+    let mut rows = metrics_counters(doc);
+    rows.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    for (name, v) in rows.iter().take(20) {
+        outln!("{v:>12}  {name}");
+    }
+}
+
+/// `metrics summary|top|export [PATH]` — inspect an advisory
+/// METRICS.json written by `serve --obs`.
+fn metrics_cmd(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[])?;
+    let sub = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("summary");
+    let raw = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("out");
+    let path = metrics_path(raw);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = json::parse(&text)
+        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    match sub {
+        "summary" => metrics_summary(&doc),
+        "top" => metrics_top(&doc),
+        "export" => outln!("{}", doc.pretty()),
+        other => bail!(
+            "unknown metrics subcommand {other:?} \
+             (summary, top, export)\n{USAGE}"
+        ),
+    }
+    Ok(())
 }
 
 fn list(subset: bool) -> Result<()> {
@@ -796,6 +1008,11 @@ fn main() -> Result<()> {
                 Some(spec) => parse_fault(spec)?,
                 None => FaultPlan::default(),
             };
+            let obs = parse_obs(args.get("obs").unwrap_or("on"))?;
+            let open_loop = args
+                .get("open-loop")
+                .map(parse_open_loop)
+                .transpose()?;
             let req = if backend_name == "modeled" {
                 // modeled: --jobs is the total job count, all tenant 0
                 let jobs = args.get_usize("jobs", 16)?;
@@ -809,12 +1026,24 @@ fn main() -> Result<()> {
                         })
                         .collect(),
                     fault,
+                    open_loop,
                     ..ServeRequest::default()
                 }
             } else {
+                let tenants = args.get_usize("tenants", 2)?;
+                // open-loop sizes the job list to the arrival window
+                // (rate * duration jobs, tenant-interleaved) instead
+                // of --jobs
+                let arrival_jobs = open_loop.map(|p| {
+                    ((p.rate * p.duration_s).round() as usize).max(1)
+                });
+                let jobs_per_tenant = match arrival_jobs {
+                    Some(n) => n.div_ceil(tenants.max(1)),
+                    None => args.get_usize("jobs", 3)?,
+                };
                 let mut req = ServeRequest::grid(
-                    args.get_usize("tenants", 2)?,
-                    args.get_usize("jobs", 3)?,
+                    tenants,
+                    jobs_per_tenant,
                     args.get_usize("iterations", 12)?,
                     batch,
                     args.get_usize("variety", 2)?,
@@ -822,12 +1051,16 @@ fn main() -> Result<()> {
                     parse_llm(args.get("llm").unwrap_or("deepseek"))?,
                     args.get_u64("seed", 7)?,
                 );
+                if let Some(n) = arrival_jobs {
+                    req.jobs.truncate(n);
+                }
                 req.workers = args.get_usize("workers", 0)?;
                 req.queue_capacity =
                     args.get_usize("queue-cap", usize::MAX)?;
                 req.per_tenant_quota =
                     args.get_usize("quota", usize::MAX)?;
                 req.fault = fault;
+                req.open_loop = open_loop;
                 req
             };
             let backend: Box<dyn ServeBackend> =
@@ -845,9 +1078,11 @@ fn main() -> Result<()> {
                 &req,
                 args.get("out"),
                 args.get("store"),
+                obs,
             )
         }
         "trace" => trace_cmd(rest),
+        "metrics" => metrics_cmd(rest),
         "list" => {
             let args = Args::parse(rest, &["subset"])?;
             list(args.has("subset"))

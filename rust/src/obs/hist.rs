@@ -1,0 +1,226 @@
+//! Fixed-bucket log-linear histogram.
+//!
+//! The bucket layout is the classic HDR shape: values below
+//! [`LINEAR_CUTOFF`] land in exact unit buckets; above it each power-of
+//! -two range is split into [`SUBS`] linear sub-buckets, so relative
+//! quantization error is bounded (~12.5% worst case, ~6% at the bucket
+//! midpoint) while the whole table stays a fixed 512 `AtomicU64`s.
+//!
+//! Everything is an atomic add, which gives the two properties the
+//! telemetry bus needs:
+//!
+//! * recording from many worker threads needs no lock, and
+//! * [`Histogram::merge`] is a bucket-wise sum, so merging per-worker
+//!   histograms is associative and commutative — the final snapshot is
+//!   independent of worker completion order (asserted in
+//!   `rust/tests/obs.rs`).
+//!
+//! Units are the caller's business; by convention metric names carry a
+//! suffix (`_us` for microseconds, bare for dimensionless counts).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Values below this index into exact unit buckets.
+const LINEAR_CUTOFF: u64 = 8;
+/// Sub-buckets per power-of-two range above the cutoff.
+const SUBS: usize = 8;
+/// 8 exact buckets + (61 ranges × 8 subs) = 496 < 512.
+const BUCKETS: usize = 512;
+
+/// Bucket index for a value. Total order preserving: `v <= w` implies
+/// `index(v) <= index(w)`.
+fn index(v: u64) -> usize {
+    if v < LINEAR_CUTOFF {
+        return v as usize;
+    }
+    let h = 63 - v.leading_zeros() as usize; // floor(log2 v), >= 3
+    let sub = ((v >> (h - 3)) & 0x7) as usize;
+    (h - 2) * SUBS + sub
+}
+
+/// Midpoint of the bucket's value range — the representative returned
+/// by percentile queries.
+fn midpoint(idx: usize) -> u64 {
+    if idx < LINEAR_CUTOFF as usize {
+        return idx as u64;
+    }
+    let major = idx / SUBS;
+    let sub = (idx % SUBS) as u64;
+    let h = major + 2;
+    let lo = (1u64 << h) | (sub << (h - 3));
+    lo + (1u64 << (h - 3)) / 2
+}
+
+/// Lock-free fixed-size histogram. All mutation is `Relaxed` atomic
+/// arithmetic; a snapshot taken while writers are active is a
+/// consistent-enough advisory view (never a torn bucket, though counts
+/// across fields may lag each other by in-flight records).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Bucket-wise add of `other` into `self`. Commutative and
+    /// associative up to the atomic sums involved, so any merge order
+    /// over a set of histograms yields the same final state.
+    pub fn merge(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(&other.buckets) {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                a.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min
+            .fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max
+            .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Immutable summary used for emission and assertions.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let sum = self.sum.load(Ordering::Relaxed);
+        let (min, max) = if count == 0 {
+            (0, 0)
+        } else {
+            (
+                self.min.load(Ordering::Relaxed),
+                self.max.load(Ordering::Relaxed),
+            )
+        };
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let pct = |q: f64| -> u64 {
+            if count == 0 {
+                return 0;
+            }
+            let target = ((q * count as f64).ceil() as u64).max(1);
+            let mut seen = 0u64;
+            for (i, n) in counts.iter().enumerate() {
+                seen += n;
+                if seen >= target {
+                    return midpoint(i).clamp(min, max);
+                }
+            }
+            max
+        };
+        HistSnapshot {
+            count,
+            sum,
+            min,
+            max,
+            mean: if count == 0 {
+                0.0
+            } else {
+                sum as f64 / count as f64
+            },
+            p50: pct(0.50),
+            p90: pct(0.90),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            buckets: counts,
+        }
+    }
+}
+
+/// Point-in-time view of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p95: u64,
+    pub p99: u64,
+    /// Raw bucket counts — compared directly in merge-order tests.
+    pub buckets: Vec<u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_is_monotone_and_in_range() {
+        let mut last = 0usize;
+        for v in [0u64, 1, 7, 8, 9, 15, 16, 100, 1000, 1 << 20, u64::MAX] {
+            let i = index(v);
+            assert!(i >= last, "index not monotone at {v}");
+            assert!(i < BUCKETS);
+            last = i;
+        }
+    }
+
+    #[test]
+    fn midpoint_lands_in_own_bucket() {
+        for idx in 0..496 {
+            assert_eq!(index(midpoint(idx)), idx, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn percentiles_bound_relative_error() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10_000);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 10_000);
+        for (q, want) in [(s.p50, 5_000.0), (s.p95, 9_500.0), (s.p99, 9_900.0)]
+        {
+            let err = (q as f64 - want).abs() / want;
+            assert!(err < 0.13, "q={q} want≈{want} err={err}");
+        }
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Histogram::new().snapshot();
+        assert_eq!((s.count, s.min, s.max, s.p50, s.p99), (0, 0, 0, 0, 0));
+    }
+}

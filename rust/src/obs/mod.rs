@@ -1,0 +1,483 @@
+//! Unified telemetry bus: spans, counters, and latency percentiles.
+//!
+//! Every hot layer (bandit loop, batch scheduler, trace store, sharded
+//! server) reports into one [`Recorder`] handle. The recorder is
+//! **advisory by construction**:
+//!
+//! * it only ever *observes* — it never touches an RNG stream, never
+//!   orders work, and its output goes to `METRICS.json` (plus an
+//!   optional `events.jsonl` span stream), never into `BENCH_*.json`
+//!   or `trace.jsonl`. Byte-identity of the deterministic artifacts
+//!   with telemetry on vs. off is a hard invariant, asserted in
+//!   `rust/tests/obs.rs` and the CI `obs-smoke` gate;
+//! * it is near-zero cost when disabled: handles resolved from a
+//!   disabled (or absent) recorder are `None` inside and every op is a
+//!   single branch. Hot loops resolve handles **once** (see
+//!   [`PolicyHooks`]) so the steady-state cost of an enabled recorder
+//!   is a relaxed atomic add — gated ≤2% end-to-end by `bench_policy`
+//!   + `perf/baselines/obs/`.
+//!
+//! Wall-clock here is [`Instant`] (monotonic) only; nothing observable
+//! in the deterministic artifacts depends on it.
+
+pub mod hist;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+pub use hist::{HistSnapshot, Histogram};
+
+use crate::util::json::Json;
+
+/// Schema version of `METRICS.json` (checked by
+/// `scripts/check_metrics.py`).
+pub const METRICS_SCHEMA_VERSION: usize = 1;
+
+/// One entry in the optional span/event stream (`events.jsonl`).
+struct Event {
+    at_us: u64,
+    kind: String,
+    fields: Json,
+}
+
+/// The telemetry bus. Cheap to share (`Arc<Recorder>`); all mutation
+/// is interior and lock-free on the hot path (the maps are locked only
+/// when a handle is first resolved).
+pub struct Recorder {
+    enabled: bool,
+    epoch: Instant,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    /// `Some` when the span/event stream was requested.
+    events: Option<Mutex<Vec<Event>>>,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder")
+            .field("enabled", &self.enabled)
+            .field("events", &self.events.is_some())
+            .finish()
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Recorder {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    /// An enabled recorder without the per-event stream.
+    pub fn new() -> Recorder {
+        Recorder {
+            enabled: true,
+            epoch: Instant::now(),
+            counters: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
+            events: None,
+        }
+    }
+
+    /// Enabled recorder that additionally buffers a span/event stream
+    /// for `events.jsonl`.
+    pub fn with_events() -> Recorder {
+        Recorder {
+            events: Some(Mutex::new(Vec::new())),
+            ..Recorder::new()
+        }
+    }
+
+    /// A recorder whose every operation is a no-op branch. Exists so
+    /// call sites can hold a handle unconditionally.
+    pub fn disabled() -> Recorder {
+        Recorder {
+            enabled: false,
+            ..Recorder::new()
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Resolve (creating on first use) a named counter handle.
+    /// Increments through the handle are single relaxed atomic adds —
+    /// resolve once outside hot loops.
+    pub fn counter(&self, name: &str) -> Counter {
+        if !self.enabled {
+            return Counter(None);
+        }
+        let mut map = self.counters.lock().unwrap();
+        let cell = map
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .clone();
+        Counter(Some(cell))
+    }
+
+    /// Resolve (creating on first use) a named histogram handle.
+    pub fn hist(&self, name: &str) -> Hist {
+        if !self.enabled {
+            return Hist(None);
+        }
+        let mut map = self.hists.lock().unwrap();
+        let cell = map
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone();
+        Hist(Some(cell))
+    }
+
+    /// One-shot counter add (resolves the handle each call; fine off
+    /// the hot path).
+    pub fn add(&self, name: &str, n: u64) {
+        self.counter(name).add(n);
+    }
+
+    /// Append to the span/event stream, if one was requested.
+    pub fn event(&self, kind: &str, fields: Json) {
+        if let Some(buf) = &self.events {
+            let at_us = self.epoch.elapsed().as_micros() as u64;
+            buf.lock().unwrap().push(Event {
+                at_us,
+                kind: kind.to_string(),
+                fields,
+            });
+        }
+    }
+
+    /// Begin a scoped span; record it via [`Recorder::end_span`] (or
+    /// use a pre-resolved [`Hist`] + [`Hist::start`] in hot loops).
+    pub fn span(&self, name: &str) -> Span {
+        if !self.enabled {
+            return Span { inner: None };
+        }
+        Span {
+            inner: Some((self.hist(name), name.to_string(), Instant::now())),
+        }
+    }
+
+    /// Close a span: its elapsed time lands in the histogram of the
+    /// span's name (microseconds) and, when the event stream is on, as
+    /// one `span` event.
+    pub fn end_span(&self, span: Span) {
+        if let Some((hist, name, start)) = span.inner {
+            let us = start.elapsed().as_micros() as u64;
+            hist.record(us);
+            self.event(
+                "span",
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("us", Json::num(us as f64)),
+                ]),
+            );
+        }
+    }
+
+    /// Fold another recorder's counters and histograms into this one.
+    /// Bucket-wise sums make this order-independent across workers.
+    pub fn merge_from(&self, other: &Recorder) {
+        if !self.enabled || !other.enabled {
+            return;
+        }
+        for (name, cell) in other.counters.lock().unwrap().iter() {
+            self.counter(name).add(cell.load(Ordering::Relaxed));
+        }
+        for (name, h) in other.hists.lock().unwrap().iter() {
+            if let Hist(Some(mine)) = self.hist(name) {
+                mine.merge(h);
+            }
+        }
+    }
+
+    /// Current counter values, sorted by name.
+    pub fn counter_values(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Current histogram snapshots, sorted by name.
+    pub fn hist_snapshots(&self) -> Vec<(String, HistSnapshot)> {
+        self.hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect()
+    }
+
+    /// The `METRICS.json` document. Advisory: wall-clock derived, never
+    /// byte-compared, never fed back into the deterministic pipeline.
+    pub fn metrics_json(&self) -> Json {
+        let counters = Json::obj(
+            self.counter_values()
+                .iter()
+                .map(|(k, v)| (k.as_str(), Json::num(*v as f64)))
+                .collect::<Vec<_>>(),
+        );
+        let hists = Json::obj(
+            self.hist_snapshots()
+                .iter()
+                .map(|(k, s)| (k.as_str(), snapshot_json(s)))
+                .collect::<Vec<_>>(),
+        );
+        Json::obj(vec![
+            ("schema_version", Json::num(METRICS_SCHEMA_VERSION as f64)),
+            ("enabled", Json::Bool(self.enabled)),
+            ("counters", counters),
+            ("histograms", hists),
+        ])
+    }
+
+    /// The optional `events.jsonl` stream: one compact JSON object per
+    /// line, in emission order. Empty string when the stream is off.
+    pub fn events_jsonl(&self) -> String {
+        let Some(buf) = &self.events else {
+            return String::new();
+        };
+        let mut out = String::new();
+        for e in buf.lock().unwrap().iter() {
+            let line = Json::obj(vec![
+                ("at_us", Json::num(e.at_us as f64)),
+                ("kind", Json::str(e.kind.clone())),
+                ("fields", e.fields.clone()),
+            ]);
+            out.push_str(&line.dump());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// JSON summary of one histogram (units are whatever the metric name's
+/// suffix says, `_us` by convention for spans and latencies).
+fn snapshot_json(s: &HistSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("sum", Json::num(s.sum as f64)),
+        ("min", Json::num(s.min as f64)),
+        ("max", Json::num(s.max as f64)),
+        ("mean", Json::num(s.mean)),
+        ("p50", Json::num(s.p50 as f64)),
+        ("p90", Json::num(s.p90 as f64)),
+        ("p95", Json::num(s.p95 as f64)),
+        ("p99", Json::num(s.p99 as f64)),
+    ])
+}
+
+/// Pre-resolved counter handle; `add` is one relaxed atomic op (or a
+/// single branch when the recorder was disabled/absent).
+#[derive(Clone, Default)]
+pub struct Counter(Option<Arc<AtomicU64>>);
+
+impl Counter {
+    /// Handle that counts nothing (absent recorder).
+    pub fn noop() -> Counter {
+        Counter(None)
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if let Some(c) = &self.0 {
+            c.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.as_ref().map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+}
+
+impl std::fmt::Debug for Counter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Counter(live={})", self.0.is_some())
+    }
+}
+
+/// Pre-resolved histogram handle.
+#[derive(Clone, Default)]
+pub struct Hist(Option<Arc<Histogram>>);
+
+impl Hist {
+    pub fn noop() -> Hist {
+        Hist(None)
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if let Some(h) = &self.0 {
+            h.record(v);
+        }
+    }
+
+    /// Start a manual span against this histogram: returns `None` when
+    /// the handle is inert, so disabled runs never read the clock.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.0.is_some() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a manual span started with [`Hist::start`], recording
+    /// elapsed microseconds.
+    #[inline]
+    pub fn stop(&self, start: Option<Instant>) {
+        if let (Some(h), Some(t0)) = (&self.0, start) {
+            h.record(t0.elapsed().as_micros() as u64);
+        }
+    }
+
+    pub fn snapshot(&self) -> Option<HistSnapshot> {
+        self.0.as_ref().map(|h| h.snapshot())
+    }
+}
+
+impl std::fmt::Debug for Hist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Hist(live={})", self.0.is_some())
+    }
+}
+
+/// Scoped span token returned by [`Recorder::span`].
+pub struct Span {
+    inner: Option<(Hist, String, Instant)>,
+}
+
+/// Handle bundle for the bandit hot loop (`policy::optimize_sched`) and
+/// the batch scheduler slots it drives. Resolved **once** per run so
+/// the per-iteration cost is a handful of relaxed atomic ops; with no
+/// recorder every field is inert.
+///
+/// Metric catalog (also documented in README "Observability"):
+///
+/// | name                              | kind | meaning |
+/// |-----------------------------------|------|---------|
+/// | `policy.iter_us`                  | hist | per-iteration span |
+/// | `policy.arm_pulls`                | ctr  | UCB arm selections |
+/// | `policy.reclusters`               | ctr  | re-clustering events |
+/// | `policy.cluster_size`             | hist | pulled arm's member count |
+/// | `sched.batch_width`               | hist | AIMD width trace |
+/// | `sched.slots_admitted`            | ctr  | slots past the bound check |
+/// | `sched.slots_bound_pruned`        | ctr  | slots pruned by Assumption-1 bound |
+/// | `sched.slots_failed_verification` | ctr  | measured slots failing verify |
+/// | `sched.slots_accepted`            | ctr  | measured slots accepted |
+#[derive(Debug, Clone, Default)]
+pub struct PolicyHooks {
+    pub iter_us: Hist,
+    pub arm_pulls: Counter,
+    pub reclusters: Counter,
+    pub cluster_size: Hist,
+    pub batch_width: Hist,
+    pub slots_admitted: Counter,
+    pub slots_bound_pruned: Counter,
+    pub slots_failed_verification: Counter,
+    pub slots_accepted: Counter,
+}
+
+impl PolicyHooks {
+    pub fn new(rec: Option<&Recorder>) -> PolicyHooks {
+        let Some(r) = rec.filter(|r| r.enabled()) else {
+            return PolicyHooks::default();
+        };
+        PolicyHooks {
+            iter_us: r.hist("policy.iter_us"),
+            arm_pulls: r.counter("policy.arm_pulls"),
+            reclusters: r.counter("policy.reclusters"),
+            cluster_size: r.hist("policy.cluster_size"),
+            batch_width: r.hist("sched.batch_width"),
+            slots_admitted: r.counter("sched.slots_admitted"),
+            slots_bound_pruned: r.counter("sched.slots_bound_pruned"),
+            slots_failed_verification: r
+                .counter("sched.slots_failed_verification"),
+            slots_accepted: r.counter("sched.slots_accepted"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let r = Recorder::disabled();
+        r.counter("x").incr();
+        r.hist("y").record(7);
+        let span = r.span("z");
+        r.end_span(span);
+        assert!(!r.enabled());
+        assert!(r.counter_values().is_empty());
+        assert!(r.hist_snapshots().is_empty());
+        let m = r.metrics_json();
+        assert_eq!(m.get("enabled"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn counters_and_hists_accumulate_through_handles() {
+        let r = Recorder::new();
+        let c = r.counter("a.b");
+        c.add(3);
+        c.incr();
+        r.add("a.b", 1);
+        let h = r.hist("lat_us");
+        h.record(10);
+        h.record(1000);
+        assert_eq!(r.counter_values(), vec![("a.b".into(), 5)]);
+        let snaps = r.hist_snapshots();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].1.count, 2);
+        assert_eq!(snaps[0].1.sum, 1010);
+    }
+
+    #[test]
+    fn events_stream_only_when_requested() {
+        let quiet = Recorder::new();
+        quiet.event("x", Json::Null);
+        assert_eq!(quiet.events_jsonl(), "");
+        let chatty = Recorder::with_events();
+        chatty.event("lease", Json::obj(vec![("what", Json::str("grant"))]));
+        let stream = chatty.events_jsonl();
+        assert_eq!(stream.lines().count(), 1);
+        assert!(stream.contains("\"kind\":\"lease\""));
+    }
+
+    #[test]
+    fn merge_from_folds_counters_and_hists() {
+        let a = Recorder::new();
+        let b = Recorder::new();
+        a.add("n", 2);
+        b.add("n", 5);
+        b.hist("h").record(42);
+        a.merge_from(&b);
+        assert_eq!(a.counter_values(), vec![("n".into(), 7)]);
+        assert_eq!(a.hist_snapshots()[0].1.count, 1);
+    }
+
+    #[test]
+    fn policy_hooks_default_is_noop() {
+        let hooks = PolicyHooks::new(None);
+        hooks.arm_pulls.incr();
+        hooks.iter_us.record(9);
+        assert!(hooks.iter_us.start().is_none());
+        assert_eq!(hooks.arm_pulls.get(), 0);
+        let off = Recorder::disabled();
+        let hooks = PolicyHooks::new(Some(&off));
+        hooks.slots_admitted.incr();
+        assert_eq!(hooks.slots_admitted.get(), 0);
+    }
+}

@@ -433,6 +433,10 @@ impl KernelBand {
         // bound outcomes), so artifacts stay byte-identical for any
         // thread count and store temperature.
         let mut width_ctl = AimdController::from_mode(ctx.mode);
+        // Advisory telemetry, resolved once per run: with no recorder
+        // attached every hook is a single branch. Strictly
+        // observational — the hooks consume no RNG and steer nothing.
+        let hooks = crate::obs::PolicyHooks::new(ctx.obs.as_deref());
         let rng = root.split("kernelband", task.id as u64);
         let freeform = matches!(
             cfg.mode,
@@ -576,6 +580,7 @@ impl KernelBand {
                     }
                 }
             }
+            let iter_span = hooks.iter_us.start();
             // the width this iteration plans (constant in Fixed mode);
             // on replay the controller re-derives the recorded width
             // from the replayed outcome counts
@@ -584,11 +589,13 @@ impl KernelBand {
                 ck.map_or(true, |c| c.t == t && c.slots.len() == batch),
                 "checkpoint {t} does not match the re-derived width"
             );
+            hooks.batch_width.record(batch as u64);
             // --- lines 6–10: periodic clustering & representative profiling
             let may_cluster = !freeform
                 && t % cfg.recluster_every == 0
                 && candidates.len() >= 2 * cfg.clusters;
             if may_cluster {
+                hooks.reclusters.incr();
                 // Seeding ladder (§Perf): the first re-clustering with
                 // enough frontier points starts Lloyd from the prior
                 // *session's* converged centroids (a too-small frontier
@@ -751,6 +758,12 @@ impl KernelBand {
                     (0, None, PromptMode::RawProfiling(front.sigs[best_id]))
                 }
             };
+            hooks.arm_pulls.incr();
+            if !freeform {
+                hooks
+                    .cluster_size
+                    .record(state.members(cluster_id).len() as u64);
+            }
 
             // --- lines 16–18, batched: plan `batch` (parent, proposal)
             // slots against the iteration-entry frontier. Slot 0 draws
@@ -850,6 +863,13 @@ impl KernelBand {
                 };
                 admitted.push(ok);
             }
+            hooks.slots_bound_pruned.add(batch_pruned as u64);
+            hooks.slots_admitted.add(
+                admitted.iter().filter(|&&a| a).count() as u64,
+            );
+            hooks.slots_failed_verification.add(
+                slot_verdict.iter().filter(|v| !v.passed()).count() as u64,
+            );
 
             // --- lines 19–20, fused: one engine call measures every
             // admitted slot — the shape loop runs once per batch. On
@@ -983,6 +1003,10 @@ impl KernelBand {
                 }
             }
 
+            hooks.slots_accepted.add(
+                (batch_accepted.len() + usize::from(accepted.is_some()))
+                    as u64,
+            );
             let best_speedup_so_far = if candidates.len() > 1 {
                 naive_latency_s
                     / candidates[best_id].measurement.total_latency_s
@@ -1011,6 +1035,7 @@ impl KernelBand {
                 batch_width: batch,
             });
             width_ctl.observe(batch - 1, spec_wasted);
+            hooks.iter_us.stop(iter_span);
         }
 
         SchedRun {

@@ -113,6 +113,11 @@ pub struct SchedContext {
     pub centroids: Option<Arc<CentroidCache>>,
     /// Shared NCU-signature cache (persisted by the trace store).
     pub profiles: Option<Arc<SharedProfiles>>,
+    /// Advisory telemetry bus. Strictly observational: the policy loop
+    /// resolves counter/histogram handles from it but its presence
+    /// never alters RNG streams, scheduling, or any deterministic
+    /// artifact (asserted in `rust/tests/obs.rs`).
+    pub obs: Option<Arc<crate::obs::Recorder>>,
 }
 
 impl SchedContext {

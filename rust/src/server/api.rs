@@ -142,6 +142,24 @@ impl FaultPlan {
     }
 }
 
+/// Open-loop load generation (`--open-loop rate=R,duration=D`): jobs
+/// arrive at a fixed rate regardless of completion speed, like traffic
+/// from independent clients. Job `i` of the request arrives `i / rate`
+/// seconds after the run starts; a round only begins executing once
+/// every job it drained has "arrived". Pacing delays wall-clock
+/// execution but never changes round composition, so every
+/// deterministic artifact is byte-identical to the closed-loop run —
+/// only the measured ledger gains queue-wait and end-to-end latency
+/// percentiles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpenLoopPlan {
+    /// Target arrival rate, jobs per second (> 0).
+    pub rate: f64,
+    /// Arrival-window length in seconds; with `rate` it sizes the
+    /// default job count `max(1, round(rate * duration))`.
+    pub duration_s: f64,
+}
+
 /// One serve run: the submitted jobs (in submission order — a job's
 /// position is its sequence number) plus queue policy, worker sizing
 /// and fault injection.
@@ -160,6 +178,9 @@ pub struct ServeRequest {
     /// affects deterministic bytes.
     pub workers: usize,
     pub fault: FaultPlan,
+    /// Open-loop arrival pacing (`None` = classic closed-loop drain).
+    /// Wall-clock only: never affects deterministic bytes.
+    pub open_loop: Option<OpenLoopPlan>,
 }
 
 impl Default for ServeRequest {
@@ -172,6 +193,7 @@ impl Default for ServeRequest {
             round_max: 0,
             workers: 0,
             fault: FaultPlan::default(),
+            open_loop: None,
         }
     }
 }
@@ -283,6 +305,12 @@ impl ServeBackend for Modeled {
         };
         if !req.fault.is_none() {
             bail!("fault injection needs --backend sharded");
+        }
+        if req.open_loop.is_some() {
+            bail!(
+                "--open-loop needs a real serve backend \
+                 (inprocess or sharded)"
+            );
         }
         let mut service = OptimizationService::default();
         service.batch = batch;

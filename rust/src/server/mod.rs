@@ -81,10 +81,104 @@ use self::tenant::{tenant_label, TenantLedger};
 use self::worker::{run_round, ExecEnv, JobResult};
 
 pub use self::api::{
-    FaultPlan, JobSpec, Modeled, ServeBackend, ServeOutcome,
-    ServeRequest,
+    FaultPlan, JobSpec, Modeled, OpenLoopPlan, ServeBackend,
+    ServeOutcome, ServeRequest,
 };
 pub use self::supervisor::Sharded;
+
+/// Exact (nearest-rank) percentiles over a measured sample. Used for
+/// the open-loop latency report; wall-clock derived, so it lives only
+/// in the measured ledger, never in byte-compared artifacts.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Percentiles {
+    pub fn from_samples(xs: &[f64]) -> Percentiles {
+        if xs.is_empty() {
+            return Percentiles::default();
+        }
+        let mut s: Vec<f64> = xs.to_vec();
+        s.sort_by(|a, b| {
+            a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let rank = |q: f64| -> f64 {
+            let k = (q * s.len() as f64).ceil() as usize;
+            s[k.clamp(1, s.len()) - 1]
+        };
+        Percentiles {
+            p50: rank(0.50),
+            p95: rank(0.95),
+            p99: rank(0.99),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            max: *s.last().unwrap(),
+        }
+    }
+
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("p50_s", Json::num(self.p50)),
+            ("p95_s", Json::num(self.p95)),
+            ("p99_s", Json::num(self.p99)),
+            ("mean_s", Json::num(self.mean)),
+            ("max_s", Json::num(self.max)),
+        ])
+    }
+}
+
+/// Lease/recovery counters from the sharded supervisor, surfaced into
+/// the measured ledger and summary lines. Fault- and timing-dependent,
+/// so never part of the byte-compared deterministic artifact.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SupCounts {
+    pub leases: u64,
+    pub revoked: u64,
+    pub parked: u64,
+    pub resumed: u64,
+    pub completed: u64,
+    pub heartbeats: u64,
+    pub double_executed: u64,
+    pub recovered_jobs: u64,
+    pub recovered_iterations: u64,
+}
+
+/// Per-job queue-wait and end-to-end latency samples from an open-loop
+/// run (`--open-loop rate=R,duration=D`). Pure wall-clock observations:
+/// the paced schedule executes the exact same rounds as the closed-loop
+/// drain, so this struct only ever feeds the measured ledger.
+#[derive(Debug, Clone, Default)]
+pub struct OpenLoopStats {
+    /// Target arrival rate (jobs per second).
+    pub rate: f64,
+    /// Arrival-window length the request was sized for.
+    pub duration_s: f64,
+    /// Seconds each completed job waited between its modeled arrival
+    /// and its round starting to execute.
+    pub queue_wait_s: Vec<f64>,
+    /// Seconds between each completed job's modeled arrival and its
+    /// round finishing (end-to-end latency; shares complete with their
+    /// round-mate).
+    pub latency_s: Vec<f64>,
+}
+
+impl OpenLoopStats {
+    pub fn arrivals(&self) -> usize {
+        self.latency_s.len()
+    }
+
+    pub fn queue_wait(&self) -> Percentiles {
+        Percentiles::from_samples(&self.queue_wait_s)
+    }
+
+    pub fn latency(&self) -> Percentiles {
+        Percentiles::from_samples(&self.latency_s)
+    }
+}
 
 /// Header values of the deterministic artifact, derived from the
 /// request's job list (a [`ServeRequest::grid`] round-trips exactly).
@@ -130,6 +224,10 @@ pub struct ServeReport {
     pub store_measure_hits: u64,
     pub store_llm_sims: u64,
     pub store_llm_hits: u64,
+    /// Supervisor lease/recovery counters (sharded backend only).
+    pub supervisor: Option<SupCounts>,
+    /// Arrival-paced latency samples (`--open-loop` runs only).
+    pub open_loop: Option<OpenLoopStats>,
 }
 
 impl ServeReport {
@@ -266,6 +364,43 @@ impl ServeReport {
             })
             .collect();
         root.insert("tenant_measured", Json::Arr(tenant_measured));
+        if let Some(s) = &self.supervisor {
+            root.insert(
+                "supervisor_counts",
+                Json::obj(vec![
+                    ("leases", Json::num(s.leases as f64)),
+                    ("revoked", Json::num(s.revoked as f64)),
+                    ("parked", Json::num(s.parked as f64)),
+                    ("resumed", Json::num(s.resumed as f64)),
+                    ("completed", Json::num(s.completed as f64)),
+                    ("heartbeats", Json::num(s.heartbeats as f64)),
+                    (
+                        "double_executed",
+                        Json::num(s.double_executed as f64),
+                    ),
+                    (
+                        "recovered_jobs",
+                        Json::num(s.recovered_jobs as f64),
+                    ),
+                    (
+                        "recovered_iterations",
+                        Json::num(s.recovered_iterations as f64),
+                    ),
+                ]),
+            );
+        }
+        if let Some(o) = &self.open_loop {
+            root.insert(
+                "open_loop",
+                Json::obj(vec![
+                    ("rate_jobs_per_s", Json::num(o.rate)),
+                    ("duration_s", Json::num(o.duration_s)),
+                    ("arrivals", Json::num(o.arrivals() as f64)),
+                    ("queue_wait", o.queue_wait().json()),
+                    ("latency", o.latency().json()),
+                ]),
+            );
+        }
         root
     }
 
@@ -315,6 +450,41 @@ impl ServeReport {
                 t.measure_sims,
                 t.wall_s,
                 if t.is_warm() { " [warm]" } else { "" },
+            ));
+        }
+        if let Some(s) = &self.supervisor {
+            // keep this exact field layout: the CI recovery smoke greps
+            // `supervisor: .*resumed=` and `double_executed=0` from it
+            lines.push(format!(
+                "supervisor: leases={} revoked={} parked={} resumed={} \
+                 double_executed={} recovered={} heartbeats={}",
+                s.leases,
+                s.revoked,
+                s.parked,
+                s.resumed,
+                s.double_executed,
+                s.recovered_jobs,
+                s.heartbeats,
+            ));
+        }
+        if let Some(o) = &self.open_loop {
+            let qw = o.queue_wait();
+            let lat = o.latency();
+            lines.push(format!(
+                "open-loop: rate={:.2} jobs/s duration={:.2}s \
+                 arrivals={}",
+                o.rate,
+                o.duration_s,
+                o.arrivals(),
+            ));
+            lines.push(format!(
+                "queue-wait: p50={:.4}s p95={:.4}s p99={:.4}s \
+                 max={:.4}s",
+                qw.p50, qw.p95, qw.p99, qw.max,
+            ));
+            lines.push(format!(
+                "latency: p50={:.4}s p95={:.4}s p99={:.4}s max={:.4}s",
+                lat.p50, lat.p95, lat.p99, lat.max,
             ));
         }
         lines
@@ -434,6 +604,25 @@ pub(crate) fn run_serve(
         store,
         workers: req.workers,
     };
+    // advisory queue telemetry: noop handles when no recorder is
+    // attached, so the closed-loop hot path pays a single branch
+    let (qwait_h, lat_h) = match store.recorder() {
+        Some(r) => (
+            r.hist("server.queue_wait_us"),
+            r.hist("server.job_latency_us"),
+        ),
+        None => (crate::obs::Hist::noop(), crate::obs::Hist::noop()),
+    };
+    // open-loop arrival model: job i of the request arrives i/rate
+    // seconds into the run (closed-loop runs arrive all at once)
+    let arrival_s = |seq: usize| -> f64 {
+        match req.open_loop {
+            Some(p) if p.rate > 0.0 => seq as f64 / p.rate,
+            _ => 0.0,
+        }
+    };
+    let mut queue_waits: Vec<f64> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
     let t0 = Instant::now();
     let mut jobs: Vec<JobResult> = Vec::new();
     let mut rounds = 0usize;
@@ -453,8 +642,38 @@ pub(crate) fn run_serve(
             }
         }
         if !live.is_empty() {
+            // open-loop pacing delays execution until every job in the
+            // round has arrived; it never changes which jobs the round
+            // holds, so deterministic bytes are untouched
+            if req.open_loop.is_some() {
+                let latest = live
+                    .iter()
+                    .map(|j| arrival_s(j.seq))
+                    .fold(0.0, f64::max);
+                let now = t0.elapsed().as_secs_f64();
+                if latest > now {
+                    std::thread::sleep(
+                        std::time::Duration::from_secs_f64(
+                            latest - now,
+                        ),
+                    );
+                }
+            }
+            let exec_start = t0.elapsed().as_secs_f64();
             let (mut results, record_batches) =
                 exec_round(&env, &live, rounds);
+            let exec_end = t0.elapsed().as_secs_f64();
+            for job in &live {
+                let a = arrival_s(job.seq);
+                let wait = (exec_start - a).max(0.0);
+                let lat = (exec_end - a).max(0.0);
+                qwait_h.record((wait * 1e6) as u64);
+                lat_h.record((lat * 1e6) as u64);
+                if req.open_loop.is_some() {
+                    queue_waits.push(wait);
+                    latencies.push(lat);
+                }
+            }
             // canonical-order append: trace bytes never depend on
             // worker scheduling
             for records in record_batches {
@@ -496,11 +715,24 @@ pub(crate) fn run_serve(
             .filter(|j| j.job.tenant == l.tenant && !j.shared)
             .map(|j| j.iterations)
             .sum();
+        // a job is "warm" when it completed without any fresh work —
+        // no profile recomputation, LLM round-trip or simulated
+        // measurement (dedup shares count: their round-mate paid)
+        let warm = jobs
+            .iter()
+            .filter(|j| {
+                j.job.tenant == l.tenant
+                    && j.profile_runs == 0
+                    && j.llm_round_trips == 0
+                    && j.measure_sims == 0
+            })
+            .count();
         store.tenant_add(
             &tenant_label(l.tenant),
             l.completed as u64,
             steps as u64,
             l.profile_runs,
+            warm as u64,
         );
     }
     let executions = jobs.iter().filter(|j| !j.shared).count();
@@ -533,6 +765,13 @@ pub(crate) fn run_serve(
             - llm0,
         store_llm_hits: store.stats.llm_hits.load(Ordering::Relaxed)
             - lhits0,
+        supervisor: None,
+        open_loop: req.open_loop.map(|p| OpenLoopStats {
+            rate: p.rate,
+            duration_s: p.duration_s,
+            queue_wait_s: queue_waits,
+            latency_s: latencies,
+        }),
     }
 }
 

@@ -105,6 +105,8 @@ struct SupState {
     ticks: usize,
     recovered_jobs: usize,
     recovered_iterations: usize,
+    /// Completion heartbeats received (one per finished attempt).
+    heartbeats: u64,
 }
 
 /// Execute one leased attempt: resume from the store's checkpoint
@@ -125,6 +127,7 @@ fn attempt(env: &ExecEnv<'_>, job: &Job, round: usize,
         mode: spec.batch,
         centroids: Some(env.store.session_centroids()),
         profiles: Some(env.store.profiles()),
+        obs: env.store.recorder(),
     };
     let mut cfg = PolicyConfig::default();
     cfg.iterations = spec.iterations;
@@ -284,6 +287,7 @@ fn run_round_sharded(state: &mut SupState, env: &ExecEnv<'_>,
             match out.result {
                 Some((res, recs)) => {
                     state.lease.heartbeat(fp, stamp);
+                    state.heartbeats += 1;
                     state.lease.complete(fp, stamp);
                     done.insert(fp, (res, recs));
                 }
@@ -414,11 +418,54 @@ impl Sharded {
             ticks: 0,
             recovered_jobs: rec.pending.len(),
             recovered_iterations: rec.banked_iterations(),
+            heartbeats: 0,
         };
         let fault = req.fault;
-        let report = run_serve(req, store, &mut |env, round, r| {
+        let mut report = run_serve(req, store, &mut |env, round, r| {
             run_round_sharded(&mut state, env, round, r, &fault)
         });
+        let (granted, resumed, revoked, parked, completed) =
+            state.lease.counters();
+        report.supervisor = Some(crate::server::SupCounts {
+            leases: granted,
+            revoked,
+            parked,
+            resumed,
+            completed,
+            heartbeats: state.heartbeats,
+            double_executed: state.double_executed,
+            recovered_jobs: state.recovered_jobs as u64,
+            recovered_iterations: state.recovered_iterations as u64,
+        });
+        // advisory telemetry: lease lifecycle counters plus (with
+        // `--obs events`) the full lease event log. Never consulted by
+        // anything deterministic.
+        if let Some(obs) = store.recorder() {
+            obs.add("server.lease.grant", granted);
+            obs.add("server.lease.resume", resumed);
+            obs.add("server.lease.revoke", revoked);
+            obs.add("server.lease.park", parked);
+            obs.add("server.lease.complete", completed);
+            obs.add("server.lease.heartbeat", state.heartbeats);
+            for e in state.lease.events() {
+                obs.event(
+                    "lease",
+                    Json::obj(vec![
+                        ("what", Json::str(e.what)),
+                        ("round", Json::num(e.stamp.0 as f64)),
+                        ("tick", Json::num(e.stamp.1 as f64)),
+                        (
+                            "fingerprint",
+                            Json::str(format!(
+                                "{:016x}",
+                                e.fingerprint
+                            )),
+                        ),
+                        ("worker", Json::num(e.worker as f64)),
+                    ]),
+                );
+            }
+        }
         let ledger = supervisor_ledger(&state, req);
         (report, ledger)
     }
@@ -440,17 +487,9 @@ impl ServeBackend for Sharded {
             }
         };
         let (report, sup) = self.run_report(req, store);
-        let mut lines = report.summary_lines();
-        lines.push(format!(
-            "supervisor: leases={} revoked={} parked={} resumed={} \
-             double_executed={} recovered={}",
-            sup.f64_field("leases") as u64,
-            sup.f64_field("revoked") as u64,
-            sup.f64_field("parked") as u64,
-            sup.f64_field("resumed") as u64,
-            sup.f64_field("double_executed") as u64,
-            sup.f64_field("recovered_jobs") as u64,
-        ));
+        // the supervisor line now comes from summary_lines() (the
+        // report carries SupCounts), same format as before
+        let lines = report.summary_lines();
         Ok(ServeOutcome {
             deterministic: report.deterministic_json(),
             ledger: Some(report.ledger_json()),

@@ -106,6 +106,7 @@ fn execute(env: &ExecEnv<'_>, job: &Job, round: usize)
         mode: spec.batch,
         centroids: Some(env.store.session_centroids()),
         profiles: Some(env.store.profiles()),
+        obs: env.store.recorder(),
     };
     let mut cfg = PolicyConfig::default();
     cfg.iterations = spec.iterations;

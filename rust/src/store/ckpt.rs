@@ -184,6 +184,27 @@ pub(crate) struct CkptRegistry {
     /// their retirement must append a tombstone; a fingerprint retired
     /// before any flush simply drops its pending lines.
     flushed: HashSet<u64>,
+    /// Journal health observed at load time (`trace stats`).
+    health: JournalHealth,
+}
+
+/// What a journal load found on disk — the operator-facing audit view
+/// printed by `trace stats` (live prefixes = recoverable in-flight
+/// jobs; retired = completed jobs whose lines are tombstoned dead
+/// weight awaiting a future compaction).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct JournalHealth {
+    /// Decoded `ckpt` lines in the file (live + dead).
+    pub ckpt_lines: usize,
+    /// `done` tombstone lines.
+    pub tombstones: usize,
+    /// Fingerprints with a usable (contiguous, untombstoned) prefix.
+    pub live_jobs: usize,
+    /// Checkpoints across all live prefixes after normalization.
+    pub live_entries: usize,
+    /// Fingerprints whose lines are all dead: tombstoned, or truncated
+    /// away entirely by gap/dedup normalization.
+    pub retired_jobs: usize,
 }
 
 impl CkptRegistry {
@@ -232,13 +253,18 @@ impl CkptRegistry {
     /// iteration, truncated at the first gap, so a torn tail can never
     /// fabricate a resumable-looking but discontiguous prefix.
     pub fn load(&mut self, lines: Vec<JournalLine>) -> usize {
+        let mut seen: HashSet<u64> = HashSet::new();
         for line in lines {
             match line {
                 JournalLine::Ckpt(fp, c) => {
+                    self.health.ckpt_lines += 1;
+                    seen.insert(fp);
                     self.flushed.insert(fp);
                     self.live.entry(fp).or_default().push(c);
                 }
                 JournalLine::Done(fp) => {
+                    self.health.tombstones += 1;
+                    seen.insert(fp);
                     self.flushed.insert(fp);
                     self.live.remove(&fp);
                 }
@@ -254,7 +280,16 @@ impl CkptRegistry {
             cks.truncate(keep);
             !cks.is_empty()
         });
+        self.health.live_jobs = self.live.len();
+        self.health.live_entries =
+            self.live.values().map(Vec::len).sum();
+        self.health.retired_jobs = seen.len() - self.live.len();
         self.live.len()
+    }
+
+    /// Journal health as observed by the last [`CkptRegistry::load`].
+    pub fn journal_health(&self) -> JournalHealth {
+        self.health
     }
 }
 
@@ -380,5 +415,15 @@ mod tests {
             vec![1, 2]
         );
         assert!(reg.prefix(2).is_empty());
+        assert_eq!(
+            reg.journal_health(),
+            JournalHealth {
+                ckpt_lines: 4,
+                tombstones: 1,
+                live_jobs: 1,
+                live_entries: 2,
+                retired_jobs: 1,
+            }
+        );
     }
 }

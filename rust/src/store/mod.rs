@@ -89,7 +89,9 @@ pub mod wrap;
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::obs::{Counter, Recorder};
 
 use crate::kernel::Measurement;
 use crate::llm::Proposal;
@@ -99,6 +101,7 @@ use crate::sched::profiles::SharedProfiles;
 use crate::util::json::{parse_lines_lossy, Json};
 
 use self::cache::ContentCache;
+pub use self::ckpt::JournalHealth;
 use self::log::TraceRecord;
 use self::warm::{TaskWarmStart, WarmIndex};
 
@@ -236,6 +239,10 @@ pub struct TenantCounts {
     /// Representative NCU profilings the tenant's jobs recomputed
     /// (0 for tenants served entirely from the shared caches).
     pub profile_runs: u64,
+    /// Jobs completed without any fresh simulated work (pure cache
+    /// lookups / dedup shares). `warm_jobs / jobs` is the tenant's
+    /// warm ratio, reported by `trace stats`.
+    pub warm_jobs: u64,
 }
 
 #[derive(Debug, Default)]
@@ -253,6 +260,7 @@ fn tenant_record(name: &str, c: &TenantCounts) -> Json {
         ("jobs", Json::num(c.jobs as f64)),
         ("steps", Json::num(c.steps as f64)),
         ("profile_runs", Json::num(c.profile_runs as f64)),
+        ("warm_jobs", Json::num(c.warm_jobs as f64)),
     ])
 }
 
@@ -266,6 +274,8 @@ fn tenant_from_record(j: &Json) -> Option<(String, TenantCounts)> {
             jobs: j.f64_field("jobs") as u64,
             steps: j.f64_field("steps") as u64,
             profile_runs: j.f64_field("profile_runs") as u64,
+            // absent on pre-obs records: decodes as 0
+            warm_jobs: j.f64_field("warm_jobs") as u64,
         },
     ))
 }
@@ -290,8 +300,26 @@ pub struct TraceStore {
     /// Mid-job checkpoint journal (`checkpoints.jsonl`; crash recovery).
     ckpts: Mutex<ckpt::CkptRegistry>,
     warm: Option<WarmIndex>,
+    /// Advisory telemetry handles, attached at most once per store via
+    /// [`TraceStore::set_recorder`]. Purely observational: reads are a
+    /// lock-free `OnceLock::get`, and nothing downstream of the
+    /// recorder feeds back into cache contents or file bytes.
+    obs: OnceLock<StoreObs>,
     pub stats: StoreStats,
     pub loaded: LoadSummary,
+}
+
+/// Pre-resolved telemetry handles for the store's hot paths (one
+/// relaxed atomic add per cache probe once attached).
+#[derive(Debug)]
+struct StoreObs {
+    rec: Arc<Recorder>,
+    measure_hit: Counter,
+    measure_miss: Counter,
+    llm_hit: Counter,
+    llm_miss: Counter,
+    service_hit: Counter,
+    service_miss: Counter,
 }
 
 #[derive(Debug, Default)]
@@ -315,6 +343,7 @@ impl TraceStore {
             pending_log: Mutex::new(Vec::new()),
             ckpts: Mutex::new(ckpt::CkptRegistry::default()),
             warm: None,
+            obs: OnceLock::new(),
             stats: StoreStats::default(),
             loaded: LoadSummary::default(),
         }
@@ -408,6 +437,7 @@ impl TraceStore {
                         e.jobs += c.jobs;
                         e.steps += c.steps;
                         e.profile_runs += c.profile_runs;
+                        e.warm_jobs += c.warm_jobs;
                     }
                     None => summary.skipped += 1,
                 }
@@ -484,7 +514,15 @@ impl TraceStore {
 
     /// Service-job completion check (the gateway-bypass fast path).
     pub fn service_done(&self, key: u64) -> bool {
-        self.service.lock().unwrap().keys.contains(&key)
+        let hit = self.service.lock().unwrap().keys.contains(&key);
+        if let Some(o) = self.obs.get() {
+            if hit {
+                o.service_hit.incr();
+            } else {
+                o.service_miss.incr();
+            }
+        }
+        hit
     }
 
     /// Record a completed service job.
@@ -529,10 +567,18 @@ impl TraceStore {
         self.ckpts.lock().unwrap().live_fingerprints()
     }
 
+    /// Checkpoint-journal health as observed when this store was
+    /// opened (all zeros for in-memory stores): live vs. retired
+    /// entries in `checkpoints.jsonl`, for `trace stats`.
+    pub fn ckpt_journal_health(&self) -> JournalHealth {
+        self.ckpts.lock().unwrap().journal_health()
+    }
+
     /// Credit per-tenant work to the tenant namespace (accumulated
-    /// across sessions through `tenants.jsonl`).
+    /// across sessions through `tenants.jsonl`). `warm_jobs` counts
+    /// the subset of `jobs` completed without fresh simulated work.
     pub fn tenant_add(&self, tenant: &str, jobs: u64, steps: u64,
-                      profile_runs: u64) {
+                      profile_runs: u64, warm_jobs: u64) {
         let mut guard = self.tenants.lock().unwrap();
         let reg = &mut *guard; // split-borrow totals and dirty
         for map in [&mut reg.totals, &mut reg.dirty] {
@@ -542,6 +588,7 @@ impl TraceStore {
             e.jobs += jobs;
             e.steps += steps;
             e.profile_runs += profile_runs;
+            e.warm_jobs += warm_jobs;
         }
     }
 
@@ -577,6 +624,65 @@ impl TraceStore {
     /// The session-scoped re-clustering memo (in-memory only).
     pub fn session_centroids(&self) -> Arc<CentroidCache> {
         self.centroids.clone()
+    }
+
+    // --- advisory telemetry ---------------------------------------------
+
+    /// Attach the telemetry recorder. First call wins; later calls are
+    /// ignored (the store outlives any one serve request).
+    pub fn set_recorder(&self, rec: Arc<Recorder>) {
+        if !rec.enabled() {
+            return;
+        }
+        let _ = self.obs.set(StoreObs {
+            measure_hit: rec.counter("store.measure.hit"),
+            measure_miss: rec.counter("store.measure.miss"),
+            llm_hit: rec.counter("store.llm.hit"),
+            llm_miss: rec.counter("store.llm.miss"),
+            service_hit: rec.counter("store.service.hit"),
+            service_miss: rec.counter("store.service.miss"),
+            rec,
+        });
+    }
+
+    /// The attached telemetry recorder, if any.
+    pub fn recorder(&self) -> Option<Arc<Recorder>> {
+        self.obs.get().map(|o| o.rec.clone())
+    }
+
+    /// Per-cache-class hit/miss hooks for [`wrap`] (no-ops until a
+    /// recorder is attached).
+    pub(crate) fn obs_measure(&self, hit: bool, n: u64) {
+        if let Some(o) = self.obs.get() {
+            if hit { &o.measure_hit } else { &o.measure_miss }.add(n);
+        }
+    }
+
+    pub(crate) fn obs_llm(&self, hit: bool) {
+        if let Some(o) = self.obs.get() {
+            if hit { &o.llm_hit } else { &o.llm_miss }.add(1);
+        }
+    }
+
+    /// Snapshot the store's cumulative bypass accounting into the
+    /// recorder as gauge-style counters. Call once, right before
+    /// emitting `METRICS.json`.
+    pub fn obs_export(&self) {
+        let Some(rec) = self.recorder() else { return };
+        let s = &self.stats;
+        rec.add(
+            "store.bypass.saved_cost_micro_usd",
+            s.saved_cost_micro_usd.load(Ordering::Relaxed),
+        );
+        rec.add(
+            "store.bypass.saved_serial_llm_ms",
+            s.saved_serial_llm_ms.load(Ordering::Relaxed),
+        );
+        rec.add("store.profile.hit", self.profiles.hits.load(Ordering::Relaxed));
+        rec.add("store.profile.entries", self.profile_count() as u64);
+        rec.add("store.kernels.entries", self.kernel_count() as u64);
+        rec.add("store.proposals.entries", self.proposal_count() as u64);
+        rec.add("store.ckpt.live_jobs", self.ckpt_live().len() as u64);
     }
 
     // --- persistence ----------------------------------------------------
@@ -792,9 +898,9 @@ mod tests {
         let dir = tmp_dir("tenants");
         {
             let store = TraceStore::open(&dir).unwrap();
-            store.tenant_add("t0", 2, 24, 3);
-            store.tenant_add("t1", 1, 12, 0);
-            store.tenant_add("t0", 1, 12, 0); // same session, same tenant
+            store.tenant_add("t0", 2, 24, 3, 0);
+            store.tenant_add("t1", 1, 12, 0, 1);
+            store.tenant_add("t0", 1, 12, 0, 1); // same session, same tenant
             store.persist().unwrap();
         }
         {
@@ -805,15 +911,25 @@ mod tests {
             assert_eq!(totals[0].0, "t0");
             assert_eq!(
                 totals[0].1,
-                TenantCounts { jobs: 3, steps: 36, profile_runs: 3 }
+                TenantCounts {
+                    jobs: 3,
+                    steps: 36,
+                    profile_runs: 3,
+                    warm_jobs: 1,
+                }
             );
             assert_eq!(totals[1].0, "t1");
             assert_eq!(
                 totals[1].1,
-                TenantCounts { jobs: 1, steps: 12, profile_runs: 0 }
+                TenantCounts {
+                    jobs: 1,
+                    steps: 12,
+                    profile_runs: 0,
+                    warm_jobs: 1,
+                }
             );
             // a second serve session appends deltas that sum on reload
-            store.tenant_add("t1", 1, 12, 0);
+            store.tenant_add("t1", 1, 12, 0, 1);
             store.persist().unwrap();
         }
         {

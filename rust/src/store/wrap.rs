@@ -59,10 +59,12 @@ impl<E: EvalEngine> EvalEngine for CachedEngine<E> {
         let key = measurement_key(task, cfg, self.device_fp, rng);
         if let Some(m) = self.store.lookup_measurement(key) {
             self.store.stats.measure_hits.fetch_add(1, Ordering::Relaxed);
+            self.store.obs_measure(true, 1);
             return m;
         }
         let m = self.inner.measure(task, cfg, rng);
         self.store.stats.measure_sims.fetch_add(1, Ordering::Relaxed);
+        self.store.obs_measure(false, 1);
         self.local_sims.fetch_add(1, Ordering::Relaxed);
         self.store.insert_measurement(key, &m);
         m
@@ -88,6 +90,7 @@ impl<E: EvalEngine> EvalEngine for CachedEngine<E> {
         let hits = out.iter().filter(|m| m.is_some()).count() as u64;
         if hits > 0 {
             self.store.stats.measure_hits.fetch_add(hits, Ordering::Relaxed);
+            self.store.obs_measure(true, hits);
         }
         let miss_idx: Vec<usize> = out
             .iter()
@@ -106,6 +109,7 @@ impl<E: EvalEngine> EvalEngine for CachedEngine<E> {
                 self.inner.measure_batch(task, &miss_cfgs, &mut miss_rngs);
             let n = miss_idx.len() as u64;
             self.store.stats.measure_sims.fetch_add(n, Ordering::Relaxed);
+            self.store.obs_measure(false, n);
             self.local_sims.fetch_add(n, Ordering::Relaxed);
             for (&i, m) in miss_idx.iter().zip(measured) {
                 self.store.insert_measurement(keys[i], &m);
@@ -157,10 +161,12 @@ impl<L: LlmBackend> LlmBackend for CachedLlm<L> {
             stats
                 .saved_serial_llm_ms
                 .fetch_add(saved.serial_ms, Ordering::Relaxed);
+            self.store.obs_llm(true);
             return p;
         }
         let p = self.inner.propose(req, rng);
         self.store.stats.llm_sims.fetch_add(1, Ordering::Relaxed);
+        self.store.obs_llm(false);
         self.local_sims.fetch_add(1, Ordering::Relaxed);
         self.store.insert_proposal(key, &p);
         p

@@ -1,0 +1,324 @@
+//! Telemetry invariants for the unified observability layer
+//! ([`kernelband::obs`]): attaching a recorder — with or without the
+//! event stream, at any worker count, on either real backend — never
+//! changes a byte of the deterministic artifact or the persisted trace
+//! log; open-loop percentiles land in the measured ledger only;
+//! histogram merges are order-independent; and a disabled recorder is
+//! completely inert.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use kernelband::gpu_model::Device;
+use kernelband::llm::LlmProfile;
+use kernelband::obs::{Histogram, Recorder};
+use kernelband::sched::BatchMode;
+use kernelband::server::{
+    InProcess, Modeled, OpenLoopPlan, Percentiles, ServeBackend,
+    ServeRequest, Sharded,
+};
+use kernelband::store::TraceStore;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("kb_obs_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_request() -> ServeRequest {
+    let mut req = ServeRequest::grid(
+        2,
+        2,
+        8,
+        BatchMode::Fixed(1),
+        2,
+        Device::H20,
+        LlmProfile::DeepSeekV32,
+        7,
+    );
+    req.workers = 2;
+    req
+}
+
+/// The tentpole invariant: `BENCH`-side bytes and the on-disk trace
+/// log are identical with telemetry off, on, and on-with-events,
+/// across worker counts 1/4/8 and both real backends.
+#[test]
+fn telemetry_never_changes_deterministic_bytes() {
+    let base_dir = tmp_dir("base");
+    let (base_det, base_trace) = {
+        let store = Arc::new(TraceStore::open(&base_dir).unwrap());
+        let report = InProcess.run_report(&small_request(), &store);
+        store.persist().unwrap();
+        let trace = std::fs::read(store.trace_path().unwrap()).unwrap();
+        (report.deterministic_json().dump(), trace)
+    };
+    assert!(!base_trace.is_empty());
+
+    for workers in [1usize, 4, 8] {
+        for (tag, rec) in [
+            ("off", None),
+            ("on", Some(Recorder::new())),
+            ("events", Some(Recorder::with_events())),
+        ] {
+            let dir = tmp_dir(&format!("ip_w{workers}_{tag}"));
+            let store = Arc::new(TraceStore::open(&dir).unwrap());
+            let rec = rec.map(Arc::new);
+            if let Some(r) = &rec {
+                store.set_recorder(r.clone());
+            }
+            let mut req = small_request();
+            req.workers = workers;
+            let report = InProcess.run_report(&req, &store);
+            store.persist().unwrap();
+            assert_eq!(
+                report.deterministic_json().dump(),
+                base_det,
+                "inprocess w={workers} obs={tag}: bytes drifted"
+            );
+            let trace =
+                std::fs::read(store.trace_path().unwrap()).unwrap();
+            assert_eq!(trace, base_trace,
+                       "inprocess w={workers} obs={tag}: trace drifted");
+            if let Some(r) = &rec {
+                // the recorder actually observed the run
+                let counters = r.counter_values();
+                assert!(
+                    counters
+                        .iter()
+                        .any(|(k, v)| k == "policy.arm_pulls" && *v > 0),
+                    "no arm pulls recorded: {counters:?}"
+                );
+                let hists = r.hist_snapshots();
+                assert!(hists.iter().any(|(k, s)| {
+                    k == "server.job_latency_us" && s.count > 0
+                }));
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    // sharded backend, with supervisor lease telemetry flowing
+    for workers in [1usize, 4] {
+        for on in [false, true] {
+            let dir = tmp_dir(&format!("sh_w{workers}_{on}"));
+            let store = Arc::new(TraceStore::open(&dir).unwrap());
+            let rec = on.then(|| Arc::new(Recorder::with_events()));
+            if let Some(r) = &rec {
+                store.set_recorder(r.clone());
+            }
+            let mut req = small_request();
+            req.workers = workers;
+            let (report, _sup) = Sharded.run_report(&req, &store);
+            store.persist().unwrap();
+            assert_eq!(
+                report.deterministic_json().dump(),
+                base_det,
+                "sharded w={workers} obs={on}: bytes drifted"
+            );
+            let trace =
+                std::fs::read(store.trace_path().unwrap()).unwrap();
+            assert_eq!(trace, base_trace,
+                       "sharded w={workers} obs={on}: trace drifted");
+            // supervisor counters ride the report (ledger side)
+            let sup = report.supervisor.expect("sharded sets SupCounts");
+            assert!(sup.leases > 0);
+            assert_eq!(sup.double_executed, 0);
+            if let Some(r) = &rec {
+                assert!(r
+                    .counter_values()
+                    .iter()
+                    .any(|(k, v)| k == "server.lease.grant" && *v > 0));
+                // lease lifecycle events landed in the stream, one
+                // JSON object per line
+                let events = r.events_jsonl();
+                assert!(events.lines().count() > 0);
+                for line in events.lines() {
+                    let doc = kernelband::util::json::Json::parse(line)
+                        .expect("event line parses");
+                    assert!(doc.get("kind").is_some());
+                }
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base_dir);
+}
+
+/// Open-loop pacing reports percentiles into the measured ledger and
+/// leaves the deterministic artifact byte-identical to a closed-loop
+/// run of the same request.
+#[test]
+fn open_loop_percentiles_live_in_the_ledger_only() {
+    let closed = {
+        let store = Arc::new(TraceStore::in_memory());
+        InProcess.run_report(&small_request(), &store)
+    };
+    assert!(closed.open_loop.is_none());
+    assert!(closed.ledger_json().get("open_loop").is_none());
+
+    let store = Arc::new(TraceStore::in_memory());
+    store.set_recorder(Arc::new(Recorder::new()));
+    let mut req = small_request();
+    // fast arrivals: 4 jobs at 2000/s all land within 2ms
+    req.open_loop = Some(OpenLoopPlan { rate: 2000.0, duration_s: 0.002 });
+    let open = InProcess.run_report(&req, &store);
+
+    assert_eq!(
+        open.deterministic_json().dump(),
+        closed.deterministic_json().dump(),
+        "open-loop pacing leaked into deterministic bytes"
+    );
+
+    let stats = open.open_loop.as_ref().expect("open-loop stats present");
+    assert!(stats.arrivals() > 0);
+    let qw = stats.queue_wait();
+    let lat = stats.latency();
+    assert!(qw.p50 <= qw.p95 && qw.p95 <= qw.p99 && qw.p99 <= qw.max);
+    assert!(lat.p50 <= lat.p95 && lat.p95 <= lat.p99 && lat.p99 <= lat.max);
+    assert!(lat.p50 >= 0.0);
+
+    let ledger = open.ledger_json();
+    let ol = ledger.get("open_loop").expect("ledger carries open_loop");
+    assert_eq!(ol.get("rate_jobs_per_s").unwrap().as_f64(), Some(2000.0));
+    for section in ["queue_wait", "latency"] {
+        let p = ol.get(section).unwrap();
+        for key in ["p50_s", "p95_s", "p99_s", "mean_s", "max_s"] {
+            assert!(p.get(key).and_then(|v| v.as_f64()).is_some(),
+                    "{section}.{key} missing");
+        }
+    }
+    // but never in the deterministic artifact
+    assert!(open.deterministic_json().get("open_loop").is_none());
+
+    // the modeled backend has no queue to pace
+    let mut modeled = ServeRequest::default();
+    modeled.open_loop = Some(OpenLoopPlan { rate: 1.0, duration_s: 1.0 });
+    assert!(Modeled.run(&modeled, None).is_err());
+}
+
+/// Bucket-wise histogram merging is order-independent: any merge
+/// order over the same per-worker histograms yields identical
+/// snapshots (and therefore identical `METRICS.json` percentiles).
+#[test]
+fn histogram_merge_is_order_independent() {
+    let parts: Vec<Histogram> = (0..3)
+        .map(|w| {
+            let h = Histogram::new();
+            for i in 0..200u64 {
+                h.record(i * 17 + w * 1009);
+            }
+            h
+        })
+        .collect();
+    let forward = Histogram::new();
+    for p in parts.iter() {
+        forward.merge(p);
+    }
+    let backward = Histogram::new();
+    for p in parts.iter().rev() {
+        backward.merge(p);
+    }
+    assert_eq!(forward.snapshot(), backward.snapshot());
+    assert_eq!(forward.snapshot().count, 600);
+
+    // same property at the recorder level, counters included
+    let make = |names: &[&str]| {
+        let r = Recorder::new();
+        for (i, n) in names.iter().enumerate() {
+            r.add("x.count", (i as u64 + 1) * 3);
+            let h = r.hist(n);
+            for v in 0..50u64 {
+                h.record(v * 7);
+            }
+        }
+        r
+    };
+    let a = make(&["h.one", "h.two"]);
+    let b = make(&["h.two", "h.three"]);
+    let ab = Recorder::new();
+    ab.merge_from(&a);
+    ab.merge_from(&b);
+    let ba = Recorder::new();
+    ba.merge_from(&b);
+    ba.merge_from(&a);
+    assert_eq!(ab.metrics_json().dump(), ba.metrics_json().dump());
+}
+
+/// A disabled recorder accepts every call and records nothing; noop
+/// handles are safe everywhere a real handle is.
+#[test]
+fn disabled_recorder_is_inert() {
+    let r = Recorder::disabled();
+    assert!(!r.enabled());
+    r.add("c", 5);
+    r.counter("c").incr();
+    let h = r.hist("h");
+    h.record(42);
+    h.stop(h.start());
+    r.event("kind", kernelband::util::json::Json::Null);
+    r.end_span(r.span("s"));
+    assert!(r.counter_values().is_empty());
+    assert!(r.hist_snapshots().is_empty());
+    assert!(r.events_jsonl().is_empty());
+    let doc = r.metrics_json();
+    assert_eq!(doc.get("enabled"), Some(&kernelband::util::json::Json::Bool(false)));
+
+    // merging a disabled recorder into an enabled one is a no-op
+    let live = Recorder::new();
+    live.add("kept", 1);
+    live.merge_from(&r);
+    assert_eq!(live.counter_values(), vec![("kept".to_string(), 1)]);
+}
+
+/// Nearest-rank percentile definition, pinned by example.
+#[test]
+fn percentiles_are_exact_nearest_rank() {
+    let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+    let p = Percentiles::from_samples(&xs);
+    assert_eq!(p.p50, 50.0);
+    assert_eq!(p.p95, 95.0);
+    assert_eq!(p.p99, 99.0);
+    assert_eq!(p.max, 100.0);
+    assert!((p.mean - 50.5).abs() < 1e-9);
+
+    assert_eq!(Percentiles::from_samples(&[]), Percentiles::default());
+    let single = Percentiles::from_samples(&[0.25]);
+    assert_eq!(single.p50, 0.25);
+    assert_eq!(single.p99, 0.25);
+}
+
+/// `METRICS.json` schema contract: version, enabled flag, numeric
+/// counters, and monotone histogram percentiles — the same checks
+/// `scripts/check_metrics.py` runs in CI.
+#[test]
+fn metrics_json_is_schema_valid_with_monotone_percentiles() {
+    let store = Arc::new(TraceStore::in_memory());
+    let rec = Arc::new(Recorder::with_events());
+    store.set_recorder(rec.clone());
+    let (_report, _sup) = Sharded.run_report(&small_request(), &store);
+    store.obs_export();
+
+    let doc = rec.metrics_json();
+    assert_eq!(
+        doc.get("schema_version").and_then(|v| v.as_usize()),
+        Some(kernelband::obs::METRICS_SCHEMA_VERSION)
+    );
+    assert_eq!(
+        doc.get("enabled"),
+        Some(&kernelband::util::json::Json::Bool(true))
+    );
+    for (name, s) in rec.hist_snapshots() {
+        assert!(s.p50 <= s.p90, "{name}");
+        assert!(s.p90 <= s.p95, "{name}");
+        assert!(s.p95 <= s.p99, "{name}");
+        assert!(s.p99 <= s.max, "{name}");
+        assert!(s.min <= s.max, "{name}");
+    }
+    // the store exported its gauge set
+    assert!(rec
+        .counter_values()
+        .iter()
+        .any(|(k, _)| k == "store.profile.entries"));
+}

@@ -574,6 +574,7 @@ fn centroid_memo_is_interleaving_invariant() {
             mode: BatchMode::Fixed(1),
             centroids: Some(cache.clone()),
             profiles: None,
+            obs: None,
         };
         let out: Vec<(usize, Trace)> = order
             .iter()
@@ -613,6 +614,7 @@ fn centroid_memo_is_interleaving_invariant() {
         mode: BatchMode::Fixed(1),
         centroids: Some(cache),
         profiles: None,
+        obs: None,
     };
     let jobs: Vec<usize> = (0..job_tasks.len()).collect();
     let parallel: Vec<Trace> = spawn_map(&jobs, |_, &j| {

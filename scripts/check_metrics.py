@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Schema-validate an advisory METRICS.json telemetry artifact.
+
+Usage: check_metrics.py METRICS.json [--require NAME ...]
+
+Checks the contract promised by `kernelband::obs::Recorder::metrics_json`
+(schema_version 1):
+
+- top level carries `schema_version` == 1, boolean `enabled`, and
+  `counters` / `histograms` objects;
+- every counter is a non-negative finite number;
+- every histogram carries count/sum/min/max/mean/p50/p90/p95/p99, all
+  non-negative finite numbers, with monotone percentiles
+  p50 <= p90 <= p95 <= p99 <= max and min <= max whenever count > 0;
+- every `--require NAME` names a counter with value > 0 or a histogram
+  with count > 0 (the CI obs-smoke run must actually have observed the
+  layers it instruments).
+
+Exits 1 on any violation. This is a *gate*: the METRICS.json document
+is advisory and never byte-compared, but its shape is load-bearing for
+`kernelband metrics` and the CI summary, so drift fails the build.
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+HIST_FIELDS = (
+    "count", "sum", "min", "max", "mean", "p50", "p90", "p95", "p99",
+)
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and math.isfinite(v)
+
+
+def check(doc, require):
+    errors = []
+
+    if doc.get("schema_version") != 1:
+        errors.append(
+            f"schema_version is {doc.get('schema_version')!r}, expected 1"
+        )
+    if not isinstance(doc.get("enabled"), bool):
+        errors.append("enabled missing or not a boolean")
+
+    counters = doc.get("counters")
+    if not isinstance(counters, dict):
+        errors.append("counters missing or not an object")
+        counters = {}
+    for name, v in sorted(counters.items()):
+        if not is_num(v) or v < 0:
+            errors.append(f"counter {name}: bad value {v!r}")
+
+    hists = doc.get("histograms")
+    if not isinstance(hists, dict):
+        errors.append("histograms missing or not an object")
+        hists = {}
+    for name, h in sorted(hists.items()):
+        if not isinstance(h, dict):
+            errors.append(f"histogram {name}: not an object")
+            continue
+        bad = [f for f in HIST_FIELDS
+               if not is_num(h.get(f)) or h.get(f) < 0]
+        if bad:
+            errors.append(f"histogram {name}: bad fields {bad}")
+            continue
+        if h["count"] > 0:
+            chain = [h["p50"], h["p90"], h["p95"], h["p99"], h["max"]]
+            if any(a > b for a, b in zip(chain, chain[1:])):
+                errors.append(
+                    f"histogram {name}: percentiles not monotone {chain}"
+                )
+            if h["min"] > h["max"]:
+                errors.append(
+                    f"histogram {name}: min {h['min']} > max {h['max']}"
+                )
+
+    for name in require:
+        if counters.get(name, 0) > 0:
+            continue
+        if isinstance(hists.get(name), dict) \
+                and hists[name].get("count", 0) > 0:
+            continue
+        errors.append(
+            f"required metric {name}: absent, zero, or empty histogram"
+        )
+
+    return errors
+
+
+def main(argv):
+    path = None
+    require = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--require":
+            if i + 1 >= len(argv):
+                print("--require needs a metric name")
+                return 1
+            i += 1
+            require.append(argv[i])
+        elif path is None:
+            path = Path(a)
+        else:
+            print(__doc__)
+            return 1
+        i += 1
+    if path is None:
+        print(__doc__)
+        return 1
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable: {e}")
+        return 1
+
+    errors = check(doc, require)
+    counters = doc.get("counters") or {}
+    hists = doc.get("histograms") or {}
+    print(
+        f"{path}: {len(counters)} counters, {len(hists)} histograms, "
+        f"{len(require)} required metrics"
+    )
+    if errors:
+        for e in errors:
+            print(f"  ✗ {e}")
+        print(f"{len(errors)} violation{'' if len(errors) == 1 else 's'}.")
+        return 1
+    print("  ✓ schema valid")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main(sys.argv[1:]))
+    except BrokenPipeError:
+        sys.exit(0)
