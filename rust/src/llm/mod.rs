@@ -228,6 +228,17 @@ pub mod accounting {
             serial_ms: (p.latency_s * 1e3).max(0.0) as u64,
         }
     }
+
+    /// Modeled backoff charged before resubmitting a transiently
+    /// failed gateway round-trip: exponential `base_s * 2^(attempt-1)`
+    /// for 1-based `attempt`, with the shift capped so absurd attempt
+    /// counts cannot overflow. Shared by
+    /// [`crate::service::BatchedLlmGateway::call_retry`] so the retry
+    /// cost model lives next to the rest of the Fig.-3/4 accounting.
+    pub fn retry_backoff_s(attempt: u32, base_s: f64) -> f64 {
+        let exp = attempt.saturating_sub(1).min(16);
+        base_s.max(0.0) * (1u64 << exp) as f64
+    }
 }
 
 /// Abstract LLM interface — swap in a real API client here.

@@ -60,7 +60,10 @@ use kernelband::server::{
 };
 use kernelband::store::log::records_for_trace;
 use kernelband::store::wrap::{CachedEngine, CachedLlm};
-use kernelband::store::{log as trace_log, warm::WarmIndex, TraceStore};
+use kernelband::store::{
+    fsck, log as trace_log, warm::WarmIndex, Durability, StoreFaultPlan,
+    TraceStore,
+};
 use kernelband::util::json::{self as json, Json};
 use kernelband::workload::Suite;
 
@@ -97,6 +100,8 @@ USAGE:
       [--variety N] [--seed S] [--queue-cap N] [--quota N]
       [--device D] [--llm L] [--fault kill-after=K,preempt=P,seed=S]
       [--obs on|off|events] [--open-loop rate=R,duration=D]
+      [--durability strict|relaxed|off]
+      [--store-fault kill-at-byte=K,short-write=P,enospc-after=N,seed=S]
       [--out DIR] [--store DIR]
       All backends run behind one job API (JobSpec → ServeRequest →
       ServeBackend). The default backend is REAL and in-process: a
@@ -122,6 +127,13 @@ USAGE:
       numeric).
       Deprecated spellings (still honored): --modeled ==
       --backend modeled; --real == --backend inprocess.
+      --durability picks the store sync discipline: strict frames
+      every appended line (length+CRC) and fsyncs the trace log and
+      checkpoint journal, relaxed (default) frames without fsync, off
+      writes the legacy raw bytes. --store-fault arms a deterministic
+      disk-fault injector under every store append (testing): a flush
+      failure re-queues the records in memory and the run continues
+      DEGRADED (status in SERVE_LEDGER.json), exit code 0.
   kernelband trace record --store DIR [--task SUBSTR] [--device D]
       [--llm L] [--iterations N] [--seed S]
       run one optimization through the store and append its trace.
@@ -129,8 +141,17 @@ USAGE:
       replay a trace log into warm-start state and print it.
   kernelband trace stats <TRACE-or-STORE-DIR>
       record counts, versions skipped, corrupt lines, cache sizes.
-      For a store dir: checkpoint-journal health (live vs retired
-      entries) and per-tenant warm ratios.
+      For a store dir: per-file corrupt/skipped line counts,
+      checkpoint-journal health (live vs retired entries) and
+      per-tenant warm ratios.
+  kernelband trace fsck <STORE-DIR> [--repair]
+      scan all seven store files for torn/corrupt/duplicate/
+      unknown-version lines. With --repair: quarantine bad lines
+      verbatim to DIR/quarantine/<file>, drop duplicate content
+      lines, compact the checkpoint journal (retired jobs and their
+      tombstones), and atomically rewrite changed files. Idempotent —
+      a second --repair run changes zero bytes. Exit codes: 0 clean,
+      1 issues found/repaired, 2 unrepairable.
   kernelband metrics <summary|top|export> [PATH]
       inspect a METRICS.json written by serve --obs (PATH is the file
       or its directory; default out/). summary prints histograms with
@@ -455,6 +476,63 @@ fn parse_fault(s: &str) -> Result<FaultPlan> {
     Ok(plan)
 }
 
+/// `--store-fault kill-at-byte=K,short-write=P,enospc-after=N,seed=S`
+/// — comma-separated `key=value` parts, each optional. Arms the
+/// deterministic disk-fault injector under every store append
+/// ([`kernelband::store::durable`]).
+fn parse_store_fault(s: &str) -> Result<StoreFaultPlan> {
+    let mut plan = StoreFaultPlan::default();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (key, value) = part.split_once('=').ok_or_else(|| {
+            anyhow!("--store-fault: expected key=value, got {part:?}")
+        })?;
+        match key {
+            "kill-at-byte" => {
+                plan.kill_at_byte = Some(value.parse().map_err(|_| {
+                    anyhow!(
+                        "--store-fault kill-at-byte: bad number {value:?}"
+                    )
+                })?);
+            }
+            "short-write" => {
+                plan.short_write_prob = value.parse().map_err(|_| {
+                    anyhow!(
+                        "--store-fault short-write: bad probability \
+                         {value:?}"
+                    )
+                })?;
+                if !(0.0..=1.0).contains(&plan.short_write_prob) {
+                    bail!("--store-fault short-write: need 0 <= P <= 1");
+                }
+            }
+            "enospc-after" => {
+                plan.enospc_after = Some(value.parse().map_err(|_| {
+                    anyhow!(
+                        "--store-fault enospc-after: bad number {value:?}"
+                    )
+                })?);
+            }
+            "seed" => {
+                plan.seed = value.parse().map_err(|_| {
+                    anyhow!("--store-fault seed: bad number {value:?}")
+                })?;
+            }
+            other => bail!(
+                "--store-fault: unknown key {other:?} \
+                 (expected kill-at-byte, short-write, enospc-after, seed)"
+            ),
+        }
+    }
+    Ok(plan)
+}
+
+/// `--durability strict|relaxed|off`.
+fn parse_durability(s: &str) -> Result<Durability> {
+    Durability::parse(s).ok_or_else(|| {
+        anyhow!("--durability: expected strict, relaxed or off, got {s:?}")
+    })
+}
+
 /// `--open-loop rate=R,duration=D` — target arrival rate (jobs per
 /// second, required > 0) and arrival-window length (seconds, default
 /// 1). Real backends only.
@@ -524,7 +602,8 @@ fn open_serve_store(store_dir: Option<&str>) -> Result<Arc<TraceStore>> {
 /// SERVE_LEDGER.json (measured) and SUPERVISOR_LEDGER.json (sharded
 /// lease counters + event log).
 fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
-             out: Option<&str>, store_dir: Option<&str>, obs: ObsMode)
+             out: Option<&str>, store_dir: Option<&str>, obs: ObsMode,
+             durability: Durability, store_fault: StoreFaultPlan)
              -> Result<()> {
     let modeled = backend.name() == "modeled";
     let store = if modeled {
@@ -533,6 +612,10 @@ fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
     } else {
         Some(open_serve_store(store_dir)?)
     };
+    if let Some(s) = &store {
+        s.set_durability(durability);
+        s.set_store_fault(store_fault);
+    }
     // advisory telemetry: attached to the store (the single handle
     // every layer reaches through) and exported to METRICS.json only —
     // never into the byte-compared artifacts
@@ -544,13 +627,52 @@ fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
     if let (Some(rec), Some(s)) = (&recorder, &store) {
         s.set_recorder(rec.clone());
     }
-    let outcome = backend.run(req, store.as_ref())?;
+    let mut outcome = backend.run(req, store.as_ref())?;
     for line in &outcome.lines {
         outln!("{line}");
     }
     if !modeled {
         if let Some(s) = &store {
             outln!("[store] {}", s.stats_line());
+        }
+    }
+    // persist BEFORE the artifact writes: a flush failure is non-fatal
+    // (the records stay queued in memory) and must land in the ledger
+    // as degraded status rather than abort after the artifacts
+    if store_dir.is_some() {
+        if let Some(s) = &store {
+            match s.persist() {
+                Ok(()) => {
+                    if modeled {
+                        outln!("[store] service jobs recorded; \
+                                dir persisted");
+                    } else {
+                        outln!("[store] tenant namespaces + traces \
+                                persisted");
+                    }
+                }
+                Err(e) => outln!(
+                    "[store] DEGRADED: flush failed ({e}); {} records \
+                     re-queued in memory, serving continued warm",
+                    s.requeued_records()
+                ),
+            }
+        }
+    }
+    // surface store health in the measured ledger (never in the
+    // byte-compared deterministic artifact)
+    if let (Some(s), Some(ledger)) = (&store, outcome.ledger.as_mut()) {
+        ledger.insert("store_degraded", Json::Bool(s.store_degraded()));
+        ledger.insert(
+            "store_flush_errors",
+            Json::num(s.flush_errors() as f64),
+        );
+        ledger.insert(
+            "store_requeued_records",
+            Json::num(s.requeued_records() as f64),
+        );
+        if let Some(msg) = s.last_flush_error() {
+            ledger.insert("store_last_flush_error", Json::str(msg));
         }
     }
     if let Some(dir) = out {
@@ -592,16 +714,6 @@ fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
                 std::fs::write(&p, events)
                     .with_context(|| format!("writing {}", p.display()))?;
                 outln!("[events] {}", p.display());
-            }
-        }
-    }
-    if store_dir.is_some() {
-        if let Some(s) = &store {
-            s.persist().context("persisting store")?;
-            if modeled {
-                outln!("[store] service jobs recorded; dir persisted");
-            } else {
-                outln!("[store] tenant namespaces + traces persisted");
             }
         }
     }
@@ -729,6 +841,11 @@ fn trace_stats(path_str: &str) -> Result<()> {
             store.loaded.tenants,
             store.loaded.skipped,
         );
+        // per-file corruption: a rotting file is named, not hidden in
+        // the aggregate (run `trace fsck --repair` to heal it)
+        for (file, n) in store.loaded.corrupt_files() {
+            outln!("corrupt {file}: skipped_lines={n}");
+        }
         // checkpoint-journal health: a growing retired/tombstone count
         // with few live entries means compaction is keeping up
         let h = store.ckpt_journal_health();
@@ -802,11 +919,37 @@ fn trace_stats(path_str: &str) -> Result<()> {
     Ok(())
 }
 
+/// `trace fsck`: scan the store files, optionally repair, and map the
+/// result onto the documented exit codes (0 clean, 1 issues
+/// found/repaired, 2 unrepairable).
+fn trace_fsck(store_dir: &str, repair: bool) -> Result<()> {
+    let dir = Path::new(store_dir);
+    if !dir.is_dir() {
+        bail!("trace fsck needs a store DIR, got {store_dir:?}");
+    }
+    let report = match fsck::fsck(dir, repair) {
+        Ok(r) => r,
+        Err(e) => {
+            outln!("[fsck] unrepairable: {e}");
+            std::process::exit(2);
+        }
+    };
+    for line in report.summary_lines() {
+        outln!("{line}");
+    }
+    if !report.clean() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn trace_cmd(rest: &[String]) -> Result<()> {
     let sub = rest
         .first()
-        .ok_or_else(|| anyhow!("trace needs record|replay|stats\n{USAGE}"))?;
-    let args = Args::parse(&rest[1..], &[])?;
+        .ok_or_else(|| {
+            anyhow!("trace needs record|replay|stats|fsck\n{USAGE}")
+        })?;
+    let args = Args::parse(&rest[1..], &["repair"])?;
     match sub.as_str() {
         "record" => trace_record(
             args.get("store")
@@ -831,6 +974,14 @@ fn trace_cmd(rest: &[String]) -> Result<()> {
                 .ok_or_else(|| {
                     anyhow!("trace stats needs a TRACE file or store DIR")
                 })?,
+        ),
+        "fsck" => trace_fsck(
+            args.positional
+                .first()
+                .map(String::as_str)
+                .or_else(|| args.get("store"))
+                .ok_or_else(|| anyhow!("trace fsck needs a store DIR"))?,
+            args.has("repair"),
         ),
         other => bail!("unknown trace subcommand {other:?}\n{USAGE}"),
     }
@@ -1079,6 +1230,11 @@ fn main() -> Result<()> {
                 args.get("out"),
                 args.get("store"),
                 obs,
+                parse_durability(args.get("durability").unwrap_or("relaxed"))?,
+                match args.get("store-fault") {
+                    Some(spec) => parse_store_fault(spec)?,
+                    None => StoreFaultPlan::default(),
+                },
             )
         }
         "trace" => trace_cmd(rest),

@@ -81,6 +81,12 @@ impl SharedProfiles {
         self.len() == 0
     }
 
+    /// Re-mark keys dirty after a failed append (the map retains the
+    /// signatures; the next persist retries the same records).
+    pub fn restore_dirty(&self, keys: impl IntoIterator<Item = u64>) {
+        self.dirty.lock().unwrap().extend(keys);
+    }
+
     /// Drain new entries sorted by key (deterministic append bytes
     /// regardless of worker scheduling).
     pub fn take_dirty(&self) -> Vec<(u64, HardwareSignature)> {

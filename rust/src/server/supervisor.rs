@@ -406,6 +406,31 @@ impl Sharded {
     /// ledger (lease counters + event log).
     pub fn run_report(&self, req: &ServeRequest,
                       store: &Arc<TraceStore>) -> (ServeReport, Json) {
+        // durability advisory: the store loaded over corrupt or torn
+        // lines (skipped, not fatal). Recovery proceeds from the
+        // surviving records; recommend a repair pass on stderr so the
+        // deterministic stdout stream is untouched.
+        let corrupt = store.loaded.corrupt_files();
+        if !corrupt.is_empty() {
+            let total: usize = corrupt.iter().map(|&(_, n)| n).sum();
+            eprintln!(
+                "[supervisor] store loaded with {total} corrupt \
+                 line(s) skipped; run `kernelband trace fsck \
+                 <STORE-DIR> --repair` to quarantine and compact"
+            );
+            if let Some(obs) = store.recorder() {
+                obs.add("server.store_corrupt_lines", total as u64);
+                for &(file, n) in &corrupt {
+                    obs.event(
+                        "store_corruption",
+                        Json::obj(vec![
+                            ("file", Json::str(file)),
+                            ("skipped_lines", Json::num(n as f64)),
+                        ]),
+                    );
+                }
+            }
+        }
         // crash recovery: anything a previous session left in the
         // checkpoint journal resumes instead of restarting
         let rec = reconcile(store);

@@ -62,6 +62,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::rng::Rng;
 use crate::sched::scheduler::{ReclusterScheduler, SchedulerConfig};
 use crate::store::TraceStore;
 use crate::util::hash::KeyHasher;
@@ -225,12 +226,49 @@ impl Default for GatewayConfig {
     }
 }
 
+/// Bounded deterministic retry policy for transient gateway failures
+/// ([`BatchedLlmGateway::call_retry`]).
+///
+/// The transient-failure draw is seeded per `(seed, key, attempt)`, so
+/// a given request retries (or doesn't) identically across runs and is
+/// invariant to thread interleaving. The default is **inert**
+/// (`transient_fail_prob = 0.0`): `call_retry` then behaves exactly
+/// like [`BatchedLlmGateway::call`] — one round-trip, no backoff, no
+/// change to any deterministic artifact.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts per request, including the first (min 1).
+    pub max_attempts: u32,
+    /// Backoff before retry `n` costs `backoff_base_s * 2^(n-1)`
+    /// modeled seconds ([`crate::llm::accounting::retry_backoff_s`]),
+    /// charged through the same [`TIME_SCALE`] clock as API latency.
+    pub backoff_base_s: f64,
+    /// Probability a completed round-trip is treated as a transient
+    /// failure (fault-injection knob; 0.0 disables retries entirely).
+    pub transient_fail_prob: f64,
+    /// Seed for the per-(key, attempt) failure draws.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            backoff_base_s: 1.0,
+            transient_fail_prob: 0.0,
+            seed: 0,
+        }
+    }
+}
+
 /// Gateway runtime statistics.
 #[derive(Debug, Default)]
 pub struct GatewayStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub max_batch_seen: AtomicU64,
+    /// Transient-failure resubmissions made by `call_retry`.
+    pub retries: AtomicU64,
 }
 
 struct GatewayShared<T> {
@@ -379,6 +417,42 @@ impl<T: Send + 'static> BatchedLlmGateway<T> {
         guard.take().unwrap()
     }
 
+    /// [`BatchedLlmGateway::call`] with bounded deterministic retries.
+    ///
+    /// Each completed round-trip is re-judged against the policy's
+    /// transient-failure draw, seeded by `(policy.seed, key, attempt)`;
+    /// a failed draw charges the modeled exponential backoff
+    /// ([`crate::llm::accounting::retry_backoff_s`]) and resubmits,
+    /// up to `policy.max_attempts` total attempts (the last attempt's
+    /// result is always accepted, so the loop is bounded).
+    ///
+    /// Shutdown semantics are untouched: a [`GatewayClosed`] error
+    /// short-circuits immediately — a dying gateway is not a transient
+    /// failure, and retrying against it would spin on the drain path.
+    pub fn call_retry(&self, payload: T, key: u64, policy: &RetryPolicy)
+                      -> Result<T, GatewayClosed<T>> {
+        let attempts = policy.max_attempts.max(1);
+        let mut p = payload;
+        for attempt in 1..=attempts {
+            p = self.call(p)?;
+            let transient = attempt < attempts
+                && policy.transient_fail_prob > 0.0
+                && Rng::new(policy.seed)
+                    .split("gw-retry", key)
+                    .split("attempt", attempt as u64)
+                    .chance(policy.transient_fail_prob);
+            if !transient {
+                return Ok(p);
+            }
+            self.shared.stats.retries.fetch_add(1, Ordering::Relaxed);
+            scaled_sleep(crate::llm::accounting::retry_backoff_s(
+                attempt,
+                policy.backoff_base_s,
+            ));
+        }
+        Ok(p)
+    }
+
     /// Initiate shutdown and join the batcher. Idempotent; called by
     /// `Drop`. Queued and newly-arriving requests drain with
     /// [`GatewayClosed`] rather than blocking their submitters.
@@ -404,6 +478,10 @@ impl<T: Send + 'static> BatchedLlmGateway<T> {
 
     pub fn max_batch_seen(&self) -> u64 {
         self.shared.stats.max_batch_seen.load(Ordering::Relaxed)
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.shared.stats.retries.load(Ordering::Relaxed)
     }
 }
 
@@ -434,6 +512,9 @@ pub struct ServiceReport {
     /// store had already recorded their completion (cache-hit fast
     /// path; 0 without a store).
     pub gateway_bypassed: u64,
+    /// Transient-failure resubmissions ([`RetryPolicy`]; 0 with the
+    /// inert default policy).
+    pub gateway_retries: u64,
     /// Re-clustering requests jobs submitted to the shared scheduler.
     pub sched_requests: u64,
     /// Scheduling rounds the requests coalesced into.
@@ -473,6 +554,9 @@ pub struct OptimizationService {
     /// Candidates measured per iteration through one fused engine call
     /// ([`TimeModel::fused_measure_s`]); 1 = the pre-batch service.
     pub batch: usize,
+    /// Transient-failure retry policy for gateway round-trips (inert by
+    /// default: `transient_fail_prob = 0.0`).
+    pub retry: RetryPolicy,
 }
 
 impl Default for OptimizationService {
@@ -484,6 +568,7 @@ impl Default for OptimizationService {
             recluster_every: 2,
             task_variety: 4,
             batch: 1,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -517,6 +602,7 @@ impl OptimizationService {
         let scheduler = ReclusterScheduler::spawn(self.sched_config);
         let bypassed = AtomicU64::new(0);
         let tm = self.time_model;
+        let retry = self.retry;
         let batch = self.batch.max(1);
         let variety = self.task_variety.max(1);
         let recluster_every = self.recluster_every.max(1);
@@ -553,11 +639,13 @@ impl OptimizationService {
                         // no modeled API latency
                         bypassed.fetch_add(1, Ordering::Relaxed);
                     } else {
-                        // the iteration's chained LLM calls, batched;
-                        // only a completed round-trip is recorded as
-                        // done (a shutdown error must not poison the
-                        // store with a bypass key for skipped work)
-                        if gateway.call(job_id).is_ok() {
+                        // the iteration's chained LLM calls, batched
+                        // (with deterministic transient-failure
+                        // retries); only a completed round-trip is
+                        // recorded as done (a shutdown error must not
+                        // poison the store with a bypass key for
+                        // skipped work)
+                        if gateway.call_retry(job_id, key, &retry).is_ok() {
                             if let Some(s) = store {
                                 s.service_insert(key);
                             }
@@ -583,6 +671,7 @@ impl OptimizationService {
             gateway_batches: gateway.batches(),
             gateway_max_batch: gateway.max_batch_seen(),
             gateway_bypassed: bypassed.load(Ordering::Relaxed),
+            gateway_retries: gateway.retries(),
             sched_requests: scheduler.requests(),
             sched_rounds: scheduler.rounds(),
             sched_warm_hits: scheduler.warm_hits(),

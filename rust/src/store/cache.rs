@@ -142,6 +142,13 @@ impl<V: Clone> ContentCache<V> {
         self.entries.is_empty()
     }
 
+    /// Re-mark keys dirty after a failed append. `take_dirty` retains
+    /// the entries themselves, so restoring just the keys is enough to
+    /// make the next persist retry the same records.
+    pub fn restore_dirty(&mut self, keys: impl IntoIterator<Item = u64>) {
+        self.dirty.extend(keys);
+    }
+
     /// Drain the new entries, sorted by key so the appended bytes are
     /// deterministic regardless of insertion (thread) order.
     pub fn take_dirty(&mut self) -> Vec<(u64, V)> {

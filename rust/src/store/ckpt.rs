@@ -237,11 +237,37 @@ impl CkptRegistry {
             .collect()
     }
 
-    /// Drain pending lines as JSONL text for appending.
+    /// Stage pending lines for a flush attempt. Nothing is marked
+    /// flushed yet: the fail-safe persist calls
+    /// [`CkptRegistry::mark_flushed`] once the append lands or
+    /// [`CkptRegistry::restore_pending`] when it errors, so a failed
+    /// write never convinces retirement that a tombstone is owed.
+    pub fn stage_pending(&mut self) -> Vec<(u64, Json)> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// A staged flush landed: remember which fingerprints now have
+    /// on-disk lines (their retirement must append a tombstone).
+    pub fn mark_flushed(&mut self, lines: &[(u64, Json)]) {
+        for (fp, _) in lines {
+            self.flushed.insert(*fp);
+        }
+    }
+
+    /// A staged flush failed: re-queue the lines ahead of anything
+    /// appended meanwhile, preserving journal order.
+    pub fn restore_pending(&mut self, mut lines: Vec<(u64, Json)>) {
+        lines.append(&mut self.pending);
+        self.pending = lines;
+    }
+
+    /// Drain pending lines as JSONL text for appending, marking them
+    /// flushed (the pre-fail-safe convenience path; tests use it).
     pub fn take_pending(&mut self) -> String {
+        let lines = self.stage_pending();
+        self.mark_flushed(&lines);
         let mut out = String::new();
-        for (fp, line) in std::mem::take(&mut self.pending) {
-            self.flushed.insert(fp);
+        for (_, line) in lines {
             out.push_str(&line.dump());
             out.push('\n');
         }
@@ -291,6 +317,30 @@ impl CkptRegistry {
     pub fn journal_health(&self) -> JournalHealth {
         self.health
     }
+}
+
+/// Compact a decoded journal: re-emit only what [`CkptRegistry::load`]
+/// would keep — the live, normalized checkpoint prefixes — dropping
+/// tombstoned/retired jobs' lines and the tombstones themselves (the
+/// unbounded-growth dead weight `trace fsck --repair` reclaims).
+/// Emission is canonical (fingerprints ascending, iterations
+/// ascending), so compacting a compacted journal is the byte-level
+/// identity. Returns `(compacted JSONL text, dropped line count)`.
+pub(crate) fn compact_lines(lines: Vec<JournalLine>)
+                            -> (String, usize) {
+    let total = lines.len();
+    let mut reg = CkptRegistry::default();
+    reg.load(lines);
+    let mut out = String::new();
+    let mut kept = 0usize;
+    for (fp, cks) in &reg.live {
+        for c in cks {
+            out.push_str(&ckpt_record(*fp, c).dump());
+            out.push('\n');
+            kept += 1;
+        }
+    }
+    (out, total - kept)
 }
 
 #[cfg(test)]
@@ -392,6 +442,55 @@ mod tests {
         reg.retire(9);
         let tomb = reg.take_pending();
         assert!(tomb.contains("\"kind\":\"done\""));
+    }
+
+    #[test]
+    fn staged_flush_restores_on_error_and_never_false_tombstones() {
+        let mut reg = CkptRegistry::default();
+        reg.append(9, &sample_ckpt(1));
+        reg.append(9, &sample_ckpt(2));
+        let staged = reg.stage_pending();
+        assert_eq!(staged.len(), 2);
+        // simulate a failed append: restore, then retire — no line was
+        // ever flushed, so no tombstone is owed
+        reg.restore_pending(staged);
+        reg.retire(9);
+        assert!(reg.take_pending().is_empty());
+        // and the success path still tombstones
+        let mut reg = CkptRegistry::default();
+        reg.append(9, &sample_ckpt(1));
+        let staged = reg.stage_pending();
+        reg.mark_flushed(&staged);
+        reg.retire(9);
+        assert!(reg.take_pending().contains("\"kind\":\"done\""));
+    }
+
+    #[test]
+    fn compaction_keeps_live_prefixes_and_is_idempotent() {
+        let lines = vec![
+            JournalLine::Ckpt(2, sample_ckpt(1)),
+            JournalLine::Ckpt(1, sample_ckpt(1)),
+            JournalLine::Ckpt(2, sample_ckpt(2)),
+            JournalLine::Done(2), // retired: all its lines are dead
+            JournalLine::Ckpt(1, sample_ckpt(2)),
+            JournalLine::Ckpt(1, sample_ckpt(4)), // gap: truncated away
+        ];
+        let (text, dropped) = compact_lines(lines);
+        assert_eq!(dropped, 4); // fp2's two lines + tombstone + the gap
+        assert_eq!(text.lines().count(), 2);
+        assert!(!text.contains("\"kind\":\"done\""));
+        // idempotent: compacting the compacted text is the identity
+        let values: Vec<Json> = text
+            .lines()
+            .map(|l| crate::util::json::parse(l).unwrap())
+            .collect();
+        let decoded: Vec<JournalLine> = values
+            .iter()
+            .map(|v| journal_from_record(v).unwrap())
+            .collect();
+        let (again, dropped2) = compact_lines(decoded);
+        assert_eq!(again, text);
+        assert_eq!(dropped2, 0);
     }
 
     #[test]

@@ -1,0 +1,503 @@
+//! Crash-consistent append plumbing for the store files: length+CRC
+//! line framing, a configurable sync discipline, atomic rewrites for
+//! compaction, and a deterministic disk-fault injector.
+//!
+//! ## Frame format (v1)
+//!
+//! A framed line wraps one JSONL payload:
+//!
+//! ```text
+//! #f1:<len:8 hex>:<crc32:8 hex>:<payload>\n
+//! ```
+//!
+//! `len` is the payload byte length and `crc32` the IEEE CRC of the
+//! payload bytes, so a torn or bit-flipped line is *detected* instead
+//! of silently parsing as garbage-or-worse. Framing is recognized per
+//! line — legacy raw JSON lines (which can never start with `#`) stay
+//! readable forever, and files may freely mix framed and raw lines.
+//! [`Durability`] picks the write-side encoding: `strict` and `relaxed`
+//! frame every appended line (strict additionally fsyncs the ordering-
+//! critical files), while `off` writes the legacy raw bytes.
+//!
+//! ## Fault injection
+//!
+//! [`StoreFaultPlan`] (`--store-fault
+//! kill-at-byte=K,short-write=P,enospc-after=N,seed=S`) sits *under*
+//! every store write, in the same seeded-stream style as the serve
+//! layer's `FaultPlan`: byte offsets are counted across the store's
+//! lifetime, so a test can sweep a kill across every byte boundary of a
+//! persist and assert byte-identical recovery.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::rng::Rng;
+
+/// Framed-line marker. Raw JSON lines always start with `{`, so the
+/// prefix is unambiguous per line.
+pub const FRAME_PREFIX: &str = "#f1:";
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3) over a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Write-side sync discipline (`--durability strict|relaxed|off`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Durability {
+    /// Framed appends + fsync after the ordering-critical files (trace
+    /// log and checkpoint journal), preserving the flush-order
+    /// crash-tolerance contract through a power loss.
+    Strict,
+    /// Framed appends, no fsync: torn/corrupt lines are detected and
+    /// quarantined, but an OS crash may lose the page-cache tail.
+    #[default]
+    Relaxed,
+    /// Legacy raw appends, byte-identical to the pre-framing format.
+    Off,
+}
+
+impl Durability {
+    pub fn parse(s: &str) -> Option<Durability> {
+        match s {
+            "strict" => Some(Durability::Strict),
+            "relaxed" => Some(Durability::Relaxed),
+            "off" => Some(Durability::Off),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Durability::Strict => "strict",
+            Durability::Relaxed => "relaxed",
+            Durability::Off => "off",
+        }
+    }
+
+    fn framed(&self) -> bool {
+        !matches!(self, Durability::Off)
+    }
+}
+
+/// Frame one payload line (no trailing newline in, none out).
+pub fn frame_line(payload: &str) -> String {
+    format!(
+        "{FRAME_PREFIX}{:08x}:{:08x}:{payload}",
+        payload.len(),
+        crc32(payload.as_bytes())
+    )
+}
+
+/// What one stored line decodes to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineDecode<'a> {
+    /// A legacy unframed line, passed through verbatim.
+    Raw(&'a str),
+    /// A framed line whose length and CRC both verified.
+    Framed(&'a str),
+    /// A framed line that failed verification (torn tail, bit flip).
+    CorruptFrame,
+}
+
+/// Decode one line, detecting framing per line.
+pub fn decode_line(line: &str) -> LineDecode<'_> {
+    let Some(rest) = line.strip_prefix(FRAME_PREFIX) else {
+        return LineDecode::Raw(line);
+    };
+    let ok = || -> Option<&str> {
+        let len = u32::from_str_radix(rest.get(0..8)?, 16).ok()?;
+        if rest.as_bytes().get(8) != Some(&b':') {
+            return None;
+        }
+        let crc = u32::from_str_radix(rest.get(9..17)?, 16).ok()?;
+        if rest.as_bytes().get(17) != Some(&b':') {
+            return None;
+        }
+        let payload = rest.get(18..)?;
+        if payload.len() as u32 != len || crc32(payload.as_bytes()) != crc
+        {
+            return None;
+        }
+        Some(payload)
+    };
+    match ok() {
+        Some(payload) => LineDecode::Framed(payload),
+        None => LineDecode::CorruptFrame,
+    }
+}
+
+/// Decode a whole file's text: framed lines are verified and unwrapped,
+/// raw lines pass through verbatim, corrupt frames are dropped and
+/// counted. The result feeds the same lossy JSONL parsers as before.
+pub fn decode_text(text: &str) -> (String, usize) {
+    if !text.contains(FRAME_PREFIX) {
+        return (text.to_string(), 0);
+    }
+    let mut out = String::with_capacity(text.len());
+    let mut corrupt = 0usize;
+    for line in text.lines() {
+        match decode_line(line) {
+            LineDecode::Raw(l) => {
+                out.push_str(l);
+                out.push('\n');
+            }
+            LineDecode::Framed(p) => {
+                out.push_str(p);
+                out.push('\n');
+            }
+            LineDecode::CorruptFrame => corrupt += 1,
+        }
+    }
+    (out, corrupt)
+}
+
+/// Read a store file, decoding frames. Missing files read as empty.
+pub fn read_decoded(path: &Path) -> std::io::Result<(String, usize)> {
+    match std::fs::read_to_string(path) {
+        Ok(text) => Ok(decode_text(&text)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            Ok((String::new(), 0))
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Encode payload JSONL text for appending under `durability`.
+pub fn encode_text(text: &str, durability: Durability) -> String {
+    if !durability.framed() {
+        return text.to_string();
+    }
+    let mut out = String::with_capacity(text.len() + 64);
+    for line in text.lines() {
+        out.push_str(&frame_line(line));
+        out.push('\n');
+    }
+    out
+}
+
+/// Deterministic disk-fault plan
+/// (`--store-fault kill-at-byte=K,short-write=P,enospc-after=N,seed=S`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StoreFaultPlan {
+    /// Simulated crash: the write reaching cumulative byte offset `K`
+    /// lands only its prefix up to `K`, errors, and every later write
+    /// fails (the process is "dead" to the disk).
+    pub kill_at_byte: Option<u64>,
+    /// Per-write probability of a short write (half the buffer lands,
+    /// the call errors). Seeded per write index.
+    pub short_write_prob: f64,
+    /// Simulated disk-full: writes past cumulative byte `N` land their
+    /// prefix and fail, but the store stays alive (degraded mode).
+    pub enospc_after: Option<u64>,
+    /// Seed of the short-write draws.
+    pub seed: u64,
+}
+
+impl Default for StoreFaultPlan {
+    fn default() -> StoreFaultPlan {
+        StoreFaultPlan {
+            kill_at_byte: None,
+            short_write_prob: 0.0,
+            enospc_after: None,
+            seed: 0,
+        }
+    }
+}
+
+impl StoreFaultPlan {
+    /// True when the plan injects nothing.
+    pub fn is_none(&self) -> bool {
+        self.kill_at_byte.is_none()
+            && self.short_write_prob <= 0.0
+            && self.enospc_after.is_none()
+    }
+}
+
+/// Mutable injector state: cumulative bytes written through the store,
+/// the per-write draw index, and whether a kill already fired.
+#[derive(Debug, Default)]
+pub(crate) struct FaultRuntime {
+    plan: StoreFaultPlan,
+    written: u64,
+    ops: u64,
+    dead: bool,
+}
+
+fn fault_err(msg: &str) -> std::io::Error {
+    std::io::Error::other(format!("injected store fault: {msg}"))
+}
+
+impl FaultRuntime {
+    pub fn new(plan: StoreFaultPlan) -> FaultRuntime {
+        FaultRuntime { plan, ..FaultRuntime::default() }
+    }
+
+    /// Replace the plan (byte/op counters keep running).
+    pub fn set_plan(&mut self, plan: StoreFaultPlan) {
+        self.plan = plan;
+        self.dead = false;
+    }
+
+    /// Write `buf` through the fault plan. On an injected fault the
+    /// surviving prefix still lands (that is the point: the next load
+    /// sees exactly what a real crash would leave behind).
+    fn write(&mut self, f: &mut std::fs::File, buf: &[u8])
+             -> std::io::Result<()> {
+        if self.plan.is_none() {
+            return f.write_all(buf);
+        }
+        if self.dead {
+            return Err(fault_err("kill-at-byte (process dead)"));
+        }
+        let op = self.ops;
+        self.ops += 1;
+        let mut limit = buf.len() as u64;
+        let mut fault: Option<&'static str> = None;
+        if let Some(k) = self.plan.kill_at_byte {
+            if self.written + limit > k {
+                limit = k.saturating_sub(self.written);
+                fault = Some("kill-at-byte");
+                self.dead = true;
+            }
+        }
+        if let Some(n) = self.plan.enospc_after {
+            if self.written + limit > n {
+                limit = n.saturating_sub(self.written);
+                fault.get_or_insert("enospc-after (disk full)");
+            }
+        }
+        if fault.is_none() && self.plan.short_write_prob > 0.0 {
+            let mut draw =
+                Rng::new(self.plan.seed).split("short-write", op);
+            if draw.uniform() < self.plan.short_write_prob {
+                limit = limit / 2;
+                fault = Some("short-write");
+            }
+        }
+        f.write_all(&buf[..limit as usize])?;
+        self.written += limit;
+        match fault {
+            Some(msg) => Err(fault_err(msg)),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Append payload JSONL `text` to `path` under `durability`, routed
+/// through the fault injector. `sync` requests an fsync after the
+/// append (honored only under `strict`).
+///
+/// If the file's current tail is torn (no trailing newline — a prior
+/// crash mid-append), a newline is healed in first so the new records
+/// never concatenate onto the torn fragment: acknowledged appends stay
+/// parseable no matter what the previous session left behind.
+pub(crate) fn append_file(path: &Path, text: &str,
+                          durability: Durability,
+                          fault: &mut FaultRuntime, sync: bool)
+                          -> std::io::Result<()> {
+    if text.is_empty() {
+        return Ok(());
+    }
+    let encoded = encode_text(text, durability);
+    let mut f = std::fs::OpenOptions::new()
+        .read(true)
+        .create(true)
+        .append(true)
+        .open(path)?;
+    let len = f.metadata()?.len();
+    if len > 0 {
+        f.seek(SeekFrom::End(-1))?;
+        let mut last = [0u8; 1];
+        f.read_exact(&mut last)?;
+        if last[0] != b'\n' {
+            fault.write(&mut f, b"\n")?;
+        }
+    }
+    fault.write(&mut f, encoded.as_bytes())?;
+    if sync && durability == Durability::Strict {
+        f.sync_all()?;
+    }
+    Ok(())
+}
+
+/// Atomically replace `path` with `bytes`: write a sibling tmp file,
+/// fsync it, rename over the original. Readers never observe a partial
+/// rewrite — this is the compaction path (`trace fsck --repair`).
+pub fn atomic_rewrite(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip_and_per_line_detection() {
+        let payload = r#"{"v":2,"key":"00ff"}"#;
+        let framed = frame_line(payload);
+        assert!(framed.starts_with(FRAME_PREFIX));
+        assert_eq!(decode_line(&framed), LineDecode::Framed(payload));
+        assert_eq!(decode_line(payload), LineDecode::Raw(payload));
+    }
+
+    #[test]
+    fn corrupt_frames_are_detected_not_parsed() {
+        let framed = frame_line("{\"a\":1}");
+        // torn tail: every strict prefix of a framed line is corrupt
+        for cut in FRAME_PREFIX.len()..framed.len() {
+            assert_eq!(
+                decode_line(&framed[..cut]),
+                LineDecode::CorruptFrame,
+                "cut at {cut}"
+            );
+        }
+        // bit flip in the payload breaks the CRC
+        let flipped = framed.replace("\"a\"", "\"b\"");
+        assert_eq!(decode_line(&flipped), LineDecode::CorruptFrame);
+    }
+
+    #[test]
+    fn decode_text_mixes_raw_and_framed() {
+        let mut text = String::new();
+        text.push_str("{\"raw\":1}\n");
+        text.push_str(&frame_line("{\"framed\":2}"));
+        text.push('\n');
+        text.push_str(FRAME_PREFIX);
+        text.push_str("garbage\n");
+        let (decoded, corrupt) = decode_text(&text);
+        assert_eq!(decoded, "{\"raw\":1}\n{\"framed\":2}\n");
+        assert_eq!(corrupt, 1);
+        // pure-raw text passes through byte-identically
+        let raw = "{\"a\":1}\n{\"b\":2}\n";
+        assert_eq!(decode_text(raw), (raw.to_string(), 0));
+    }
+
+    #[test]
+    fn encode_off_is_identity() {
+        let text = "{\"a\":1}\n{\"b\":2}\n";
+        assert_eq!(encode_text(text, Durability::Off), text);
+        let framed = encode_text(text, Durability::Relaxed);
+        assert_ne!(framed, text);
+        assert_eq!(decode_text(&framed), (text.to_string(), 0));
+    }
+
+    fn tmp_file(tag: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "kb_durable_{tag}_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn kill_at_byte_lands_exact_prefix_then_stays_dead() {
+        let p = tmp_file("kill");
+        let mut fault = FaultRuntime::new(StoreFaultPlan {
+            kill_at_byte: Some(5),
+            ..StoreFaultPlan::default()
+        });
+        let err = append_file(&p, "{\"a\":1}\n", Durability::Off,
+                              &mut fault, false)
+            .unwrap_err();
+        assert!(err.to_string().contains("kill-at-byte"), "{err}");
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"a\":");
+        // the "process" is dead: nothing further lands
+        assert!(append_file(&p, "x\n", Durability::Off, &mut fault,
+                            false)
+            .is_err());
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"a\":");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn enospc_fails_but_store_stays_alive() {
+        let p = tmp_file("enospc");
+        let mut fault = FaultRuntime::new(StoreFaultPlan {
+            enospc_after: Some(4),
+            ..StoreFaultPlan::default()
+        });
+        assert!(append_file(&p, "{\"a\":1}\n", Durability::Off,
+                            &mut fault, false)
+            .is_err());
+        // clearing the plan (disk freed) lets appends succeed again
+        fault.set_plan(StoreFaultPlan::default());
+        append_file(&p, "{\"b\":2}\n", Durability::Off, &mut fault,
+                    false)
+            .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        // the torn prefix was healed with a newline before the append
+        assert!(text.ends_with("{\"b\":2}\n"), "{text:?}");
+        assert!(text.starts_with("{\"a\"\n"), "{text:?}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn short_write_is_seeded_and_deterministic() {
+        let plan = StoreFaultPlan {
+            short_write_prob: 1.0,
+            seed: 9,
+            ..StoreFaultPlan::default()
+        };
+        let p1 = tmp_file("short1");
+        let p2 = tmp_file("short2");
+        for p in [&p1, &p2] {
+            let mut fault = FaultRuntime::new(plan);
+            assert!(append_file(p, "{\"a\":1}\n", Durability::Off,
+                                &mut fault, false)
+                .is_err());
+        }
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap()
+        );
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+    }
+
+    #[test]
+    fn atomic_rewrite_replaces_content() {
+        let p = tmp_file("rewrite");
+        std::fs::write(&p, "old\n").unwrap();
+        atomic_rewrite(&p, b"new\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "new\n");
+        assert!(!p.with_extension("tmp").exists());
+        let _ = std::fs::remove_file(&p);
+    }
+}

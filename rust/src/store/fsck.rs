@@ -1,0 +1,377 @@
+//! `kernelband trace fsck`: offline scan and self-repair for the seven
+//! store files.
+//!
+//! The store's readers already *tolerate* damage (torn tails, corrupt
+//! frames and unknown versions are skipped on load), but tolerance
+//! leaves the rot on disk: a torn fragment sits in front of every
+//! future append, duplicate content lines accumulate, and the
+//! checkpoint journal grows without bound as retired jobs pile up
+//! tombstones. `fsck` turns the skip counters into a repair:
+//!
+//! * every file is scanned line by line (CRC framing decoded per line,
+//!   exactly like the loaders);
+//! * torn/corrupt lines are **quarantined verbatim** — framing and all
+//!   — by appending them to `DIR/quarantine/<file>`, never deleted;
+//! * parseable lines survive verbatim, including unknown-version lines
+//!   (forward compatibility: a newer writer's records are not ours to
+//!   judge). The only parseable lines a repair removes are
+//!   byte-identical duplicate payloads in the content-addressed files
+//!   (the first copy survives) and checkpoint-journal lines belonging
+//!   to retired jobs (dropped by canonical compaction, see
+//!   [`super::ckpt`]);
+//! * repairs rewrite atomically (tmp + rename,
+//!   [`super::durable::atomic_rewrite`]) and only when the bytes
+//!   actually change, so a second `fsck --repair` is a byte-level
+//!   no-op.
+//!
+//! Exit-code mapping (done by the CLI): 0 clean, 1 issues
+//! found/repaired, 2 unrepairable (I/O error mid-scan or mid-repair).
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use crate::util::hash::fnv1a;
+use crate::util::json::{self, Json};
+
+use super::durable::{self, LineDecode};
+use super::{
+    ckpt, CHECKPOINTS_FILE, KERNELS_FILE, PROFILES_FILE, PROPOSALS_FILE,
+    SERVICE_FILE, STORE_FILES, TRACE_FILE,
+};
+
+/// Subdirectory (under the store dir) bad lines are appended to.
+pub const QUARANTINE_DIR: &str = "quarantine";
+
+/// What the scan found (and, under `--repair`, did) in one store file.
+#[derive(Debug, Default, Clone)]
+pub struct FileReport {
+    pub file: &'static str,
+    /// Non-empty lines scanned.
+    pub lines: usize,
+    /// Truncated final line (crash mid-append: no trailing newline).
+    pub torn: usize,
+    /// Corrupt frames / unparseable JSON elsewhere in the file.
+    pub corrupt: usize,
+    /// Byte-identical duplicate payloads dropped (content files only;
+    /// the first copy survives).
+    pub duplicates: usize,
+    /// Parseable lines with an unrecognized version or shape —
+    /// preserved verbatim, reported so a rotting store is visible.
+    pub unknown_version: usize,
+    /// Checkpoint-journal lines dropped by canonical compaction
+    /// (retired jobs' entries, their tombstones, gap-truncated tails).
+    pub compacted: usize,
+    /// Lines appended to `quarantine/<file>` this run.
+    pub quarantined: usize,
+    /// Whether `--repair` rewrote the file.
+    pub rewritten: bool,
+}
+
+impl FileReport {
+    /// Lines a repair would (or did) remove from the file.
+    pub fn issues(&self) -> usize {
+        self.torn + self.corrupt + self.duplicates + self.compacted
+    }
+}
+
+/// Whole-store scan result, one entry per [`STORE_FILES`] member.
+#[derive(Debug, Default)]
+pub struct FsckReport {
+    pub files: Vec<FileReport>,
+    /// Whether this run was allowed to write (`--repair`).
+    pub repair: bool,
+}
+
+impl FsckReport {
+    /// True when no file has removable lines and no rewrite happened.
+    pub fn clean(&self) -> bool {
+        self.files.iter().all(|f| f.issues() == 0 && !f.rewritten)
+    }
+
+    /// Grep-friendly per-file report plus a status line.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for f in &self.files {
+            out.push(format!(
+                "[fsck] {}: lines={} torn={} corrupt={} duplicates={} \
+                 unknown_version={} compacted={} quarantined={} \
+                 rewritten={}",
+                f.file,
+                f.lines,
+                f.torn,
+                f.corrupt,
+                f.duplicates,
+                f.unknown_version,
+                f.compacted,
+                f.quarantined,
+                f.rewritten,
+            ));
+        }
+        let status = if self.clean() {
+            "clean"
+        } else if self.repair {
+            "repaired"
+        } else {
+            "issues"
+        };
+        out.push(format!("[fsck] status={status}"));
+        out
+    }
+}
+
+/// Scan (and with `repair`, heal) every store file under `dir`.
+/// Missing files report as empty; any I/O error is "unrepairable" and
+/// surfaces as `Err`.
+pub fn fsck(dir: &Path, repair: bool) -> std::io::Result<FsckReport> {
+    let mut report = FsckReport { files: Vec::new(), repair };
+    for name in STORE_FILES {
+        report.files.push(scan_file(dir, name, repair)?);
+    }
+    Ok(report)
+}
+
+/// Schema version the file's parseable lines are expected to carry
+/// (`None`: the file's own decoder decides, as with checkpoints).
+fn expected_version(name: &str) -> Option<f64> {
+    match name {
+        TRACE_FILE => Some(super::log::TRACE_VERSION),
+        CHECKPOINTS_FILE => None,
+        _ => Some(super::cache::CACHE_VERSION),
+    }
+}
+
+fn scan_file(dir: &Path, name: &'static str, repair: bool)
+             -> std::io::Result<FileReport> {
+    let mut rep = FileReport { file: name, ..FileReport::default() };
+    let path = dir.join(name);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(rep);
+        }
+        Err(e) => return Err(e),
+    };
+    let complete_tail = text.is_empty() || text.ends_with('\n');
+    let dedup_payloads = matches!(
+        name,
+        KERNELS_FILE | PROPOSALS_FILE | PROFILES_FILE | SERVICE_FILE
+    );
+
+    let all: Vec<&str> = text.lines().collect();
+    let mut kept: Vec<&str> = Vec::new(); // verbatim survivors
+    let mut bad: Vec<&str> = Vec::new(); // verbatim quarantine lines
+    let mut journal: Vec<ckpt::JournalLine> = Vec::new();
+    let mut unknown_tail: Vec<&str> = Vec::new(); // ckpt: kept unknowns
+    let mut seen: HashSet<u64> = HashSet::new();
+
+    for (i, raw) in all.iter().copied().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        rep.lines += 1;
+        let is_torn_candidate = i + 1 == all.len() && !complete_tail;
+        let mut reject = |rep: &mut FileReport| {
+            if is_torn_candidate {
+                rep.torn += 1;
+            } else {
+                rep.corrupt += 1;
+            }
+            bad.push(raw);
+        };
+        let payload = match durable::decode_line(line) {
+            LineDecode::CorruptFrame => {
+                reject(&mut rep);
+                continue;
+            }
+            LineDecode::Raw(p) | LineDecode::Framed(p) => p,
+        };
+        let value = match json::parse(payload) {
+            Ok(v) => v,
+            Err(_) => {
+                reject(&mut rep);
+                continue;
+            }
+        };
+        if name == CHECKPOINTS_FILE {
+            match ckpt::journal_from_record(&value) {
+                Some(l) => journal.push(l),
+                None => {
+                    rep.unknown_version += 1;
+                    unknown_tail.push(raw);
+                }
+            }
+            continue;
+        }
+        if expected_version(name).is_some_and(|v| {
+            value.get("v").and_then(Json::as_f64) != Some(v)
+        }) {
+            rep.unknown_version += 1; // preserved, only reported
+        }
+        if dedup_payloads && !seen.insert(fnv1a(payload.as_bytes())) {
+            rep.duplicates += 1; // dropped; the first copy survives
+            continue;
+        }
+        kept.push(raw);
+    }
+
+    // the repaired byte image
+    let mut new_text = String::new();
+    if name == CHECKPOINTS_FILE {
+        let (canonical, dropped) = ckpt::compact_lines(journal);
+        rep.compacted = dropped;
+        new_text.push_str(&canonical);
+        for raw in &unknown_tail {
+            new_text.push_str(raw);
+            new_text.push('\n');
+        }
+    } else {
+        for raw in &kept {
+            new_text.push_str(raw);
+            new_text.push('\n');
+        }
+    }
+
+    if repair {
+        if !bad.is_empty() {
+            let qdir = dir.join(QUARANTINE_DIR);
+            std::fs::create_dir_all(&qdir)?;
+            let mut q = String::new();
+            for raw in &bad {
+                q.push_str(raw);
+                q.push('\n');
+            }
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(qdir.join(name))?;
+            f.write_all(q.as_bytes())?;
+            rep.quarantined = bad.len();
+        }
+        if new_text != text {
+            durable::atomic_rewrite(&path, new_text.as_bytes())?;
+            rep.rewritten = true;
+        }
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "kb_fsck_unit_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn read(p: &Path) -> String {
+        std::fs::read_to_string(p).unwrap()
+    }
+
+    fn report_for<'r>(rep: &'r FsckReport, file: &str)
+                      -> &'r FileReport {
+        rep.files.iter().find(|f| f.file == file).unwrap()
+    }
+
+    #[test]
+    fn torn_tail_is_quarantined_verbatim_and_repair_is_idempotent() {
+        let dir = tmp_dir("torn");
+        let good = "{\"v\":1,\"kind\":\"task\",\"cell\":\"c\"}";
+        std::fs::write(
+            dir.join(TRACE_FILE),
+            format!("{good}\n{{\"v\":1,\"kin"),
+        )
+        .unwrap();
+
+        // report-only: issues found, nothing written
+        let rep = fsck(&dir, false).unwrap();
+        assert!(!rep.clean());
+        assert_eq!(report_for(&rep, TRACE_FILE).torn, 1);
+        assert!(!dir.join(QUARANTINE_DIR).exists());
+
+        let rep = fsck(&dir, true).unwrap();
+        let f = report_for(&rep, TRACE_FILE);
+        assert_eq!((f.torn, f.quarantined), (1, 1));
+        assert!(f.rewritten);
+        assert_eq!(read(&dir.join(TRACE_FILE)), format!("{good}\n"));
+        assert_eq!(
+            read(&dir.join(QUARANTINE_DIR).join(TRACE_FILE)),
+            "{\"v\":1,\"kin\n"
+        );
+
+        // second repair: byte-level no-op, clean status
+        let before = read(&dir.join(TRACE_FILE));
+        let rep = fsck(&dir, true).unwrap();
+        assert!(rep.clean());
+        assert_eq!(read(&dir.join(TRACE_FILE)), before);
+        assert_eq!(
+            read(&dir.join(QUARANTINE_DIR).join(TRACE_FILE)),
+            "{\"v\":1,\"kin\n"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_payloads_drop_but_unknown_versions_survive() {
+        let dir = tmp_dir("dups");
+        let a = "{\"v\":2,\"key\":\"0000000000000007\"}";
+        let b = "{\"v\":2,\"key\":\"0000000000000008\"}";
+        let future = "{\"v\":99,\"key\":\"0000000000000009\"}";
+        // a appears raw and framed: same payload, still a duplicate
+        let framed_a = durable::frame_line(a);
+        std::fs::write(
+            dir.join(SERVICE_FILE),
+            format!("{a}\n{b}\n{framed_a}\n{future}\n"),
+        )
+        .unwrap();
+        let rep = fsck(&dir, true).unwrap();
+        let f = report_for(&rep, SERVICE_FILE);
+        assert_eq!(f.duplicates, 1);
+        assert_eq!(f.unknown_version, 1);
+        assert!(f.rewritten);
+        // first copy of `a` survives in its original (raw) form; the
+        // future-versioned line is preserved verbatim
+        assert_eq!(
+            read(&dir.join(SERVICE_FILE)),
+            format!("{a}\n{b}\n{future}\n")
+        );
+        assert!(fsck(&dir, true).unwrap().clean());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_compaction_drops_retired_jobs_and_tombstones() {
+        let dir = tmp_dir("ckpt");
+        // a tombstone with no surviving entries is pure dead weight
+        let done = "{\"v\":2,\"kind\":\"done\",\"fp\":\"0000000000000005\"}";
+        std::fs::write(
+            dir.join(CHECKPOINTS_FILE),
+            format!("{done}\n"),
+        )
+        .unwrap();
+        let rep = fsck(&dir, true).unwrap();
+        let f = report_for(&rep, CHECKPOINTS_FILE);
+        assert_eq!(f.compacted, 1);
+        assert!(f.rewritten);
+        assert_eq!(read(&dir.join(CHECKPOINTS_FILE)), "");
+        assert!(fsck(&dir, true).unwrap().clean());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_files_report_clean() {
+        let dir = tmp_dir("empty");
+        let rep = fsck(&dir, true).unwrap();
+        assert!(rep.clean());
+        assert_eq!(rep.files.len(), STORE_FILES.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -295,9 +295,15 @@ pub fn replay_text(text: &str) -> ReplaySummary {
     summary
 }
 
-/// Replay a trace log file.
+/// Replay a trace log file, decoding CRC framing (`store::durable`)
+/// first so framed, unframed, and mixed logs all replay. Corrupt
+/// frames count toward `corrupt_lines` alongside unparseable JSON.
 pub fn replay_file(path: &std::path::Path) -> std::io::Result<ReplaySummary> {
-    Ok(replay_text(&std::fs::read_to_string(path)?))
+    let (text, frame_corrupt) =
+        crate::store::durable::decode_text(&std::fs::read_to_string(path)?);
+    let mut summary = replay_text(&text);
+    summary.corrupt_lines += frame_corrupt;
+    Ok(summary)
 }
 
 /// Serialize an optimization [`Trace`] as log records: one task header

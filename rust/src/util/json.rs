@@ -239,17 +239,27 @@ impl std::error::Error for JsonError {}
 pub fn parse_lines_lossy(text: &str) -> (Vec<Json>, usize) {
     let mut values = Vec::new();
     let mut skipped = 0usize;
-    for line in text.lines() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        match parse(line) {
+    for (_, parsed) in classify_lines(text) {
+        match parsed {
             Ok(v) => values.push(v),
             Err(_) => skipped += 1,
         }
     }
     (values, skipped)
+}
+
+/// Parse JSON-Lines text line by line, keeping each line's text
+/// alongside its parse outcome. This is the triage half of
+/// `trace fsck`: a repair pass needs the raw bytes of a corrupt line
+/// (to quarantine it verbatim), not just a skip count. Empty and
+/// whitespace-only lines are omitted.
+pub fn classify_lines(text: &str)
+                      -> Vec<(&str, Result<Json, JsonError>)> {
+    text.lines()
+        .map(str::trim)
+        .filter(|line| !line.is_empty())
+        .map(|line| (line, parse(line)))
+        .collect()
 }
 
 /// Parse a complete JSON document (trailing whitespace allowed).

@@ -1,0 +1,465 @@
+//! Crash-consistency property suite for the persistent store.
+//!
+//! The central invariant: **killing a persist at any byte boundary
+//! loses nothing and duplicates nothing.** After `trace fsck --repair`
+//! and a warm recovery rerun, every convergent store file is
+//! byte-identical to the file a never-crashed run produces. The sweep
+//! below proves it exhaustively — one simulated crash per byte of the
+//! session's write stream — via the deterministic disk-fault injector
+//! (`--store-fault kill-at-byte=K`).
+//!
+//! `tenants.jsonl` is exempt from byte comparison (delta semantics: a
+//! recovery rerun legitimately re-credits deltas), and
+//! `checkpoints.jsonl` interleaves writers nondeterministically by
+//! design, so the comparison set is `trace.jsonl` plus the four
+//! content-addressed files.
+
+use std::path::{Path, PathBuf};
+
+use kernelband::kernel::{Counters, KernelConfig, Measurement};
+use kernelband::llm::{GenOutcome, Proposal};
+use kernelband::policy::resume::{Checkpoint, SlotCheckpoint};
+use kernelband::profiler::HardwareSignature;
+use kernelband::service::OptimizationService;
+use kernelband::store::log::{StepRecord, TaskRecord, TraceRecord};
+use kernelband::store::{
+    fsck, Durability, StoreFaultPlan, TraceStore, STORE_FILES,
+};
+
+/// Store files whose bytes must converge after crash recovery.
+const CONVERGENT: [&str; 5] = [
+    "trace.jsonl",
+    "kernels.jsonl",
+    "proposals.jsonl",
+    "profiles.jsonl",
+    "service.jsonl",
+];
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("kb_durability_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn meas(t: f64) -> Measurement {
+    Measurement {
+        total_latency_s: t,
+        per_shape_s: vec![t, t * 2.0],
+        counters: Counters { sm_pct: 42.5, ..Default::default() },
+    }
+}
+
+fn prop(cost: f64) -> Proposal {
+    Proposal {
+        outcome: GenOutcome::Ok,
+        config: KernelConfig::naive(),
+        tokens_in: 120,
+        tokens_out: 60,
+        cost_usd: cost,
+        latency_s: 2.5,
+    }
+}
+
+fn sig(x: f64) -> HardwareSignature {
+    HardwareSignature { sm_pct: x, dram_pct: 2.0 * x, l2_pct: 0.5 * x }
+}
+
+fn ckpt(t: usize) -> Checkpoint {
+    Checkpoint {
+        t,
+        strategy: None,
+        slots: vec![SlotCheckpoint { proposal: prop(0.05), measured: None }],
+    }
+}
+
+fn trace_records(run: usize) -> Vec<TraceRecord> {
+    let task = format!("matmul_{run}");
+    vec![
+        TraceRecord::Task(TaskRecord {
+            cell: "KernelBand".into(),
+            device: "H20".into(),
+            llm: "DeepSeek-V3.2".into(),
+            seed: 7 + run as u64,
+            task_id: run,
+            task: task.clone(),
+            difficulty: 1,
+            naive_latency_s: 0.5,
+            tenant: None,
+        }),
+        TraceRecord::Step(StepRecord {
+            cell: "KernelBand".into(),
+            device: "H20".into(),
+            llm: "DeepSeek-V3.2".into(),
+            task,
+            t: 1,
+            cluster: 0,
+            strategy: None,
+            parent: 0,
+            parent_hash: 0x10 + run as u64,
+            child_hash: Some(0x20 + run as u64),
+            call_ok: true,
+            exec_ok: true,
+            reward: 0.25,
+            cost_usd: 0.01,
+            runtime_s: Some(0.125),
+            best_speedup: 1.5,
+            counters: None,
+            tenant: None,
+        }),
+    ]
+}
+
+/// Session 1 of the canonical two-session workload: touches all seven
+/// store files. Idempotent by construction — re-running it against a
+/// partially persisted store only re-marks what never reached disk.
+fn session1(store: &TraceStore) {
+    store.insert_measurement(1, &meas(0.125));
+    store.insert_proposal(11, &prop(0.01));
+    store.profiles().insert(21, sig(10.0));
+    store.service_insert(31);
+    store.tenant_add("t0", 1, 8, 1, 0);
+    store.ckpt_append(0x51, &ckpt(1));
+    store.append_trace(trace_records(0));
+}
+
+/// Session 2: more of everything, plus the checkpointed job completes.
+fn session2(store: &TraceStore) {
+    store.insert_measurement(2, &meas(0.25));
+    store.insert_proposal(12, &prop(0.02));
+    store.profiles().insert(22, sig(20.0));
+    store.service_insert(32);
+    store.tenant_add("t1", 2, 16, 0, 1);
+    store.ckpt_retire(0x51);
+    store.append_trace(trace_records(1));
+}
+
+fn snapshot(dir: &Path) -> Vec<(&'static str, Vec<u8>)> {
+    CONVERGENT
+        .iter()
+        .map(|&f| (f, std::fs::read(dir.join(f)).unwrap_or_default()))
+        .collect()
+}
+
+/// Build the never-crashed two-session reference store in `dir`.
+fn build_reference(dir: &Path) {
+    {
+        let store = TraceStore::open(dir).unwrap();
+        session1(&store);
+        store.persist().unwrap();
+    }
+    {
+        let store = TraceStore::open(dir).unwrap();
+        session2(&store);
+        store.persist().unwrap();
+    }
+}
+
+fn store_bytes_written(dir: &Path) -> u64 {
+    STORE_FILES
+        .iter()
+        .map(|f| {
+            std::fs::metadata(dir.join(f)).map(|m| m.len()).unwrap_or(0)
+        })
+        .sum()
+}
+
+/// The tentpole property: kill session 1's persist at **every** byte of
+/// its write stream; after `fsck --repair` and a warm recovery rerun,
+/// the two-session store is byte-identical to the never-crashed
+/// reference on every convergent file — nothing acknowledged is lost,
+/// nothing is duplicated.
+#[test]
+fn kill_at_every_byte_sweep_converges_to_reference_bytes() {
+    let ref_dir = tmp_dir("sweep_ref");
+    build_reference(&ref_dir);
+    let reference = snapshot(&ref_dir);
+
+    // total bytes a clean session-1 persist writes (the sweep domain)
+    let probe = tmp_dir("sweep_probe");
+    {
+        let store = TraceStore::open(&probe).unwrap();
+        session1(&store);
+        store.persist().unwrap();
+    }
+    let total = store_bytes_written(&probe);
+    assert!(total > 0);
+    let _ = std::fs::remove_dir_all(&probe);
+
+    let dir = tmp_dir("sweep");
+    for k in 0..=total {
+        let _ = std::fs::remove_dir_all(&dir);
+        // session 1 crashes at byte k of its persist
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            session1(&store);
+            store.set_store_fault(StoreFaultPlan {
+                kill_at_byte: Some(k),
+                ..StoreFaultPlan::default()
+            });
+            let result = store.persist();
+            assert_eq!(
+                result.is_err(),
+                k < total,
+                "kill at byte {k} of {total}"
+            );
+        }
+        // repair, then a fresh session re-runs the same work (warm:
+        // whatever landed is deduplicated, whatever tore is redone)
+        fsck::fsck(&dir, true).unwrap();
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            session1(&store);
+            store.persist().unwrap();
+        }
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            session2(&store);
+            store.persist().unwrap();
+        }
+        let got = snapshot(&dir);
+        for ((file, want), (_, have)) in reference.iter().zip(&got) {
+            assert_eq!(
+                want, have,
+                "{file} diverged after kill at byte {k} of {total}"
+            );
+        }
+        // and the recovered store carries no residual corruption
+        let store = TraceStore::open(&dir).unwrap();
+        assert_eq!(store.loaded.skipped, 0, "kill at byte {k}");
+    }
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A torn tail in each of the seven files is (a) tolerated by `open`,
+/// (b) quarantined **verbatim** by `fsck --repair`, and (c) gone for
+/// good: the second fsck run is clean and a reopen skips nothing.
+#[test]
+fn torn_tail_in_every_file_is_tolerated_then_repaired() {
+    let dir = tmp_dir("torn");
+    build_reference(&dir);
+    let garbage = "{\"v\":2,\"key\":\"dead";
+    for file in STORE_FILES {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join(file))
+            .unwrap();
+        f.write_all(garbage.as_bytes()).unwrap();
+    }
+
+    // open() loads six files (trace replays separately) and skips
+    // exactly the torn line in each
+    let store = TraceStore::open(&dir).unwrap();
+    assert_eq!(store.loaded.kernels, 2);
+    assert_eq!(store.loaded.proposals, 2);
+    assert_eq!(store.loaded.service, 2);
+    assert_eq!(store.loaded.skipped, 6);
+    assert_eq!(store.loaded.corrupt_files().len(), 6);
+    drop(store);
+
+    let report = fsck::fsck(&dir, true).unwrap();
+    assert!(report.repair);
+    for f in &report.files {
+        assert_eq!(f.torn, 1, "{}", f.file);
+        assert_eq!(f.quarantined, 1, "{}", f.file);
+        assert!(f.rewritten, "{}", f.file);
+    }
+    // quarantined lines are byte-verbatim
+    for file in STORE_FILES {
+        let q = std::fs::read_to_string(
+            dir.join(fsck::QUARANTINE_DIR).join(file),
+        )
+        .unwrap();
+        assert_eq!(q, format!("{garbage}\n"), "{file}");
+    }
+    // idempotent: a second repair pass finds nothing and writes nothing
+    let again = fsck::fsck(&dir, true).unwrap();
+    assert!(again.clean(), "{:?}", again.summary_lines());
+    let store = TraceStore::open(&dir).unwrap();
+    assert_eq!(store.loaded.skipped, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Files written under `--durability off` (raw JSONL) stay readable
+/// after the store upgrades to framed appends: mixed files load fully,
+/// fsck keeps every parseable line, and nothing is ever re-encoded
+/// behind the operator's back.
+#[test]
+fn mixed_framed_and_unframed_files_roundtrip() {
+    let dir = tmp_dir("mixed");
+    {
+        let store = TraceStore::open(&dir).unwrap();
+        store.set_durability(Durability::Off);
+        session1(&store);
+        store.persist().unwrap();
+    }
+    let raw = std::fs::read_to_string(dir.join("kernels.jsonl")).unwrap();
+    assert!(raw.starts_with('{'), "off = legacy raw lines");
+    {
+        // default durability (relaxed) frames its appends
+        let store = TraceStore::open(&dir).unwrap();
+        assert_eq!(store.loaded.kernels, 1);
+        session2(&store);
+        store.persist().unwrap();
+    }
+    let mixed =
+        std::fs::read_to_string(dir.join("kernels.jsonl")).unwrap();
+    let mut lines = mixed.lines();
+    assert!(lines.next().unwrap().starts_with('{'));
+    assert!(lines.next().unwrap().starts_with("#f1:"));
+
+    let store = TraceStore::open(&dir).unwrap();
+    assert_eq!(store.loaded.kernels, 2);
+    assert_eq!(store.loaded.proposals, 2);
+    assert_eq!(store.loaded.service, 2);
+    assert_eq!(store.loaded.skipped, 0);
+    drop(store);
+
+    // repair keeps both encodings verbatim in the content files
+    fsck::fsck(&dir, true).unwrap();
+    let after = std::fs::read_to_string(dir.join("kernels.jsonl")).unwrap();
+    assert_eq!(after, mixed);
+    assert!(fsck::fsck(&dir, true).unwrap().clean());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ENOSPC mid-persist degrades the store instead of dropping deltas:
+/// serving continues warm from memory, and once space returns the
+/// requeued records land — nothing acknowledged is lost.
+#[test]
+fn enospc_degrades_then_recovers_without_losing_records() {
+    let dir = tmp_dir("enospc");
+    let store = TraceStore::open(&dir).unwrap();
+    session1(&store);
+    store.set_store_fault(StoreFaultPlan {
+        enospc_after: Some(100),
+        ..StoreFaultPlan::default()
+    });
+    assert!(store.persist().is_err());
+    assert!(store.store_degraded());
+    assert!(store.flush_errors() >= 1);
+    assert!(store.requeued_records() >= 1);
+    assert!(store.last_flush_error().unwrap().contains("enospc"));
+    // warm continuation: every cache still serves from memory
+    assert!(store.lookup_measurement(1).is_some());
+    assert!(store.lookup_proposal(11).is_some());
+    assert!(store.service_done(31));
+
+    // space returns: repair the torn tail, flush the requeued deltas
+    fsck::fsck(&dir, true).unwrap();
+    store.set_store_fault(StoreFaultPlan::default());
+    store.persist().unwrap();
+    drop(store);
+
+    fsck::fsck(&dir, true).unwrap();
+    let reloaded = TraceStore::open(&dir).unwrap();
+    assert_eq!(reloaded.loaded.kernels, 1);
+    assert_eq!(reloaded.loaded.proposals, 1);
+    assert_eq!(reloaded.loaded.profiles, 1);
+    assert_eq!(reloaded.loaded.service, 1);
+    assert_eq!(reloaded.loaded.tenants, 1);
+    assert_eq!(reloaded.loaded.skipped, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Short-write faults are seeded: two identical runs under the same
+/// plan fail (or not) identically and leave byte-identical files — the
+/// injector never adds nondeterminism of its own.
+#[test]
+fn short_write_faults_are_deterministic() {
+    let run = |tag: &str| -> (bool, Vec<(&'static str, Vec<u8>)>) {
+        let dir = tmp_dir(tag);
+        let store = TraceStore::open(&dir).unwrap();
+        session1(&store);
+        store.set_store_fault(StoreFaultPlan {
+            short_write_prob: 0.5,
+            seed: 9,
+            ..StoreFaultPlan::default()
+        });
+        let failed = store.persist().is_err();
+        drop(store);
+        let snap = snapshot(&dir);
+        let _ = std::fs::remove_dir_all(&dir);
+        (failed, snap)
+    };
+    assert_eq!(run("short_a"), run("short_b"));
+}
+
+/// Serve-level strided kill sweep through the modeled service: the
+/// gateway-bypass ledger proves zero duplicated LLM work after
+/// recovery, and `service.jsonl` converges to the unfaulted bytes.
+#[test]
+fn serve_level_kill_sweep_recovers_with_zero_duplicate_work() {
+    let svc = || OptimizationService {
+        time_model: kernelband::service::TimeModel {
+            llm_call_s: 4.0,
+            calls_per_iter: 2.0,
+            compile_s: 1.0,
+            exec_s: 1.0,
+            profile_amortized_s: 0.5,
+            llm_batched_s: 2.0,
+        },
+        ..OptimizationService::default()
+    };
+    const JOBS: usize = 2;
+    const ITERS: usize = 1;
+    let work = (JOBS * ITERS) as u64;
+
+    let ref_dir = tmp_dir("serve_ref");
+    {
+        let store = TraceStore::open(&ref_dir).unwrap();
+        svc().run_with_store(JOBS, ITERS, Some(&store));
+        store.persist().unwrap();
+    }
+    let reference = std::fs::read(ref_dir.join("service.jsonl")).unwrap();
+    let total = reference.len() as u64;
+    assert!(total > 0);
+
+    let dir = tmp_dir("serve_sweep");
+    let mut k = 0u64;
+    loop {
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store = TraceStore::open(&dir).unwrap();
+            store.set_store_fault(StoreFaultPlan {
+                kill_at_byte: Some(k),
+                ..StoreFaultPlan::default()
+            });
+            svc().run_with_store(JOBS, ITERS, Some(&store));
+            let _ = store.persist(); // killed mid-flush (or clean at k = total)
+        }
+        fsck::fsck(&dir, true).unwrap();
+        {
+            // recovery rerun: surviving keys bypass the gateway, torn
+            // ones are redone — together they cover the workload once
+            let store = TraceStore::open(&dir).unwrap();
+            let rep = svc().run_with_store(JOBS, ITERS, Some(&store));
+            store.persist().unwrap();
+            assert_eq!(
+                rep.gateway_requests + rep.gateway_bypassed,
+                work,
+                "kill at byte {k}"
+            );
+        }
+        {
+            // fully warm: zero fresh round-trips — no duplicated work
+            let store = TraceStore::open(&dir).unwrap();
+            let rep = svc().run_with_store(JOBS, ITERS, Some(&store));
+            assert_eq!(rep.gateway_requests, 0, "kill at byte {k}");
+            assert_eq!(rep.gateway_bypassed, work, "kill at byte {k}");
+        }
+        assert_eq!(
+            std::fs::read(dir.join("service.jsonl")).unwrap(),
+            reference,
+            "service.jsonl diverged after kill at byte {k} of {total}"
+        );
+        if k >= total {
+            break;
+        }
+        k = (k + 7).min(total);
+    }
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}

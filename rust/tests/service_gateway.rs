@@ -12,7 +12,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use kernelband::service::{BatchedLlmGateway, GatewayClosed, GatewayConfig};
+use kernelband::service::{
+    BatchedLlmGateway, GatewayClosed, GatewayConfig, RetryPolicy,
+};
 
 /// Poll until `done` reaches `target` or the deadline passes. Returns
 /// whether the target was reached. Detached submitter threads mean a
@@ -103,6 +105,98 @@ fn post_shutdown_calls_fail_fast() {
     assert!(t0.elapsed() < Duration::from_secs(1));
     // shutdown is idempotent (and Drop will call it again)
     gw.shutdown();
+}
+
+/// The default retry policy is inert: `call_retry` must behave exactly
+/// like `call` — one round-trip, zero retries — so existing timing and
+/// artifact behavior is unchanged unless a failure probability is
+/// explicitly injected.
+#[test]
+fn default_retry_policy_is_inert() {
+    let gw: BatchedLlmGateway<usize> =
+        BatchedLlmGateway::spawn(GatewayConfig {
+            max_batch: 4,
+            window_s: 0.5,
+            call_latency_s: 1.0,
+            queue_depth: 16,
+        });
+    assert_eq!(gw.call_retry(9, 0xfeed, &RetryPolicy::default()), Ok(9));
+    assert_eq!(gw.requests(), 1);
+    assert_eq!(gw.retries(), 0);
+}
+
+/// With `transient_fail_prob = 1.0` every completed attempt short of
+/// the cap is judged transient, so the loop runs exactly
+/// `max_attempts` round-trips, counts `max_attempts - 1` retries, and
+/// still returns the payload — bounded, deterministic, replayable.
+#[test]
+fn transient_failures_retry_deterministically_up_to_the_cap() {
+    let cfg = GatewayConfig {
+        max_batch: 4,
+        window_s: 0.5,
+        call_latency_s: 1.0,
+        queue_depth: 16,
+    };
+    let policy = RetryPolicy {
+        max_attempts: 3,
+        backoff_base_s: 0.5,
+        transient_fail_prob: 1.0,
+        seed: 7,
+    };
+    for _ in 0..2 {
+        // identical gateways replay the identical schedule
+        let gw: BatchedLlmGateway<usize> = BatchedLlmGateway::spawn(cfg);
+        assert_eq!(gw.call_retry(1, 42, &policy), Ok(1));
+        assert_eq!(gw.requests(), 3);
+        assert_eq!(gw.retries(), 2);
+    }
+}
+
+/// Retry draws are a pure function of `(seed, key, attempt)` — not of
+/// wall-clock, thread interleaving, or call order — so a whole
+/// multi-key run reproduces its retry count exactly.
+#[test]
+fn retry_draws_are_seeded_per_key_not_per_wall_clock() {
+    let cfg = GatewayConfig {
+        max_batch: 8,
+        window_s: 0.5,
+        call_latency_s: 1.0,
+        queue_depth: 32,
+    };
+    let policy = RetryPolicy {
+        max_attempts: 4,
+        backoff_base_s: 0.1,
+        transient_fail_prob: 0.5,
+        seed: 11,
+    };
+    let run = || {
+        let gw: BatchedLlmGateway<usize> = BatchedLlmGateway::spawn(cfg);
+        for key in 0..16u64 {
+            assert!(gw.call_retry(key as usize, key, &policy).is_ok());
+        }
+        (gw.requests(), gw.retries())
+    };
+    let a = run();
+    assert_eq!(a, run());
+    assert!(a.1 > 0, "p=0.5 over 16 keys never drew a retry");
+    // every retry is one extra round-trip on top of the 16 requests
+    assert_eq!(a.0, 16 + a.1);
+}
+
+/// `GatewayClosed` is not a transient failure: the retry loop must
+/// short-circuit immediately, preserving drain-and-error semantics
+/// (no spinning against a dying gateway, no counted retries).
+#[test]
+fn gateway_closed_short_circuits_retry_loop() {
+    let gw: BatchedLlmGateway<&'static str> =
+        BatchedLlmGateway::spawn(GatewayConfig::default());
+    gw.shutdown();
+    let policy =
+        RetryPolicy { transient_fail_prob: 1.0, ..RetryPolicy::default() };
+    let t0 = Instant::now();
+    assert_eq!(gw.call_retry("x", 3, &policy), Err(GatewayClosed("x")));
+    assert!(t0.elapsed() < Duration::from_secs(1));
+    assert_eq!(gw.retries(), 0);
 }
 
 /// Normal completion still works end-to-end after the rework.
