@@ -187,11 +187,43 @@ pub struct RunOpts {
     /// both mean the legacy single-candidate loop (byte-identical
     /// artifacts to the pre-batch path); `Adaptive` is `--batch auto`.
     pub batch: BatchMode,
+    /// Generated-workload override (`repro --workload grammar:...`):
+    /// every suite-driven experiment runs on this expanded space
+    /// instead of the Table-7 suite, and the artifact JSON is tagged
+    /// with the workload label. `None` keeps legacy artifacts
+    /// byte-identical.
+    pub workload: Option<WorkloadOverride>,
+}
+
+/// An expanded grammar space substituted for the hand-built suite.
+#[derive(Debug, Clone)]
+pub struct WorkloadOverride {
+    /// Canonical spec string (`grammar:<name>:seed=S`) — the artifact
+    /// `workload` tag.
+    pub label: String,
+    /// The expanded task space, shared across cells.
+    pub suite: Arc<Suite>,
+}
+
+impl WorkloadOverride {
+    /// Expand a parsed grammar spec into an override.
+    pub fn from_spec(spec: &crate::workload::gen::GrammarSpec)
+                     -> Result<WorkloadOverride, String> {
+        Ok(WorkloadOverride {
+            label: spec.canonical(),
+            suite: Arc::new(Suite::from_grammar(spec)?),
+        })
+    }
 }
 
 impl RunOpts {
     pub fn threads(threads: usize) -> RunOpts {
-        RunOpts { threads, session: None, batch: BatchMode::default() }
+        RunOpts {
+            threads,
+            session: None,
+            batch: BatchMode::default(),
+            workload: None,
+        }
     }
 
     /// Set a fixed per-iteration candidate batch width.
@@ -212,6 +244,34 @@ impl RunOpts {
     }
 }
 
+/// The full-suite view of a run: the Table-7 suite, or the whole
+/// generated space under a `--workload` override.
+fn suite_full(opts: &RunOpts) -> Suite {
+    match &opts.workload {
+        Some(w) => (*w.suite).clone(),
+        None => Suite::full(EXPERIMENT_SEED),
+    }
+}
+
+/// The detailed-analysis view: the stratified 50-kernel subset for the
+/// Table-7 suite. Generated spaces run whole — their category
+/// marginals don't match Table 7, so the stratified sample doesn't
+/// apply.
+fn suite_analysis(opts: &RunOpts) -> Suite {
+    match &opts.workload {
+        Some(w) => (*w.suite).clone(),
+        None => Suite::full(EXPERIMENT_SEED).subset50(),
+    }
+}
+
+/// The torch-comparable view (Appendix G) of [`suite_analysis`].
+fn suite_torch(opts: &RunOpts) -> Suite {
+    match &opts.workload {
+        Some(w) => w.suite.torch_subset(),
+        None => Suite::full(EXPERIMENT_SEED).subset50().torch_subset(),
+    }
+}
+
 /// Dispatch an experiment by name at the standard budgets (tables
 /// default to T=20, figures to T=40, regret's horizon to T=3200);
 /// `None` for an unknown name. `threads` bounds the runner fan-out and
@@ -226,19 +286,27 @@ pub fn report_opts(exp: &str, iterations: Option<usize>, opts: &RunOpts)
                    -> Option<ReproReport> {
     let t20 = iterations.unwrap_or(20);
     let t40 = iterations.unwrap_or(40);
-    match exp {
-        "table1" => Some(table1_report_opts(t20, opts)),
-        "table2" => Some(table2_report_opts(t20, opts)),
-        "table3" => Some(table3_report_opts(t20, opts)),
-        "table4" => Some(table4_report_opts(t20, opts)),
-        "table9" => Some(table9_report_opts(t20, opts)),
-        "table10" => Some(table10_report_opts(t20, opts)),
-        "fig2" => Some(fig2_report_opts(t40, opts)),
-        "fig3" => Some(fig3_report()),
-        "fig4" => Some(fig4_report_opts(t40, opts)),
-        "regret" => Some(regret_report(iterations.unwrap_or(3200))),
-        _ => None,
+    let mut report = match exp {
+        "table1" => table1_report_opts(t20, opts),
+        "table2" => table2_report_opts(t20, opts),
+        "table3" => table3_report_opts(t20, opts),
+        "table4" => table4_report_opts(t20, opts),
+        "table9" => table9_report_opts(t20, opts),
+        "table10" => table10_report_opts(t20, opts),
+        "fig2" => fig2_report_opts(t40, opts),
+        "fig3" => fig3_report(),
+        "fig4" => fig4_report_opts(t40, opts),
+        "regret" => regret_report(iterations.unwrap_or(3200)),
+        _ => return None,
+    };
+    // tag suite-driven artifacts with the workload label; fig3/regret
+    // are suite-free and keep legacy bytes even under --workload
+    if let Some(w) = &opts.workload {
+        if !matches!(exp, "fig3" | "regret") {
+            report.json.insert("workload", Json::str(w.label.clone()));
+        }
     }
+    Some(report)
 }
 
 // ---------------------------------------------------------------------------
@@ -301,7 +369,7 @@ pub fn table1_report(iterations: usize, threads: usize) -> ReproReport {
 
 /// [`table1_report`] with full run options.
 pub fn table1_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
-    let suite = Suite::full(EXPERIMENT_SEED);
+    let suite = suite_full(opts);
     let methods = [
         Method::BoN,
         Method::Geak,
@@ -360,7 +428,7 @@ pub fn table2_report(iterations: usize, threads: usize) -> ReproReport {
 
 /// [`table2_report`] with full run options.
 pub fn table2_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
-    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let suite = suite_analysis(opts);
     let methods = [
         Method::BoN,
         Method::Geak,
@@ -484,7 +552,7 @@ pub fn table3_report(iterations: usize, threads: usize) -> ReproReport {
 
 /// [`table3_report`] with full run options.
 pub fn table3_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
-    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let suite = suite_analysis(opts);
     let cells = vec![kernelband_cell(Device::H20, iterations)];
     let results = opts.runner().run(&suite, &cells);
     let text = render_table(
@@ -510,7 +578,7 @@ pub fn table10_report(iterations: usize, threads: usize) -> ReproReport {
 
 /// [`table10_report`] with full run options.
 pub fn table10_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
-    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let suite = suite_analysis(opts);
     let cells = vec![
         kernelband_cell(Device::H20, iterations),
         kernelband_cell(Device::Rtx4090, iterations),
@@ -570,7 +638,7 @@ pub fn table4_report(iterations: usize, threads: usize) -> ReproReport {
 
 /// [`table4_report`] with full run options.
 pub fn table4_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
-    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let suite = suite_analysis(opts);
     let configs: Vec<(&str, Method)> = vec![
         ("KernelBand (Full)", Method::KernelBand(PolicyMode::Full, 3)),
         (
@@ -665,7 +733,7 @@ fn torch_baseline_rows<E: EvalEngine>(suite: &Suite, traces: &[Trace],
             };
             log_sum += (torch_latency / best).ln();
         }
-        let geomean = (log_sum / suite.len() as f64).exp();
+        let geomean = (log_sum / suite.len().max(1) as f64).exp();
         rows.push(vec![
             format!("vs. {}", mode.name()),
             format!("{geomean:.2}x"),
@@ -680,7 +748,7 @@ fn torch_baseline_rows<E: EvalEngine>(suite: &Suite, traces: &[Trace],
 
 /// [`table9_report`] with full run options.
 pub fn table9_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
-    let suite = Suite::full(EXPERIMENT_SEED).subset50().torch_subset();
+    let suite = suite_torch(opts);
     let cells = vec![kernelband_cell(Device::H20, iterations)];
     let results = opts.runner().run(&suite, &cells);
     let traces = &results[0].traces;
@@ -746,7 +814,7 @@ pub fn fig2_report(iterations: usize, threads: usize) -> ReproReport {
 
 /// [`fig2_report`] with full run options.
 pub fn fig2_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
-    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let suite = suite_analysis(opts);
     let methods = [
         Method::KernelBand(PolicyMode::Full, 1),
         Method::KernelBand(PolicyMode::Full, 2),
@@ -904,7 +972,7 @@ pub fn fig4_report(iterations: usize, threads: usize) -> ReproReport {
 
 /// [`fig4_report`] with full run options.
 pub fn fig4_report_opts(iterations: usize, opts: &RunOpts) -> ReproReport {
-    let suite = Suite::full(EXPERIMENT_SEED).subset50();
+    let suite = suite_analysis(opts);
     let budgets = [0.05, 0.10, 0.15, 0.20, 0.30, 0.40, 0.50];
     let methods = [
         Method::KernelBand(PolicyMode::Full, 3),

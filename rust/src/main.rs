@@ -16,6 +16,7 @@
 //!            [--out DIR] [--store DIR]
 //! kernelband trace <record|replay|stats> …
 //! kernelband metrics <summary|top|export> [PATH]
+//! kernelband workload <list|stats|conformance> [grammar:<name>[:seed=S]]
 //! kernelband list [--subset]
 //! ```
 //!
@@ -73,6 +74,7 @@ kernelband — hardware-aware MAB for LLM kernel optimization (reproduction)
 USAGE:
   kernelband repro <EXPERIMENT> [--iterations N] [--threads N] [--batch N]
                    [--out DIR] [--store DIR] [--warm-start TRACE]
+                   [--workload grammar:<name>[:seed=S]]
       EXPERIMENT: table1 table2 table3 table4 table9 table10
                   fig2 fig3 fig4 regret all
       --threads 0 (default) uses every core; results are identical
@@ -90,6 +92,11 @@ USAGE:
       --batch auto sizes the batch adaptively (AIMD over the bound's
       prune rate); the width sequence is deterministic, so artifacts
       stay byte-identical across threads and store temperature.
+      --workload grammar:<name>[:seed=S] swaps the Table-7 suite for
+      a deterministically expanded grammar space (see `kernelband
+      workload list`); suite-driven artifacts gain a \"workload\" tag
+      and generated task fingerprints carry the grammar lineage, so
+      stores and warm-start never alias spaces.
   kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
       [--llm deepseek|gpt5|claude|gemini]
       [--mode full|no-clustering|no-profiling|llm-select|raw-profiling|no-strategy]
@@ -97,7 +104,8 @@ USAGE:
   kernelband pjrt [--artifacts DIR] [--budget N]
   kernelband serve [--backend inprocess|sharded|modeled] [--tenants N]
       [--jobs N] [--iterations N] [--batch N|auto] [--workers N]
-      [--variety N] [--seed S] [--queue-cap N] [--quota N]
+      [--variety N|grammar:<name>[:seed=S]] [--seed S]
+      [--queue-cap N] [--quota N]
       [--device D] [--llm L] [--fault kill-after=K,preempt=P,seed=S]
       [--obs on|off|events] [--open-loop rate=R,duration=D]
       [--durability strict|relaxed|off]
@@ -157,6 +165,17 @@ USAGE:
       or its directory; default out/). summary prints histograms with
       percentiles plus every counter; top ranks counters by value;
       export dumps the raw document.
+  kernelband workload <list|stats|conformance> [grammar:<name>[:seed=S]]
+      [--out DIR]
+      list prints the grammar registry with expansion cardinalities.
+      stats expands a grammar and writes WORKLOAD_<name>.json (task
+      counts per category/difficulty, lineage) under --out.
+      conformance runs the differential harness over every generated
+      task on all simulated devices — Assumption-1 bound
+      admissibility, monotone FLOP/byte sweeps, batch=1 == batch=N
+      bit-identity — and attempts the PJRT leg (typed skip when the
+      backend is absent; build with --features pjrt to enable it).
+      Exit 1 on any violation.
   kernelband list [--subset]
 
 Telemetry: serve takes --obs on|off|events (default on). `on` writes
@@ -333,11 +352,25 @@ fn open_session(store_dir: Option<&str>, warm: Option<&str>)
     Ok(Some(Arc::new(store)))
 }
 
+/// Parse `--workload grammar:<name>[:seed=S]` into an expanded suite
+/// override for the repro grid.
+fn parse_workload(s: &str) -> Result<eval::WorkloadOverride> {
+    let spec = kernelband::workload::gen::GrammarSpec::parse(s)
+        .map_err(|e| anyhow!("--workload: {e}"))?;
+    eval::WorkloadOverride::from_spec(&spec)
+        .map_err(|e| anyhow!("--workload: {e}"))
+}
+
+#[allow(clippy::too_many_arguments)]
 fn repro(exp: &str, iterations: Option<usize>, threads: usize,
          batch: BatchMode, out: &str, store_dir: Option<&str>,
-         warm: Option<&str>) -> Result<()> {
+         warm: Option<&str>, workload: Option<&str>) -> Result<()> {
     let session = open_session(store_dir, warm)?;
-    let opts = RunOpts { threads, session: session.clone(), batch };
+    let workload = workload.map(parse_workload).transpose()?;
+    if let Some(w) = &workload {
+        outln!("[workload] {} ({} tasks)", w.label, w.suite.len());
+    }
+    let opts = RunOpts { threads, session: session.clone(), batch, workload };
     let run_one = |name: &str| -> Result<()> {
         let report = eval::report_opts(name, iterations, &opts)
             .ok_or_else(|| anyhow!("unknown experiment {name:?}\n{USAGE}"))?;
@@ -1073,6 +1106,94 @@ fn metrics_cmd(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `kernelband workload <list|stats|conformance> [grammar:...]` —
+/// inspect the grammar registry, emit a generated-space stats artifact
+/// (`WORKLOAD_<name>.json`), or run the differential conformance
+/// harness over an expanded space (exit 1 on any violation).
+fn workload_cmd(sub: &str, spec: Option<&str>, out: &str) -> Result<()> {
+    use kernelband::workload::gen::{self, conformance, GrammarSpec};
+    match sub {
+        "list" => {
+            for g in gen::GRAMMARS {
+                outln!(
+                    "  {:<10} tasks={:<4} {}",
+                    g.name,
+                    g.cardinality(),
+                    g.about
+                );
+            }
+            Ok(())
+        }
+        "stats" => {
+            let spec_str = spec.ok_or_else(|| {
+                anyhow!("workload stats needs grammar:<name>[:seed=S]\n{USAGE}")
+            })?;
+            let spec = GrammarSpec::parse(spec_str)
+                .map_err(|e| anyhow!("workload stats: {e}"))?;
+            let suite = Suite::from_grammar(&spec)
+                .map_err(|e| anyhow!("workload stats: {e}"))?;
+            let stats = gen::space_stats(&spec, &suite);
+            std::fs::create_dir_all(out)
+                .with_context(|| format!("creating {out:?}"))?;
+            let path =
+                Path::new(out).join(format!("WORKLOAD_{}.json", spec.name));
+            std::fs::write(&path, stats.pretty())
+                .with_context(|| format!("writing {}", path.display()))?;
+            outln!(
+                "[workload] {} tasks={} torch={} lineage={}",
+                spec.canonical(),
+                suite.len(),
+                suite.tasks.iter().filter(|t| t.torch_comparable).count(),
+                stats.get("lineage").and_then(Json::as_str).unwrap_or("-"),
+            );
+            outln!("[artifact] {}", path.display());
+            Ok(())
+        }
+        "conformance" => {
+            let spec_str = spec.ok_or_else(|| {
+                anyhow!(
+                    "workload conformance needs grammar:<name>[:seed=S]\n{USAGE}"
+                )
+            })?;
+            let spec = GrammarSpec::parse(spec_str)
+                .map_err(|e| anyhow!("workload conformance: {e}"))?;
+            let suite = Suite::from_grammar(&spec)
+                .map_err(|e| anyhow!("workload conformance: {e}"))?;
+            let report = conformance::check_suite(&suite);
+            let pjrt = match conformance::pjrt_leg(&suite) {
+                conformance::PjrtLeg::Ran => "ran".to_string(),
+                conformance::PjrtLeg::Skipped(_) => "skipped".to_string(),
+                conformance::PjrtLeg::Failed(msg) => {
+                    bail!("pjrt leg failed: {msg}")
+                }
+            };
+            for v in &report.violations {
+                outln!("[violation] {v}");
+            }
+            outln!(
+                "[conformance] {} tasks={} checks={} violations={} pjrt={}",
+                spec.canonical(),
+                suite.len(),
+                report.checks,
+                report.violations.len(),
+                pjrt,
+            );
+            if !report.ok() {
+                bail!(
+                    "{} conformance violations on {}",
+                    report.violations.len(),
+                    spec.canonical()
+                );
+            }
+            Ok(())
+        }
+        other => bail!(
+            "unknown workload subcommand {other:?} \
+             (list, stats, conformance)\n{USAGE}"
+        ),
+    }
+}
+
 fn list(subset: bool) -> Result<()> {
     let full = Suite::full(eval::EXPERIMENT_SEED);
     let suite = if subset { full.subset50() } else { full };
@@ -1115,6 +1236,7 @@ fn main() -> Result<()> {
                 args.get("out").unwrap_or("out"),
                 args.get("store"),
                 args.get("warm-start"),
+                args.get("workload"),
             )
         }
         "optimize" => {
@@ -1164,6 +1286,27 @@ fn main() -> Result<()> {
                 .get("open-loop")
                 .map(parse_open_loop)
                 .transpose()?;
+            // --variety is numeric (hot-set size over the Table-7
+            // suite) or grammar:<name>[:seed=S] (serve the whole
+            // expanded grammar space as the hot set)
+            let (variety, workload) = match args.get("variety") {
+                Some(v) if v.starts_with("grammar:") => {
+                    let spec =
+                        kernelband::workload::gen::GrammarSpec::parse(v)
+                            .map_err(|e| anyhow!("--variety: {e}"))?;
+                    let g = spec
+                        .grammar()
+                        .map_err(|e| anyhow!("--variety: {e}"))?;
+                    (g.cardinality(), Some(spec))
+                }
+                Some(v) => {
+                    let n: usize = v.parse().map_err(|_| {
+                        anyhow!("--variety: bad number {v:?}")
+                    })?;
+                    (n, None)
+                }
+                None => (2, None),
+            };
             let req = if backend_name == "modeled" {
                 // modeled: --jobs is the total job count, all tenant 0
                 let jobs = args.get_usize("jobs", 16)?;
@@ -1178,6 +1321,7 @@ fn main() -> Result<()> {
                         .collect(),
                     fault,
                     open_loop,
+                    workload: workload.clone(),
                     ..ServeRequest::default()
                 }
             } else {
@@ -1197,11 +1341,12 @@ fn main() -> Result<()> {
                     jobs_per_tenant,
                     args.get_usize("iterations", 12)?,
                     batch,
-                    args.get_usize("variety", 2)?,
+                    variety,
                     parse_device(args.get("device").unwrap_or("h20"))?,
                     parse_llm(args.get("llm").unwrap_or("deepseek"))?,
                     args.get_u64("seed", 7)?,
                 );
+                req.workload = workload.clone();
                 if let Some(n) = arrival_jobs {
                     req.jobs.truncate(n);
                 }
@@ -1243,10 +1388,200 @@ fn main() -> Result<()> {
             let args = Args::parse(rest, &["subset"])?;
             list(args.has("subset"))
         }
+        "workload" => {
+            let args = Args::parse(rest, &[])?;
+            let sub = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("list");
+            workload_cmd(
+                sub,
+                args.positional.get(1).map(String::as_str),
+                args.get("out").unwrap_or("out"),
+            )
+        }
         "help" | "--help" | "-h" => {
             emit(format_args!("{USAGE}"));
             Ok(())
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The top-level anyhow message — what the user actually sees.
+    fn err<T: std::fmt::Debug>(r: Result<T>) -> String {
+        format!("{}", r.expect_err("expected a parse error"))
+    }
+
+    #[test]
+    fn parse_batch_accepts() {
+        assert_eq!(parse_batch("1").unwrap(), BatchMode::Fixed(1));
+        assert_eq!(parse_batch("8").unwrap(), BatchMode::Fixed(8));
+        assert_eq!(
+            parse_batch("auto").unwrap(),
+            BatchMode::Adaptive { min: 1, max: 8 }
+        );
+        assert_eq!(
+            parse_batch("auto:2..6").unwrap(),
+            BatchMode::Adaptive { min: 2, max: 6 }
+        );
+        assert_eq!(
+            parse_batch("auto:1..1").unwrap(),
+            BatchMode::Adaptive { min: 1, max: 1 }
+        );
+    }
+
+    #[test]
+    fn parse_batch_rejects_with_pinned_messages() {
+        let cases = [
+            ("autoX", r#"--batch: bad value "autoX""#),
+            ("auto:2-6", r#"--batch auto:MIN..MAX: bad bounds "2-6""#),
+            ("auto:x..6", r#"--batch: bad MIN "x""#),
+            ("auto:2..y", r#"--batch: bad MAX "y""#),
+            ("auto:0..4", "--batch auto bounds need 1 <= MIN <= MAX"),
+            ("auto:5..2", "--batch auto bounds need 1 <= MIN <= MAX"),
+            ("nope", r#"--batch: bad number "nope""#),
+            ("-1", r#"--batch: bad number "-1""#),
+        ];
+        for (input, want) in cases {
+            assert_eq!(err(parse_batch(input)), want, "input {input:?}");
+        }
+    }
+
+    #[test]
+    fn parse_fault_accepts() {
+        assert_eq!(parse_fault("").unwrap(), FaultPlan::default());
+        let plan = parse_fault("kill-after=3,preempt=0.25,seed=9").unwrap();
+        assert_eq!(plan.kill_after, Some(3));
+        assert_eq!(plan.preempt_prob, 0.25);
+        assert_eq!(plan.seed, 9);
+        // boundary probabilities and trailing commas are legal
+        assert_eq!(parse_fault("preempt=0").unwrap().preempt_prob, 0.0);
+        assert_eq!(parse_fault("preempt=1").unwrap().preempt_prob, 1.0);
+        assert_eq!(parse_fault("seed=1,").unwrap().seed, 1);
+    }
+
+    #[test]
+    fn parse_fault_rejects_with_pinned_messages() {
+        let cases = [
+            ("kill-after", r#"--fault: expected key=value, got "kill-after""#),
+            ("kill-after=x", r#"--fault kill-after: bad number "x""#),
+            ("preempt=x", r#"--fault preempt: bad probability "x""#),
+            ("preempt=1.5", "--fault preempt: need 0 <= P <= 1"),
+            ("preempt=nan", "--fault preempt: need 0 <= P <= 1"),
+            ("seed=x", r#"--fault seed: bad number "x""#),
+            (
+                "boom=1",
+                r#"--fault: unknown key "boom" (expected kill-after, preempt, seed)"#,
+            ),
+        ];
+        for (input, want) in cases {
+            assert_eq!(err(parse_fault(input)), want, "input {input:?}");
+        }
+    }
+
+    #[test]
+    fn parse_store_fault_accepts() {
+        let plan = parse_store_fault("").unwrap();
+        assert_eq!(plan, StoreFaultPlan::default());
+        let plan = parse_store_fault(
+            "kill-at-byte=100,short-write=0.25,enospc-after=64,seed=3",
+        )
+        .unwrap();
+        assert_eq!(plan.kill_at_byte, Some(100));
+        assert_eq!(plan.short_write_prob, 0.25);
+        assert_eq!(plan.enospc_after, Some(64));
+        assert_eq!(plan.seed, 3);
+    }
+
+    #[test]
+    fn parse_store_fault_rejects_with_pinned_messages() {
+        let cases = [
+            ("oops", r#"--store-fault: expected key=value, got "oops""#),
+            (
+                "kill-at-byte=x",
+                r#"--store-fault kill-at-byte: bad number "x""#,
+            ),
+            (
+                "short-write=x",
+                r#"--store-fault short-write: bad probability "x""#,
+            ),
+            ("short-write=2", "--store-fault short-write: need 0 <= P <= 1"),
+            (
+                "enospc-after=x",
+                r#"--store-fault enospc-after: bad number "x""#,
+            ),
+            ("seed=x", r#"--store-fault seed: bad number "x""#),
+            (
+                "zap=1",
+                r#"--store-fault: unknown key "zap" (expected kill-at-byte, short-write, enospc-after, seed)"#,
+            ),
+        ];
+        for (input, want) in cases {
+            assert_eq!(err(parse_store_fault(input)), want, "input {input:?}");
+        }
+    }
+
+    #[test]
+    fn parse_workload_accepts() {
+        let w = parse_workload("grammar:pow2sweep").unwrap();
+        assert_eq!(w.label, "grammar:pow2sweep:seed=7");
+        assert_eq!(w.suite.len(), 324);
+        let w = parse_workload("grammar:raggedmix:seed=3").unwrap();
+        assert_eq!(w.label, "grammar:raggedmix:seed=3");
+        assert_eq!(w.suite.len(), 84);
+    }
+
+    #[test]
+    fn parse_workload_rejects_with_pinned_messages() {
+        let cases = [
+            (
+                "pow2sweep",
+                r#"--workload: expected grammar:<name>[:seed=S], got "pow2sweep""#,
+            ),
+            (
+                "grammar:nope",
+                r#"--workload: unknown grammar "nope" (expected one of: pow2sweep, raggedmix)"#,
+            ),
+            (
+                "grammar:pow2sweep:fuel=2",
+                r#"--workload: grammar param: expected seed=S, got "fuel=2""#,
+            ),
+            (
+                "grammar:pow2sweep:seed=x",
+                r#"--workload: grammar seed: bad number "x""#,
+            ),
+        ];
+        for (input, want) in cases {
+            assert_eq!(err(parse_workload(input)), want, "input {input:?}");
+        }
+    }
+
+    #[test]
+    fn args_parser_pins_flag_errors() {
+        let argv = |xs: &[&str]| -> Vec<String> {
+            xs.iter().map(|s| s.to_string()).collect()
+        };
+        assert_eq!(
+            err(Args::parse(&argv(&["--iterations"]), &[])),
+            "--iterations needs a value"
+        );
+        let args = Args::parse(&argv(&["--threads", "x"]), &[]).unwrap();
+        assert_eq!(
+            err(args.get_usize("threads", 0)),
+            r#"--threads: bad number "x""#
+        );
+        let args = Args::parse(&argv(&["--seed", "x"]), &[]).unwrap();
+        assert_eq!(err(args.get_u64("seed", 7)), r#"--seed: bad number "x""#);
+        // last occurrence of a repeated flag wins
+        let args =
+            Args::parse(&argv(&["--threads", "1", "--threads", "4"]), &[])
+                .unwrap();
+        assert_eq!(args.get_usize("threads", 0).unwrap(), 4);
     }
 }

@@ -5,8 +5,18 @@
 //! vendored in this workspace — the crate's only external dependency is
 //! `anyhow` — so this module provides the exact API surface
 //! [`crate::runtime`] consumes, with a stub backend that fails at
-//! client construction with an actionable error instead of linking
-//! libxla.
+//! client construction with a *typed* [`XlaError::Unavailable`] instead
+//! of linking libxla.
+//!
+//! The `pjrt` cargo feature gates the real-backend path: the default
+//! build is a no-op stub whose every entry point returns
+//! `XlaError::Unavailable`, which harnesses detect with
+//! [`XlaError::is_unavailable`] and skip cleanly (see
+//! `workload::gen::conformance::pjrt_leg`). Building with
+//! `--features pjrt` declares intent to link a real runtime — until the
+//! bindings are vendored the stub still reports `Unavailable`, but with
+//! a message pointing at the vendoring step rather than the feature
+//! flag. [`backend_compiled`] exposes the feature state.
 //!
 //! Consequences:
 //!
@@ -22,18 +32,66 @@
 use std::fmt;
 use std::path::Path;
 
-/// Error type mirroring `xla::Error` (callers format it with `{:?}`).
-pub struct XlaError(pub String);
+/// Whether this build was compiled with the `pjrt` feature (the
+/// real-backend gate). The stub still answers `Unavailable` until the
+/// bindings are vendored, but callers can distinguish "feature off"
+/// from "feature on, bindings missing".
+pub fn backend_compiled() -> bool {
+    cfg!(feature = "pjrt")
+}
 
-impl fmt::Debug for XlaError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.0)
+/// Error type mirroring `xla::Error` (callers format it with `{:?}`).
+pub enum XlaError {
+    /// The PJRT runtime is not linked into this build. Every stubbed
+    /// entry point returns this variant — harnesses match on it (via
+    /// [`XlaError::is_unavailable`]) to skip instead of fail.
+    Unavailable {
+        /// The entry point that was called (`"PjRtClient::cpu"`, …).
+        what: String,
+    },
+    /// A real backend call failed (unused by the stub; kept so callers
+    /// written against the real bindings' error shape keep compiling).
+    Backend(String),
+}
+
+impl XlaError {
+    /// True when the error means "no PJRT runtime in this build" — the
+    /// typed skip signal for conformance and smoke harnesses.
+    pub fn is_unavailable(&self) -> bool {
+        matches!(self, XlaError::Unavailable { .. })
     }
 }
 
 impl fmt::Display for XlaError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.0)
+        match self {
+            XlaError::Unavailable { what } => {
+                if backend_compiled() {
+                    write!(
+                        f,
+                        "{what}: PJRT backend unavailable — built with \
+                         --features pjrt but the `xla` bindings are not \
+                         vendored (see rust/src/runtime/xla.rs)"
+                    )
+                } else {
+                    write!(
+                        f,
+                        "{what}: PJRT backend unavailable — the `xla` \
+                         bindings are not vendored in this build \
+                         (see rust/src/runtime/xla.rs)"
+                    )
+                }
+            }
+            XlaError::Backend(msg) => f.write_str(msg),
+        }
+    }
+}
+
+// callers format with `{:?}` (the real bindings' idiom) — keep Debug
+// identical to Display so their messages stay user-readable
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
     }
 }
 
@@ -42,10 +100,7 @@ impl std::error::Error for XlaError {}
 pub type XlaResult<T> = Result<T, XlaError>;
 
 fn unavailable<T>(what: &str) -> XlaResult<T> {
-    Err(XlaError(format!(
-        "{what}: PJRT backend unavailable — the `xla` bindings are not \
-         vendored in this build (see rust/src/runtime/xla.rs)"
-    )))
+    Err(XlaError::Unavailable { what: what.to_string() })
 }
 
 /// Element types the runtime converts between (`f32` ↔ `i32` outputs).
@@ -145,8 +200,33 @@ mod tests {
     #[test]
     fn client_construction_reports_unavailable() {
         let err = PjRtClient::cpu().err().expect("stub must error");
+        assert!(err.is_unavailable());
         let msg = format!("{err:?}");
         assert!(msg.contains("PJRT backend unavailable"), "{msg}");
+        // Debug and Display agree (the real bindings' idiom is {:?})
+        assert_eq!(msg, format!("{err}"));
+    }
+
+    #[test]
+    fn every_stub_entry_point_is_typed_unavailable() {
+        assert!(HloModuleProto::from_text_file("x.hlo")
+            .err()
+            .expect("stub")
+            .is_unavailable());
+        assert!(PjRtLoadedExecutable
+            .execute::<Literal>(&[])
+            .err()
+            .expect("stub")
+            .is_unavailable());
+        assert!(PjRtBuffer.to_literal_sync().err().expect("stub")
+            .is_unavailable());
+    }
+
+    #[test]
+    fn backend_error_variant_passes_message_through() {
+        let err = XlaError::Backend("device lost".to_string());
+        assert!(!err.is_unavailable());
+        assert_eq!(format!("{err}"), "device lost");
     }
 
     #[test]

@@ -181,6 +181,10 @@ pub struct ServeRequest {
     /// Open-loop arrival pacing (`None` = classic closed-loop drain).
     /// Wall-clock only: never affects deterministic bytes.
     pub open_loop: Option<OpenLoopPlan>,
+    /// Generated-workload hot set (`--variety grammar:<name>`): the
+    /// hot set is drawn from this expanded grammar space instead of
+    /// the Table-7 suite. `task_variety` still sizes the hot set.
+    pub workload: Option<crate::workload::gen::GrammarSpec>,
 }
 
 impl Default for ServeRequest {
@@ -194,6 +198,7 @@ impl Default for ServeRequest {
             workers: 0,
             fault: FaultPlan::default(),
             open_loop: None,
+            workload: None,
         }
     }
 }
@@ -309,6 +314,12 @@ impl ServeBackend for Modeled {
         if req.open_loop.is_some() {
             bail!(
                 "--open-loop needs a real serve backend \
+                 (inprocess or sharded)"
+            );
+        }
+        if req.workload.is_some() {
+            bail!(
+                "--variety grammar: needs a real serve backend \
                  (inprocess or sharded)"
             );
         }

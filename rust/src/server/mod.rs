@@ -542,7 +542,14 @@ pub(crate) fn run_serve(
     exec_round: &mut dyn FnMut(&ExecEnv<'_>, &[Job], usize)
         -> (Vec<JobResult>, Vec<Vec<TraceRecord>>),
 ) -> ServeReport {
-    let suite = Suite::full(crate::eval::EXPERIMENT_SEED);
+    // grammar workloads serve their expanded space as the hot set;
+    // the spec was validated at CLI parse time, so expansion only
+    // fails for hand-built requests naming an unknown grammar
+    let suite = match &req.workload {
+        Some(spec) => Suite::from_grammar(spec)
+            .expect("grammar workload validated at parse time"),
+        None => Suite::full(crate::eval::EXPERIMENT_SEED),
+    };
     let hot = hot_set(&suite, req.task_variety);
     let tenants_n = req.tenants();
     let first = req.jobs.first();

@@ -1,0 +1,501 @@
+//! Enumerative workload grammar DSL.
+//!
+//! A *grammar* is a small product-space description — op families ×
+//! fused-op depth × dtype × scale level — that deterministically expands
+//! into a [`TaskSpec`] space of hundreds of tasks (in the spirit of
+//! ruler's `enumo`: tiny grammars enumerated into big benchmark spaces
+//! that double as property-test universes). Every generated task carries
+//! derived latent optima and arithmetic intensity consistent with the
+//! hand-built suite's category model, so the bandit loop, clustering and
+//! pruning bounds all behave as they do on the Table-7 suite — just over
+//! a much larger, structured space.
+//!
+//! Determinism contract: `expand(seed)` is a pure function of
+//! `(grammar, seed)`. Task ordering is the fixed enumeration order
+//! (op, fusion depth, dtype, scale); per-task randomness comes from
+//! `Rng::new(seed).split("gtask", index)`, so the task list is
+//! byte-identical across processes and thread counts, and disjoint
+//! seeds produce disjoint task fingerprints (the grammar lineage hash
+//! folds the seed into every fingerprint).
+//!
+//! Conformance caps: unlike `Suite::full`'s latents (fusion saving up
+//! to 0.45), generated latents are capped so the Assumption-1 pruning
+//! bound provably never prunes the latent optimum on any device — see
+//! [`conformance`] for the derivation. The caps are part of the
+//! grammar contract, asserted by `rust/tests/prop_workload.rs`.
+
+use crate::rng::Rng;
+use crate::util::hash::KeyHasher;
+use crate::util::json::Json;
+use crate::workload::{Category, Difficulty, Latent, ShapeSpec, Suite, TaskSpec};
+
+pub mod conformance;
+
+/// Upper cap on generated `Latent::fusion_saving`. The Assumption-1
+/// DRAM bound for the naive parent is `Σ bytes / dram_bw`; the oracle
+/// runs no faster than `Σ bytes · (1 − fusion_saving) / (dram_bw ·
+/// EFF_CAP)`, so the bound/oracle ratio is at most
+/// `EFF_CAP / (1 − MAX_FUSION_SAVING)` = 0.95 / 0.72 ≈ 1.32 < 1.5
+/// (the default prune factor). See `conformance` module docs.
+pub const MAX_FUSION_SAVING: f64 = 0.28;
+
+/// Upper cap on generated per-dimension `Latent::sensitivity`. Bounds
+/// how far the naive config can fall behind the oracle, which keeps
+/// the 5% `BOUND_FLOOR` case of the pruning bound admissible
+/// (naive/oracle stays well under 30×).
+pub const MAX_SENSITIVITY: f64 = 0.90;
+
+/// Default grammar expansion seed (matches the serve default job seed).
+pub const DEFAULT_SEED: u64 = 7;
+
+/// Benchmark-sweep length per generated task (matches the hand-built
+/// suite's "10+ input shapes per kernel").
+pub const SWEEP_LEN: usize = 12;
+
+/// Numeric format axis of a grammar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F16,
+    I8,
+}
+
+impl Dtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F16 => "f16",
+            Dtype::I8 => "i8",
+        }
+    }
+
+    /// Bytes per element.
+    pub fn bytes(self) -> f64 {
+        match self {
+            Dtype::F32 => 4.0,
+            Dtype::F16 => 2.0,
+            Dtype::I8 => 1.0,
+        }
+    }
+
+    /// Arithmetic-intensity multiplier relative to f32: narrower
+    /// elements mean more ops per byte of HBM traffic at equal work.
+    pub fn intensity_factor(self) -> f64 {
+        match self {
+            Dtype::F32 => 1.0,
+            Dtype::F16 => 1.75,
+            Dtype::I8 => 2.5,
+        }
+    }
+
+    /// Quantized formats have no native torch reference op in the
+    /// Appendix-G sense.
+    pub fn torch_comparable(self) -> bool {
+        !matches!(self, Dtype::I8)
+    }
+}
+
+/// One op-family production rule of a grammar. The fused-op axis it
+/// induces is `0..=category.max_fusion()` epilogue depths.
+#[derive(Debug, Clone, Copy)]
+pub struct OpRule {
+    /// Short label used in generated task names.
+    pub label: &'static str,
+    pub category: Category,
+}
+
+const fn op(label: &'static str, category: Category) -> OpRule {
+    OpRule { label, category }
+}
+
+/// An enumerative task-space grammar.
+#[derive(Debug, Clone, Copy)]
+pub struct Grammar {
+    pub name: &'static str,
+    /// One-line description for `kernelband workload list`.
+    pub about: &'static str,
+    pub ops: &'static [OpRule],
+    pub dtypes: &'static [Dtype],
+    /// Power-of-two scale levels (doubling the base problem size).
+    pub scales: usize,
+    /// Whether the shape sweep interleaves ragged (non-power-of-two)
+    /// dims between the power-of-two steps.
+    pub ragged: bool,
+}
+
+/// `pow2sweep`: every dense-compute family over pure power-of-two
+/// shape sweeps, 3 dtypes × 4 scale levels.
+/// Cardinality: Σ(max_fusion+1) = 27 ops·depths × 3 × 4 = **324**.
+const POW2SWEEP_OPS: [OpRule; 10] = [
+    op("matmul", Category::MatMul),
+    op("attention", Category::Attention),
+    op("elementwise", Category::ElementWise),
+    op("softmax", Category::Softmax),
+    op("layernorm", Category::Normalization),
+    op("fusedact", Category::FusedActivation),
+    op("reduce", Category::Reduction),
+    op("gather", Category::MemoryIndex),
+    op("quant", Category::Quantization),
+    op("rope", Category::EmbeddingRope),
+];
+
+/// `raggedmix`: memory-bound families over ragged shape sweeps
+/// (non-power-of-two dims interleaved), 2 dtypes × 3 scale levels.
+/// Cardinality: Σ(max_fusion+1) = 14 ops·depths × 2 × 3 = **84**.
+const RAGGEDMIX_OPS: [OpRule; 5] = [
+    op("elementwise", Category::ElementWise),
+    op("gather", Category::MemoryIndex),
+    op("rope", Category::EmbeddingRope),
+    op("reduce", Category::Reduction),
+    op("softmax", Category::Softmax),
+];
+
+const POW2SWEEP: Grammar = Grammar {
+    name: "pow2sweep",
+    about: "dense families, power-of-two sweeps, f32/f16/i8 x 4 scales (324 tasks)",
+    ops: &POW2SWEEP_OPS,
+    dtypes: &[Dtype::F32, Dtype::F16, Dtype::I8],
+    scales: 4,
+    ragged: false,
+};
+
+const RAGGEDMIX: Grammar = Grammar {
+    name: "raggedmix",
+    about: "memory-bound families, ragged sweeps, f32/f16 x 3 scales (84 tasks)",
+    ops: &RAGGEDMIX_OPS,
+    dtypes: &[Dtype::F32, Dtype::F16],
+    scales: 3,
+    ragged: true,
+};
+
+/// The grammar registry, in `workload list` order.
+pub const GRAMMARS: [&Grammar; 2] = [&POW2SWEEP, &RAGGEDMIX];
+
+/// Look up a grammar by name.
+pub fn grammar(name: &str) -> Option<&'static Grammar> {
+    GRAMMARS.iter().copied().find(|g| g.name == name)
+}
+
+/// Comma-separated registry names (error messages, usage).
+pub fn grammar_names() -> String {
+    let names: Vec<&str> = GRAMMARS.iter().map(|g| g.name).collect();
+    names.join(", ")
+}
+
+impl Grammar {
+    /// Number of tasks `expand` produces, computed from the grammar's
+    /// axes alone (never from the expansion itself) — property tests
+    /// assert the expansion matches, so truncation can't hide.
+    pub fn cardinality(&self) -> usize {
+        let depth_sum: usize = self
+            .ops
+            .iter()
+            .map(|o| o.category.max_fusion() as usize + 1)
+            .sum();
+        depth_sum * self.dtypes.len() * self.scales
+    }
+
+    /// Stable lineage hash of `(grammar, seed)` — folded into every
+    /// generated task's fingerprint so stores, warm-start and centroid
+    /// memos never confuse spaces across grammars or seeds.
+    pub fn lineage(&self, seed: u64) -> u64 {
+        KeyHasher::new("grammar").str(self.name).u64(seed).finish()
+    }
+
+    /// Deterministically expand the grammar into its task space.
+    pub fn expand(&self, seed: u64) -> Vec<TaskSpec> {
+        let root = Rng::new(seed);
+        let lineage = self.lineage(seed);
+        let mut tasks = Vec::with_capacity(self.cardinality());
+        for op in self.ops {
+            for depth in 0..=op.category.max_fusion() {
+                for &dtype in self.dtypes {
+                    for scale in 0..self.scales {
+                        let idx = tasks.len();
+                        let mut rng = root.split("gtask", idx as u64);
+                        tasks.push(self.gen_task(
+                            idx, seed, lineage, *op, depth, dtype, scale,
+                            &mut rng,
+                        ));
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(tasks.len(), self.cardinality());
+        tasks
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn gen_task(&self, idx: usize, seed: u64, lineage: u64, op: OpRule,
+                depth: u8, dtype: Dtype, scale: usize, rng: &mut Rng)
+                -> TaskSpec {
+        let cat = op.category;
+        // deeper scale levels are harder kernels; L2..L5 mirrors the
+        // hand-built suite's mass sitting in the middle difficulties
+        let difficulty = Difficulty::from_level((2 + scale).min(5));
+        let shapes = self.gen_shapes(cat, dtype, scale, rng);
+        let latent = gen_latent(cat, difficulty, depth, rng);
+        let name = format!(
+            "g_{}_s{}_{}_{}_f{}_x{}_{:04}",
+            self.name, seed, op.label, dtype.name(), depth, scale, idx
+        );
+        TaskSpec {
+            id: idx,
+            name,
+            category: cat,
+            difficulty,
+            shapes,
+            latent,
+            torch_comparable: cat.torch_comparable()
+                && dtype.torch_comparable()
+                && difficulty < Difficulty::L5,
+            lineage,
+        }
+    }
+
+    /// A strictly size-increasing benchmark sweep. Per-task arithmetic
+    /// intensity and working-set fraction are *constant across the
+    /// sweep* — so FLOPs, bytes and working set all scale strictly
+    /// monotonically with shape index, and every roofline term of the
+    /// simulated engine is monotone in them. That is the invariant the
+    /// conformance harness' monotonicity check rests on.
+    fn gen_shapes(&self, cat: Category, dtype: Dtype, scale: usize,
+                  rng: &mut Rng) -> Vec<ShapeSpec> {
+        let intensity =
+            cat.base_intensity() * dtype.intensity_factor()
+                * rng.uniform_in(0.8, 1.25);
+        let ws_frac = rng.uniform_in(0.15, 0.85);
+        // base problem size: 2^14 elements at scale 0, doubling per
+        // scale level — sweeps span ~64 KB to ~1 GB of HBM traffic
+        let base_elems = (1u64 << (14 + scale)) as f64;
+        let mut shapes = Vec::with_capacity(SWEEP_LEN);
+        for j in 0..SWEEP_LEN {
+            let elems = if self.ragged {
+                // pairs (2^k, 2^k * r) with r in (1.1, 1.9): ragged
+                // dims interleave the doublings, still strictly
+                // increasing because r < 2
+                let pow2 = base_elems * (1u64 << (j / 2)) as f64;
+                if j % 2 == 1 {
+                    pow2 * rng.uniform_in(1.1, 1.9)
+                } else {
+                    pow2
+                }
+            } else {
+                base_elems * (1u64 << j) as f64
+            };
+            let bytes = elems * dtype.bytes();
+            shapes.push(ShapeSpec {
+                flops: bytes * intensity,
+                bytes,
+                working_set: bytes * ws_frac,
+            });
+        }
+        shapes
+    }
+}
+
+/// Latent optimum for a generated task. Mirrors the hand-built suite's
+/// `gen_latent` shape but with the conformance caps applied:
+/// `fusion_saving <= MAX_FUSION_SAVING`, every sensitivity
+/// `<= MAX_SENSITIVITY`, and `max_fusion` equal to the grammar's
+/// fused-op depth axis (not a random redraw), so the fusion axis is
+/// observable in the task's optimal schedule.
+fn gen_latent(cat: Category, difficulty: Difficulty, depth: u8,
+              rng: &mut Rng) -> Latent {
+    let mem_bound = cat.base_intensity() < 4.0;
+    let best_vector = if mem_bound {
+        2 + rng.below(2) as u8
+    } else {
+        1 + rng.below(2) as u8
+    };
+    let fusion_saving = if depth == 0 {
+        0.0
+    } else {
+        rng.uniform_in(0.08, MAX_FUSION_SAVING)
+    };
+    let level = difficulty.level();
+    let base = 0.15 + 0.12 * (level as f64 - 1.0);
+    let mut sensitivity = [0.0; 6];
+    for s in sensitivity.iter_mut() {
+        *s = (base + rng.uniform_in(-0.10, 0.22)).clamp(0.05, MAX_SENSITIVITY);
+    }
+    Latent {
+        best_loop_order: rng.below(6) as u8,
+        best_layout: rng.below(4) as u8,
+        max_fusion: depth,
+        fusion_saving,
+        best_vector,
+        tile_bias: rng.below(3) as i8 - 1,
+        sensitivity,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI-facing grammar spec
+// ---------------------------------------------------------------------------
+
+/// A parsed `grammar:<name>[:seed=S]` workload spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GrammarSpec {
+    pub name: String,
+    pub seed: u64,
+}
+
+impl GrammarSpec {
+    /// Parse a CLI workload spec. Accepts `grammar:<name>` and
+    /// `grammar:<name>:seed=S`; the name must be in the registry.
+    pub fn parse(s: &str) -> Result<GrammarSpec, String> {
+        let rest = s.strip_prefix("grammar:").ok_or_else(|| {
+            format!("expected grammar:<name>[:seed=S], got {s:?}")
+        })?;
+        let mut parts = rest.split(':');
+        let name = parts.next().unwrap_or("");
+        if grammar(name).is_none() {
+            return Err(format!(
+                "unknown grammar {name:?} (expected one of: {})",
+                grammar_names()
+            ));
+        }
+        let mut seed = DEFAULT_SEED;
+        for part in parts {
+            match part.split_once('=') {
+                Some(("seed", v)) => {
+                    seed = v.parse().map_err(|_| {
+                        format!("grammar seed: bad number {v:?}")
+                    })?;
+                }
+                _ => {
+                    return Err(format!(
+                        "grammar param: expected seed=S, got {part:?}"
+                    ));
+                }
+            }
+        }
+        Ok(GrammarSpec { name: name.to_string(), seed })
+    }
+
+    /// Canonical spelling (always carries the seed) — used as the
+    /// artifact workload tag so differently-spelled specs that expand
+    /// to the same space produce byte-identical artifacts.
+    pub fn canonical(&self) -> String {
+        format!("grammar:{}:seed={}", self.name, self.seed)
+    }
+
+    /// The registry grammar this spec names. `parse` validates the
+    /// name, so this only fails for hand-built specs.
+    pub fn grammar(&self) -> Result<&'static Grammar, String> {
+        grammar(&self.name).ok_or_else(|| {
+            format!(
+                "unknown grammar {:?} (expected one of: {})",
+                self.name,
+                grammar_names()
+            )
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Space statistics (CI artifact)
+// ---------------------------------------------------------------------------
+
+/// Structured stats for a generated space: task counts per category
+/// and difficulty, cardinality, lineage — the CI `workload-smoke` job
+/// uploads this as `WORKLOAD_<name>.json`.
+pub fn space_stats(spec: &GrammarSpec, suite: &Suite) -> Json {
+    let g = match grammar(&spec.name) {
+        Some(g) => g,
+        None => return Json::Null,
+    };
+    let mut by_category: Vec<(&str, Json)> = Vec::new();
+    for cat in crate::workload::ALL_CATEGORIES {
+        let n = suite
+            .tasks
+            .iter()
+            .filter(|t| t.category == cat)
+            .count();
+        if n > 0 {
+            by_category.push((cat.name(), Json::num(n as f64)));
+        }
+    }
+    let mut by_difficulty: Vec<(&str, Json)> = Vec::new();
+    let labels = ["L1", "L2", "L3", "L4", "L5"];
+    for (i, label) in labels.iter().enumerate() {
+        let n = suite
+            .tasks
+            .iter()
+            .filter(|t| t.difficulty.level() == i + 1)
+            .count();
+        by_difficulty.push((label, Json::num(n as f64)));
+    }
+    let torch = suite.tasks.iter().filter(|t| t.torch_comparable).count();
+    Json::obj(vec![
+        ("grammar", Json::str(spec.name.clone())),
+        ("seed", Json::num(spec.seed as f64)),
+        ("workload", Json::str(spec.canonical())),
+        ("lineage", Json::str(format!("{:016x}", g.lineage(spec.seed)))),
+        ("cardinality", Json::num(g.cardinality() as f64)),
+        ("tasks", Json::num(suite.tasks.len() as f64)),
+        ("torch_comparable", Json::num(torch as f64)),
+        ("by_category", Json::obj(by_category)),
+        ("by_difficulty", Json::obj(by_difficulty)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_cardinalities_are_pinned() {
+        assert_eq!(grammar("pow2sweep").unwrap().cardinality(), 324);
+        assert_eq!(grammar("raggedmix").unwrap().cardinality(), 84);
+        assert!(grammar("nope").is_none());
+    }
+
+    #[test]
+    fn expansion_matches_cardinality_and_is_deterministic() {
+        for g in GRAMMARS {
+            let a = g.expand(7);
+            let b = g.expand(7);
+            assert_eq!(a.len(), g.cardinality(), "{}", g.name);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.name, y.name);
+                assert_eq!(x.fingerprint(), y.fingerprint());
+            }
+        }
+    }
+
+    #[test]
+    fn generated_latents_respect_conformance_caps() {
+        for g in GRAMMARS {
+            for t in g.expand(7) {
+                assert!(t.latent.fusion_saving <= MAX_FUSION_SAVING,
+                        "{}", t.name);
+                assert!(t.latent.max_fusion <= t.category.max_fusion(),
+                        "{}", t.name);
+                for s in t.latent.sensitivity {
+                    assert!(s <= MAX_SENSITIVITY, "{}", t.name);
+                }
+                assert!(t.shapes.len() >= 10, "{}", t.name);
+                for w in t.shapes.windows(2) {
+                    assert!(w[1].bytes > w[0].bytes, "{}", t.name);
+                    assert!(w[1].flops > w[0].flops, "{}", t.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parsing_round_trips() {
+        let s = GrammarSpec::parse("grammar:pow2sweep").unwrap();
+        assert_eq!(s.name, "pow2sweep");
+        assert_eq!(s.seed, DEFAULT_SEED);
+        let s = GrammarSpec::parse("grammar:raggedmix:seed=99").unwrap();
+        assert_eq!(s.seed, 99);
+        assert_eq!(s.canonical(), "grammar:raggedmix:seed=99");
+        assert!(GrammarSpec::parse("pow2sweep").is_err());
+        assert!(GrammarSpec::parse("grammar:nope").is_err());
+        assert!(GrammarSpec::parse("grammar:pow2sweep:fuel=2").is_err());
+        assert!(GrammarSpec::parse("grammar:pow2sweep:seed=x").is_err());
+    }
+}

@@ -18,6 +18,8 @@
 use crate::kernel::{KernelConfig, NUM_LAYOUTS, NUM_LOOP_ORDERS};
 use crate::rng::Rng;
 
+pub mod gen;
+
 /// The 13 functional categories of TritonBench-G (Table 7 order).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Category {
@@ -225,6 +227,13 @@ pub struct TaskSpec {
     pub latent: Latent,
     /// Appendix G: does a native PyTorch op exist for this task?
     pub torch_comparable: bool,
+    /// Grammar lineage hash for generated tasks ([`gen::Grammar`]);
+    /// `0` for the hand-built suite. Nonzero lineage folds into
+    /// [`TaskSpec::fingerprint`], so stores, warm-start and centroid
+    /// memos never alias tasks across grammars or expansion seeds —
+    /// while hand-built fingerprints stay byte-identical to every
+    /// pre-grammar store on disk.
+    pub lineage: u64,
 }
 
 impl TaskSpec {
@@ -269,6 +278,11 @@ impl TaskSpec {
             .f64(l.sensitivity[3])
             .f64(l.sensitivity[4])
             .f64(l.sensitivity[5]);
+        // conditional fold: legacy (lineage 0) fingerprints must not
+        // move, or every existing store goes cold
+        if self.lineage != 0 {
+            h = h.u64(self.lineage);
+        }
         h.finish()
     }
 }
@@ -388,10 +402,19 @@ impl Suite {
                     latent: gen_latent(category, difficulty, &mut trng),
                     torch_comparable: category.torch_comparable()
                         && difficulty < Difficulty::L5,
+                    lineage: 0,
                 }
             })
             .collect();
         Suite { tasks }
+    }
+
+    /// Expand a grammar workload spec ([`gen::GrammarSpec`]) into a
+    /// suite. Deterministic in `(grammar, seed)`; fails only for a
+    /// name missing from the registry (CLI parsing already validates).
+    pub fn from_grammar(spec: &gen::GrammarSpec) -> Result<Suite, String> {
+        let g = spec.grammar()?;
+        Ok(Suite { tasks: g.expand(spec.seed) })
     }
 
     /// The 50-kernel detailed-analysis subset: stratified by category with

@@ -1,0 +1,159 @@
+//! Property tests for grammar expansion itself.
+//!
+//! * same grammar + seed ⇒ byte-identical task list, and byte-identical
+//!   `BENCH_*.json` artifacts across `--threads 1/4/8`;
+//! * disjoint seeds ⇒ disjoint task fingerprints;
+//! * expansion size matches the grammar's computed cardinality (no
+//!   silent truncation).
+
+use std::collections::HashSet;
+
+use kernelband::eval::{self, RunOpts, WorkloadOverride};
+use kernelband::workload::gen::{self, GrammarSpec, GRAMMARS};
+use kernelband::workload::{Suite, TaskSpec};
+
+/// A byte-exact serialization of a task list: every field that feeds a
+/// measurement, with floats rendered as raw bits.
+fn task_list_bytes(tasks: &[TaskSpec]) -> String {
+    let mut out = String::new();
+    for t in tasks {
+        out.push_str(&format!(
+            "{}|{}|{}|{}|{:016x}|{:016x}|{}\n",
+            t.id,
+            t.name,
+            t.category.index(),
+            t.difficulty.level(),
+            t.fingerprint(),
+            t.lineage,
+            t.torch_comparable,
+        ));
+        for s in &t.shapes {
+            out.push_str(&format!(
+                "  {:016x} {:016x} {:016x}\n",
+                s.flops.to_bits(),
+                s.bytes.to_bits(),
+                s.working_set.to_bits(),
+            ));
+        }
+        let l = &t.latent;
+        out.push_str(&format!(
+            "  {} {} {} {:016x} {} {}",
+            l.best_loop_order, l.best_layout, l.max_fusion,
+            l.fusion_saving.to_bits(), l.best_vector, l.tile_bias,
+        ));
+        for s in l.sensitivity {
+            out.push_str(&format!(" {:016x}", s.to_bits()));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[test]
+fn expansion_size_matches_computed_cardinality() {
+    for g in GRAMMARS {
+        for seed in [0, 7, 42] {
+            let tasks = g.expand(seed);
+            assert_eq!(
+                tasks.len(),
+                g.cardinality(),
+                "{} seed {seed}: expansion truncated or inflated",
+                g.name
+            );
+        }
+    }
+    // the registry's cardinalities are themselves pinned
+    assert_eq!(gen::grammar("pow2sweep").unwrap().cardinality(), 324);
+    assert_eq!(gen::grammar("raggedmix").unwrap().cardinality(), 84);
+}
+
+#[test]
+fn same_grammar_and_seed_expand_byte_identically() {
+    for g in GRAMMARS {
+        let a = task_list_bytes(&g.expand(7));
+        let b = task_list_bytes(&g.expand(7));
+        assert_eq!(a, b, "{}", g.name);
+        // and through the Suite::from_grammar wiring
+        let spec = GrammarSpec::parse(&format!("grammar:{}", g.name))
+            .expect("registry spec parses");
+        let c = task_list_bytes(&Suite::from_grammar(&spec).unwrap().tasks);
+        assert_eq!(a, c, "{} via Suite::from_grammar", g.name);
+    }
+}
+
+#[test]
+fn disjoint_seeds_expand_to_disjoint_fingerprints() {
+    for g in GRAMMARS {
+        let mut seen: HashSet<u64> = HashSet::new();
+        for seed in [1, 2, 3] {
+            for t in g.expand(seed) {
+                assert!(
+                    seen.insert(t.fingerprint()),
+                    "{} seed {seed}: fingerprint collision on {}",
+                    g.name, t.name
+                );
+            }
+        }
+    }
+    // lineage drives the disjointness: same grammar, different seed
+    let g = gen::grammar("raggedmix").unwrap();
+    assert_ne!(g.lineage(1), g.lineage(2));
+    // and distinct grammars never share a lineage at equal seed
+    assert_ne!(
+        gen::grammar("pow2sweep").unwrap().lineage(7),
+        gen::grammar("raggedmix").unwrap().lineage(7)
+    );
+}
+
+#[test]
+fn generated_and_handbuilt_fingerprints_never_alias() {
+    let legacy: HashSet<u64> = Suite::full(eval::EXPERIMENT_SEED)
+        .tasks
+        .iter()
+        .map(|t| t.fingerprint())
+        .collect();
+    for g in GRAMMARS {
+        for t in g.expand(7) {
+            assert!(t.lineage != 0);
+            assert!(
+                !legacy.contains(&t.fingerprint()),
+                "{} aliases a hand-built task",
+                t.name
+            );
+        }
+    }
+}
+
+#[test]
+fn grammar_artifacts_are_thread_invariant() {
+    let spec = GrammarSpec::parse("grammar:raggedmix").unwrap();
+    let artifact = |threads: usize| -> String {
+        let opts = RunOpts {
+            threads,
+            workload: Some(WorkloadOverride::from_spec(&spec).unwrap()),
+            ..RunOpts::default()
+        };
+        let report = eval::report_opts("table3", Some(2), &opts)
+            .expect("table3 exists");
+        report.json.pretty()
+    };
+    let one = artifact(1);
+    assert_eq!(one, artifact(4), "threads 1 vs 4");
+    assert_eq!(one, artifact(8), "threads 1 vs 8");
+    assert!(
+        one.contains("\"workload\""),
+        "grammar artifacts carry the workload tag"
+    );
+    assert!(one.contains("grammar:raggedmix:seed=7"));
+}
+
+#[test]
+fn legacy_artifacts_have_no_workload_tag() {
+    let report =
+        eval::report_opts("table3", Some(2), &RunOpts::threads(2))
+            .expect("table3 exists");
+    assert!(
+        !report.json.pretty().contains("\"workload\""),
+        "no --workload must keep legacy artifact bytes"
+    );
+}
