@@ -82,6 +82,21 @@ impl Clustering {
         max_d
     }
 
+    /// Per-cluster covering radius: the largest member → centroid
+    /// φ-distance (0 for empty clusters). One O(n) pass — cheap enough
+    /// for the per-re-clustering covering diagnostics in
+    /// [`crate::obs::regret`].
+    pub fn radii(&self, points: &[Phi]) -> Vec<f64> {
+        let mut r = vec![0.0f64; self.centroids.len()];
+        for (p, &c) in points.iter().zip(&self.assign) {
+            let d = phi_distance(p, &self.centroids[c]);
+            if d > r[c] {
+                r[c] = d;
+            }
+        }
+        r
+    }
+
     /// Sum of squared distances to assigned centroids.
     pub fn inertia(&self, points: &[Phi]) -> f64 {
         points

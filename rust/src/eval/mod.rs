@@ -193,6 +193,11 @@ pub struct RunOpts {
     /// with the workload label. `None` keeps legacy artifacts
     /// byte-identical.
     pub workload: Option<WorkloadOverride>,
+    /// Advisory telemetry recorder (`repro --obs ...`): grid runs get
+    /// the same METRICS.json / decision-ledger / regret accounting the
+    /// serve path has. Strictly observational — `BENCH_*.json` bytes
+    /// are invariant to it.
+    pub obs: Option<Arc<crate::obs::Recorder>>,
 }
 
 /// An expanded grammar space substituted for the hand-built suite.
@@ -223,6 +228,7 @@ impl RunOpts {
             session: None,
             batch: BatchMode::default(),
             workload: None,
+            obs: None,
         }
     }
 
@@ -241,6 +247,7 @@ impl RunOpts {
         ExperimentRunner::new(self.threads)
             .with_session(self.session.clone())
             .with_batch_mode(self.batch)
+            .with_obs(self.obs.clone())
     }
 }
 

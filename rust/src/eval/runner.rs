@@ -29,7 +29,8 @@ use crate::llm::{LlmProfile, SurrogateLlm};
 use crate::metrics::{aggregate, stratified, Aggregate};
 use crate::policy::Trace;
 use crate::rng::Rng;
-use crate::sched::{BatchMode, SchedContext};
+use crate::obs::regret as obs_regret;
+use crate::sched::{BatchMode, JobObs, SchedContext};
 use crate::store::log::records_for_trace;
 use crate::store::wrap::{CachedEngine, CachedLlm};
 use crate::store::TraceStore;
@@ -155,6 +156,10 @@ pub struct ExperimentRunner {
     /// only per-job deterministic state — and `Fixed(n ≤ 1)` is
     /// byte-identical to the pre-batch runner.
     pub batch: BatchMode,
+    /// Advisory telemetry recorder (`repro --obs ...`). Takes
+    /// precedence over the session store's recorder; strictly
+    /// observational either way.
+    pub obs: Option<Arc<crate::obs::Recorder>>,
 }
 
 impl ExperimentRunner {
@@ -163,6 +168,7 @@ impl ExperimentRunner {
             threads,
             session: None,
             batch: BatchMode::default(),
+            obs: None,
         }
     }
 
@@ -170,6 +176,13 @@ impl ExperimentRunner {
     pub fn with_session(mut self, session: Option<Arc<TraceStore>>)
                         -> ExperimentRunner {
         self.session = session;
+        self
+    }
+
+    /// Attach (or detach) an explicit telemetry recorder.
+    pub fn with_obs(mut self, obs: Option<Arc<crate::obs::Recorder>>)
+                    -> ExperimentRunner {
+        self.obs = obs;
         self
     }
 
@@ -190,15 +203,20 @@ impl ExperimentRunner {
     /// and persisted profile cache. Both caches are pure memos, so the
     /// context never perturbs results (see [`crate::sched`]).
     fn sched_context(&self) -> SchedContext {
-        match &self.session {
+        let mut ctx = match &self.session {
             Some(store) => SchedContext {
                 mode: self.batch,
                 centroids: Some(store.session_centroids()),
                 profiles: Some(store.profiles()),
                 obs: store.recorder(),
+                job: None,
             },
             None => SchedContext::with_mode(self.batch),
+        };
+        if self.obs.is_some() {
+            ctx.obs = self.obs.clone();
         }
+        ctx
     }
 
     /// Run every cell of the grid over every task of `suite`.
@@ -225,13 +243,47 @@ impl ExperimentRunner {
             let spec = &cells[c];
             let task = &suite.tasks[t];
             let root = Rng::new(spec.seed).split("method", spec.method.tag());
-            match &self.session {
+            // per-item causal anchor (`--obs events|trace`): each
+            // (cell, task) item runs on its own trace track and stamps
+            // ledger rows with its cell label; plain `--obs on` runs
+            // skip all of this
+            let mut ictx = ctx.clone();
+            let ispan = match ictx.obs.clone().filter(|r| {
+                r.trace().is_some() || r.decisions().is_some()
+            }) {
+                Some(r) => {
+                    let track = crate::obs::trace::TRACK_JOBS
+                        + (c * suite.len() + t) as u64;
+                    let span = r.trace().map(|s| {
+                        s.begin(
+                            "repro.item",
+                            0,
+                            track,
+                            Json::obj(vec![
+                                ("cell", Json::str(spec.label.clone())),
+                                ("task", Json::str(task.name.clone())),
+                            ]),
+                        )
+                    });
+                    ictx.job = Some(JobObs {
+                        span: span.unwrap_or(0),
+                        track,
+                        label: Arc::from(
+                            format!("{} {}", spec.label, task.name)
+                                .as_str(),
+                        ),
+                    });
+                    span
+                }
+                None => None,
+            };
+            let (trace, fresh) = match &self.session {
                 None => {
                     let engine = SimEngine::new(spec.device);
                     let llm = SurrogateLlm::new(spec.llm);
                     let trace = spec.method.run_task_sched(
                         task, &engine, &llm, spec.iterations, &root,
-                        None, &ctx,
+                        None, &ictx,
                     );
                     (trace, true)
                 }
@@ -255,13 +307,26 @@ impl ExperimentRunner {
                             spec.llm.spec().name,
                             &task.name,
                         ),
-                        &ctx,
+                        &ictx,
                     );
                     let new_work =
                         engine.local_sims() + llm.local_sims() > 0;
                     (trace, new_work)
                 }
+            };
+            if let Some(r) = ictx.obs.as_ref().filter(|r| r.enabled()) {
+                if let (Some(s), Some(id)) = (r.trace(), ispan) {
+                    s.end(id);
+                }
+                let oracle = obs_regret::latent_oracle_latency_s(
+                    task,
+                    spec.device,
+                );
+                let (curve, exact) =
+                    obs_regret::regret_curve(&trace, oracle);
+                r.observe_regret(&curve, exact);
             }
+            (trace, fresh)
         });
         let mut it = traces.into_iter();
         let results: Vec<(CellResult, Vec<bool>)> = cells

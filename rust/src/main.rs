@@ -3,7 +3,7 @@
 //! ```text
 //! kernelband repro <table1|table2|table3|table4|table9|table10|fig2|fig3|fig4|regret|all>
 //!            [--iterations N] [--threads N] [--batch N] [--out DIR]
-//!            [--store DIR] [--warm-start TRACE]
+//!            [--store DIR] [--warm-start TRACE] [--obs on|off|events|trace]
 //! kernelband optimize [--task SUBSTR] [--device rtx4090|h20|a100]
 //!            [--llm deepseek|gpt5|claude|gemini] [--mode full|no-clustering|
 //!            no-profiling|llm-select|raw-profiling|no-strategy]
@@ -12,10 +12,11 @@
 //! kernelband serve [--backend inprocess|sharded|modeled] [--tenants N]
 //!            [--jobs N] [--iterations N] [--batch N|auto] [--workers N]
 //!            [--fault kill-after=K,preempt=P,seed=S]
-//!            [--obs on|off|events] [--open-loop rate=R,duration=D]
+//!            [--obs on|off|events|trace] [--open-loop rate=R,duration=D]
 //!            [--out DIR] [--store DIR]
 //! kernelband trace <record|replay|stats> …
-//! kernelband metrics <summary|top|export> [PATH]
+//! kernelband metrics <summary|top|export|perfetto> [PATH]
+//! kernelband explain [SELECTOR] [--ledger PATH]
 //! kernelband workload <list|stats|conformance> [grammar:<name>[:seed=S]]
 //! kernelband list [--subset]
 //! ```
@@ -75,6 +76,7 @@ USAGE:
   kernelband repro <EXPERIMENT> [--iterations N] [--threads N] [--batch N]
                    [--out DIR] [--store DIR] [--warm-start TRACE]
                    [--workload grammar:<name>[:seed=S]]
+                   [--obs on|off|events|trace]
       EXPERIMENT: table1 table2 table3 table4 table9 table10
                   fig2 fig3 fig4 regret all
       --threads 0 (default) uses every core; results are identical
@@ -107,7 +109,7 @@ USAGE:
       [--variety N|grammar:<name>[:seed=S]] [--seed S]
       [--queue-cap N] [--quota N]
       [--device D] [--llm L] [--fault kill-after=K,preempt=P,seed=S]
-      [--obs on|off|events] [--open-loop rate=R,duration=D]
+      [--obs on|off|events|trace] [--open-loop rate=R,duration=D]
       [--durability strict|relaxed|off]
       [--store-fault kill-at-byte=K,short-write=P,enospc-after=N,seed=S]
       [--out DIR] [--store DIR]
@@ -160,11 +162,25 @@ USAGE:
       tombstones), and atomically rewrite changed files. Idempotent —
       a second --repair run changes zero bytes. Exit codes: 0 clean,
       1 issues found/repaired, 2 unrepairable.
-  kernelband metrics <summary|top|export> [PATH]
-      inspect a METRICS.json written by serve --obs (PATH is the file
-      or its directory; default out/). summary prints histograms with
-      percentiles plus every counter; top ranks counters by value;
-      export dumps the raw document.
+  kernelband metrics <summary|top|export|perfetto> [PATH]
+      inspect a METRICS.json written by serve/repro --obs (PATH is
+      the file or its directory; default out/). summary prints
+      histograms with percentiles, every counter, and the regret /
+      covering diagnostics when present; top ranks counters by value;
+      export dumps the raw document (--format prometheus renders the
+      Prometheus text exposition: counters plus cumulative le bucket
+      series). perfetto reads events.jsonl instead and rebuilds the
+      Chrome-trace-event JSON (load at ui.perfetto.dev; --out FILE
+      writes it).
+  kernelband explain [SELECTOR] [--ledger PATH]
+      replay the per-pull decision ledger (decisions.jsonl, written
+      under --obs events|trace; PATH is the file or its directory,
+      default out/). SELECTOR is an iteration number (matches t) or a
+      job/task substring; empty selects all. Prints every cluster's
+      masked-UCB score with its mask reason, the within-cluster
+      softmax weights, and each batch slot's pruning-bound verdict —
+      then recomputes every arm score from the recorded inputs and
+      fails unless they match the ledger bit for bit.
   kernelband workload <list|stats|conformance> [grammar:<name>[:seed=S]]
       [--out DIR]
       list prints the grammar registry with expansion cardinalities.
@@ -178,11 +194,16 @@ USAGE:
       Exit 1 on any violation.
   kernelband list [--subset]
 
-Telemetry: serve takes --obs on|off|events (default on). `on` writes
-advisory METRICS.json (counters + latency histograms) next to the
-artifacts; `events` additionally streams spans/lease events to
-events.jsonl; `off` disables the recorder entirely. Telemetry never
-changes BENCH_*.json or trace.jsonl bytes.
+Telemetry: serve takes --obs on|off|events|trace (default on); repro
+takes the same flag (default off). `on` writes advisory METRICS.json
+(counters + latency histograms + regret/covering diagnostics) next to
+the artifacts; `events` additionally streams spans/lease events to
+events.jsonl and the per-pull decision ledger to decisions.jsonl;
+`trace` further records the causal span tree (job → round → iteration
+→ pull → measure) and exports trace_events.json (Chrome trace format,
+loads at ui.perfetto.dev). Telemetry never changes BENCH_*.json or
+trace.jsonl bytes — artifacts are byte-identical across every --obs
+mode and worker count.
 Open-loop load: serve --open-loop rate=R,duration=D (real backends)
 arrives jobs at R per second over D seconds (job count = R*D, grid
 interleaved) and reports queue-wait / end-to-end latency percentiles
@@ -364,13 +385,28 @@ fn parse_workload(s: &str) -> Result<eval::WorkloadOverride> {
 #[allow(clippy::too_many_arguments)]
 fn repro(exp: &str, iterations: Option<usize>, threads: usize,
          batch: BatchMode, out: &str, store_dir: Option<&str>,
-         warm: Option<&str>, workload: Option<&str>) -> Result<()> {
+         warm: Option<&str>, workload: Option<&str>, obs: ObsMode)
+         -> Result<()> {
     let session = open_session(store_dir, warm)?;
     let workload = workload.map(parse_workload).transpose()?;
     if let Some(w) = &workload {
         outln!("[workload] {} ({} tasks)", w.label, w.suite.len());
     }
-    let opts = RunOpts { threads, session: session.clone(), batch, workload };
+    // advisory telemetry (`--obs`, default off to keep legacy runs
+    // silent): the grid runner feeds the same recorder the serve path
+    // uses, so repro runs get METRICS.json, the decision ledger and the
+    // regret/covering sections without touching BENCH_*.json bytes
+    let recorder = build_recorder(obs);
+    if let (Some(rec), Some(store)) = (&recorder, &session) {
+        store.set_recorder(rec.clone());
+    }
+    let opts = RunOpts {
+        threads,
+        session: session.clone(),
+        batch,
+        workload,
+        obs: recorder.clone(),
+    };
     let run_one = |name: &str| -> Result<()> {
         let report = eval::report_opts(name, iterations, &opts)
             .ok_or_else(|| anyhow!("unknown experiment {name:?}\n{USAGE}"))?;
@@ -390,6 +426,12 @@ fn repro(exp: &str, iterations: Option<usize>, threads: usize,
     if let Some(store) = &session {
         store.persist().context("persisting store")?;
         outln!("[store] {}", store.stats_line());
+    }
+    if let Some(rec) = &recorder {
+        if let Some(store) = &session {
+            store.obs_export();
+        }
+        write_obs_artifacts(Path::new(out), rec)?;
     }
     Ok(())
 }
@@ -603,12 +645,15 @@ fn parse_open_loop(s: &str) -> Result<OpenLoopPlan> {
 }
 
 /// `--obs` values: `on` (default; METRICS.json), `off` (no recorder at
-/// all) or `events` (METRICS.json + events.jsonl span/event stream).
+/// all), `events` (METRICS.json + events.jsonl span/event stream +
+/// decisions.jsonl) or `trace` (everything `events` writes plus the
+/// causal span tree exported as Chrome-trace/Perfetto JSON).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum ObsMode {
     On,
     Off,
     Events,
+    Trace,
 }
 
 fn parse_obs(s: &str) -> Result<ObsMode> {
@@ -616,8 +661,52 @@ fn parse_obs(s: &str) -> Result<ObsMode> {
         "on" => Ok(ObsMode::On),
         "off" => Ok(ObsMode::Off),
         "events" => Ok(ObsMode::Events),
-        _ => bail!("--obs: expected on, off or events, got {s:?}"),
+        "trace" => Ok(ObsMode::Trace),
+        _ => bail!("--obs: expected on, off, events or trace, got {s:?}"),
     }
+}
+
+/// Build the recorder an `--obs` mode asks for (`None` = off).
+fn build_recorder(obs: ObsMode) -> Option<Arc<Recorder>> {
+    match obs {
+        ObsMode::Off => None,
+        ObsMode::On => Some(Arc::new(Recorder::new())),
+        ObsMode::Events => Some(Arc::new(Recorder::with_events())),
+        ObsMode::Trace => Some(Arc::new(Recorder::with_trace())),
+    }
+}
+
+/// Write one recorder's advisory artifacts under `dir`: METRICS.json
+/// always; events.jsonl / decisions.jsonl / trace_events.json only when
+/// their streams exist. All advisory — never byte-compared.
+fn write_obs_artifacts(dir: &Path, rec: &Recorder) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let p = dir.join("METRICS.json");
+    std::fs::write(&p, rec.metrics_json().pretty() + "\n")
+        .with_context(|| format!("writing {}", p.display()))?;
+    outln!("[metrics] {}", p.display());
+    let events = rec.events_jsonl();
+    if !events.is_empty() {
+        let p = dir.join("events.jsonl");
+        std::fs::write(&p, events)
+            .with_context(|| format!("writing {}", p.display()))?;
+        outln!("[events] {}", p.display());
+    }
+    let decisions = rec.decisions_jsonl();
+    if !decisions.is_empty() {
+        let p = dir.join("decisions.jsonl");
+        std::fs::write(&p, decisions)
+            .with_context(|| format!("writing {}", p.display()))?;
+        outln!("[decisions] {}", p.display());
+    }
+    if let Some(sink) = rec.trace() {
+        let p = dir.join("trace_events.json");
+        std::fs::write(&p, sink.chrome_trace_json().pretty() + "\n")
+            .with_context(|| format!("writing {}", p.display()))?;
+        outln!("[perfetto] {}", p.display());
+    }
+    Ok(())
 }
 
 /// Session store for the real serve backends: they always need one
@@ -652,11 +741,7 @@ fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
     // advisory telemetry: attached to the store (the single handle
     // every layer reaches through) and exported to METRICS.json only —
     // never into the byte-compared artifacts
-    let recorder = match obs {
-        ObsMode::Off => None,
-        ObsMode::On => Some(Arc::new(Recorder::new())),
-        ObsMode::Events => Some(Arc::new(Recorder::with_events())),
-    };
+    let recorder = build_recorder(obs);
     if let (Some(rec), Some(s)) = (&recorder, &store) {
         s.set_recorder(rec.clone());
     }
@@ -737,17 +822,7 @@ fn serve_run(backend: &dyn ServeBackend, req: &ServeRequest,
             if let Some(s) = &store {
                 s.obs_export();
             }
-            let p = Path::new(dir).join("METRICS.json");
-            std::fs::write(&p, rec.metrics_json().pretty() + "\n")
-                .with_context(|| format!("writing {}", p.display()))?;
-            outln!("[metrics] {}", p.display());
-            let events = rec.events_jsonl();
-            if !events.is_empty() {
-                let p = Path::new(dir).join("events.jsonl");
-                std::fs::write(&p, events)
-                    .with_context(|| format!("writing {}", p.display()))?;
-                outln!("[events] {}", p.display());
-            }
+            write_obs_artifacts(Path::new(dir), rec)?;
         }
     }
     Ok(())
@@ -931,6 +1006,14 @@ fn trace_stats(path_str: &str) -> Result<()> {
             }
             _ => outln!("trace: none recorded yet"),
         }
+        // regret / covering diagnostics land next to the store when the
+        // run was observed (serve/repro --obs writes METRICS.json)
+        let metrics = path.join("METRICS.json");
+        if let Ok(text) = std::fs::read_to_string(&metrics) {
+            if let Ok(doc) = json::parse(&text) {
+                metrics_regret_covering(&doc);
+            }
+        }
         return Ok(());
     }
     let summary = trace_log::replay_file(path)
@@ -1065,6 +1148,48 @@ fn metrics_summary(doc: &Json) {
     for (name, v) in metrics_counters(doc) {
         outln!("counter {name} = {v}");
     }
+    metrics_regret_covering(doc);
+}
+
+/// Print the optional `regret` / `covering` sections of METRICS.json
+/// (present only when the run observed bandit pulls under `--obs`).
+fn metrics_regret_covering(doc: &Json) {
+    if let Some(r) = doc.get("regret") {
+        outln!(
+            "regret: runs_exact={} runs_best_seen={} pulls={} final={:.6}",
+            r.f64_field("runs_exact") as u64,
+            r.f64_field("runs_best_seen") as u64,
+            r.f64_field("pulls") as u64,
+            r.f64_field("final"),
+        );
+        if let Some(series) = r
+            .get("cumulative_regret_per_pull")
+            .and_then(Json::as_arr)
+        {
+            let vals: Vec<String> = series
+                .iter()
+                .filter_map(Json::as_f64)
+                .map(|v| format!("{v:.4}"))
+                .collect();
+            outln!("regret curve ({} pts): [{}]", vals.len(), vals.join(", "));
+        }
+    }
+    for rec in doc
+        .get("covering")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+    {
+        outln!(
+            "covering t={}: clusters={} N_cover={} max_r={:.4} \
+             mean_r={:.4} lipschitz={:.4}",
+            rec.f64_field("t") as u64,
+            rec.f64_field("clusters") as u64,
+            rec.f64_field("covering_number") as u64,
+            rec.f64_field("max_radius"),
+            rec.f64_field("mean_radius"),
+            rec.f64_field("lipschitz"),
+        );
+    }
 }
 
 fn metrics_top(doc: &Json) {
@@ -1075,8 +1200,104 @@ fn metrics_top(doc: &Json) {
     }
 }
 
-/// `metrics summary|top|export [PATH]` — inspect an advisory
-/// METRICS.json written by `serve --obs`.
+/// Render METRICS.json as the Prometheus text exposition format:
+/// counters as `counter` metrics, histograms as cumulative `le` bucket
+/// series (rebuilt from the snapshot's `[upper, count]` pairs) plus
+/// `_sum`/`_count`. Metric names are sanitized to `kernelband_<name>`
+/// with every non-alphanumeric byte mapped to `_`.
+fn prometheus_text(doc: &Json) -> String {
+    fn sanitize(name: &str) -> String {
+        let mut out = String::from("kernelband_");
+        for ch in name.chars() {
+            out.push(if ch.is_ascii_alphanumeric() { ch } else { '_' });
+        }
+        out
+    }
+    let mut out = String::new();
+    if let Some(Json::Obj(counters)) = doc.get("counters") {
+        for (k, v) in counters {
+            let name = sanitize(k);
+            let v = v.as_f64().unwrap_or(0.0);
+            out.push_str(&format!(
+                "# TYPE {name} counter\n{name} {v}\n"
+            ));
+        }
+    }
+    if let Some(Json::Obj(hists)) = doc.get("histograms") {
+        for (k, h) in hists {
+            let name = sanitize(k);
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            // Prometheus buckets are CUMULATIVE; the snapshot's pairs
+            // are per-bucket counts in ascending upper-bound order
+            let mut cum = 0.0f64;
+            for pair in h
+                .get("buckets")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+            {
+                let (Some(le), Some(n)) = (
+                    pair.as_arr().and_then(|p| p.first()).and_then(Json::as_f64),
+                    pair.as_arr().and_then(|p| p.get(1)).and_then(Json::as_f64),
+                ) else {
+                    continue;
+                };
+                cum += n;
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{le}\"}} {cum}\n"
+                ));
+            }
+            let count =
+                h.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+            let sum = h.get("sum").and_then(Json::as_f64).unwrap_or(0.0);
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"+Inf\"}} {count}\n\
+                 {name}_sum {sum}\n\
+                 {name}_count {count}\n"
+            ));
+        }
+    }
+    out
+}
+
+/// `metrics perfetto [PATH]` — rebuild the Chrome-trace-event JSON from
+/// an `events.jsonl` written under `--obs trace` (PATH is the file or
+/// its directory; default `out/`). The output loads directly at
+/// `ui.perfetto.dev`; `--out FILE` writes it instead of printing.
+fn metrics_perfetto(raw: &str, out: Option<&str>) -> Result<()> {
+    use kernelband::obs::trace as obs_trace;
+    let p = Path::new(raw);
+    let path = if p.is_dir() { p.join("events.jsonl") } else { p.to_path_buf() };
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let (lines, skipped) = json::parse_lines_lossy(&text);
+    let spans: Vec<obs_trace::SpanRecord> = lines
+        .iter()
+        .filter(|l| l.get("kind").and_then(Json::as_str) == Some("span_tree"))
+        .filter_map(|l| l.get("fields").and_then(obs_trace::span_from_fields))
+        .collect();
+    if spans.is_empty() {
+        bail!(
+            "{}: no span_tree lines (was the run started with --obs trace?)",
+            path.display()
+        );
+    }
+    if skipped > 0 {
+        eprintln!("[perfetto] skipped {skipped} corrupt jsonl lines");
+    }
+    let doc = obs_trace::chrome_trace_from_spans(&spans).pretty() + "\n";
+    match out {
+        Some(file) => {
+            std::fs::write(file, doc)
+                .with_context(|| format!("writing {file}"))?;
+            outln!("[perfetto] {} spans -> {}", spans.len(), file);
+        }
+        None => outln!("{doc}"),
+    }
+    Ok(())
+}
+
+/// `metrics summary|top|export|perfetto [PATH]` — inspect advisory
+/// observability artifacts written by `serve --obs` / `repro --obs`.
 fn metrics_cmd(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &[])?;
     let sub = args
@@ -1089,6 +1310,10 @@ fn metrics_cmd(rest: &[String]) -> Result<()> {
         .get(1)
         .map(String::as_str)
         .unwrap_or("out");
+    if sub == "perfetto" {
+        // reads events.jsonl, not METRICS.json
+        return metrics_perfetto(raw, args.get("out"));
+    }
     let path = metrics_path(raw);
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("reading {}", path.display()))?;
@@ -1097,12 +1322,176 @@ fn metrics_cmd(rest: &[String]) -> Result<()> {
     match sub {
         "summary" => metrics_summary(&doc),
         "top" => metrics_top(&doc),
-        "export" => outln!("{}", doc.pretty()),
+        "export" => match args.get("format").unwrap_or("json") {
+            "json" => outln!("{}", doc.pretty()),
+            "prometheus" | "prom" => {
+                emit(format_args!("{}", prometheus_text(&doc)))
+            }
+            other => bail!(
+                "--format: expected json or prometheus, got {other:?}"
+            ),
+        },
         other => bail!(
             "unknown metrics subcommand {other:?} \
-             (summary, top, export)\n{USAGE}"
+             (summary, top, export, perfetto)\n{USAGE}"
         ),
     }
+    Ok(())
+}
+
+/// `explain <SELECTOR>` — replay the per-pull decision ledger
+/// (`decisions.jsonl`, written under `--obs events|trace`). SELECTOR is
+/// an iteration number (matches the row's `t`) or a substring of the
+/// job/task label; empty selects every row. Every selected row's arm
+/// scores are **recomputed** from the recorded `(mu, n, t, ucb_c)` and
+/// must match the recorded scores bit-exactly — any drift between the
+/// ledger and the live selection math is a hard error.
+fn explain_cmd(rest: &[String]) -> Result<()> {
+    use kernelband::obs::decision::recheck_pull;
+    let args = Args::parse(rest, &[])?;
+    let selector = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("");
+    let raw = args.get("ledger").unwrap_or("out");
+    let p = Path::new(raw);
+    let path = if p.is_dir() {
+        p.join("decisions.jsonl")
+    } else {
+        p.to_path_buf()
+    };
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let (rows, skipped) = json::parse_lines_lossy(&text);
+    if skipped > 0 {
+        eprintln!("[explain] skipped {skipped} corrupt jsonl lines");
+    }
+    let by_iter: Option<f64> = selector.parse::<usize>().ok().map(|n| n as f64);
+    let selected: Vec<&Json> = rows
+        .iter()
+        .filter(|r| r.get("kind").and_then(Json::as_str) == Some("pull"))
+        .filter(|r| match by_iter {
+            Some(t) => r.get("t").and_then(Json::as_f64) == Some(t),
+            None => {
+                selector.is_empty()
+                    || r.get("job")
+                        .and_then(Json::as_str)
+                        .map_or(false, |j| j.contains(selector))
+                    || r.get("task")
+                        .and_then(Json::as_str)
+                        .map_or(false, |j| j.contains(selector))
+            }
+        })
+        .collect();
+    if selected.is_empty() {
+        bail!(
+            "no ledger rows match {selector:?} in {}",
+            path.display()
+        );
+    }
+    let mut checked_arms = 0usize;
+    for row in &selected {
+        let job = row.get("job").and_then(Json::as_str).unwrap_or("?");
+        let t = row.get("t").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+        let chosen = row.get("chosen");
+        let cl = chosen
+            .and_then(|c| c.get("cluster"))
+            .and_then(Json::as_f64)
+            .unwrap_or(-1.0) as i64;
+        let st = chosen
+            .and_then(|c| c.get("strategy"))
+            .and_then(Json::as_str)
+            .unwrap_or("-");
+        let fallback = matches!(
+            row.get("fallback"),
+            Some(Json::Bool(true))
+        );
+        outln!(
+            "pull {job} t={t}: chose cluster {cl} / {st}{}",
+            if fallback { "  [all-saturated fallback]" } else { "" }
+        );
+        for arm in row
+            .get("arms")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+        {
+            outln!(
+                "  arm cluster={} strategy={:<12} mu={:.4} n={:<4} \
+                 score={:.6} [{}]",
+                arm.get("cluster").and_then(Json::as_f64).unwrap_or(-1.0)
+                    as i64,
+                arm.get("strategy").and_then(Json::as_str).unwrap_or("?"),
+                arm.get("mu").and_then(Json::as_f64).unwrap_or(0.0),
+                arm.get("n").and_then(Json::as_f64).unwrap_or(0.0),
+                arm.get("score").and_then(Json::as_f64).unwrap_or(0.0),
+                arm.get("reason").and_then(Json::as_str).unwrap_or("?"),
+            );
+        }
+        for sm in row
+            .get("softmax")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+        {
+            let pairs: Vec<String> = sm
+                .get("pool")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .zip(
+                    sm.get("weight")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[]),
+                )
+                .map(|(m, w)| {
+                    format!(
+                        "k{}:{:.3}",
+                        m.as_f64().unwrap_or(-1.0) as i64,
+                        w.as_f64().unwrap_or(0.0),
+                    )
+                })
+                .collect();
+            outln!(
+                "  softmax slot {}: {} -> picked k{}",
+                sm.f64_field("slot") as u64,
+                pairs.join(" "),
+                sm.f64_field("picked") as i64,
+            );
+        }
+        for slot in row
+            .get("slots")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+        {
+            let bound = match slot.get("bound") {
+                Some(Json::Num(b)) => format!("{b:.6}"),
+                _ => "-".to_string(),
+            };
+            outln!(
+                "  slot {} parent={} verified={} bound={} \
+                 threshold={:.6} admitted={}",
+                slot.get("slot").and_then(Json::as_f64).unwrap_or(-1.0)
+                    as i64,
+                slot.get("parent").and_then(Json::as_f64).unwrap_or(-1.0)
+                    as i64,
+                matches!(slot.get("verified"), Some(Json::Bool(true))),
+                bound,
+                slot.get("threshold")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                matches!(slot.get("admitted"), Some(Json::Bool(true))),
+            );
+        }
+        // the acceptance gate: recomputed scores must equal the
+        // recorded ones bit for bit
+        checked_arms += recheck_pull(row)
+            .map_err(|e| anyhow!("{job} t={t}: {e}"))?;
+    }
+    outln!(
+        "[explain] {} pulls, {} arm scores rechecked bit-exact",
+        selected.len(),
+        checked_arms
+    );
     Ok(())
 }
 
@@ -1237,6 +1626,7 @@ fn main() -> Result<()> {
                 args.get("store"),
                 args.get("warm-start"),
                 args.get("workload"),
+                parse_obs(args.get("obs").unwrap_or("off"))?,
             )
         }
         "optimize" => {
@@ -1384,6 +1774,7 @@ fn main() -> Result<()> {
         }
         "trace" => trace_cmd(rest),
         "metrics" => metrics_cmd(rest),
+        "explain" => explain_cmd(rest),
         "list" => {
             let args = Args::parse(rest, &["subset"])?;
             list(args.has("subset"))

@@ -1,0 +1,179 @@
+//! Per-pull decision ledger: *why* the bandit did what it did.
+//!
+//! One jsonl row per arm pull (`kind:"pull"`), recording everything the
+//! selection consumed at pick time:
+//!
+//! * the masked-UCB score of **every** `(cluster, strategy)` arm with
+//!   its mask reason (`open` / `saturated` / `empty`) and whether the
+//!   all-saturated fallback fired,
+//! * the within-cluster softmax pick per batch slot — candidate pool,
+//!   raw headrooms, normalized weights, picked kernel,
+//! * each slot's Assumption-1 admission verdict — the profiling bound
+//!   vs `prune_factor × best` threshold.
+//!
+//! Rows are plain [`Json`] built by the policy loop only when a ledger
+//! is attached (`--obs events|trace`); the benched `--obs on`
+//! configuration never constructs one, so the ≤2% overhead gate is
+//! unaffected. Scores are recorded with Rust's shortest-roundtrip float
+//! formatting, so `kernelband explain` can recompute them from the
+//! recorded `(mu, n, t, c)` and demand **bit-exact** agreement — the
+//! recomputation in [`recheck_pull`] calls the same
+//! [`MaskedUcb::index`] the hot path's reduce is property-tested
+//! against.
+
+use std::sync::Mutex;
+
+use crate::bandit::MaskedUcb;
+use crate::util::json::Json;
+
+/// Append-only buffer of decision rows (exported as `decisions.jsonl`).
+#[derive(Debug, Default)]
+pub struct DecisionLedger {
+    rows: Mutex<Vec<Json>>,
+}
+
+impl DecisionLedger {
+    pub fn new() -> DecisionLedger {
+        DecisionLedger::default()
+    }
+
+    pub fn record(&self, row: Json) {
+        self.rows.lock().unwrap().push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All rows, one compact JSON object per line, in emission order.
+    pub fn jsonl(&self) -> String {
+        let rows = self.rows.lock().unwrap();
+        let mut out = String::new();
+        for r in rows.iter() {
+            out.push_str(&r.dump());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Cloned rows (tests and in-process readers).
+    pub fn rows(&self) -> Vec<Json> {
+        self.rows.lock().unwrap().clone()
+    }
+}
+
+/// Recompute every recorded arm score of one `pull` row from its
+/// `(mu, n, t, ucb_c)` and compare **bit-exactly** against the recorded
+/// score. Returns the number of arms checked; any mismatch (or a
+/// malformed row) is an error naming the offending arm.
+pub fn recheck_pull(row: &Json) -> Result<usize, String> {
+    if row.get("kind").and_then(Json::as_str) != Some("pull") {
+        return Err("not a pull row".into());
+    }
+    let t = row
+        .get("t")
+        .and_then(Json::as_f64)
+        .ok_or("pull row missing t")?;
+    let c = row
+        .get("ucb_c")
+        .and_then(Json::as_f64)
+        .ok_or("pull row missing ucb_c")?;
+    let ucb = MaskedUcb { c };
+    let arms = row
+        .get("arms")
+        .and_then(Json::as_arr)
+        .ok_or("pull row missing arms")?;
+    let mut checked = 0usize;
+    for (i, arm) in arms.iter().enumerate() {
+        let mu = arm
+            .get("mu")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("arm {i}: missing mu"))?;
+        let n = arm
+            .get("n")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("arm {i}: missing n"))?;
+        let recorded = arm
+            .get("score")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("arm {i}: missing score"))?;
+        let recomputed = ucb.index(mu, n, t);
+        if recomputed.to_bits() != recorded.to_bits() {
+            return Err(format!(
+                "arm {i} (cluster {}, {}): recorded score {recorded} != \
+                 recomputed {recomputed} from mu={mu} n={n} t={t} c={c}",
+                arm.get("cluster").and_then(Json::as_f64).unwrap_or(-1.0),
+                arm.get("strategy").and_then(Json::as_str).unwrap_or("?"),
+            ));
+        }
+        checked += 1;
+    }
+    Ok(checked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn pull_row(mu: f64, n: f64, t: f64, c: f64) -> Json {
+        let score = MaskedUcb { c }.index(mu, n, t);
+        Json::obj(vec![
+            ("kind", Json::str("pull")),
+            ("t", Json::num(t)),
+            ("ucb_c", Json::num(c)),
+            (
+                "arms",
+                Json::Arr(vec![Json::obj(vec![
+                    ("cluster", Json::num(0.0)),
+                    ("strategy", Json::str("tiling")),
+                    ("mu", Json::num(mu)),
+                    ("n", Json::num(n)),
+                    ("score", Json::num(score)),
+                    ("reason", Json::str("open")),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn ledger_buffers_and_serializes() {
+        let l = DecisionLedger::new();
+        assert!(l.is_empty());
+        l.record(Json::obj(vec![("kind", Json::str("pull"))]));
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.jsonl().lines().count(), 1);
+    }
+
+    #[test]
+    fn recheck_is_bit_exact_through_a_json_round_trip() {
+        // the shortest-roundtrip float writer means dump→parse preserves
+        // bits; recheck must pass after the full serialization cycle
+        let row = pull_row(0.731, 3.0, 17.0, 2.0);
+        let back = parse(&row.dump()).unwrap();
+        assert_eq!(recheck_pull(&back), Ok(1));
+    }
+
+    #[test]
+    fn recheck_flags_a_tampered_score() {
+        let mut row = pull_row(0.5, 2.0, 9.0, 2.0);
+        // nudge the recorded score by one ulp's worth of noise
+        if let Some(Json::Arr(arms)) = row.get("arms").cloned().into() {
+            let mut arm = arms[0].clone();
+            let s = arm.get("score").unwrap().as_f64().unwrap();
+            arm.insert("score", Json::num(s + 1e-12));
+            row.insert("arms", Json::Arr(vec![arm]));
+        }
+        assert!(recheck_pull(&row).is_err());
+    }
+
+    #[test]
+    fn recheck_rejects_non_pull_rows() {
+        let row = Json::obj(vec![("kind", Json::str("covering"))]);
+        assert!(recheck_pull(&row).is_err());
+    }
+}

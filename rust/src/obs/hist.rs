@@ -38,6 +38,19 @@ fn index(v: u64) -> usize {
     (h - 2) * SUBS + sub
 }
 
+/// Inclusive upper bound of a bucket's value range — the `le` edge the
+/// Prometheus text exporter emits for cumulative bucket series.
+pub fn bucket_upper(idx: usize) -> u64 {
+    if idx < LINEAR_CUTOFF as usize {
+        return idx as u64;
+    }
+    let major = idx / SUBS;
+    let sub = (idx % SUBS) as u64;
+    let h = major + 2;
+    let lo = (1u64 << h) | (sub << (h - 3));
+    lo + ((1u64 << (h - 3)) - 1)
+}
+
 /// Midpoint of the bucket's value range — the representative returned
 /// by percentile queries.
 fn midpoint(idx: usize) -> u64 {
@@ -222,5 +235,61 @@ mod tests {
     fn empty_snapshot_is_zeroed() {
         let s = Histogram::new().snapshot();
         assert_eq!((s.count, s.min, s.max, s.p50, s.p99), (0, 0, 0, 0, 0));
+        assert_eq!(s.mean, 0.0);
+        assert!(s.buckets.iter().all(|&n| n == 0));
+    }
+
+    #[test]
+    fn single_sample_pins_every_percentile() {
+        let h = Histogram::new();
+        h.record(42);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!((s.min, s.max), (42, 42));
+        // min/max clamping pins all percentiles to the lone sample
+        assert_eq!((s.p50, s.p90, s.p95, s.p99), (42, 42, 42, 42));
+        assert_eq!(s.mean, 42.0);
+    }
+
+    #[test]
+    fn merge_with_saturated_top_bucket() {
+        // both histograms hold u64::MAX — the top occupied bucket —
+        // so the merged sum wraps mod 2^64 but counts, min/max and the
+        // bucket table stay exact
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(u64::MAX);
+        a.record(1);
+        b.record(u64::MAX);
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, u64::MAX);
+        let top = index(u64::MAX);
+        assert_eq!(s.buckets[top], 2);
+        // the top bucket's upper edge is exactly u64::MAX — no overflow
+        assert_eq!(bucket_upper(top), u64::MAX);
+        // p99 must land inside the saturated top bucket, never above max
+        assert_eq!(index(s.p99), top);
+        assert!(s.p99 <= s.max);
+    }
+
+    #[test]
+    fn bucket_upper_is_the_inclusive_edge() {
+        // exact unit buckets: upper == value
+        for v in 0..LINEAR_CUTOFF {
+            assert_eq!(bucket_upper(index(v)), v);
+        }
+        for idx in 0..496 {
+            let upper = bucket_upper(idx);
+            // the edge belongs to its own bucket…
+            assert_eq!(index(upper), idx, "idx {idx}");
+            // …and the next value crosses into the next bucket
+            if upper < u64::MAX {
+                assert_eq!(index(upper + 1), idx + 1, "idx {idx}");
+            }
+            assert!(upper >= midpoint(idx).saturating_sub(1));
+        }
     }
 }

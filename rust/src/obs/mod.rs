@@ -20,14 +20,20 @@
 //! Wall-clock here is [`Instant`] (monotonic) only; nothing observable
 //! in the deterministic artifacts depends on it.
 
+pub mod decision;
 pub mod hist;
+pub mod regret;
+pub mod trace;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+pub use decision::DecisionLedger;
 pub use hist::{HistSnapshot, Histogram};
+pub use regret::{CoveringRecord, RegretAccum};
+pub use trace::TraceSink;
 
 use crate::util::json::Json;
 
@@ -52,6 +58,16 @@ pub struct Recorder {
     hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
     /// `Some` when the span/event stream was requested.
     events: Option<Mutex<Vec<Event>>>,
+    /// `Some` when causal span tracing was requested (`--obs trace`).
+    trace: Option<Arc<TraceSink>>,
+    /// `Some` when the per-pull decision ledger was requested
+    /// (`--obs events|trace`; never in the benched `--obs on` config).
+    decisions: Option<DecisionLedger>,
+    /// Cross-run regret curves (populated by serve workers / the repro
+    /// runner, empty otherwise).
+    regret: Mutex<RegretAccum>,
+    /// Per-re-clustering covering diagnostics from the policy loop.
+    covering: Mutex<Vec<CoveringRecord>>,
 }
 
 impl std::fmt::Debug for Recorder {
@@ -78,15 +94,30 @@ impl Recorder {
             counters: Mutex::new(BTreeMap::new()),
             hists: Mutex::new(BTreeMap::new()),
             events: None,
+            trace: None,
+            decisions: None,
+            regret: Mutex::new(RegretAccum::default()),
+            covering: Mutex::new(Vec::new()),
         }
     }
 
     /// Enabled recorder that additionally buffers a span/event stream
-    /// for `events.jsonl`.
+    /// for `events.jsonl` plus the per-pull decision ledger
+    /// (`decisions.jsonl`).
     pub fn with_events() -> Recorder {
         Recorder {
             events: Some(Mutex::new(Vec::new())),
+            decisions: Some(DecisionLedger::new()),
             ..Recorder::new()
+        }
+    }
+
+    /// Everything [`Recorder::with_events`] buffers plus the causal
+    /// span tree (`--obs trace` → `trace_events.json`).
+    pub fn with_trace() -> Recorder {
+        Recorder {
+            trace: Some(Arc::new(TraceSink::new())),
+            ..Recorder::with_events()
         }
     }
 
@@ -101,6 +132,50 @@ impl Recorder {
 
     pub fn enabled(&self) -> bool {
         self.enabled
+    }
+
+    /// The causal span sink, when tracing was requested.
+    pub fn trace(&self) -> Option<&Arc<TraceSink>> {
+        self.trace.as_ref()
+    }
+
+    /// The per-pull decision ledger, when one was requested.
+    pub fn decisions(&self) -> Option<&DecisionLedger> {
+        self.decisions.as_ref()
+    }
+
+    /// The `decisions.jsonl` stream (empty when no ledger).
+    pub fn decisions_jsonl(&self) -> String {
+        self.decisions.as_ref().map_or(String::new(), |d| d.jsonl())
+    }
+
+    /// Fold one finished run's regret curve into the cross-run mean.
+    pub fn observe_regret(&self, curve: &[f64], exact: bool) {
+        if self.enabled {
+            self.regret.lock().unwrap().observe(curve, exact);
+        }
+    }
+
+    /// Record one re-clustering's covering diagnostics.
+    pub fn observe_covering(&self, rec: CoveringRecord) {
+        if self.enabled {
+            self.covering.lock().unwrap().push(rec);
+        }
+    }
+
+    /// Covering records observed so far (cloned; tests and exporters).
+    pub fn covering_records(&self) -> Vec<CoveringRecord> {
+        self.covering.lock().unwrap().clone()
+    }
+
+    /// The `regret` section of `METRICS.json`, when any run reported.
+    pub fn regret_json(&self) -> Option<Json> {
+        let r = self.regret.lock().unwrap();
+        if r.is_empty() {
+            None
+        } else {
+            Some(r.to_json())
+        }
     }
 
     /// Resolve (creating on first use) a named counter handle.
@@ -191,6 +266,14 @@ impl Recorder {
                 mine.merge(h);
             }
         }
+        self.regret
+            .lock()
+            .unwrap()
+            .merge(&other.regret.lock().unwrap());
+        self.covering
+            .lock()
+            .unwrap()
+            .extend(other.covering.lock().unwrap().iter().cloned());
     }
 
     /// Current counter values, sorted by name.
@@ -228,16 +311,29 @@ impl Recorder {
                 .map(|(k, s)| (k.as_str(), snapshot_json(s)))
                 .collect::<Vec<_>>(),
         );
-        Json::obj(vec![
+        let mut doc = Json::obj(vec![
             ("schema_version", Json::num(METRICS_SCHEMA_VERSION as f64)),
             ("enabled", Json::Bool(self.enabled)),
             ("counters", counters),
             ("histograms", hists),
-        ])
+        ]);
+        // optional sections: present only when something reported, so
+        // existing consumers see an unchanged document otherwise
+        if let Some(r) = self.regret_json() {
+            doc.insert("regret", r);
+        }
+        let cov = self.covering.lock().unwrap();
+        if !cov.is_empty() {
+            doc.insert("covering", regret::covering_json(&cov));
+        }
+        doc
     }
 
     /// The optional `events.jsonl` stream: one compact JSON object per
     /// line, in emission order. Empty string when the stream is off.
+    /// When the span sink is live its tree is appended as `span_tree`
+    /// lines (the jsonl twin of the Chrome export, consumed by
+    /// `kernelband metrics perfetto`).
     pub fn events_jsonl(&self) -> String {
         let Some(buf) = &self.events else {
             return String::new();
@@ -252,13 +348,39 @@ impl Recorder {
             out.push_str(&line.dump());
             out.push('\n');
         }
+        if let Some(sink) = &self.trace {
+            for s in sink.snapshot() {
+                let line = Json::obj(vec![
+                    ("at_us", Json::num(s.start_us as f64)),
+                    ("kind", Json::str("span_tree")),
+                    ("fields", trace::span_fields(&s)),
+                ]);
+                out.push_str(&line.dump());
+                out.push('\n');
+            }
+        }
         out
     }
 }
 
 /// JSON summary of one histogram (units are whatever the metric name's
-/// suffix says, `_us` by convention for spans and latencies).
+/// suffix says, `_us` by convention for spans and latencies). The
+/// `buckets` array lists only occupied buckets as `[upper_bound,
+/// count]` pairs — the Prometheus exporter turns these into cumulative
+/// `le` series without re-deriving the bucket layout.
 fn snapshot_json(s: &HistSnapshot) -> Json {
+    let buckets: Vec<Json> = s
+        .buckets
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n > 0)
+        .map(|(i, &n)| {
+            Json::Arr(vec![
+                Json::num(hist::bucket_upper(i) as f64),
+                Json::num(n as f64),
+            ])
+        })
+        .collect();
     Json::obj(vec![
         ("count", Json::num(s.count as f64)),
         ("sum", Json::num(s.sum as f64)),
@@ -269,6 +391,7 @@ fn snapshot_json(s: &HistSnapshot) -> Json {
         ("p90", Json::num(s.p90 as f64)),
         ("p95", Json::num(s.p95 as f64)),
         ("p99", Json::num(s.p99 as f64)),
+        ("buckets", Json::Arr(buckets)),
     ])
 }
 

@@ -1,0 +1,320 @@
+//! Causal span tree: `(trace_id, span_id, parent_id)` for every event.
+//!
+//! PR 7's counters and histograms say *how much* happened; this sink
+//! records *why* — each serve request, round, job, policy iteration,
+//! gateway round-trip and measurement is a span whose `parent_id`
+//! points at the decision that caused it, so the whole run forms one
+//! causality tree. The sink is advisory like the rest of the bus: it
+//! consumes no RNG, its output never lands in `BENCH_*.json` or
+//! `trace.jsonl`, and it only exists at all under `--obs trace`.
+//!
+//! Two export shapes share one record type:
+//!
+//! * `trace_events.json` — Chrome-trace-event JSON (the Perfetto /
+//!   `chrome://tracing` format): spans as `ph:"X"` complete events,
+//!   instants as `ph:"i"`, one `tid` (track) per sequential execution
+//!   lane. Load it at `ui.perfetto.dev` directly.
+//! * `events.jsonl` `span_tree` lines — one compact object per span,
+//!   interleaved with the PR 7 event stream so `kernelband metrics
+//!   perfetto` can rebuild the Chrome JSON from a jsonl file alone.
+//!
+//! Timestamps are captured *inside* the sink lock, so emission order is
+//! globally start-time-sorted — in particular the per-track
+//! subsequences are monotone, which `scripts/check_trace_events.py`
+//! asserts.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Single-process runs carry one trace; the id exists so multi-process
+/// aggregation has a namespace to disambiguate on.
+pub const TRACE_ID: u64 = 1;
+
+/// Track (Perfetto `tid`) of the serve request/round lane. Job lanes
+/// are `TRACK_JOBS + seq` so concurrent jobs never interleave on one
+/// track (monotone-ts-per-track is a validator invariant).
+pub const TRACK_SERVE: u64 = 1;
+pub const TRACK_JOBS: u64 = 16;
+
+/// One node of the causality tree. `parent_id == 0` means root.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    pub span_id: u64,
+    pub parent_id: u64,
+    /// Sequential execution lane (Perfetto `tid`).
+    pub track: u64,
+    pub name: String,
+    pub start_us: u64,
+    /// `None` while the span is still open at snapshot time.
+    pub dur_us: Option<u64>,
+    /// `true` for point events (`ph:"i"` in the Chrome export).
+    pub instant: bool,
+    pub args: Json,
+}
+
+struct SinkState {
+    spans: Vec<SpanRecord>,
+    /// Open spans: `span_id -> index into spans`.
+    open: BTreeMap<u64, usize>,
+}
+
+/// Lock-per-emission span sink. Emission is off every deterministic
+/// path's hot loop (iteration granularity at the finest), so a mutex is
+/// plenty; ids are allocated from one atomic so they are unique across
+/// every thread that shares the sink.
+pub struct TraceSink {
+    epoch: Instant,
+    next_id: AtomicU64,
+    state: Mutex<SinkState>,
+}
+
+impl Default for TraceSink {
+    fn default() -> TraceSink {
+        TraceSink::new()
+    }
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            state: Mutex::new(SinkState {
+                spans: Vec::new(),
+                open: BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// Open a span under `parent` (0 = root) on `track`; returns the
+    /// new span id for children to attach to.
+    pub fn begin(&self, name: &str, parent: u64, track: u64, args: Json) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.state.lock().unwrap();
+        // captured inside the lock: emission order == start order
+        let start_us = self.epoch.elapsed().as_micros() as u64;
+        let idx = st.spans.len();
+        st.spans.push(SpanRecord {
+            span_id: id,
+            parent_id: parent,
+            track,
+            name: name.to_string(),
+            start_us,
+            dur_us: None,
+            instant: false,
+            args,
+        });
+        st.open.insert(id, idx);
+        id
+    }
+
+    /// Close a span opened with [`TraceSink::begin`]. Unknown ids are
+    /// ignored (double-close is harmless by construction).
+    pub fn end(&self, id: u64) {
+        let mut st = self.state.lock().unwrap();
+        let now = self.epoch.elapsed().as_micros() as u64;
+        if let Some(idx) = st.open.remove(&id) {
+            let s = &mut st.spans[idx];
+            s.dur_us = Some(now.saturating_sub(s.start_us));
+        }
+    }
+
+    /// Record a point event under `parent`.
+    pub fn instant(&self, name: &str, parent: u64, track: u64, args: Json) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.state.lock().unwrap();
+        let start_us = self.epoch.elapsed().as_micros() as u64;
+        st.spans.push(SpanRecord {
+            span_id: id,
+            parent_id: parent,
+            track,
+            name: name.to_string(),
+            start_us,
+            dur_us: Some(0),
+            instant: true,
+            args,
+        });
+    }
+
+    /// Point-in-time copy of the tree, still-open spans clocked as of
+    /// now (export while a server is live stays well-formed).
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let st = self.state.lock().unwrap();
+        let now = self.epoch.elapsed().as_micros() as u64;
+        st.spans
+            .iter()
+            .map(|s| {
+                let mut s = s.clone();
+                if s.dur_us.is_none() {
+                    s.dur_us = Some(now.saturating_sub(s.start_us));
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// The Chrome-trace-event document for this sink's current tree.
+    pub fn chrome_trace_json(&self) -> Json {
+        chrome_trace_from_spans(&self.snapshot())
+    }
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.state.lock().unwrap();
+        write!(f, "TraceSink(spans={}, open={})", st.spans.len(), st.open.len())
+    }
+}
+
+/// The `events.jsonl` `span_tree` line for one span (the jsonl twin of
+/// the Chrome export; [`span_from_fields`] round-trips it).
+pub fn span_fields(s: &SpanRecord) -> Json {
+    Json::obj(vec![
+        ("span_id", Json::num(s.span_id as f64)),
+        ("parent_id", Json::num(s.parent_id as f64)),
+        ("track", Json::num(s.track as f64)),
+        ("name", Json::str(s.name.clone())),
+        ("start_us", Json::num(s.start_us as f64)),
+        ("dur_us", Json::num(s.dur_us.unwrap_or(0) as f64)),
+        ("instant", Json::Bool(s.instant)),
+        ("args", s.args.clone()),
+    ])
+}
+
+/// Parse one `span_tree` fields object back into a [`SpanRecord`].
+pub fn span_from_fields(fields: &Json) -> Option<SpanRecord> {
+    Some(SpanRecord {
+        span_id: fields.get("span_id")?.as_f64()? as u64,
+        parent_id: fields.get("parent_id")?.as_f64()? as u64,
+        track: fields.get("track")?.as_f64()? as u64,
+        name: fields.get("name")?.as_str()?.to_string(),
+        start_us: fields.get("start_us")?.as_f64()? as u64,
+        dur_us: Some(fields.get("dur_us")?.as_f64()? as u64),
+        instant: matches!(fields.get("instant"), Some(Json::Bool(true))),
+        args: fields.get("args").cloned().unwrap_or(Json::Null),
+    })
+}
+
+/// Build the Chrome-trace-event JSON document
+/// (`{"displayTimeUnit":"ms","traceEvents":[...]}`) from span records.
+/// Spans become `ph:"X"` complete events, instants `ph:"i"`; every
+/// event's `args` carries `(trace_id, span_id, parent_id)` so the
+/// causality tree survives the format round-trip.
+pub fn chrome_trace_from_spans(spans: &[SpanRecord]) -> Json {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            let mut args = Json::obj(vec![
+                ("trace_id", Json::num(TRACE_ID as f64)),
+                ("span_id", Json::num(s.span_id as f64)),
+                ("parent_id", Json::num(s.parent_id as f64)),
+            ]);
+            if let Json::Obj(extra) = &s.args {
+                for (k, v) in extra {
+                    args.insert(k, v.clone());
+                }
+            }
+            let mut ev = Json::obj(vec![
+                ("name", Json::str(s.name.clone())),
+                ("cat", Json::str("kernelband")),
+                ("ts", Json::num(s.start_us as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(s.track as f64)),
+                ("args", args),
+            ]);
+            if s.instant {
+                ev.insert("ph", Json::str("i"));
+                ev.insert("s", Json::str("t"));
+            } else {
+                ev.insert("ph", Json::str("X"));
+                ev.insert("dur", Json::num(s.dur_us.unwrap_or(0) as f64));
+            }
+            ev
+        })
+        .collect();
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_form_a_tree_and_close() {
+        let sink = TraceSink::new();
+        let root = sink.begin("serve.request", 0, TRACK_SERVE, Json::Null);
+        let round = sink.begin("serve.round", root, TRACK_SERVE, Json::Null);
+        sink.instant("pull", round, TRACK_SERVE, Json::Null);
+        sink.end(round);
+        sink.end(root);
+        let spans = sink.snapshot();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].parent_id, 0);
+        assert_eq!(spans[1].parent_id, spans[0].span_id);
+        assert_eq!(spans[2].parent_id, spans[1].span_id);
+        assert!(spans.iter().all(|s| s.dur_us.is_some()));
+        // ids unique
+        let mut ids: Vec<u64> = spans.iter().map(|s| s.span_id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 3);
+    }
+
+    #[test]
+    fn open_spans_are_clocked_at_snapshot() {
+        let sink = TraceSink::new();
+        let id = sink.begin("x", 0, 1, Json::Null);
+        let spans = sink.snapshot();
+        assert_eq!(spans[0].span_id, id);
+        assert!(spans[0].dur_us.is_some());
+    }
+
+    #[test]
+    fn chrome_export_carries_causality_args() {
+        let sink = TraceSink::new();
+        let a = sink.begin("a", 0, 1, Json::obj(vec![("k", Json::str("v"))]));
+        sink.instant("b", a, 1, Json::Null);
+        sink.end(a);
+        let doc = sink.chrome_trace_json();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[1].get("ph").unwrap().as_str(), Some("i"));
+        let args = evs[0].get("args").unwrap();
+        assert_eq!(args.get("parent_id").unwrap().as_f64(), Some(0.0));
+        assert_eq!(args.get("k").unwrap().as_str(), Some("v"));
+        assert_eq!(
+            evs[1].get("args").unwrap().get("parent_id").unwrap().as_f64(),
+            Some(a as f64)
+        );
+    }
+
+    #[test]
+    fn span_fields_round_trip() {
+        let sink = TraceSink::new();
+        let a = sink.begin("a", 0, 3, Json::Null);
+        sink.end(a);
+        let rec = &sink.snapshot()[0];
+        let back = span_from_fields(&span_fields(rec)).unwrap();
+        assert_eq!(&back, rec);
+    }
+
+    #[test]
+    fn timestamps_are_monotone_in_emission_order() {
+        let sink = TraceSink::new();
+        for i in 0..32 {
+            let id = sink.begin("s", 0, 1 + (i % 3), Json::Null);
+            sink.end(id);
+        }
+        let spans = sink.snapshot();
+        for w in spans.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us);
+        }
+    }
+}

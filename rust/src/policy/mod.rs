@@ -72,7 +72,8 @@ use crate::sched::adaptive::AimdController;
 use crate::sched::{batch as sched_batch, centroids as sched_centroids,
                    profiles as sched_profiles, BatchMode, SchedContext};
 use crate::store::warm::TaskWarmStart;
-use crate::strategy::{Strategy, NUM_STRATEGIES};
+use crate::strategy::{Strategy, ALL_STRATEGIES, NUM_STRATEGIES};
+use crate::util::json::Json;
 use crate::util::hash::KeyHasher;
 use crate::verify::{verify_outcome, Verdict};
 use crate::workload::TaskSpec;
@@ -437,6 +438,23 @@ impl KernelBand {
         // attached every hook is a single branch. Strictly
         // observational — the hooks consume no RNG and steer nothing.
         let hooks = crate::obs::PolicyHooks::new(ctx.obs.as_deref());
+        // Causal tracing + decision ledger (`--obs events|trace`):
+        // resolved once per run. Both are `None` under the benched
+        // `--obs on` configuration (plain `Recorder::new`), so the ≤2%
+        // overhead gate never pays for them; like every other hook they
+        // consume no RNG and steer nothing.
+        let obs_rec = ctx.obs.as_deref().filter(|r| r.enabled());
+        let ledger = obs_rec.and_then(|r| r.decisions());
+        let sink = obs_rec.and_then(|r| r.trace());
+        let job_parent = ctx.job.as_ref().map_or(0, |j| j.span);
+        let job_track = ctx.job.as_ref().map_or(
+            crate::obs::trace::TRACK_JOBS + task.id as u64,
+            |j| j.track,
+        );
+        let job_label: String = ctx
+            .job
+            .as_ref()
+            .map_or_else(|| task.name.clone(), |j| j.label.to_string());
         let rng = root.split("kernelband", task.id as u64);
         let freeform = matches!(
             cfg.mode,
@@ -581,6 +599,14 @@ impl KernelBand {
                 }
             }
             let iter_span = hooks.iter_us.start();
+            let iter_tspan = sink.map(|s| {
+                s.begin(
+                    "policy.iter",
+                    job_parent,
+                    job_track,
+                    Json::obj(vec![("t", Json::num(t as f64))]),
+                )
+            });
             // the width this iteration plans (constant in Fixed mode);
             // on replay the controller re-derives the recorded width
             // from the replayed outcome counts
@@ -712,19 +738,34 @@ impl KernelBand {
                     }
                 }
                 state.rebuild(&clustering, cluster_sigs);
+                // Theorem-1 observables at the moment the covering
+                // changes: radii, effective covering number, empirical
+                // Lipschitz ratio. One O(n) pass per re-clustering.
+                if let Some(r) = obs_rec {
+                    r.observe_covering(crate::obs::regret::covering_record(
+                        t,
+                        &clustering,
+                        &front.phis,
+                        &front.latencies,
+                    ));
+                }
             }
 
             // --- lines 12–15: hardware-masked arm selection (the masks
             // are maintained incrementally by ClusterState)
+            // `Some(fallback_fired)` when the UCB path ran (the decision
+            // ledger only has arms to explain in the UCB modes)
+            let mut ucb_fallback: Option<bool> = None;
             let (cluster_id, strategy, prompt_mode) = match cfg.mode {
                 PolicyMode::Full
                 | PolicyMode::NoClustering
                 | PolicyMode::NoProfiling => {
                     // flattened masked max-reduce scan — bit-identical
                     // selection to the branchy reference (§Perf)
-                    let (ci, s) = self
+                    let first = self
                         .ucb
-                        .select_masked_reduce(&stats, t, state.mask())
+                        .select_masked_reduce(&stats, t, state.mask());
+                    let (ci, s) = first
                         // all-saturated fallback: drop the hardware masks
                         // but never select an empty cluster's arm
                         .or_else(|| {
@@ -733,6 +774,7 @@ impl KernelBand {
                             )
                         })
                         .expect("frontier is non-empty");
+                    ucb_fallback = Some(first.is_none());
                     (ci, Some(s), PromptMode::Strategy(s))
                 }
                 PolicyMode::LlmStrategySelection => {
@@ -764,6 +806,63 @@ impl KernelBand {
                     .cluster_size
                     .record(state.members(cluster_id).len() as u64);
             }
+            if let Some(s) = sink {
+                s.instant(
+                    "policy.pull",
+                    iter_tspan.unwrap_or(job_parent),
+                    job_track,
+                    Json::obj(vec![
+                        ("cluster", Json::num(cluster_id as f64)),
+                        (
+                            "strategy",
+                            strategy.map_or(Json::Null, |s| Json::str(s.name())),
+                        ),
+                    ]),
+                );
+            }
+            // §Decision ledger: snapshot every arm's UCB score at pick
+            // time. `MaskedUcb::index` is bit-identical to the reduce
+            // scan's inlined expression (property-tested), so `explain`
+            // can later demand exact reconstruction.
+            let mut softmax_rows: Vec<Json> = Vec::new();
+            let pull_arms: Option<Vec<Json>> =
+                match (ledger, ucb_fallback) {
+                    (Some(_), Some(_)) => {
+                        let mask = state.mask();
+                        let nonempty = state.nonempty();
+                        let mut arms = Vec::new();
+                        for ci in 0..stats.clusters() {
+                            for (si, st) in ALL_STRATEGIES.iter().enumerate()
+                            {
+                                let i = ci * NUM_STRATEGIES + si;
+                                let reason = if mask[i] {
+                                    "open"
+                                } else if nonempty[i] {
+                                    "saturated"
+                                } else {
+                                    "empty"
+                                };
+                                arms.push(Json::obj(vec![
+                                    ("cluster", Json::num(ci as f64)),
+                                    ("strategy", Json::str(st.name())),
+                                    ("mu", Json::num(stats.mu[i])),
+                                    ("n", Json::num(stats.n[i])),
+                                    (
+                                        "score",
+                                        Json::num(self.ucb.index(
+                                            stats.mu[i],
+                                            stats.n[i],
+                                            t as f64,
+                                        )),
+                                    ),
+                                    ("reason", Json::str(reason)),
+                                ]));
+                            }
+                        }
+                        Some(arms)
+                    }
+                    _ => None,
+                };
 
             // --- lines 16–18, batched: plan `batch` (parent, proposal)
             // slots against the iteration-entry frontier. Slot 0 draws
@@ -804,10 +903,56 @@ impl KernelBand {
                         pick_w.extend(pool.iter().map(|&m| {
                             front.sigs[m].headroom(s, cfg.theta_sat)
                         }));
+                        // ledger: pool + raw headrooms at pick time (the
+                        // in-place softmax overwrites the buffer)
+                        let snap = pull_arms
+                            .is_some()
+                            .then(|| (pool.to_vec(), pick_w.clone()));
                         let pick = softmax_kernel_pick_in_place(
                             &mut pick_w,
                             &mut sched_batch::slot_rng(&rng, "pick", t, b),
                         );
+                        if let Some((pool_ids, headrooms)) = snap {
+                            // after the draw the buffer holds the
+                            // unnormalized exp weights; normalize a copy
+                            let total: f64 = pick_w.iter().sum();
+                            let weights: Vec<Json> = pick_w
+                                .iter()
+                                .map(|&w| {
+                                    Json::num(if total > 0.0 {
+                                        w / total
+                                    } else {
+                                        0.0
+                                    })
+                                })
+                                .collect();
+                            softmax_rows.push(Json::obj(vec![
+                                ("slot", Json::num(b as f64)),
+                                (
+                                    "pool",
+                                    Json::Arr(
+                                        pool_ids
+                                            .iter()
+                                            .map(|&m| Json::num(m as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "headroom",
+                                    Json::Arr(
+                                        headrooms
+                                            .iter()
+                                            .map(|&h| Json::num(h))
+                                            .collect(),
+                                    ),
+                                ),
+                                ("weight", Json::Arr(weights)),
+                                (
+                                    "picked",
+                                    Json::num(pool_ids[pick] as f64),
+                                ),
+                            ]));
+                        }
                         pool[pick]
                     }
                 };
@@ -824,10 +969,25 @@ impl KernelBand {
                             sim: engine.gpu(),
                             iterative: true,
                         };
-                        llm.propose(
+                        let gspan = sink.map(|s| {
+                            s.begin(
+                                "gateway.propose",
+                                iter_tspan.unwrap_or(job_parent),
+                                job_track,
+                                Json::obj(vec![
+                                    ("slot", Json::num(b as f64)),
+                                    ("parent", Json::num(parent_idx as f64)),
+                                ]),
+                            )
+                        });
+                        let p = llm.propose(
                             &req,
                             &mut sched_batch::slot_rng(&rng, "gen", t, b),
-                        )
+                        );
+                        if let (Some(s), Some(id)) = (sink, gspan) {
+                            s.end(id);
+                        }
+                        p
                     }
                 };
                 slot_verdict.push(verify_outcome(proposal.outcome));
@@ -870,6 +1030,65 @@ impl KernelBand {
             hooks.slots_failed_verification.add(
                 slot_verdict.iter().filter(|v| !v.passed()).count() as u64,
             );
+            // §Decision ledger: the completed pull row — arms at pick
+            // time, per-slot softmax, and every slot's Assumption-1
+            // verdict (bound value vs `prune_factor × best`).
+            if let (Some(led), Some(arms)) = (ledger, pull_arms) {
+                let slots: Vec<Json> = (0..batch)
+                    .map(|b| {
+                        let p = slot_parent[b];
+                        // slot 0 is admitted unconditionally when it
+                        // verifies — no bound is ever evaluated for it
+                        let bound = if b == 0 {
+                            Json::Null
+                        } else {
+                            Json::num(sched_batch::latency_bound(
+                                front.latencies[p],
+                                &front.sigs[p],
+                                strategy,
+                            ))
+                        };
+                        Json::obj(vec![
+                            ("slot", Json::num(b as f64)),
+                            ("parent", Json::num(p as f64)),
+                            (
+                                "verified",
+                                Json::Bool(slot_verdict[b].passed()),
+                            ),
+                            ("bound", bound),
+                            (
+                                "threshold",
+                                Json::num(cfg.prune_factor * entry_best_t),
+                            ),
+                            ("admitted", Json::Bool(admitted[b])),
+                        ])
+                    })
+                    .collect();
+                led.record(Json::obj(vec![
+                    ("kind", Json::str("pull")),
+                    ("job", Json::str(job_label.clone())),
+                    ("task", Json::str(task.name.clone())),
+                    ("task_id", Json::num(task.id as f64)),
+                    ("t", Json::num(t as f64)),
+                    ("ucb_c", Json::num(self.ucb.c)),
+                    ("fallback", Json::Bool(ucb_fallback == Some(true))),
+                    (
+                        "chosen",
+                        Json::obj(vec![
+                            ("cluster", Json::num(cluster_id as f64)),
+                            (
+                                "strategy",
+                                strategy.map_or(Json::Null, |s| {
+                                    Json::str(s.name())
+                                }),
+                            ),
+                        ]),
+                    ),
+                    ("arms", Json::Arr(arms)),
+                    ("softmax", Json::Arr(softmax_rows)),
+                    ("slots", Json::Arr(slots)),
+                ]));
+            }
 
             // --- lines 19–20, fused: one engine call measures every
             // admitted slot — the shape loop runs once per batch. On
@@ -899,6 +1118,21 @@ impl KernelBand {
                         m_slot.push(b);
                     }
                 }
+                let mspan = (!m_cfgs.is_empty())
+                    .then(|| {
+                        sink.map(|s| {
+                            s.begin(
+                                "engine.measure",
+                                iter_tspan.unwrap_or(job_parent),
+                                job_track,
+                                Json::obj(vec![(
+                                    "slots",
+                                    Json::num(m_cfgs.len() as f64),
+                                )]),
+                            )
+                        })
+                    })
+                    .flatten();
                 if m_cfgs.len() == 1 {
                     // degenerate single-survivor batch (always the case
                     // at batch = 1): the direct `measure` call is
@@ -914,6 +1148,9 @@ impl KernelBand {
                     for (&b, m) in m_slot.iter().zip(measured) {
                         slot_meas[b] = Some(m);
                     }
+                }
+                if let (Some(s), Some(id)) = (sink, mspan) {
+                    s.end(id);
                 }
             }
 
@@ -1035,6 +1272,9 @@ impl KernelBand {
                 batch_width: batch,
             });
             width_ctl.observe(batch - 1, spec_wasted);
+            if let (Some(s), Some(id)) = (sink, iter_tspan) {
+                s.end(id);
+            }
             hooks.iter_us.stop(iter_span);
         }
 

@@ -118,6 +118,23 @@ pub struct SchedContext {
     /// never alters RNG streams, scheduling, or any deterministic
     /// artifact (asserted in `rust/tests/obs.rs`).
     pub obs: Option<Arc<crate::obs::Recorder>>,
+    /// Causal-trace anchor for this job: where the policy loop's
+    /// iteration spans and decision-ledger rows attach. Advisory like
+    /// `obs`; `None` outside `--obs trace`/`events` executions.
+    pub job: Option<JobObs>,
+}
+
+/// Per-job observation anchor: the span the policy's iteration spans
+/// parent under, the Perfetto track (sequential lane) they render on,
+/// and a human-readable label for decision-ledger rows.
+#[derive(Debug, Clone)]
+pub struct JobObs {
+    /// Parent span id (0 = root) in the recorder's [`crate::obs::TraceSink`].
+    pub span: u64,
+    /// Perfetto track (`tid`) of this job's sequential lane.
+    pub track: u64,
+    /// Job label (e.g. `"r2/j5 task-name"`) stamped on ledger rows.
+    pub label: Arc<str>,
 }
 
 impl SchedContext {

@@ -610,7 +610,28 @@ pub(crate) fn run_serve(
         specs: &req.jobs,
         store,
         workers: req.workers,
+        round_span: std::sync::atomic::AtomicU64::new(0),
     };
+    // causal trace root (`--obs trace`): request → round → job spans;
+    // advisory, so the deterministic report bytes never see it
+    let sink = store.recorder().and_then(|r| r.trace().cloned());
+    let req_span = sink.as_ref().map(|s| {
+        s.begin(
+            "serve.request",
+            0,
+            crate::obs::trace::TRACK_SERVE,
+            crate::util::json::Json::obj(vec![
+                (
+                    "tenants",
+                    crate::util::json::Json::num(tenants_n as f64),
+                ),
+                (
+                    "jobs",
+                    crate::util::json::Json::num(req.jobs.len() as f64),
+                ),
+            ]),
+        )
+    });
     // advisory queue telemetry: noop handles when no recorder is
     // attached, so the closed-loop hot path pays a single branch
     let (qwait_h, lat_h) = match store.recorder() {
@@ -666,10 +687,36 @@ pub(crate) fn run_serve(
                     );
                 }
             }
+            let round_tspan = sink.as_ref().map(|s| {
+                s.begin(
+                    "serve.round",
+                    req_span.unwrap_or(0),
+                    crate::obs::trace::TRACK_SERVE,
+                    crate::util::json::Json::obj(vec![
+                        (
+                            "round",
+                            crate::util::json::Json::num(rounds as f64),
+                        ),
+                        (
+                            "jobs",
+                            crate::util::json::Json::num(
+                                live.len() as f64,
+                            ),
+                        ),
+                    ]),
+                )
+            });
+            env.round_span.store(
+                round_tspan.unwrap_or(0),
+                Ordering::Relaxed,
+            );
             let exec_start = t0.elapsed().as_secs_f64();
             let (mut results, record_batches) =
                 exec_round(&env, &live, rounds);
             let exec_end = t0.elapsed().as_secs_f64();
+            if let (Some(s), Some(id)) = (&sink, round_tspan) {
+                s.end(id);
+            }
             for job in &live {
                 let a = arrival_s(job.seq);
                 let wait = (exec_start - a).max(0.0);
@@ -689,6 +736,9 @@ pub(crate) fn run_serve(
             jobs.append(&mut results);
         }
         rounds += 1;
+    }
+    if let (Some(s), Some(id)) = (&sink, req_span) {
+        s.end(id);
     }
     let wall_s = t0.elapsed().as_secs_f64();
 

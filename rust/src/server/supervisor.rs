@@ -123,11 +123,48 @@ fn attempt(env: &ExecEnv<'_>, job: &Job, round: usize,
         CachedEngine::new(SimEngine::new(spec.device), env.store.clone());
     let llm =
         CachedLlm::new(SurrogateLlm::new(spec.llm), env.store.clone());
+    // same causal-trace anchor as the in-process worker: the attempt's
+    // job span parents under the current round span and each job keeps
+    // its own track lane
+    let rec = env.store.recorder();
+    let track = crate::obs::trace::TRACK_JOBS + job.seq as u64;
+    let jspan = rec.as_ref().and_then(|r| r.trace()).map(|s| {
+        s.begin(
+            "serve.job",
+            env.round_span.load(std::sync::atomic::Ordering::Relaxed),
+            track,
+            crate::util::json::Json::obj(vec![
+                (
+                    "seq",
+                    crate::util::json::Json::num(job.seq as f64),
+                ),
+                (
+                    "tenant",
+                    crate::util::json::Json::num(job.tenant as f64),
+                ),
+                (
+                    "task",
+                    crate::util::json::Json::str(task.name.clone()),
+                ),
+            ]),
+        )
+    });
+    let job_obs = rec
+        .as_ref()
+        .filter(|r| r.trace().is_some() || r.decisions().is_some())
+        .map(|_| crate::sched::JobObs {
+            span: jspan.unwrap_or(0),
+            track,
+            label: std::sync::Arc::from(
+                format!("r{round}/j{} {}", job.seq, task.name).as_str(),
+            ),
+        });
     let ctx = SchedContext {
         mode: spec.batch,
         centroids: Some(env.store.session_centroids()),
         profiles: Some(env.store.profiles()),
-        obs: env.store.recorder(),
+        obs: rec.clone(),
+        job: job_obs,
     };
     let mut cfg = PolicyConfig::default();
     cfg.iterations = spec.iterations;
@@ -176,6 +213,11 @@ fn attempt(env: &ExecEnv<'_>, job: &Job, round: usize,
             &mut ctl,
         )
     };
+    if let (Some(r), Some(id)) = (&rec, jspan) {
+        if let Some(s) = r.trace() {
+            s.end(id);
+        }
+    }
     if !run.completed {
         return AttemptOut {
             result: None,
@@ -187,6 +229,16 @@ fn attempt(env: &ExecEnv<'_>, job: &Job, round: usize,
     }
     env.store.ckpt_retire(fp);
     let trace = run.trace;
+    // online regret for the completed attempt (exact on grammar tasks)
+    if let Some(r) = rec.as_ref().filter(|r| r.enabled()) {
+        let oracle = crate::obs::regret::latent_oracle_latency_s(
+            task,
+            spec.device,
+        );
+        let (curve, exact) =
+            crate::obs::regret::regret_curve(&trace, oracle);
+        r.observe_regret(&curve, exact);
+    }
     // same pure-replay guard as the in-process worker: a run served
     // entirely from cache appends no duplicate trace records
     let fresh = engine.local_sims() + llm.local_sims() > 0;

@@ -26,14 +26,18 @@
 //! fields are kept out of the byte-compared artifact sections.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::engine::SimEngine;
 use crate::llm::SurrogateLlm;
+use crate::obs::regret as obs_regret;
+use crate::obs::trace::TRACK_JOBS;
 use crate::policy::{KernelBand, PolicyConfig};
 use crate::rng::Rng;
-use crate::sched::SchedContext;
+use crate::sched::{JobObs, SchedContext};
+use crate::util::json::Json;
 use crate::server::api::JobSpec;
 use crate::server::queue::Job;
 use crate::server::tenant::tenant_label;
@@ -55,6 +59,10 @@ pub struct ExecEnv<'a> {
     pub store: &'a Arc<TraceStore>,
     /// Worker threads per round (0 = available parallelism).
     pub workers: usize,
+    /// Span id of the round currently executing (0 = no causal trace);
+    /// `run_serve` stores it before each `exec_round` so job spans
+    /// parent under their round. Advisory, like everything obs.
+    pub round_span: AtomicU64,
 }
 
 /// Outcome of one job (executed or shared).
@@ -102,11 +110,41 @@ fn execute(env: &ExecEnv<'_>, job: &Job, round: usize)
         SurrogateLlm::new(spec.llm),
         env.store.clone(),
     );
+    // causal trace + decision-ledger anchor: each job gets its own
+    // sequential track so concurrent jobs never interleave on one lane
+    let rec = env.store.recorder();
+    let track = TRACK_JOBS + job.seq as u64;
+    let jspan = rec
+        .as_ref()
+        .and_then(|r| r.trace())
+        .map(|s| {
+            s.begin(
+                "serve.job",
+                env.round_span.load(Ordering::Relaxed),
+                track,
+                Json::obj(vec![
+                    ("seq", Json::num(job.seq as f64)),
+                    ("tenant", Json::num(job.tenant as f64)),
+                    ("task", Json::str(task.name.clone())),
+                ]),
+            )
+        });
+    let job_obs = rec
+        .as_ref()
+        .filter(|r| r.trace().is_some() || r.decisions().is_some())
+        .map(|_| JobObs {
+            span: jspan.unwrap_or(0),
+            track,
+            label: Arc::from(
+                format!("r{round}/j{} {}", job.seq, task.name).as_str(),
+            ),
+        });
     let ctx = SchedContext {
         mode: spec.batch,
         centroids: Some(env.store.session_centroids()),
         profiles: Some(env.store.profiles()),
-        obs: env.store.recorder(),
+        obs: rec.clone(),
+        job: job_obs,
     };
     let mut cfg = PolicyConfig::default();
     cfg.iterations = spec.iterations;
@@ -118,6 +156,19 @@ fn execute(env: &ExecEnv<'_>, job: &Job, round: usize)
         None,
         &ctx,
     );
+    if let (Some(r), Some(id)) = (&rec, jspan) {
+        if let Some(s) = r.trace() {
+            s.end(id);
+        }
+    }
+    // online regret vs the latent optimum: exact on grammar tasks
+    // (provable oracle from the noiseless roofline model), best-seen on
+    // the hand-built suite
+    if let Some(r) = rec.as_ref().filter(|r| r.enabled()) {
+        let oracle = obs_regret::latent_oracle_latency_s(task, spec.device);
+        let (curve, exact) = obs_regret::regret_curve(&trace, oracle);
+        r.observe_regret(&curve, exact);
+    }
     let fresh = engine.local_sims() + llm.local_sims() > 0;
     let records = fresh.then(|| {
         records_for_trace_tenant(
@@ -215,7 +266,13 @@ mod tests {
 
     fn env<'a>(tasks: &'a [TaskSpec], specs: &'a [JobSpec],
                store: &'a Arc<TraceStore>) -> ExecEnv<'a> {
-        ExecEnv { tasks, specs, store, workers: 2 }
+        ExecEnv {
+            tasks,
+            specs,
+            store,
+            workers: 2,
+            round_span: AtomicU64::new(0),
+        }
     }
 
     fn hot_tasks() -> Vec<TaskSpec> {

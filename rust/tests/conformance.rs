@@ -41,6 +41,7 @@ fn run_grammar_table3(
         session,
         batch,
         workload: Some(WorkloadOverride::from_spec(spec).unwrap()),
+        obs: None,
     };
     eval::report_opts("table3", Some(2), &opts)
         .expect("table3 exists")

@@ -61,6 +61,7 @@ fn telemetry_never_changes_deterministic_bytes() {
             ("off", None),
             ("on", Some(Recorder::new())),
             ("events", Some(Recorder::with_events())),
+            ("trace", Some(Recorder::with_trace())),
         ] {
             let dir = tmp_dir(&format!("ip_w{workers}_{tag}"));
             let store = Arc::new(TraceStore::open(&dir).unwrap());
@@ -287,6 +288,167 @@ fn percentiles_are_exact_nearest_rank() {
     let single = Percentiles::from_samples(&[0.25]);
     assert_eq!(single.p50, 0.25);
     assert_eq!(single.p99, 0.25);
+}
+
+/// Nearest-rank percentiles pinned at tiny N: with 2 or 3 samples the
+/// ranks land on exact sample values (never interpolated), matching
+/// `ceil(q·N)` clamped to `[1, N]`.
+#[test]
+fn percentiles_pin_nearest_rank_at_tiny_n() {
+    let two = Percentiles::from_samples(&[5.0, 1.0]);
+    assert_eq!(two.p50, 1.0); // ceil(0.50·2) = rank 1
+    assert_eq!(two.p95, 5.0); // ceil(0.95·2) = rank 2
+    assert_eq!(two.p99, 5.0);
+    assert_eq!(two.max, 5.0);
+    assert!((two.mean - 3.0).abs() < 1e-12);
+
+    let three = Percentiles::from_samples(&[3.0, 1.0, 2.0]);
+    assert_eq!(three.p50, 2.0); // ceil(0.50·3) = rank 2
+    assert_eq!(three.p95, 3.0); // ceil(0.95·3) = rank 3
+    assert_eq!(three.p99, 3.0);
+    assert_eq!(three.max, 3.0);
+}
+
+/// `--obs trace` on a grammar space: the run emits a well-formed causal
+/// span tree, a decision ledger whose recorded UCB scores replay
+/// bit-exact, an exact (latent-optimum) non-increasing regret series,
+/// and per-recluster covering stats — all without touching a
+/// deterministic byte (the matrix test above covers the byte side).
+#[test]
+fn trace_mode_records_tree_ledger_regret_and_covering() {
+    use kernelband::obs::decision::recheck_pull;
+    use kernelband::obs::trace::{
+        chrome_trace_from_spans, span_fields, span_from_fields,
+    };
+    use kernelband::util::json::{self as json, Json};
+    use kernelband::workload::gen::GrammarSpec;
+    use std::collections::{BTreeMap, BTreeSet};
+
+    let store = Arc::new(TraceStore::in_memory());
+    let rec = Arc::new(Recorder::with_trace());
+    store.set_recorder(rec.clone());
+    // 12 iterations crosses the recluster period (10) so covering
+    // records exist; the grammar lineage makes the regret oracle exact
+    let mut req = ServeRequest::grid(
+        1,
+        2,
+        12,
+        BatchMode::Fixed(1),
+        2,
+        Device::H20,
+        LlmProfile::DeepSeekV32,
+        7,
+    );
+    req.workers = 2;
+    req.workload =
+        Some(GrammarSpec::parse("grammar:pow2sweep").unwrap());
+    let _report = InProcess.run_report(&req, &store);
+
+    // --- span tree: parents resolve, no cycles, per-track monotone ts
+    let spans = rec.trace().expect("trace sink present").snapshot();
+    assert!(!spans.is_empty());
+    for name in
+        ["serve.request", "serve.round", "serve.job", "policy.iter"]
+    {
+        assert!(
+            spans.iter().any(|s| s.name == name),
+            "no {name} span in {:?}",
+            spans.iter().map(|s| &s.name).collect::<Vec<_>>()
+        );
+    }
+    let ids: BTreeSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    assert_eq!(ids.len(), spans.len(), "span ids not unique");
+    let parent_of: BTreeMap<u64, u64> =
+        spans.iter().map(|s| (s.span_id, s.parent_id)).collect();
+    let mut last_ts: BTreeMap<u64, u64> = BTreeMap::new();
+    for s in &spans {
+        assert!(
+            s.parent_id == 0 || ids.contains(&s.parent_id),
+            "{}: parent {} unresolved",
+            s.name,
+            s.parent_id
+        );
+        let mut seen = BTreeSet::new();
+        let mut cur = s.span_id;
+        while cur != 0 {
+            assert!(seen.insert(cur), "cycle at span {cur}");
+            cur = parent_of.get(&cur).copied().unwrap_or(0);
+        }
+        let prev = last_ts.entry(s.track).or_insert(s.start_us);
+        assert!(s.start_us >= *prev, "ts rewinds on track {}", s.track);
+        *prev = s.start_us;
+        // jsonl twin round-trips losslessly
+        assert_eq!(span_from_fields(&span_fields(s)).as_ref(), Some(s));
+    }
+    // Chrome export: one event per span, args carry the tree ids
+    let doc = chrome_trace_from_spans(&spans);
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert_eq!(events.len(), spans.len());
+    for (ev, s) in events.iter().zip(&spans) {
+        let args = ev.get("args").expect("args");
+        assert_eq!(
+            args.get("span_id").and_then(Json::as_f64),
+            Some(s.span_id as f64)
+        );
+        assert_eq!(
+            args.get("parent_id").and_then(Json::as_f64),
+            Some(s.parent_id as f64)
+        );
+    }
+
+    // --- decision ledger: every recorded score replays bit-exact
+    let jsonl = rec.decisions_jsonl();
+    assert!(!jsonl.is_empty(), "ledger empty under --obs trace");
+    let (rows, skipped) = json::parse_lines_lossy(&jsonl);
+    assert_eq!(skipped, 0);
+    let mut rechecked = 0usize;
+    for row in &rows {
+        if row.get("kind").and_then(Json::as_str) == Some("pull") {
+            rechecked += recheck_pull(row)
+                .unwrap_or_else(|e| panic!("ledger drift: {e}"));
+        }
+    }
+    assert!(rechecked > 0, "no pull rows rechecked");
+
+    // --- regret: exact oracle (grammar lineage), non-increasing curve
+    let metrics = rec.metrics_json();
+    let regret = metrics.get("regret").expect("regret section");
+    assert!(regret.f64_field("runs_exact") >= 1.0, "oracle not exact");
+    assert!(regret.f64_field("pulls") > 0.0);
+    let series: Vec<f64> = regret
+        .get("cumulative_regret_per_pull")
+        .and_then(Json::as_arr)
+        .expect("regret series")
+        .iter()
+        .filter_map(Json::as_f64)
+        .collect();
+    assert!(!series.is_empty());
+    for (a, b) in series.iter().zip(series.iter().skip(1)) {
+        assert!(*b <= *a + 1e-9, "regret curve rose: {a} -> {b}");
+        assert!(*b >= 0.0);
+    }
+
+    // --- covering: at least one recluster record with sane geometry
+    let covering = metrics
+        .get("covering")
+        .and_then(Json::as_arr)
+        .expect("covering section");
+    assert!(!covering.is_empty(), "no recluster crossed");
+    for c in covering {
+        assert!(c.f64_field("clusters") >= 1.0);
+        assert!(c.f64_field("covering_number") >= 1.0);
+        assert!(
+            c.f64_field("covering_number") <= c.f64_field("clusters")
+        );
+        assert!(
+            c.f64_field("mean_radius")
+                <= c.f64_field("max_radius") + 1e-9
+        );
+        assert!(c.f64_field("lipschitz") >= 0.0);
+    }
 }
 
 /// `METRICS.json` schema contract: version, enabled flag, numeric

@@ -575,6 +575,7 @@ fn centroid_memo_is_interleaving_invariant() {
             centroids: Some(cache.clone()),
             profiles: None,
             obs: None,
+            job: None,
         };
         let out: Vec<(usize, Trace)> = order
             .iter()
@@ -615,6 +616,7 @@ fn centroid_memo_is_interleaving_invariant() {
         centroids: Some(cache),
         profiles: None,
         obs: None,
+        job: None,
     };
     let jobs: Vec<usize> = (0..job_tasks.len()).collect();
     let parallel: Vec<Trace> = spawn_map(&jobs, |_, &j| {

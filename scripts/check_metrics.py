@@ -12,9 +12,18 @@ Checks the contract promised by `kernelband::obs::Recorder::metrics_json`
 - every histogram carries count/sum/min/max/mean/p50/p90/p95/p99, all
   non-negative finite numbers, with monotone percentiles
   p50 <= p90 <= p95 <= p99 <= max and min <= max whenever count > 0;
+- the optional `regret` section (present when the run observed bandit
+  pulls) carries non-negative counts, and its
+  `cumulative_regret_per_pull` series is non-negative and non-increasing
+  (it is a running mean of per-pull regret under a policy that only
+  improves its incumbent, so any rise beyond float tolerance is a bug);
+- the optional `covering` section is an array of per-recluster records,
+  each with finite numeric t/clusters/covering_number/max_radius/
+  mean_radius/lipschitz and mean_radius <= max_radius;
 - every `--require NAME` names a counter with value > 0 or a histogram
   with count > 0 (the CI obs-smoke run must actually have observed the
-  layers it instruments).
+  layers it instruments). `--require regret` / `--require covering`
+  instead demand that section be present and non-empty.
 
 Exits 1 on any violation. This is a *gate*: the METRICS.json document
 is advisory and never byte-compared, but its shape is load-bearing for
@@ -78,7 +87,19 @@ def check(doc, require):
                     f"histogram {name}: min {h['min']} > max {h['max']}"
                 )
 
+    errors += check_regret(doc.get("regret"))
+    errors += check_covering(doc.get("covering"))
+
     for name in require:
+        if name == "regret":
+            r = doc.get("regret")
+            if not isinstance(r, dict) or r.get("pulls", 0) <= 0:
+                errors.append("required section regret: absent or empty")
+            continue
+        if name == "covering":
+            if not doc.get("covering"):
+                errors.append("required section covering: absent or empty")
+            continue
         if counters.get(name, 0) > 0:
             continue
         if isinstance(hists.get(name), dict) \
@@ -88,6 +109,61 @@ def check(doc, require):
             f"required metric {name}: absent, zero, or empty histogram"
         )
 
+    return errors
+
+
+def check_regret(r):
+    """Validate the optional regret section (None when absent)."""
+    if r is None:
+        return []
+    if not isinstance(r, dict):
+        return ["regret: not an object"]
+    errors = []
+    for f in ("runs_exact", "runs_best_seen", "pulls", "final"):
+        if not is_num(r.get(f)) or r.get(f) < 0:
+            errors.append(f"regret.{f}: bad value {r.get(f)!r}")
+    series = r.get("cumulative_regret_per_pull")
+    if not isinstance(series, list):
+        return errors + ["regret.cumulative_regret_per_pull: not an array"]
+    for i, v in enumerate(series):
+        if not is_num(v) or v < 0:
+            errors.append(f"regret series[{i}]: bad value {v!r}")
+            return errors
+    # running mean of a shrinking per-pull regret: non-increasing up to
+    # float accumulation noise
+    for i, (a, b) in enumerate(zip(series, series[1:])):
+        if b > a + 1e-9:
+            errors.append(
+                f"regret series not non-increasing at [{i + 1}]: "
+                f"{a} -> {b}"
+            )
+            break
+    return errors
+
+
+def check_covering(c):
+    """Validate the optional covering section (None when absent)."""
+    if c is None:
+        return []
+    if not isinstance(c, list):
+        return ["covering: not an array"]
+    errors = []
+    fields = ("t", "clusters", "covering_number", "max_radius",
+              "mean_radius", "lipschitz")
+    for i, rec in enumerate(c):
+        if not isinstance(rec, dict):
+            errors.append(f"covering[{i}]: not an object")
+            continue
+        bad = [f for f in fields
+               if not is_num(rec.get(f)) or rec.get(f) < 0]
+        if bad:
+            errors.append(f"covering[{i}]: bad fields {bad}")
+            continue
+        if rec["mean_radius"] > rec["max_radius"] + 1e-9:
+            errors.append(
+                f"covering[{i}]: mean_radius {rec['mean_radius']} > "
+                f"max_radius {rec['max_radius']}"
+            )
     return errors
 
 

@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Validate a Chrome-trace-event export from `--obs trace`.
+
+Usage: check_trace_events.py trace_events.json
+
+Checks the causal span tree promised by `kernelband::obs::trace`
+(written as trace_events.json by serve/repro --obs trace, or rebuilt
+from events.jsonl by `kernelband metrics perfetto`):
+
+- the document is `{"displayTimeUnit": "ms", "traceEvents": [...]}`;
+- every event carries name/cat/ts/pid/tid/ph and an `args` object with
+  numeric trace_id/span_id/parent_id;
+- `ph` is "X" (complete span, with a non-negative `dur`) or "i"
+  (instant, with scope `s`);
+- span_ids of "X" events are unique and non-zero;
+- every parent_id is 0 (root) or resolves to an existing span_id;
+- walking parent links from any event terminates at a root — no cycles;
+- within each track (tid), `ts` is non-decreasing in array order (the
+  sink emits globally start-sorted events, so per-track order is
+  monotone too).
+
+Exits 1 on any violation. The export is advisory and never
+byte-compared; its *shape* is the contract Perfetto and `kernelband
+explain` consumers rely on, so drift fails the build.
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and math.isfinite(v)
+
+
+def check(doc):
+    errors = []
+    if doc.get("displayTimeUnit") != "ms":
+        errors.append("displayTimeUnit missing or not 'ms'")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return errors + ["traceEvents missing or not an array"]
+    if not events:
+        return errors + ["traceEvents is empty"]
+
+    spans = {}          # span_id -> parent_id, "X" events only
+    parents = []        # (index, name, span_id, parent_id) of every event
+    last_ts = {}        # tid -> last seen ts
+
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event[{i}]: not an object")
+            continue
+        name = ev.get("name")
+        args = ev.get("args")
+        bad = [f for f in ("ts", "pid", "tid") if not is_num(ev.get(f))]
+        if not isinstance(name, str):
+            bad.append("name")
+        if ev.get("cat") != "kernelband":
+            bad.append("cat")
+        if not isinstance(args, dict):
+            bad.append("args")
+            args = {}
+        bad += [f"args.{f}" for f in ("trace_id", "span_id", "parent_id")
+                if not is_num(args.get(f))]
+        ph = ev.get("ph")
+        if ph == "X":
+            if not is_num(ev.get("dur")) or ev["dur"] < 0:
+                bad.append("dur")
+        elif ph == "i":
+            if not isinstance(ev.get("s"), str):
+                bad.append("s")
+        else:
+            bad.append(f"ph={ph!r}")
+        if bad:
+            errors.append(f"event[{i}] {name!r}: bad fields {bad}")
+            continue
+
+        sid, pid = args["span_id"], args["parent_id"]
+        if ph == "X":
+            if sid == 0:
+                errors.append(f"event[{i}] {name!r}: span_id 0 (reserved)")
+            elif sid in spans:
+                errors.append(f"event[{i}] {name!r}: duplicate span_id {sid}")
+            else:
+                spans[sid] = pid
+        parents.append((i, name, sid, pid))
+
+        tid = ev["tid"]
+        if ev["ts"] < last_ts.get(tid, ev["ts"]):
+            errors.append(
+                f"event[{i}] {name!r}: ts {ev['ts']} rewinds on tid {tid} "
+                f"(last {last_ts[tid]})"
+            )
+        last_ts[tid] = max(last_ts.get(tid, ev["ts"]), ev["ts"])
+
+    for i, name, sid, pid in parents:
+        if pid != 0 and pid not in spans:
+            errors.append(
+                f"event[{i}] {name!r}: parent_id {pid} resolves to no span"
+            )
+
+    # cycle check: parent-walk each span with a visited set
+    for sid in spans:
+        seen = set()
+        cur = sid
+        while cur != 0:
+            if cur in seen:
+                errors.append(f"span {sid}: parent walk cycles at {cur}")
+                break
+            seen.add(cur)
+            cur = spans.get(cur, 0)
+
+    return errors, len(events), len(spans)
+
+
+def main(argv):
+    if len(argv) != 1:
+        print(__doc__)
+        return 1
+    path = Path(argv[0])
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable: {e}")
+        return 1
+
+    result = check(doc)
+    if isinstance(result, list):  # structural failure before counting
+        errors, n_events, n_spans = result, 0, 0
+    else:
+        errors, n_events, n_spans = result
+    print(f"{path}: {n_events} events, {n_spans} spans")
+    if errors:
+        for e in errors:
+            print(f"  ✗ {e}")
+        print(f"{len(errors)} violation{'' if len(errors) == 1 else 's'}.")
+        return 1
+    print("  ✓ span tree well-formed")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main(sys.argv[1:]))
+    except BrokenPipeError:
+        sys.exit(0)
